@@ -1,0 +1,78 @@
+//! Figure 5: "Our parallel sampler constructs accurate density estimates
+//! for many synthetic data sources" — a grid over dataset size and true
+//! cluster count; each run must converge to a predictive probability
+//! close to the true entropy of the generating mixture.
+//!
+//! Paper grid: 200k–1MM rows, 128–2048 clusters, 256 dims. Default here
+//! is the laptop-scale image (5k–20k rows, 16–128 clusters, 64 dims);
+//! pass `--full` for a paper-scale grid (slow on one core).
+
+use clustercluster::bench::{is_full_scale, FigureEmitter};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::metrics::adjusted_rand_index;
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::auto_scorer;
+use clustercluster::serial::calibrate_alpha;
+
+fn main() {
+    let full = is_full_scale();
+    let grid: Vec<(usize, usize, usize)> = if full {
+        // (rows, clusters, dims)
+        vec![
+            (200_000, 128, 256),
+            (200_000, 512, 256),
+            (500_000, 1024, 256),
+            (1_000_000, 2048, 256),
+        ]
+    } else {
+        vec![
+            (5_000, 16, 64),
+            (10_000, 32, 64),
+            (10_000, 64, 64),
+            (20_000, 128, 64),
+        ]
+    };
+    let rounds = if full { 120 } else { 50 };
+    let mut scorer = auto_scorer();
+    let mut fig = FigureEmitter::new("fig5_density");
+    fig.note(&format!("scorer = {}", scorer.name()));
+
+    for (idx, &(n, clusters, d)) in grid.iter().enumerate() {
+        let ds = SyntheticConfig {
+            n,
+            d,
+            clusters,
+            beta: 0.05,
+            seed: 500 + idx as u64,
+        }
+        .generate();
+        let h = ds.true_entropy_estimate();
+        let mut rng = Pcg64::seed_from(idx as u64);
+        let alpha0 = calibrate_alpha(&ds.train, 0.05, 10, &mut rng);
+        let cfg = CoordinatorConfig {
+            workers: 8,
+            init_alpha: alpha0,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        for _ in 0..rounds {
+            coord.step(&mut rng);
+        }
+        let ll = coord.predictive_loglik(&ds.test, scorer.as_mut());
+        let ari = adjusted_rand_index(&coord.assignments(), &ds.train_z);
+        fig.row(&[
+            ("rows", n as f64),
+            ("true_clusters", clusters as f64),
+            ("true_neg_entropy", -h),
+            ("predictive_loglik", ll),
+            ("gap_nats", ll + h),
+            ("inferred_clusters", coord.num_clusters() as f64),
+            ("ari", ari),
+        ]);
+    }
+    fig.note("paper shape: predictive probability lands near the true entropy line");
+    fig.finish();
+}

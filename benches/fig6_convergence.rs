@@ -1,0 +1,92 @@
+//! Figure 6: convergence of predictive density (fast) and latent
+//! structure (slow) against modeled wall-clock, for 2 / 8 / 32 compute
+//! nodes, two seeds each.
+//!
+//! Paper workload: 2048 clusters / 200k rows. Default here: 64 clusters /
+//! 10k rows (`--full` for a scaled-up run). Expected shapes: all node
+//! counts converge to the true test likelihood; parallel gains up to ~8
+//! nodes then saturation; cluster-count convergence much slower than
+//! predictive convergence.
+//!
+//! Ablation (DESIGN.md §9): pass `--no-shuffle` to watch the isolated-
+//! islands chain plateau above the true likelihood.
+
+use clustercluster::bench::{is_full_scale, FigureEmitter};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::auto_scorer;
+use clustercluster::serial::calibrate_alpha;
+
+fn main() {
+    let full = is_full_scale();
+    let no_shuffle = std::env::args().any(|a| a == "--no-shuffle");
+    let (n, clusters, d, rounds) = if full {
+        (200_000, 512, 256, 80)
+    } else {
+        (10_000, 64, 64, 40)
+    };
+    let ds = SyntheticConfig {
+        n,
+        d,
+        clusters,
+        beta: 0.05,
+        seed: 6,
+    }
+    .generate();
+    let h = ds.true_entropy_estimate();
+    let mut scorer = auto_scorer();
+    let mut fig = FigureEmitter::new(if no_shuffle {
+        "fig6_convergence_noshuffle"
+    } else {
+        "fig6_convergence"
+    });
+    fig.note(&format!(
+        "N={n}, true J={clusters}, D={d}; ground-truth test loglik ≈ {:.4}",
+        -h
+    ));
+
+    let comm = CommModel {
+        round_latency_s: 0.05,
+        per_worker_latency_s: 0.002,
+        bandwidth_bytes_per_s: 50e6,
+    };
+    let mut cal_rng = Pcg64::seed_from(99);
+    let alpha0 = calibrate_alpha(&ds.train, 0.05, 10, &mut cal_rng);
+
+    for &k in &[2usize, 8, 32] {
+        for seed in 0..2u64 {
+            let cfg = CoordinatorConfig {
+                workers: k,
+                init_alpha: alpha0,
+                shuffle: !no_shuffle,
+                comm,
+                ..Default::default()
+            };
+            let mut rng = Pcg64::seed_from(60 + seed * 100 + k as u64);
+            let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+            let mut ts = Vec::new();
+            let mut lls = Vec::new();
+            let mut js = Vec::new();
+            for _ in 0..rounds {
+                coord.step(&mut rng);
+                ts.push(coord.modeled_time_s);
+                lls.push(coord.predictive_loglik(&ds.test, scorer.as_mut()));
+                js.push(coord.num_clusters() as f64);
+            }
+            fig.series(&format!("loglik_k{k}_seed{seed}"), &ts, &lls);
+            fig.series(&format!("clusters_k{k}_seed{seed}"), &ts, &js);
+            fig.row(&[
+                ("k", k as f64),
+                ("seed", seed as f64),
+                ("final_loglik", *lls.last().unwrap()),
+                ("final_clusters", *js.last().unwrap()),
+                ("true_neg_entropy", -h),
+                ("true_clusters", clusters as f64),
+            ]);
+        }
+    }
+    fig.note("paper shape: loglik converges quickly for all K; #clusters drifts slowly");
+    fig.finish();
+}

@@ -1,0 +1,80 @@
+//! Figure 8: saturation — "communication costs and convergence slowdown
+//! overwhelm per-iteration parallelism gains". Paper workload: 500k rows
+//! / 1024 clusters, K ∈ {2, 8, 32, 128} (max 64 machines).
+//!
+//! Default: 10k rows / 64 clusters with the comm model scaled to keep the
+//! paper's overhead:compute ratio; `--full` scales the workload up. The
+//! expected shape: time-to-target improves up to a saturation point, then
+//! regresses as the per-round communication term dominates.
+
+use clustercluster::bench::{is_full_scale, FigureEmitter};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::auto_scorer;
+use clustercluster::serial::calibrate_alpha;
+
+fn main() {
+    let full = is_full_scale();
+    let (n, clusters, d, max_rounds) = if full {
+        (500_000, 1024, 256, 100)
+    } else {
+        (50_000, 128, 64, 60)
+    };
+    let ds = SyntheticConfig {
+        n,
+        d,
+        clusters,
+        beta: 0.15,
+        seed: 8,
+    }
+    .generate();
+    let eval_rows: Vec<usize> = (0..ds.test.rows().min(1_000)).collect();
+    let test = ds.test.select_rows(&eval_rows);
+    let h = ds.true_entropy_estimate();
+    let target = -h * 1.05;
+    let mut scorer = auto_scorer();
+    let mut fig = FigureEmitter::new("fig8_saturation");
+    fig.note(&format!("N={n}, true J={clusters}; target loglik {target:.4}"));
+
+    let comm = CommModel {
+        round_latency_s: 0.01,
+        per_worker_latency_s: 0.0005,
+        bandwidth_bytes_per_s: 100e6,
+    };
+    let mut cal_rng = Pcg64::seed_from(88);
+    let alpha0 = calibrate_alpha(&ds.train, 0.05, 10, &mut cal_rng);
+
+    for &k in &[2usize, 8, 32, 128] {
+        let cfg = CoordinatorConfig {
+            workers: k,
+            init_alpha: alpha0,
+            comm,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(80 + k as u64);
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let mut t_target = f64::NAN;
+        let mut comm_fraction = 0.0;
+        for round in 0..max_rounds {
+            let rs = coord.step(&mut rng);
+            comm_fraction = comm.round_time(k, rs.bytes_transferred) / rs.modeled_wall_s;
+            if round % 2 == 1 {
+                let ll = coord.predictive_loglik(&test, scorer.as_mut());
+                if ll >= target {
+                    t_target = coord.modeled_time_s;
+                    break;
+                }
+            }
+        }
+        fig.row(&[
+            ("k", k as f64),
+            ("t_target_s", t_target),
+            ("t_per_round_s", coord.modeled_time_s / coord.rounds as f64),
+            ("comm_fraction_of_round", comm_fraction),
+        ]);
+    }
+    fig.note("paper shape: faster to saturation, then slower (comm-dominated) beyond");
+    fig.finish();
+}

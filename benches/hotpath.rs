@@ -1,0 +1,140 @@
+//! Hot-path microbenchmarks (supporting the §Perf pass):
+//!
+//! * batched scoring throughput — PJRT artifact vs pure-Rust fallback on
+//!   the compiled (256, 256, 512) shape;
+//! * per-datum Gibbs scan throughput (rows/s), with the cached-table vs
+//!   uncached-scoring ablation (DESIGN.md §9);
+//! * coordinator phase split (map / reduce / shuffle shares).
+
+use clustercluster::bench::{bench, FigureEmitter};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::BinMat;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::{FallbackScorer, PjrtScorer, Scorer};
+use std::path::Path;
+
+fn rand_problem(n: usize, d: usize, j: usize, seed: u64) -> (BinMat, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = BinMat::zeros(n, d);
+    for r in 0..n {
+        for c in 0..d {
+            if rng.next_f64() < 0.5 {
+                m.set(r, c, true);
+            }
+        }
+    }
+    let mut w1 = vec![0.0f32; d * j];
+    let mut w0 = vec![0.0f32; d * j];
+    for i in 0..d * j {
+        let p = 0.05 + 0.9 * rng.next_f64();
+        w1[i] = (p as f32).ln();
+        w0[i] = (1.0f32 - p as f32).ln();
+    }
+    (m, w1, w0)
+}
+
+fn main() {
+    let mut fig = FigureEmitter::new("hotpath");
+
+    // --- batched scoring: artifact vs fallback ---
+    let (n, d, j) = (256usize, 256usize, 512usize);
+    let (m, w1, w0) = rand_problem(n, d, j, 1);
+    let cells = (n * j) as f64;
+    let mut fall = FallbackScorer::new();
+    let rf = bench("fallback loglik 256x256x512", 1, 10, || {
+        std::hint::black_box(fall.loglik_matrix(&m, &w1, &w0, d, j));
+    });
+    fig.row(&[
+        ("fallback_cells_per_s", cells / rf.mean_s),
+        ("fallback_mean_s", rf.mean_s),
+    ]);
+    let dir = std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    if let Ok(mut pjrt) = PjrtScorer::load(Path::new(&dir)) {
+        let rp = bench("pjrt     loglik 256x256x512", 1, 10, || {
+            std::hint::black_box(pjrt.loglik_matrix(&m, &w1, &w0, d, j));
+        });
+        fig.row(&[
+            ("pjrt_cells_per_s", cells / rp.mean_s),
+            ("pjrt_mean_s", rp.mean_s),
+            ("pjrt_vs_fallback", rf.mean_s / rp.mean_s),
+        ]);
+    } else {
+        fig.note("artifacts missing: run `make artifacts` for the PJRT row");
+    }
+
+    // --- per-datum scoring: cached table vs uncached ---
+    let ds = SyntheticConfig {
+        n: 2_000,
+        d: 64,
+        clusters: 16,
+        beta: 0.1,
+        seed: 2,
+    }
+    .generate_with_test_fraction(0.0);
+    let model = BetaBernoulli::symmetric(64, 0.5);
+    let mut clusters: Vec<ClusterStats> = (0..16).map(|_| ClusterStats::empty(64)).collect();
+    for r in 0..ds.train.rows() {
+        clusters[r % 16].add(&ds.train, r);
+    }
+    let rows = ds.train.rows() as f64;
+    let rc = bench("scan cached  2000x16 clusters", 1, 20, || {
+        let mut acc = 0.0;
+        for r in 0..ds.train.rows() {
+            for c in clusters.iter_mut() {
+                acc += c.score(&model, &ds.train, r);
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    let ru = bench("scan uncached 2000x16 clusters", 1, 5, || {
+        let mut acc = 0.0;
+        for r in 0..ds.train.rows() {
+            for c in clusters.iter() {
+                acc += c.score_uncached(&model, &ds.train, r);
+            }
+        }
+        std::hint::black_box(acc);
+    });
+    fig.row(&[
+        ("cached_rows_per_s", rows / rc.mean_s),
+        ("uncached_rows_per_s", rows / ru.mean_s),
+        ("cache_speedup", ru.mean_s / rc.mean_s),
+    ]);
+
+    // --- full coordinator round phase split ---
+    let ds2 = SyntheticConfig {
+        n: 10_000,
+        d: 64,
+        clusters: 64,
+        beta: 0.05,
+        seed: 3,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: 8,
+        comm: CommModel::free(),
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(3);
+    let mut coord = Coordinator::new(&ds2.train, cfg, &mut rng);
+    let rr = bench("coordinator round 10000x64", 2, 10, || {
+        coord.step(&mut rng);
+    });
+    let prof = coord.timer.render();
+    println!("{prof}");
+    let total = coord.timer.total("map")
+        + coord.timer.total("reduce")
+        + coord.timer.total("shuffle");
+    fig.row(&[
+        ("round_mean_s", rr.mean_s),
+        ("rows_per_s", 10_000.0 / rr.mean_s),
+        (
+            "map_share",
+            coord.timer.total("map").as_secs_f64() / total.as_secs_f64().max(1e-12),
+        ),
+    ]);
+    fig.finish();
+}

@@ -1,0 +1,88 @@
+# AOT pipeline: lower the Layer-2 entry points to HLO **text** artifacts
+# for the Rust PJRT runtime.
+#
+# HLO text, NOT lowered.compile()/.serialize(): jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids, which the published `xla`
+# crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The HLO
+# *text* parser reassigns ids, so text round-trips cleanly.
+# (See /opt/xla-example/gen_hlo.py and its README.)
+#
+# Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+# Emits one <name>.hlo.txt per (entry-point, shape) variant plus
+# manifest.txt, which the Rust runtime parses:
+#     <name> <entry> <B> <D> <J> <file>
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# (name, entry, B, D, J, example-arg builder). The Rust runtime pads any
+# workload onto these compiled shapes (pad dims: W1=W0=0; pad clusters:
+# logpi=-1e30; pad rows: ignored) and chunks larger B/J over repeated calls.
+def variants():
+    out = []
+    for (b, d, j) in [(256, 256, 512), (64, 256, 128)]:
+        out.append((
+            f"loglik_{b}x{d}x{j}", "loglik", b, d, j,
+            lambda b=b, d=d, j=j: (spec(b, d), spec(d, j), spec(d, j)),
+            model.loglik_matrix,
+        ))
+        out.append((
+            f"density_{b}x{d}x{j}", "density", b, d, j,
+            lambda b=b, d=d, j=j: (spec(b, d), spec(d, j), spec(d, j), spec(j)),
+            model.predictive_density,
+        ))
+    b, d, j = 256, 256, 512
+    out.append((
+        f"density_stats_{b}x{d}x{j}", "density_stats", b, d, j,
+        lambda: (spec(b, d), spec(j), spec(j, d), spec(d), spec(j)),
+        model.predictive_density_from_stats,
+    ))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, entry, b, d, j, argspec, fn in variants():
+        lowered = jax.jit(fn).lower(*argspec())
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {entry} {b} {d} {j} {fname}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {mpath} ({len(manifest_lines)} variants)")
+
+
+if __name__ == "__main__":
+    main()

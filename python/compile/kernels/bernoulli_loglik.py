@@ -1,0 +1,91 @@
+# Layer 1 — Pallas kernel for the DPM scoring hot-spot.
+#
+# Computes the [B, J] collapsed Beta-Bernoulli log-likelihood matrix
+#     S = X·W1 + (1-X)·W0
+# via the algebraic identity (X is 0/1-valued)
+#     S = X·(W1 - W0) + colsum(W0)
+# i.e. ONE matmul plus a column bias — the MXU-systolic shape. The
+# HBM↔VMEM schedule is expressed with BlockSpec: the grid tiles
+# (B, J, D) into (bm, bn, bk) VMEM blocks, accumulating over the D axis
+# (innermost grid dim, so the output block stays resident across the
+# k-loop). See DESIGN.md §3 (Hardware adaptation) and §8 (Perf).
+#
+# interpret=True ALWAYS: real-TPU lowering emits a Mosaic custom-call the
+# CPU PJRT plugin cannot execute. Correctness is pinned to ref.py by
+# python/tests/test_kernel.py (including hypothesis shape sweeps).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default TPU-shaped tile sizes (f32): VMEM per grid step is
+#   bm·bk + bk·bn + bn + bm·bn  floats = (128·256 + 256·128 + 128 + 128·128)·4B
+#   ≈ 320 KiB  — about 2% of a 16 MiB VMEM, leaving ample double-buffer room.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _loglik_kernel(x_ref, wd_ref, bias_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ wd[k,j]  (+ bias at k=0).
+
+    The output BlockSpec maps every k to the same (i, j) block, so the
+    accumulator lives in VMEM across the whole k-loop (k is the innermost
+    grid dimension — sequential on TPU).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        # bias_ref is a [1, bn] block of colsum(W0); broadcast over rows.
+        o_ref[...] = jnp.broadcast_to(bias_ref[...], o_ref.shape)
+
+    # MXU matmul: force f32 accumulation regardless of input dtype.
+    o_ref[...] += jnp.dot(
+        x_ref[...], wd_ref[...], preferred_element_type=jnp.float32
+    )
+    del nk  # shape bookkeeping only; kept for signature clarity
+
+
+def loglik_matrix(x, wd, bias, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Pallas-tiled S = X @ Wd + bias  with Wd = W1-W0, bias = colsum(W0).
+
+    x:    [B, D] f32 (0.0/1.0 entries)
+    wd:   [D, J] f32
+    bias: [1, J] f32
+    returns [B, J] f32
+
+    Shapes must divide the block sizes; callers (model.py / the Rust
+    runtime) pad to the compiled artifact shape. Padding is exact:
+    pad dims carry W1=W0=0 (log 1), pad rows are ignored downstream,
+    pad clusters get logpi = -1e30.
+    """
+    b, d = x.shape
+    d2, j = wd.shape
+    assert d == d2 and bias.shape == (1, j), (x.shape, wd.shape, bias.shape)
+    bm, bn, bk = min(bm, b), min(bn, j), min(bk, d)
+    assert b % bm == 0 and j % bn == 0 and d % bk == 0, (
+        f"shapes ({b},{d},{j}) must tile by ({bm},{bk},{bn})"
+    )
+    nk = d // bk
+    grid = (b // bm, j // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_loglik_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, jj, k: (i, k)),  # X tile
+            pl.BlockSpec((bk, bn), lambda i, jj, k: (k, jj)),  # Wd tile
+            pl.BlockSpec((1, bn), lambda i, jj, k: (0, jj)),  # bias tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, jj, k: (i, jj)),
+        out_shape=jax.ShapeDtypeStruct((b, j), jnp.float32),
+        interpret=True,
+    )(x, wd, bias)
+
+
+def loglik_matrix_from_w(x, w1, w0, **kw):
+    """Convenience wrapper taking (W1, W0) directly (the L2 entry point)."""
+    wd = w1 - w0
+    bias = jnp.sum(w0, axis=0, keepdims=True)
+    return loglik_matrix(x, wd, bias, **kw)

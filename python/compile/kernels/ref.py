@@ -1,0 +1,50 @@
+# Pure-jnp correctness oracle for the Pallas kernels.
+#
+# pytest compares every kernel against these references (the CORE
+# correctness signal for Layer 1). They are written in the most literal,
+# element-wise form of the math — no algebraic shortcuts shared with the
+# kernel — so agreement is meaningful.
+#
+# Math (paper §6, collapsed Beta-Bernoulli clusters):
+#   For binary datum x (D-dim) and cluster j with "coin" posterior
+#   predictive p̂_jd, the log predictive likelihood is
+#       log p(x | j) = Σ_d [ x_d·log(p̂_jd) + (1-x_d)·log(1-p̂_jd) ]
+#   With W1[d,j] = log(p̂_jd), W0[d,j] = log(1-p̂_jd) this is the [B,J]
+#   matrix   S = X·W1 + (1-X)·W0.
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+
+def loglik_matrix_ref(x, w1, w0):
+    """Literal oracle: S[b,j] = sum_d x[b,d]*w1[d,j] + (1-x[b,d])*w0[d,j].
+
+    x:  [B, D] float (entries 0.0/1.0 — binary data as floats)
+    w1: [D, J] log predictive prob of a 1 in dim d under cluster j
+    w0: [D, J] log predictive prob of a 0
+    returns [B, J] float32
+    """
+    return jnp.einsum("bd,dj->bj", x, w1) + jnp.einsum("bd,dj->bj", 1.0 - x, w0)
+
+
+def predictive_density_ref(x, w1, w0, logpi):
+    """Oracle for the fused mixture predictive density.
+
+    logpi: [J] log mixture weights (−inf/−1e30 for padded clusters)
+    returns [B] float32: log Σ_j π_j p(x_b | j)
+    """
+    s = loglik_matrix_ref(x, w1, w0)
+    return logsumexp(s + logpi[None, :], axis=1)
+
+
+def weights_from_suffstats_ref(n, c, beta):
+    """Collapsed Beta-Bernoulli predictive weights from sufficient stats.
+
+    n:    [J] datum counts per cluster
+    c:    [J, D] per-dimension one-counts per cluster
+    beta: [D] symmetric Beta(β_d, β_d) hyperparameters
+    returns (w1 [D,J], w0 [D,J]) log predictive probabilities
+        p̂_jd = (c_jd + β_d) / (n_j + 2 β_d)
+    """
+    denom = n[:, None] + 2.0 * beta[None, :]  # [J, D]
+    p1 = (c + beta[None, :]) / denom
+    return jnp.log(p1).T, jnp.log1p(-p1).T

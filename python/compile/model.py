@@ -1,0 +1,60 @@
+# Layer 2 — the JAX compute graph for ClusterCluster's scoring hot path.
+#
+# The paper's model (§6): Dirichlet-process mixture of product-Bernoulli
+# components with per-dimension Beta(β_d, β_d) priors, coin weights
+# collapsed out. The dense, parallel compute is *scoring*: a block of
+# binary data against a block of clusters. These functions call the
+# Layer-1 Pallas kernel (kernels/bernoulli_loglik.py) so the whole graph
+# lowers into one HLO module per entry point (python/compile/aot.py).
+#
+# Build-time only: Rust executes the lowered artifacts via PJRT; Python
+# never runs on the sampling path.
+import jax.numpy as jnp
+from jax.scipy.special import logsumexp
+
+from .kernels import bernoulli_loglik
+
+
+def loglik_matrix(x, w1, w0):
+    """[B,J] log p(x_b | cluster j) from log predictive weight matrices.
+
+    x:  [B, D] f32 binary data block (0.0/1.0)
+    w1: [D, J] f32 log p̂_jd
+    w0: [D, J] f32 log (1 - p̂_jd)
+    """
+    return bernoulli_loglik.loglik_matrix_from_w(x, w1, w0)
+
+
+def predictive_density(x, w1, w0, logpi):
+    """[B] log predictive mixture density: logsumexp_j (S[b,j] + logpi[j]).
+
+    This is the metric series of Figs. 5/6/7/8/9 (test-set predictive
+    log-likelihood). Padded clusters carry logpi = -1e30.
+    """
+    s = loglik_matrix(x, w1, w0)
+    return logsumexp(s + logpi[None, :], axis=1)
+
+
+def weights_from_suffstats(n, c, beta):
+    """(W1, W0) from cluster sufficient statistics (collapsed predictive).
+
+    n:    [J]    f32 datum counts per cluster
+    c:    [J, D] f32 per-dimension one-counts
+    beta: [D]    f32 Beta(β_d, β_d) hyperparameters
+    p̂_jd = (c_jd + β_d) / (n_j + 2 β_d); padded clusters (n=0, c=0, β>0)
+    yield p̂ = 1/2 — harmless, they are masked by logpi downstream.
+    """
+    denom = n[:, None] + 2.0 * beta[None, :]
+    p1 = (c + beta[None, :]) / denom
+    return jnp.log(p1).T, jnp.log1p(-p1).T
+
+
+def predictive_density_from_stats(x, n, c, beta, logpi):
+    """Fused end-to-end entry: suffstats → weights → kernel → density.
+
+    The shape the Rust runtime feeds after every reduce step: cluster
+    stats are what the coordinator actually holds; the weight transform
+    fuses into the same HLO module.
+    """
+    w1, w0 = weights_from_suffstats(n, c, beta)
+    return predictive_density(x, w1, w0, logpi)

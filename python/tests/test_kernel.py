@@ -1,0 +1,113 @@
+# Layer-1 correctness: Pallas kernel vs. the pure-jnp oracle (ref.py).
+# This is the CORE correctness signal for the compiled artifacts.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bernoulli_loglik as bl
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_problem(rng, b, d, j):
+    x = (rng.random((b, d)) < 0.5).astype(np.float32)
+    p = rng.uniform(0.05, 0.95, size=(d, j)).astype(np.float32)
+    w1 = np.log(p)
+    w0 = np.log1p(-p)
+    return x, w1, w0
+
+
+def test_kernel_matches_ref_default_shape():
+    rng = np.random.default_rng(0)
+    x, w1, w0 = rand_problem(rng, 256, 256, 512)
+    got = bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0))
+    want = ref.loglik_matrix_ref(x, w1, w0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+def test_kernel_single_block():
+    rng = np.random.default_rng(1)
+    x, w1, w0 = rand_problem(rng, 8, 16, 8)
+    got = bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0))
+    want = ref.loglik_matrix_ref(x, w1, w0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+def test_kernel_multiblock_k_accumulation():
+    # D spans several k-blocks: exercises the o_ref revisiting accumulator.
+    rng = np.random.default_rng(2)
+    x, w1, w0 = rand_problem(rng, 16, 1024, 16)
+    got = bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0))
+    want = ref.loglik_matrix_ref(x, w1, w0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=5e-4)
+
+
+def test_all_zero_and_all_one_rows():
+    # x=0 rows score colsum(W0); x=1 rows score colsum(W1).
+    d, j = 32, 8
+    rng = np.random.default_rng(3)
+    _, w1, w0 = rand_problem(rng, 1, d, j)
+    x = np.vstack([np.zeros((4, d)), np.ones((4, d))]).astype(np.float32)
+    got = np.asarray(
+        bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0))
+    )
+    np.testing.assert_allclose(got[:4], np.broadcast_to(w0.sum(0), (4, j)), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(got[4:], np.broadcast_to(w1.sum(0), (4, j)), rtol=1e-5, atol=1e-4)
+
+
+def test_padding_dims_are_exact_noops():
+    # Pad D with W1=W0=0 — scores must not change (log 1 contributions).
+    rng = np.random.default_rng(4)
+    x, w1, w0 = rand_problem(rng, 8, 16, 8)
+    base = np.asarray(bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0)))
+    xp = np.hstack([x, np.zeros((8, 16), np.float32)])
+    w1p = np.vstack([w1, np.zeros((16, 8), np.float32)])
+    w0p = np.vstack([w0, np.zeros((16, 8), np.float32)])
+    padded = np.asarray(bl.loglik_matrix_from_w(jnp.asarray(xp), jnp.asarray(w1p), jnp.asarray(w0p)))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-5)
+
+
+BLOCK = st.sampled_from([8, 16, 32])
+NBLK = st.integers(min_value=1, max_value=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bm=BLOCK, bn=BLOCK, bk=BLOCK, nb=NBLK, nd=NBLK, nj=NBLK, seed=st.integers(0, 2**31 - 1))
+def test_kernel_hypothesis_shape_sweep(bm, bn, bk, nb, nd, nj, seed):
+    """Property: kernel == oracle for every tiling of every shape."""
+    b, d, j = bm * nb, bk * nd, bn * nj
+    rng = np.random.default_rng(seed)
+    x, w1, w0 = rand_problem(rng, b, d, j)
+    wd = w1 - w0
+    bias = w0.sum(axis=0, keepdims=True)
+    got = bl.loglik_matrix(
+        jnp.asarray(x), jnp.asarray(wd), jnp.asarray(bias), bm=bm, bn=bn, bk=bk
+    )
+    want = ref.loglik_matrix_ref(x, w1, w0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_hypothesis_sparse_binary(seed):
+    """Skewed binary densities (mostly-0 / mostly-1 rows) stay exact."""
+    rng = np.random.default_rng(seed)
+    b, d, j = 16, 64, 16
+    dens = rng.uniform(0.0, 1.0, size=(b, 1))
+    x = (rng.random((b, d)) < dens).astype(np.float32)
+    p = rng.uniform(0.01, 0.99, size=(d, j)).astype(np.float32)
+    w1, w0 = np.log(p), np.log1p(-p)
+    got = bl.loglik_matrix_from_w(jnp.asarray(x), jnp.asarray(w1), jnp.asarray(w0))
+    want = ref.loglik_matrix_ref(x, w1, w0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=5e-4)
+
+
+def test_misaligned_shape_raises():
+    with pytest.raises(AssertionError):
+        bl.loglik_matrix(
+            jnp.zeros((100, 64)), jnp.zeros((64, 64)), jnp.zeros((1, 64)),
+            bm=64, bn=64, bk=64,
+        )

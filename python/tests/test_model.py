@@ -1,0 +1,103 @@
+# Layer-2 correctness: model graph (suffstats → weights → kernel → density)
+# vs. the literal oracle, plus the padding semantics the Rust runtime
+# depends on.
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+NEG = -1.0e30  # padded-cluster log weight (matches the Rust runtime)
+
+
+def rand_stats(rng, j, d):
+    n = rng.integers(1, 50, size=j).astype(np.float32)
+    c = np.stack([rng.integers(0, int(nj) + 1, size=d) for nj in n]).astype(np.float32)
+    beta = rng.uniform(0.1, 3.0, size=d).astype(np.float32)
+    return n, c, beta
+
+
+def test_weights_from_suffstats_matches_ref():
+    rng = np.random.default_rng(0)
+    n, c, beta = rand_stats(rng, 16, 32)
+    w1, w0 = model.weights_from_suffstats(jnp.asarray(n), jnp.asarray(c), jnp.asarray(beta))
+    r1, r0 = ref.weights_from_suffstats_ref(n, c, beta)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(r1), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w0), np.asarray(r0), rtol=1e-6)
+
+
+def test_weights_are_valid_log_probs():
+    rng = np.random.default_rng(1)
+    n, c, beta = rand_stats(rng, 8, 16)
+    w1, w0 = model.weights_from_suffstats(jnp.asarray(n), jnp.asarray(c), jnp.asarray(beta))
+    # exp(w1) + exp(w0) == 1 for every (d, j)
+    np.testing.assert_allclose(np.exp(np.asarray(w1)) + np.exp(np.asarray(w0)), 1.0, rtol=1e-6)
+
+
+def test_predictive_density_matches_ref():
+    rng = np.random.default_rng(2)
+    b, d, j = 16, 32, 8
+    x = (rng.random((b, d)) < 0.5).astype(np.float32)
+    p = rng.uniform(0.1, 0.9, size=(d, j)).astype(np.float32)
+    w1, w0 = np.log(p), np.log1p(-p)
+    pi = rng.dirichlet(np.ones(j)).astype(np.float32)
+    logpi = np.log(pi)
+    got = model.predictive_density(*map(jnp.asarray, (x, w1, w0, logpi)))
+    want = ref.predictive_density_ref(x, w1, w0, logpi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+def test_density_stats_fused_path():
+    rng = np.random.default_rng(3)
+    b, d, j = 8, 16, 8
+    x = (rng.random((b, d)) < 0.5).astype(np.float32)
+    n, c, beta = rand_stats(rng, j, d)
+    logpi = np.log(rng.dirichlet(np.ones(j))).astype(np.float32)
+    got = model.predictive_density_from_stats(
+        *map(jnp.asarray, (x, n, c, beta, logpi))
+    )
+    w1, w0 = ref.weights_from_suffstats_ref(n, c, beta)
+    want = ref.predictive_density_ref(x, np.asarray(w1), np.asarray(w0), logpi)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-4)
+
+
+def test_cluster_padding_with_neg_logpi_is_exact():
+    """Padding J with logpi=-1e30 must reproduce the unpadded density.
+
+    This is the contract the Rust runtime uses to run arbitrary J on a
+    fixed-J artifact.
+    """
+    rng = np.random.default_rng(4)
+    b, d, j, jpad = 8, 16, 8, 16
+    x = (rng.random((b, d)) < 0.5).astype(np.float32)
+    p = rng.uniform(0.1, 0.9, size=(d, j)).astype(np.float32)
+    w1, w0 = np.log(p), np.log1p(-p)
+    logpi = np.log(rng.dirichlet(np.ones(j))).astype(np.float32)
+    base = model.predictive_density(*map(jnp.asarray, (x, w1, w0, logpi)))
+
+    w1p = np.hstack([w1, np.zeros((d, jpad - j), np.float32)])
+    w0p = np.hstack([w0, np.zeros((d, jpad - j), np.float32)])
+    logpip = np.concatenate([logpi, np.full(jpad - j, NEG, np.float32)])
+    padded = model.predictive_density(*map(jnp.asarray, (x, w1p, w0p, logpip)))
+    np.testing.assert_allclose(np.asarray(padded), np.asarray(base), rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), j=st.sampled_from([1, 2, 8, 16]))
+def test_density_monotone_in_weights_hypothesis(seed, j):
+    """Upweighting the best-scoring cluster can only raise the density."""
+    rng = np.random.default_rng(seed)
+    b, d = 8, 16
+    x = (rng.random((b, d)) < 0.5).astype(np.float32)
+    p = rng.uniform(0.1, 0.9, size=(d, j)).astype(np.float32)
+    w1, w0 = np.log(p), np.log1p(-p)
+    logpi = np.log(rng.dirichlet(np.ones(j))).astype(np.float32)
+    s = np.asarray(ref.loglik_matrix_ref(x, w1, w0))
+    dens = np.asarray(model.predictive_density(*map(jnp.asarray, (x, w1, w0, logpi))))
+    # density is logsumexp: must dominate every single component term
+    per_component = s + logpi[None, :]
+    assert np.all(dens >= per_component.max(axis=1) - 1e-4)

@@ -1,0 +1,144 @@
+//! Criterion-less bench harness (criterion is not in the offline crate
+//! universe): warmup + timed iterations with mean/p50/p95 reporting, and
+//! a figure emitter that prints the paper-style rows and mirrors them to
+//! JSON under `bench_results/`.
+
+use crate::util::json::Json;
+use crate::util::{mean, percentile};
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unrecorded runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean(&samples),
+        p50_s: percentile(&samples, 0.5),
+        p95_s: percentile(&samples, 0.95),
+    };
+    println!(
+        "bench {:<40} mean {:>10.6}s  p50 {:>10.6}s  p95 {:>10.6}s  ({} iters)",
+        r.name, r.mean_s, r.p50_s, r.p95_s, iters
+    );
+    r
+}
+
+/// Collects the rows/series that regenerate one paper figure and writes
+/// them to `bench_results/<figure>.json` + stdout.
+pub struct FigureEmitter {
+    figure: String,
+    rows: Vec<Json>,
+}
+
+impl FigureEmitter {
+    pub fn new(figure: &str) -> Self {
+        println!("\n=== {figure} ===");
+        FigureEmitter {
+            figure: figure.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add one row: prints `key=value` pairs and records them.
+    pub fn row(&mut self, pairs: &[(&str, f64)]) {
+        let mut obj = Json::obj();
+        let mut line = String::new();
+        for (k, v) in pairs {
+            obj.set(k, Json::num(*v));
+            line.push_str(&format!("{k}={v:.6}  "));
+        }
+        println!("  {line}");
+        self.rows.push(obj);
+    }
+
+    /// Add a labeled series (e.g. one convergence curve).
+    pub fn series(&mut self, label: &str, xs: &[f64], ys: &[f64]) {
+        let mut obj = Json::obj();
+        obj.set("label", Json::str(label));
+        obj.set("x", Json::arr_nums(xs));
+        obj.set("y", Json::arr_nums(ys));
+        println!(
+            "  series {label}: {} points, x∈[{:.3},{:.3}], y last {:.4}",
+            xs.len(),
+            xs.first().copied().unwrap_or(0.0),
+            xs.last().copied().unwrap_or(0.0),
+            ys.last().copied().unwrap_or(0.0)
+        );
+        self.rows.push(obj);
+    }
+
+    /// Free-form note attached to the figure output.
+    pub fn note(&mut self, text: &str) {
+        println!("  # {text}");
+        let mut obj = Json::obj();
+        obj.set("note", Json::str(text));
+        self.rows.push(obj);
+    }
+
+    /// Write `bench_results/<figure>.json`.
+    pub fn finish(self) {
+        let mut doc = Json::obj();
+        doc.set("figure", Json::str(&self.figure));
+        doc.set("rows", Json::Arr(self.rows));
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.figure));
+            if let Err(e) = std::fs::write(&path, doc.to_string()) {
+                eprintln!("warn: could not write {}: {e}", path.display());
+            } else {
+                println!("  -> {}", path.display());
+            }
+        }
+    }
+}
+
+/// Scaling helper: figures accept `--full` for paper-scale runs.
+pub fn is_full_scale() -> bool {
+    std::env::args().any(|a| a == "--full")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("noop", 1, 10, || {
+            std::hint::black_box(42);
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0 && r.p95_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn figure_emitter_writes_json() {
+        let dir = std::path::Path::new("bench_results");
+        let mut f = FigureEmitter::new("test_fig");
+        f.row(&[("k", 2.0), ("speedup", 1.9)]);
+        f.series("curve", &[0.0, 1.0], &[-5.0, -4.0]);
+        f.finish();
+        let text = std::fs::read_to_string(dir.join("test_fig.json")).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        assert_eq!(j.get("figure").unwrap().as_str().unwrap(), "test_fig");
+        let _ = std::fs::remove_file(dir.join("test_fig.json"));
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal CLI argument parser (clap is not in the offline crate
+//! universe): `repro <command> [--key value | --flag]...` with typed
+//! accessors and helpful errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    presence: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut it = raw.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut presence = Vec::new();
+        while let Some(tok) = it.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {tok:?}"))?
+                .to_string();
+            if key.is_empty() {
+                return Err("empty flag name".into());
+            }
+            // --key=value or --key value or bare --flag
+            if let Some((k, v)) = key.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(key, it.next().unwrap());
+            } else {
+                presence.push(key);
+            }
+        }
+        Ok(Args {
+            command,
+            flags,
+            presence,
+        })
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.presence.iter().any(|f| f == flag) || self.flags.contains_key(flag)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_and_presence() {
+        let a = parse(&["run", "--workers", "8", "--rounds=50", "--no-shuffle"]);
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
+        assert_eq!(a.get_u64("rounds", 0).unwrap(), 50);
+        assert!(a.has("no-shuffle"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["serial"]);
+        assert_eq!(a.get_f64("alpha", 1.5).unwrap(), 1.5);
+        assert_eq!(a.get_str("out", "trace.csv"), "trace.csv");
+    }
+
+    #[test]
+    fn bad_tokens_are_rejected() {
+        assert!(Args::parse(vec!["run".into(), "workers".into()]).is_err());
+        let a = parse(&["run", "--workers", "eight"]);
+        assert!(a.get_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn empty_args_default_to_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

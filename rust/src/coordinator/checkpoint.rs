@@ -1,0 +1,305 @@
+//! Checkpoint / resume for the coordinator: serialize the full latent
+//! state (per-supercluster row ownership + assignments, α, β, round and
+//! time counters) to a versioned, checksummed binary file, and rebuild a
+//! running coordinator from it. Long VQ runs (the paper's Fig. 9 is a
+//! 32-CPU-day job) need this to survive restarts.
+//!
+//! Cluster sufficient statistics are NOT stored — they are a pure
+//! function of (data, assignments) and are rebuilt on load, which keeps
+//! the file small and makes corruption structurally impossible to carry
+//! into the stats.
+
+use super::supercluster_state::SuperclusterState;
+use super::{Coordinator, CoordinatorConfig};
+use crate::data::BinMat;
+use crate::rng::Pcg64;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CCCKPT1\n";
+
+/// Plain-old-data snapshot of the coordinator's latent state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub alpha: f64,
+    pub beta: Vec<f64>,
+    pub rounds: u64,
+    pub modeled_time_s: f64,
+    pub measured_time_s: f64,
+    /// per supercluster: (global row ids, local cluster slot per row)
+    pub shards: Vec<(Vec<u64>, Vec<u32>)>,
+}
+
+impl Checkpoint {
+    /// Capture from a live coordinator.
+    pub fn capture(coord: &Coordinator<'_>) -> Checkpoint {
+        Checkpoint {
+            alpha: coord.alpha,
+            beta: coord.model.beta.clone(),
+            rounds: coord.rounds,
+            modeled_time_s: coord.modeled_time_s,
+            measured_time_s: coord.measured_time_s,
+            shards: coord
+                .states()
+                .iter()
+                .map(|st| {
+                    (
+                        st.rows().iter().map(|&r| r as u64).collect(),
+                        st.assignments_local().to_vec(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        let mut sum: u64 = 0;
+        let mut w64 = |f: &mut std::fs::File, x: u64, sum: &mut u64| -> std::io::Result<()> {
+            *sum = sum.wrapping_add(x);
+            f.write_all(&x.to_le_bytes())
+        };
+        f.write_all(MAGIC)?;
+        w64(&mut f, self.alpha.to_bits(), &mut sum)?;
+        w64(&mut f, self.beta.len() as u64, &mut sum)?;
+        for &b in &self.beta {
+            w64(&mut f, b.to_bits(), &mut sum)?;
+        }
+        w64(&mut f, self.rounds, &mut sum)?;
+        w64(&mut f, self.modeled_time_s.to_bits(), &mut sum)?;
+        w64(&mut f, self.measured_time_s.to_bits(), &mut sum)?;
+        w64(&mut f, self.shards.len() as u64, &mut sum)?;
+        for (rows, assign) in &self.shards {
+            w64(&mut f, rows.len() as u64, &mut sum)?;
+            for &r in rows {
+                w64(&mut f, r, &mut sum)?;
+            }
+            for &a in assign {
+                w64(&mut f, a as u64, &mut sum)?;
+            }
+        }
+        f.write_all(&sum.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
+        let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(err("not a CCCKPT1 checkpoint"));
+        }
+        let mut sum: u64 = 0;
+        let mut buf = [0u8; 8];
+        let mut r64 = |f: &mut std::fs::File, sum: &mut u64| -> std::io::Result<u64> {
+            f.read_exact(&mut buf)?;
+            let x = u64::from_le_bytes(buf);
+            *sum = sum.wrapping_add(x);
+            Ok(x)
+        };
+        let alpha = f64::from_bits(r64(&mut f, &mut sum)?);
+        let nbeta = r64(&mut f, &mut sum)? as usize;
+        let mut beta = Vec::with_capacity(nbeta);
+        for _ in 0..nbeta {
+            beta.push(f64::from_bits(r64(&mut f, &mut sum)?));
+        }
+        let rounds = r64(&mut f, &mut sum)?;
+        let modeled_time_s = f64::from_bits(r64(&mut f, &mut sum)?);
+        let measured_time_s = f64::from_bits(r64(&mut f, &mut sum)?);
+        let nshards = r64(&mut f, &mut sum)? as usize;
+        let mut shards = Vec::with_capacity(nshards);
+        for _ in 0..nshards {
+            let n = r64(&mut f, &mut sum)? as usize;
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                rows.push(r64(&mut f, &mut sum)?);
+            }
+            let mut assign = Vec::with_capacity(n);
+            for _ in 0..n {
+                assign.push(r64(&mut f, &mut sum)? as u32);
+            }
+            shards.push((rows, assign));
+        }
+        let mut tail = [0u8; 8];
+        f.read_exact(&mut tail)?;
+        if u64::from_le_bytes(tail) != sum {
+            return Err(err("checkpoint checksum mismatch"));
+        }
+        Ok(Checkpoint {
+            alpha,
+            beta,
+            rounds,
+            modeled_time_s,
+            measured_time_s,
+            shards,
+        })
+    }
+}
+
+impl<'a> Coordinator<'a> {
+    /// Persist the latent state.
+    pub fn save_checkpoint(&self, path: &Path) -> std::io::Result<()> {
+        Checkpoint::capture(self).save(path)
+    }
+
+    /// Rebuild a coordinator from a checkpoint against the SAME dataset
+    /// (sufficient statistics are recomputed from assignments; every
+    /// shard is integrity-checked before the chain may continue).
+    pub fn resume(
+        data: &'a BinMat,
+        cfg: CoordinatorConfig,
+        ckpt: &Checkpoint,
+        rng: &mut Pcg64,
+    ) -> Result<Coordinator<'a>, String> {
+        if ckpt.shards.len() != cfg.workers {
+            return Err(format!(
+                "checkpoint has {} shards, config wants {} workers",
+                ckpt.shards.len(),
+                cfg.workers
+            ));
+        }
+        if ckpt.beta.len() != data.dims() {
+            return Err(format!(
+                "checkpoint β has {} dims, data has {}",
+                ckpt.beta.len(),
+                data.dims()
+            ));
+        }
+        let mut coord = Coordinator::new(data, cfg, rng);
+        coord.alpha = ckpt.alpha;
+        let symmetric = ckpt.beta.iter().all(|&b| b == ckpt.beta[0]);
+        coord.model.beta = ckpt.beta.clone();
+        if symmetric {
+            coord.model.build_lut(data.rows() + 1);
+        } else {
+            coord.model.drop_lut();
+        }
+        coord.rounds = ckpt.rounds;
+        coord.modeled_time_s = ckpt.modeled_time_s;
+        coord.measured_time_s = ckpt.measured_time_s;
+        let states: Result<Vec<SuperclusterState>, String> = ckpt
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(kk, (rows, assign))| {
+                let rows: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+                let st = SuperclusterState::from_parts(
+                    data,
+                    rows,
+                    assign.clone(),
+                    rng.split(1000 + kk as u64),
+                )?;
+                st.check_invariants(data)
+                    .map_err(|e| format!("shard {kk}: {e}"))?;
+                Ok(st)
+            })
+            .collect();
+        coord.replace_states(states?);
+        coord.check_invariants()?;
+        Ok(coord)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticConfig;
+    use crate::mapreduce::CommModel;
+    use crate::runtime::FallbackScorer;
+
+    fn ckpt_dir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("cc_ckpt_test");
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_preserves_state_exactly() {
+        let ds = SyntheticConfig {
+            n: 500,
+            d: 16,
+            clusters: 4,
+            beta: 0.2,
+            seed: 1,
+        }
+        .generate();
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(2);
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        for _ in 0..5 {
+            coord.step(&mut rng);
+        }
+        let path = ckpt_dir().join("rt.ccckpt");
+        coord.save_checkpoint(&path).unwrap();
+        let ckpt = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, Checkpoint::capture(&coord));
+
+        let mut rng2 = Pcg64::seed_from(3);
+        let mut resumed = Coordinator::resume(&ds.train, cfg, &ckpt, &mut rng2).unwrap();
+        assert_eq!(resumed.num_clusters(), coord.num_clusters());
+        assert_eq!(resumed.alpha(), coord.alpha());
+        assert_eq!(resumed.rounds, coord.rounds);
+        assert_eq!(resumed.assignments(), coord.assignments());
+        // and the resumed chain runs + scores
+        resumed.step(&mut rng2);
+        let mut sc = FallbackScorer::new();
+        let ll = resumed.predictive_loglik(&ds.test, &mut sc);
+        assert!(ll.is_finite());
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        let ds = SyntheticConfig {
+            n: 100,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 4,
+        }
+        .generate_with_test_fraction(0.0);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(5);
+        let coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let path = ckpt_dir().join("corrupt.ccckpt");
+        coord.save_checkpoint(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x5a;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn mismatched_config_rejected() {
+        let ds = SyntheticConfig {
+            n: 100,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 6,
+        }
+        .generate_with_test_fraction(0.0);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(7);
+        let coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let ckpt = Checkpoint::capture(&coord);
+        let cfg4 = CoordinatorConfig {
+            workers: 4,
+            ..cfg
+        };
+        assert!(Coordinator::resume(&ds.train, cfg4, &ckpt, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,413 @@
+//! Layer 3 — the paper's system contribution: the parallel MCMC
+//! coordinator for Dirichlet-process mixtures (§4–5, Fig. 3).
+//!
+//! Every global round is one map-reduce cycle:
+//!
+//! * **map** — each supercluster (= compute node) runs `R` local collapsed
+//!   Gibbs sweeps over its own data with concentration `αμ_k`, using
+//!   standard DPM operators *without modification* (Neal Alg. 3 here);
+//!   data may instantiate new clusters locally but cannot cross nodes.
+//! * **reduce** — centralized, lightweight: sample `α` from Eq. 6 given
+//!   `Σ_k J_k` (each worker ships one integer), and the base-measure
+//!   hyperparameters `β_d` by griddy Gibbs from pooled sufficient
+//!   statistics.
+//! * **shuffle** — move whole clusters (stats + member rows) between
+//!   superclusters by Gibbs on `s_j`, then broadcast the new state.
+//!
+//! The representation keeps the *true* DPM posterior invariant — the DP
+//! "learns how to parallelize itself".
+
+pub mod checkpoint;
+pub mod supercluster_state;
+pub mod walker;
+
+use crate::data::BinMat;
+use crate::mapreduce::{finish_round, CommModel, MapReduce, RoundStats};
+use crate::model::alpha::{sample_alpha, GammaPrior};
+use crate::model::hyper::{BetaGridConfig, BetaUpdater};
+use crate::model::BetaBernoulli;
+use crate::rng::Pcg64;
+use crate::runtime::Scorer;
+use crate::special::logsumexp;
+use crate::supercluster::{sample_shuffle, ShuffleKernel};
+use crate::util::timer::PhaseTimer;
+use std::time::Instant;
+
+pub use checkpoint::Checkpoint;
+pub use supercluster_state::SuperclusterState;
+pub use walker::LocalKernel;
+
+/// How the supercluster base weights μ are set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MuMode {
+    /// μ_k = 1/K (the paper's choice).
+    Uniform,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// number of superclusters K (= simulated compute nodes)
+    pub workers: usize,
+    /// local Gibbs sweeps per global round (Fig. 2a's ratio)
+    pub local_sweeps: usize,
+    pub init_alpha: f64,
+    pub alpha_prior: GammaPrior,
+    pub init_beta: f64,
+    pub beta_grid: BetaGridConfig,
+    pub update_alpha: bool,
+    /// β_d updates are O(D · grid · J): on by default at reduce cadence
+    pub update_beta: bool,
+    /// enable the cluster shuffle step (ablation: without it the islands
+    /// never exchange structure and the chain is NOT a DPM sampler)
+    pub shuffle: bool,
+    pub shuffle_kernel: ShuffleKernel,
+    pub mu_mode: MuMode,
+    /// per-supercluster transition operator (paper §4: any standard DPM
+    /// kernel applies unmodified — Neal Alg. 3 or Walker slice)
+    pub local_kernel: LocalKernel,
+    pub comm: CommModel,
+    /// host threads for the map step (0 = one per available core)
+    pub parallelism: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            local_sweeps: 1,
+            init_alpha: 1.0,
+            alpha_prior: GammaPrior::default(),
+            init_beta: 0.5,
+            beta_grid: BetaGridConfig::default(),
+            update_alpha: true,
+            update_beta: false,
+            shuffle: true,
+            shuffle_kernel: ShuffleKernel::Exact,
+            mu_mode: MuMode::Uniform,
+            local_kernel: LocalKernel::CollapsedGibbs,
+            comm: CommModel::default(),
+            parallelism: 1,
+        }
+    }
+}
+
+/// The distributed sampler state: K superclusters + global hypers.
+pub struct Coordinator<'a> {
+    data: &'a BinMat,
+    pub model: BetaBernoulli,
+    pub alpha: f64,
+    mu: Vec<f64>,
+    cfg: CoordinatorConfig,
+    states: Vec<SuperclusterState>,
+    beta_updater: BetaUpdater,
+    mr: MapReduce,
+    pub timer: PhaseTimer,
+    /// cumulative modeled distributed wall-clock (s)
+    pub modeled_time_s: f64,
+    /// cumulative measured host wall-clock (s)
+    pub measured_time_s: f64,
+    pub rounds: u64,
+}
+
+impl<'a> Coordinator<'a> {
+    /// Initialize per the paper (§5): data assigned to superclusters
+    /// uniformly at random, clustering initialized by a draw from the
+    /// local Chinese restaurant prior.
+    pub fn new(data: &'a BinMat, cfg: CoordinatorConfig, rng: &mut Pcg64) -> Self {
+        assert!(cfg.workers >= 1 && cfg.local_sweeps >= 1);
+        let k = cfg.workers;
+        let mu = match cfg.mu_mode {
+            MuMode::Uniform => vec![1.0 / k as f64; k],
+        };
+        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
+        // symmetric-beta fast-rebuild LUT for the Gibbs hot loop (perf)
+        model.build_lut(data.rows() + 1);
+
+        // uniform random data → supercluster assignment
+        let mut rows_per: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for r in 0..data.rows() {
+            rows_per[rng.next_below(k as u64) as usize].push(r);
+        }
+        let states: Vec<SuperclusterState> = rows_per
+            .into_iter()
+            .enumerate()
+            .map(|(kk, rows)| {
+                let worker_rng = rng.split(kk as u64);
+                SuperclusterState::init_from_prior(
+                    data,
+                    rows,
+                    cfg.init_alpha * mu[kk],
+                    &model,
+                    worker_rng,
+                )
+            })
+            .collect();
+
+        let parallelism = if cfg.parallelism == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            cfg.parallelism
+        };
+
+        Coordinator {
+            data,
+            model,
+            alpha: cfg.init_alpha,
+            mu,
+            cfg,
+            states,
+            beta_updater: BetaUpdater::new(cfg.beta_grid),
+            mr: MapReduce::new(parallelism),
+            timer: PhaseTimer::new(),
+            modeled_time_s: 0.0,
+            measured_time_s: 0.0,
+            rounds: 0,
+        }
+    }
+
+    /// One global round: map (R local sweeps per node) → reduce (α, β) →
+    /// shuffle (cluster moves + broadcast). Returns the round's stats.
+    pub fn step(&mut self, rng: &mut Pcg64) -> RoundStats {
+        let round_t0 = Instant::now();
+        let data = self.data;
+        let model = &self.model;
+        let alpha = self.alpha;
+        let mu = &self.mu;
+        let sweeps = self.cfg.local_sweeps;
+        let kernel = self.cfg.local_kernel;
+
+        // ---- map: local sweeps, one task per supercluster ----
+        let states = std::mem::take(&mut self.states);
+        let map_t0 = Instant::now();
+        let (mut states, map_durs) = self.mr.map(states, |kk, mut st| {
+            for _ in 0..sweeps {
+                match kernel {
+                    LocalKernel::CollapsedGibbs => st.gibbs_sweep(data, model, alpha * mu[kk]),
+                    LocalKernel::WalkerSlice => st.walker_sweep(data, model, alpha * mu[kk]),
+                }
+            }
+            st
+        });
+        self.timer.add("map", map_t0.elapsed());
+
+        // ---- reduce: centralized hyper updates ----
+        let reduce_t0 = Instant::now();
+        let mut bytes: u64 = 0;
+        // each worker ships J_k (8 bytes) and, if β updates are on, its
+        // cluster sufficient statistics (n + per-dim one-counts)
+        let total_j: u64 = states.iter().map(|s| s.num_clusters() as u64).sum();
+        bytes += 8 * states.len() as u64;
+        if self.cfg.update_alpha {
+            self.alpha = sample_alpha(
+                rng,
+                self.alpha,
+                data.rows() as u64,
+                total_j,
+                &self.cfg.alpha_prior,
+            );
+        }
+        if self.cfg.update_beta {
+            bytes += total_j * (8 + 4 * model.d as u64);
+            let mut stats: Vec<(u64, u32)> = Vec::new();
+            for d in 0..self.model.d {
+                stats.clear();
+                for st in &states {
+                    st.collect_dim_stats(d, &mut stats);
+                }
+                self.model.beta[d] = self.beta_updater.sample(rng, &stats);
+            }
+            // beta is now per-dimension: the symmetric LUT no longer applies
+            self.model.drop_lut();
+            for st in &mut states {
+                st.invalidate_caches();
+            }
+            bytes += 8 * self.model.d as u64; // broadcast β
+        }
+        let reduce_dur = reduce_t0.elapsed();
+        self.timer.add("reduce", reduce_dur);
+
+        // ---- shuffle: Gibbs on s_j, move whole clusters ----
+        let shuffle_t0 = Instant::now();
+        if self.cfg.shuffle && self.cfg.workers > 1 {
+            bytes += self.shuffle(&mut states, rng);
+        }
+        self.timer.add("shuffle", shuffle_t0.elapsed());
+
+        self.states = states;
+        self.rounds += 1;
+
+        let rs = finish_round(
+            &self.cfg.comm,
+            map_durs,
+            reduce_dur + shuffle_t0.elapsed(),
+            bytes,
+            round_t0.elapsed(),
+        );
+        self.modeled_time_s += rs.modeled_wall_s;
+        self.measured_time_s += rs.measured_wall_s;
+        rs
+    }
+
+    /// Gibbs-resample every cluster's supercluster assignment and move
+    /// the clusters. Returns the bytes the moves would transfer.
+    fn shuffle(&mut self, states: &mut [SuperclusterState], rng: &mut Pcg64) -> u64 {
+        let k = states.len();
+        // extract all clusters: (stats, member rows, current supercluster)
+        let mut all: Vec<(crate::model::ClusterStats, Vec<usize>, usize)> = Vec::new();
+        for (kk, st) in states.iter_mut().enumerate() {
+            for (stats, rows) in st.drain_clusters(self.data) {
+                all.push((stats, rows, kk));
+            }
+        }
+        // current per-supercluster cluster counts for the Eq.7 variant
+        let mut j_counts: Vec<u64> = vec![0; k];
+        for &(_, _, kk) in &all {
+            j_counts[kk] += 1;
+        }
+        let mut bytes = 0u64;
+        for (stats, rows, kk_old) in all {
+            let mut j_minus = j_counts.clone();
+            j_minus[kk_old] -= 1;
+            let kk_new =
+                sample_shuffle(rng, self.cfg.shuffle_kernel, self.alpha, &self.mu, &j_minus);
+            j_counts[kk_old] -= 1;
+            j_counts[kk_new] += 1;
+            if kk_new != kk_old {
+                // moving a cluster ships its parameters/stats and the
+                // member row ids (the paper: "communicating a set of data
+                // indices and one set of component parameters")
+                bytes += 8 + 4 * self.model.d as u64 + 8 * rows.len() as u64;
+            }
+            states[kk_new].insert_cluster(stats, rows);
+        }
+        bytes
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.states.iter().map(|s| s.num_clusters()).sum()
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn mu(&self) -> &[f64] {
+        &self.mu
+    }
+
+    pub fn states(&self) -> &[SuperclusterState] {
+        &self.states
+    }
+
+    /// Replace the shard states (checkpoint resume).
+    pub(crate) fn replace_states(&mut self, states: Vec<SuperclusterState>) {
+        self.states = states;
+    }
+
+    /// Global assignment vector (cluster ids unique across superclusters),
+    /// aligned with the data row order — for ARI against ground truth.
+    pub fn assignments(&self) -> Vec<u32> {
+        let mut z = vec![0u32; self.data.rows()];
+        let mut next_id = 0u32;
+        for st in &self.states {
+            next_id = st.export_assignments(&mut z, next_id);
+        }
+        z
+    }
+
+    /// All cluster stats with their sizes (global view after a round).
+    pub fn global_clusters(&self) -> Vec<&crate::model::ClusterStats> {
+        self.states.iter().flat_map(|s| s.clusters()).collect()
+    }
+
+    /// Mean test-set predictive log-likelihood per datum, computed through
+    /// a [`Scorer`] (the PJRT artifact on the production path; the pure-
+    /// Rust fallback in tests).
+    pub fn predictive_loglik(&self, test: &BinMat, scorer: &mut dyn Scorer) -> f64 {
+        let clusters = self.global_clusters();
+        let n_total = self.data.rows() as f64 + self.alpha;
+        let j = clusters.len();
+        let d = self.model.d;
+        // weight matrices [D, J+1]: J extant clusters + the fresh cluster
+        let jj = j + 1;
+        let mut w1 = vec![0.0f32; d * jj];
+        let mut w0 = vec![0.0f32; d * jj];
+        let mut logpi = vec![0.0f32; jj];
+        let mut p1 = vec![0.0f32; d];
+        for (ji, c) in clusters.iter().enumerate() {
+            c.predictive_p1(&self.model, &mut p1);
+            for dd in 0..d {
+                w1[dd * jj + ji] = p1[dd].ln();
+                w0[dd * jj + ji] = (1.0 - p1[dd]).ln();
+            }
+            logpi[ji] = ((c.n() as f64 / n_total).ln()) as f32;
+        }
+        // fresh cluster: predictive coin 1/2 in every dim
+        let half = 0.5f32.ln();
+        for dd in 0..d {
+            w1[dd * jj + j] = half;
+            w0[dd * jj + j] = half;
+        }
+        logpi[j] = ((self.alpha / n_total).ln()) as f32;
+
+        let dens = scorer.predictive_density(test, &w1, &w0, &logpi, d, jj);
+        let total: f64 = dens.iter().map(|&x| x as f64).sum();
+        total / test.rows() as f64
+    }
+
+    /// Joint log probability under the nested representation (Eq. 5 × the
+    /// collapsed data marginals) — used by invariance tests.
+    pub fn joint_log_prob(&self) -> f64 {
+        use crate::special::lgamma;
+        let n = self.data.rows() as f64;
+        let total_j = self.num_clusters() as f64;
+        let mut lp = lgamma(self.alpha) - lgamma(self.alpha + n) + total_j * self.alpha.ln();
+        for (kk, st) in self.states.iter().enumerate() {
+            lp += st.num_clusters() as f64 * self.mu[kk].ln();
+            for c in st.clusters() {
+                lp += lgamma(c.n() as f64);
+                lp += c.log_marginal(&self.model);
+            }
+        }
+        lp
+    }
+
+    /// Data-integrity check across all superclusters (tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.data.rows()];
+        for (kk, st) in self.states.iter().enumerate() {
+            st.check_invariants(self.data)
+                .map_err(|e| format!("supercluster {kk}: {e}"))?;
+            for &r in st.rows() {
+                if seen[r] {
+                    return Err(format!("row {r} owned by two superclusters"));
+                }
+                seen[r] = true;
+            }
+        }
+        if let Some(r) = seen.iter().position(|&s| !s) {
+            return Err(format!("row {r} owned by no supercluster"));
+        }
+        Ok(())
+    }
+
+    /// Native (non-Scorer) predictive log-lik — small helper for tests
+    /// and for environments without artifacts.
+    pub fn predictive_loglik_native(&mut self, test: &BinMat) -> f64 {
+        let n_total = self.data.rows() as f64 + self.alpha;
+        let model = self.model.clone();
+        let alpha = self.alpha;
+        let mut terms: Vec<f64> = Vec::new();
+        let mut acc = 0.0;
+        for r in 0..test.rows() {
+            terms.clear();
+            for st in &mut self.states {
+                st.score_against_all(&model, test, r, n_total, &mut terms);
+            }
+            terms.push((alpha / n_total).ln() + model.empty_cluster_loglik());
+            acc += logsumexp(&terms);
+        }
+        acc / test.rows() as f64
+    }
+}

@@ -1,0 +1,492 @@
+//! Per-worker state: one supercluster's shard of the latent variables —
+//! its data rows, local cluster slots, and a private RNG stream (so the
+//! chain is deterministic regardless of thread scheduling).
+//!
+//! The local transition operator is unmodified Neal-Alg.-3 collapsed
+//! Gibbs with concentration `αμ_k` — exactly the paper's point: standard
+//! DPM kernels apply per supercluster without alteration.
+
+use crate::data::BinMat;
+use crate::model::{BetaBernoulli, ClusterStats};
+use crate::rng::{categorical_log, categorical_log_inplace, Pcg64};
+
+/// One supercluster (= one simulated compute node).
+pub struct SuperclusterState {
+    /// global row ids resident on this node
+    rows: Vec<usize>,
+    /// local cluster slot per row (parallel to `rows`)
+    assign: Vec<u32>,
+    /// slotted local clusters
+    clusters: Vec<Option<ClusterStats>>,
+    free_slots: Vec<usize>,
+    rng: Pcg64,
+    // scratch buffers (reused across sweeps; never on the alloc hot path)
+    scratch_ids: Vec<u32>,
+    scratch_logw: Vec<f64>,
+    scratch_ones: Vec<u32>,
+}
+
+impl SuperclusterState {
+    /// Initialize this shard by a draw from the local CRP(αμ_k) prior
+    /// (the paper's §5 initialization).
+    pub fn init_from_prior(
+        data: &BinMat,
+        rows: Vec<usize>,
+        local_alpha: f64,
+        model: &BetaBernoulli,
+        mut rng: Pcg64,
+    ) -> Self {
+        let n = rows.len();
+        let mut st = SuperclusterState {
+            rows,
+            assign: vec![0; n],
+            clusters: Vec::new(),
+            free_slots: Vec::new(),
+            rng,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+        };
+        rng = st.rng.clone(); // appease borrowck: use the internal stream
+        for i in 0..n {
+            let r = st.rows[i];
+            st.scratch_ids.clear();
+            st.scratch_logw.clear();
+            for (slot, c) in st.clusters.iter().enumerate() {
+                if let Some(c) = c {
+                    st.scratch_ids.push(slot as u32);
+                    st.scratch_logw.push((c.n() as f64).ln());
+                }
+            }
+            st.scratch_ids.push(u32::MAX);
+            st.scratch_logw.push(local_alpha.max(1e-300).ln());
+            let pick = categorical_log(&mut rng, &st.scratch_logw);
+            let slot = st.place(pick, data, r, model.d);
+            st.assign[i] = slot;
+        }
+        st.rng = rng;
+        st
+    }
+
+    fn place(&mut self, pick: usize, data: &BinMat, r: usize, d: usize) -> u32 {
+        let slot = if self.scratch_ids[pick] == u32::MAX {
+            match self.free_slots.pop() {
+                Some(s) => {
+                    self.clusters[s] = Some(ClusterStats::empty(d));
+                    s
+                }
+                None => {
+                    self.clusters.push(Some(ClusterStats::empty(d)));
+                    self.clusters.len() - 1
+                }
+            }
+        } else {
+            self.scratch_ids[pick] as usize
+        };
+        self.clusters[slot].as_mut().unwrap().add(data, r);
+        slot as u32
+    }
+
+    /// One collapsed Gibbs sweep over this shard with concentration
+    /// `local_alpha = α μ_k`.
+    pub fn gibbs_sweep(&mut self, data: &BinMat, model: &BetaBernoulli, local_alpha: f64) {
+        let mut rng = self.rng.clone();
+        for i in 0..self.rows.len() {
+            let r = self.rows[i];
+            let old = self.assign[i] as usize;
+            {
+                let c = self.clusters[old].as_mut().unwrap();
+                c.remove(data, r);
+                if c.is_empty() {
+                    self.clusters[old] = None;
+                    self.free_slots.push(old);
+                }
+            }
+            self.scratch_ids.clear();
+            self.scratch_logw.clear();
+            // decode the datum's set bits ONCE, score every local
+            // cluster from the same index list (perf: §Perf)
+            self.scratch_ones.clear();
+            let ones = &mut self.scratch_ones;
+            data.for_each_one(r, |d| ones.push(d as u32));
+            for (slot, c) in self.clusters.iter_mut().enumerate() {
+                if let Some(c) = c {
+                    self.scratch_ids.push(slot as u32);
+                    self.scratch_logw
+                        .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
+                }
+            }
+            self.scratch_ids.push(u32::MAX);
+            self.scratch_logw
+                .push(local_alpha.max(1e-300).ln() + model.empty_cluster_loglik());
+            let pick = categorical_log_inplace(&mut rng, &mut self.scratch_logw);
+            self.assign[i] = self.place(pick, data, r, model.d);
+        }
+        self.rng = rng;
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.iter().filter(|c| c.is_some()).count()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    pub fn clusters(&self) -> impl Iterator<Item = &ClusterStats> {
+        self.clusters.iter().flatten()
+    }
+
+    /// Push (n_j, c_jd) for every local cluster into `out` (reduce-step
+    /// sufficient statistics for dimension `d`).
+    pub fn collect_dim_stats(&self, d: usize, out: &mut Vec<(u64, u32)>) {
+        for c in self.clusters.iter().flatten() {
+            out.push((c.n(), c.ones()[d]));
+        }
+    }
+
+    pub fn invalidate_caches(&mut self) {
+        for c in self.clusters.iter_mut().flatten() {
+            c.invalidate_cache();
+        }
+    }
+
+    /// Remove and return every cluster as (stats, member-row-ids); leaves
+    /// this shard empty. Used by the shuffle step.
+    pub fn drain_clusters(&mut self, _data: &BinMat) -> Vec<(ClusterStats, Vec<usize>)> {
+        let nslots = self.clusters.len();
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); nslots];
+        for (i, &slot) in self.assign.iter().enumerate() {
+            members[slot as usize].push(self.rows[i]);
+        }
+        let mut out = Vec::new();
+        for (slot, c) in self.clusters.drain(..).enumerate() {
+            if let Some(c) = c {
+                out.push((c, std::mem::take(&mut members[slot])));
+            }
+        }
+        self.rows.clear();
+        self.assign.clear();
+        self.free_slots.clear();
+        out
+    }
+
+    /// Insert a cluster (stats + member rows) into this shard.
+    pub fn insert_cluster(&mut self, stats: ClusterStats, member_rows: Vec<usize>) {
+        debug_assert_eq!(stats.n() as usize, member_rows.len());
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.clusters[s] = Some(stats);
+                s
+            }
+            None => {
+                self.clusters.push(Some(stats));
+                self.clusters.len() - 1
+            }
+        };
+        for r in member_rows {
+            self.rows.push(r);
+            self.assign.push(slot as u32);
+        }
+    }
+
+    /// Write this shard's assignments into the global z vector with
+    /// globally-unique ids starting at `next_id`; returns the next free id.
+    pub fn export_assignments(&self, z: &mut [u32], mut next_id: u32) -> u32 {
+        let mut slot_to_id: Vec<Option<u32>> = vec![None; self.clusters.len()];
+        for (i, &slot) in self.assign.iter().enumerate() {
+            let id = *slot_to_id[slot as usize].get_or_insert_with(|| {
+                let id = next_id;
+                next_id += 1;
+                id
+            });
+            z[self.rows[i]] = id;
+        }
+        next_id
+    }
+
+    /// Append `ln(n_j/(N+α)) + ln p(x_r | cluster)` for every local
+    /// cluster (mutable for the score cache).
+    pub fn score_against_all(
+        &mut self,
+        model: &BetaBernoulli,
+        test: &BinMat,
+        r: usize,
+        n_total: f64,
+        out: &mut Vec<f64>,
+    ) {
+        for c in self.clusters.iter_mut().flatten() {
+            out.push((c.n() as f64 / n_total).ln() + c.score(model, test, r));
+        }
+    }
+
+    /// Local cluster-slot assignment per resident row (checkpointing).
+    pub fn assignments_local(&self) -> &[u32] {
+        &self.assign
+    }
+
+    /// Rebuild a shard from persisted (rows, assign) — cluster stats are
+    /// recomputed from the data (checkpoint resume).
+    pub fn from_parts(
+        data: &BinMat,
+        rows: Vec<usize>,
+        assign: Vec<u32>,
+        rng: Pcg64,
+    ) -> Result<Self, String> {
+        if rows.len() != assign.len() {
+            return Err("rows/assign length mismatch".into());
+        }
+        let nslots = assign.iter().map(|&a| a as usize + 1).max().unwrap_or(0);
+        let mut clusters: Vec<Option<ClusterStats>> = (0..nslots).map(|_| None).collect();
+        for (i, &slot) in assign.iter().enumerate() {
+            let c = clusters[slot as usize]
+                .get_or_insert_with(|| ClusterStats::empty(data.dims()));
+            if rows[i] >= data.rows() {
+                return Err(format!("row id {} out of range", rows[i]));
+            }
+            c.add(data, rows[i]);
+        }
+        let free_slots: Vec<usize> = clusters
+            .iter()
+            .enumerate()
+            .filter_map(|(s, c)| c.is_none().then_some(s))
+            .collect();
+        Ok(SuperclusterState {
+            rows,
+            assign,
+            clusters,
+            free_slots,
+            rng,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+        })
+    }
+
+    // ---- accessors for the Walker slice kernel (walker.rs) ----
+
+    /// Move the private RNG stream out (returned via [`Self::put_rng`]).
+    pub(crate) fn take_rng(&mut self) -> Pcg64 {
+        self.rng.clone()
+    }
+
+    pub(crate) fn put_rng(&mut self, rng: Pcg64) {
+        self.rng = rng;
+    }
+
+    /// Occupied cluster slots in order of first appearance along the
+    /// shard's datum sequence (the labeling under which Pitman's
+    /// size-biased stick posterior applies — see walker.rs).
+    pub(crate) fn slots_by_appearance(&self) -> Vec<usize> {
+        let mut seen = vec![false; self.clusters.len()];
+        let mut out = Vec::new();
+        for &slot in &self.assign {
+            let s = slot as usize;
+            if !seen[s] {
+                seen[s] = true;
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Occupied cluster slots in persistent slot order.
+    pub(crate) fn occupied_slots(&self) -> Vec<usize> {
+        self.clusters
+            .iter()
+            .enumerate()
+            .filter_map(|(s, c)| c.as_ref().map(|_| s))
+            .collect()
+    }
+
+    pub(crate) fn num_slots(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub(crate) fn cluster_n(&self, slot: usize) -> u64 {
+        self.clusters[slot].as_ref().map(|c| c.n()).unwrap_or(0)
+    }
+
+    pub(crate) fn assign_of(&self, i: usize) -> u32 {
+        self.assign[i]
+    }
+
+    pub(crate) fn row_of(&self, i: usize) -> usize {
+        self.rows[i]
+    }
+
+    /// Remove datum index `i` from its cluster WITHOUT freeing the slot
+    /// if it empties (Walker keeps emptied tables selectable through
+    /// their stick until the end of the sweep).
+    pub(crate) fn remove_row_keep_slot(&mut self, i: usize, data: &BinMat) {
+        let slot = self.assign[i] as usize;
+        self.clusters[slot]
+            .as_mut()
+            .expect("remove from dead slot")
+            .remove(data, self.rows[i]);
+    }
+
+    pub(crate) fn add_row_to_slot(&mut self, i: usize, slot: usize, data: &BinMat) {
+        self.clusters[slot]
+            .as_mut()
+            .expect("add to dead slot")
+            .add(data, self.rows[i]);
+        self.assign[i] = slot as u32;
+    }
+
+    /// Materialize a fresh cluster containing datum `i`; returns the slot.
+    pub(crate) fn add_row_to_new_cluster(&mut self, i: usize, data: &BinMat, d: usize) -> usize {
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                self.clusters[s] = Some(ClusterStats::empty(d));
+                s
+            }
+            None => {
+                self.clusters.push(Some(ClusterStats::empty(d)));
+                self.clusters.len() - 1
+            }
+        };
+        self.clusters[slot].as_mut().unwrap().add(data, self.rows[i]);
+        self.assign[i] = slot as u32;
+        slot
+    }
+
+    /// Collapsed predictive log-likelihood of row `r` under `slot`
+    /// (empty clusters score as fresh tables).
+    pub(crate) fn score_slot(
+        &mut self,
+        slot: usize,
+        model: &BetaBernoulli,
+        data: &BinMat,
+        r: usize,
+    ) -> f64 {
+        self.clusters[slot]
+            .as_mut()
+            .expect("score dead slot")
+            .score(model, data, r)
+    }
+
+    /// Free every empty-but-alive slot (end of a Walker sweep).
+    pub(crate) fn compact_free_slots(&mut self) {
+        for s in 0..self.clusters.len() {
+            let empty = matches!(&self.clusters[s], Some(c) if c.is_empty());
+            if empty {
+                self.clusters[s] = None;
+                self.free_slots.push(s);
+            }
+        }
+    }
+
+    /// Integrity check: stats match the member rows exactly.
+    pub fn check_invariants(&self, data: &BinMat) -> Result<(), String> {
+        if self.rows.len() != self.assign.len() {
+            return Err("rows/assign length mismatch".into());
+        }
+        let mut rebuilt: Vec<ClusterStats> = self
+            .clusters
+            .iter()
+            .map(|_| ClusterStats::empty(data.dims()))
+            .collect();
+        for (i, &slot) in self.assign.iter().enumerate() {
+            let slot = slot as usize;
+            if slot >= self.clusters.len() || self.clusters[slot].is_none() {
+                return Err(format!("row idx {i} assigned to dead slot {slot}"));
+            }
+            rebuilt[slot].add(data, self.rows[i]);
+        }
+        for (slot, c) in self.clusters.iter().enumerate() {
+            if let Some(c) = c {
+                if c.is_empty() {
+                    return Err(format!("slot {slot} empty but not freed"));
+                }
+                if c.n() != rebuilt[slot].n() || c.ones() != rebuilt[slot].ones() {
+                    return Err(format!("slot {slot} stats mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+
+    fn make_state(seed: u64) -> (crate::data::Dataset, SuperclusterState, BetaBernoulli) {
+        let ds = SyntheticConfig {
+            n: 200,
+            d: 16,
+            clusters: 4,
+            beta: 0.1,
+            seed,
+        }
+        .generate_with_test_fraction(0.0);
+        let model = BetaBernoulli::symmetric(16, 0.5);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let st = SuperclusterState::init_from_prior(
+            &ds.train,
+            rows,
+            1.0,
+            &model,
+            Pcg64::seed_from(seed),
+        );
+        (ds, st, model)
+    }
+
+    #[test]
+    fn init_and_sweeps_preserve_invariants() {
+        let (ds, mut st, model) = make_state(1);
+        st.check_invariants(&ds.train).unwrap();
+        for _ in 0..3 {
+            st.gibbs_sweep(&ds.train, &model, 1.0);
+            st.check_invariants(&ds.train).unwrap();
+        }
+        assert!(st.num_clusters() >= 1);
+        assert_eq!(st.num_rows(), 200);
+    }
+
+    #[test]
+    fn drain_insert_roundtrip() {
+        let (ds, mut st, _model) = make_state(2);
+        let nc = st.num_clusters();
+        let nr = st.num_rows();
+        let drained = st.drain_clusters(&ds.train);
+        assert_eq!(drained.len(), nc);
+        assert_eq!(st.num_rows(), 0);
+        for (stats, rows) in drained {
+            st.insert_cluster(stats, rows);
+        }
+        assert_eq!(st.num_clusters(), nc);
+        assert_eq!(st.num_rows(), nr);
+        st.check_invariants(&ds.train).unwrap();
+    }
+
+    #[test]
+    fn export_assignments_unique_ids() {
+        let (ds, st, _model) = make_state(3);
+        let mut z = vec![u32::MAX; ds.train.rows()];
+        let next = st.export_assignments(&mut z, 5);
+        assert_eq!(next as usize, 5 + st.num_clusters());
+        assert!(z.iter().all(|&id| id >= 5 && id < next));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, mut a, model) = make_state(4);
+        let (_, mut b, _) = make_state(4);
+        for _ in 0..2 {
+            a.gibbs_sweep(&ds.train, &model, 0.7);
+            b.gibbs_sweep(&ds.train, &model, 0.7);
+        }
+        let mut za = vec![0u32; ds.train.rows()];
+        let mut zb = vec![0u32; ds.train.rows()];
+        a.export_assignments(&mut za, 0);
+        b.export_assignments(&mut zb, 0);
+        assert_eq!(za, zb);
+    }
+}

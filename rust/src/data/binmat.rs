@@ -1,0 +1,212 @@
+//! Bit-packed binary data matrix: N rows × D binary dims, 64 dims per
+//! word. This is the at-rest representation of every dataset in the repo
+//! (the paper's data are Bernoulli vectors). The Gibbs hot path iterates
+//! set bits via `for_each_one` (trailing_zeros loop) so scoring cost
+//! scales with row density, and the runtime unpacks blocks to f32 for the
+//! PJRT artifacts.
+
+/// Bit-packed binary matrix, row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BinMat {
+    n: usize,
+    d: usize,
+    words_per_row: usize,
+    bits: Vec<u64>,
+}
+
+impl BinMat {
+    pub fn zeros(n: usize, d: usize) -> BinMat {
+        let wpr = d.div_ceil(64);
+        BinMat {
+            n,
+            d,
+            words_per_row: wpr,
+            bits: vec![0; n * wpr],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        debug_assert!(r < self.n && c < self.d);
+        let w = self.bits[r * self.words_per_row + c / 64];
+        (w >> (c % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        debug_assert!(r < self.n && c < self.d);
+        let w = &mut self.bits[r * self.words_per_row + c / 64];
+        if v {
+            *w |= 1 << (c % 64);
+        } else {
+            *w &= !(1 << (c % 64));
+        }
+    }
+
+    /// The packed words of row `r`.
+    #[inline]
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        &self.bits[r * self.words_per_row..(r + 1) * self.words_per_row]
+    }
+
+    /// Number of ones in row `r`.
+    pub fn row_popcount(&self, r: usize) -> u32 {
+        self.row_words(r).iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Call `f(dim)` for every set bit of row `r`, in ascending dim order.
+    #[inline]
+    pub fn for_each_one(&self, r: usize, mut f: impl FnMut(usize)) {
+        for (wi, &w) in self.row_words(r).iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros() as usize;
+                f(wi * 64 + b);
+                w &= w - 1;
+            }
+        }
+    }
+
+    /// Unpack rows [start, start+len) into an f32 buffer of shape
+    /// [len, d_out], zero-padding dims beyond `self.d` — the exact layout
+    /// the PJRT artifacts expect (pad dims are no-ops, see L1 tests).
+    pub fn unpack_block_f32(&self, start: usize, len: usize, d_out: usize, out: &mut [f32]) {
+        assert!(d_out >= self.d, "d_out must cover data dims");
+        assert_eq!(out.len(), len * d_out);
+        out.fill(0.0);
+        for i in 0..len {
+            let r = start + i;
+            if r >= self.n {
+                break; // trailing pad rows stay zero
+            }
+            let base = i * d_out;
+            self.for_each_one(r, |dim| out[base + dim] = 1.0);
+        }
+    }
+
+    /// Build from a dense 0/1 byte matrix (row-major), for tests/IO.
+    pub fn from_dense(n: usize, d: usize, dense: &[u8]) -> BinMat {
+        assert_eq!(dense.len(), n * d);
+        let mut m = BinMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                if dense[r * d + c] != 0 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// Raw words (for IO).
+    pub fn words(&self) -> &[u64] {
+        &self.bits
+    }
+
+    pub fn from_words(n: usize, d: usize, words: Vec<u64>) -> BinMat {
+        let wpr = d.div_ceil(64);
+        assert_eq!(words.len(), n * wpr);
+        BinMat {
+            n,
+            d,
+            words_per_row: wpr,
+            bits: words,
+        }
+    }
+
+    /// Copy a subset of rows into a new matrix (supercluster shards).
+    pub fn select_rows(&self, rows: &[usize]) -> BinMat {
+        let mut out = BinMat::zeros(rows.len(), self.d);
+        for (i, &r) in rows.iter().enumerate() {
+            let src = r * self.words_per_row;
+            let dst = i * self.words_per_row;
+            out.bits[dst..dst + self.words_per_row]
+                .copy_from_slice(&self.bits[src..src + self.words_per_row]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn set_get_roundtrip_across_word_boundaries() {
+        let mut m = BinMat::zeros(3, 130);
+        m.set(0, 0, true);
+        m.set(1, 63, true);
+        m.set(1, 64, true);
+        m.set(2, 129, true);
+        assert!(m.get(0, 0) && m.get(1, 63) && m.get(1, 64) && m.get(2, 129));
+        assert!(!m.get(0, 1) && !m.get(2, 128));
+        m.set(1, 64, false);
+        assert!(!m.get(1, 64));
+        assert_eq!(m.row_popcount(1), 1);
+    }
+
+    #[test]
+    fn for_each_one_visits_exactly_set_bits() {
+        let mut rng = Pcg64::seed_from(1);
+        let (n, d) = (5, 200);
+        let mut m = BinMat::zeros(n, d);
+        let mut truth = vec![vec![]; n];
+        for r in 0..n {
+            for c in 0..d {
+                if rng.next_f64() < 0.3 {
+                    m.set(r, c, true);
+                    truth[r].push(c);
+                }
+            }
+        }
+        for r in 0..n {
+            let mut seen = vec![];
+            m.for_each_one(r, |c| seen.push(c));
+            assert_eq!(seen, truth[r]);
+        }
+    }
+
+    #[test]
+    fn unpack_block_pads_dims_and_rows() {
+        let mut m = BinMat::zeros(3, 5);
+        m.set(0, 1, true);
+        m.set(2, 4, true);
+        let mut buf = vec![9.0f32; 4 * 8]; // 4 rows (one past end), d_out=8
+        m.unpack_block_f32(1, 4, 8, &mut buf);
+        // row 1 of matrix = all zero
+        assert!(buf[0..8].iter().all(|&x| x == 0.0));
+        // row 2 has bit 4
+        assert_eq!(buf[8 + 4], 1.0);
+        assert_eq!(buf[8..16].iter().sum::<f32>(), 1.0);
+        // rows 3,4 past the end: zero
+        assert!(buf[16..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dense_roundtrip_and_select_rows() {
+        let dense = [1u8, 0, 1, 0, 0, 1, 1, 1, 0];
+        let m = BinMat::from_dense(3, 3, &dense);
+        let sel = m.select_rows(&[2, 0]);
+        assert_eq!(sel.rows(), 2);
+        assert!(sel.get(0, 0) && sel.get(0, 1) && !sel.get(0, 2));
+        assert!(sel.get(1, 0) && !sel.get(1, 1) && sel.get(1, 2));
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut m = BinMat::zeros(2, 70);
+        m.set(0, 69, true);
+        m.set(1, 0, true);
+        let m2 = BinMat::from_words(2, 70, m.words().to_vec());
+        assert_eq!(m, m2);
+    }
+}

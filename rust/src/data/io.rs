@@ -1,0 +1,172 @@
+//! Dataset (de)serialization: a simple length-prefixed binary container
+//! for [`BinMat`] + labels, and CSV emitters for traces. Hand-rolled (no
+//! serde in the offline universe); format is versioned and checksummed.
+
+use super::binmat::BinMat;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CCBIN01\n";
+
+/// Write a BinMat (+ optional labels) to `path`.
+pub fn save_binmat(path: &Path, m: &BinMat, labels: Option<&[u32]>) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(m.rows() as u64).to_le_bytes())?;
+    f.write_all(&(m.dims() as u64).to_le_bytes())?;
+    let nl = labels.map(|l| l.len()).unwrap_or(0);
+    f.write_all(&(nl as u64).to_le_bytes())?;
+    let mut sum: u64 = 0;
+    for &w in m.words() {
+        sum = sum.wrapping_add(w);
+        f.write_all(&w.to_le_bytes())?;
+    }
+    if let Some(l) = labels {
+        for &z in l {
+            sum = sum.wrapping_add(z as u64);
+            f.write_all(&z.to_le_bytes())?;
+        }
+    }
+    f.write_all(&sum.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a BinMat (+ labels) previously written by [`save_binmat`].
+pub fn load_binmat(path: &Path) -> std::io::Result<(BinMat, Option<Vec<u32>>)> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic: not a CCBIN01 file",
+        ));
+    }
+    let mut u64buf = [0u8; 8];
+    let mut read_u64 = |f: &mut std::fs::File| -> std::io::Result<u64> {
+        f.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let n = read_u64(&mut f)? as usize;
+    let d = read_u64(&mut f)? as usize;
+    let nl = read_u64(&mut f)? as usize;
+    let wpr = d.div_ceil(64);
+    let mut words = Vec::with_capacity(n * wpr);
+    let mut sum: u64 = 0;
+    let mut buf = [0u8; 8];
+    for _ in 0..n * wpr {
+        f.read_exact(&mut buf)?;
+        let w = u64::from_le_bytes(buf);
+        sum = sum.wrapping_add(w);
+        words.push(w);
+    }
+    let labels = if nl > 0 {
+        let mut l = Vec::with_capacity(nl);
+        let mut b4 = [0u8; 4];
+        for _ in 0..nl {
+            f.read_exact(&mut b4)?;
+            let z = u32::from_le_bytes(b4);
+            sum = sum.wrapping_add(z as u64);
+            l.push(z);
+        }
+        Some(l)
+    } else {
+        None
+    };
+    f.read_exact(&mut buf)?;
+    if u64::from_le_bytes(buf) != sum {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "checksum mismatch: corrupt dataset file",
+        ));
+    }
+    Ok((BinMat::from_words(n, d, words), labels))
+}
+
+/// Append-style CSV writer for metric traces.
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        let line = values
+            .iter()
+            .map(|v| format!("{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        writeln!(self.file, "{line}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn binmat_roundtrip_with_labels() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ccbin");
+        let mut rng = Pcg64::seed_from(1);
+        let mut m = BinMat::zeros(17, 100);
+        for r in 0..17 {
+            for c in 0..100 {
+                if rng.next_f64() < 0.4 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        let labels: Vec<u32> = (0..17).map(|i| i * 3).collect();
+        save_binmat(&path, &m, Some(&labels)).unwrap();
+        let (m2, l2) = load_binmat(&path).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(l2.unwrap(), labels);
+    }
+
+    #[test]
+    fn corrupt_file_is_rejected() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corrupt.ccbin");
+        let m = BinMat::zeros(4, 64);
+        save_binmat(&path, &m, None).unwrap();
+        // flip a byte in the middle
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_binmat(&path).is_err());
+    }
+
+    #[test]
+    fn wrong_magic_is_rejected() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_magic.ccbin");
+        std::fs::write(&path, b"NOTMAGIC plus some garbage").unwrap();
+        assert!(load_binmat(&path).is_err());
+    }
+
+    #[test]
+    fn csv_writer_emits_header_and_rows() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["iter", "loglik"]).unwrap();
+            w.row(&[1.0, -2.5]).unwrap();
+            w.row(&[2.0, -2.25]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("iter,loglik\n"));
+        assert!(text.contains("2,-2.25"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Data substrate: the bit-packed binary matrix the samplers operate on,
+//! the paper's synthetic balanced Beta–Bernoulli mixture generator (§6),
+//! the Tiny-Images substitute pipeline (synthetic corpus → randomized PCA
+//! → per-component median binarization, §6), and dataset (de)serialization.
+
+pub mod binmat;
+pub mod io;
+pub mod rpca;
+pub mod synthetic;
+pub mod tinyimages;
+
+pub use binmat::BinMat;
+pub use synthetic::{Dataset, SyntheticConfig};

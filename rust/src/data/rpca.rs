@@ -1,0 +1,182 @@
+//! Randomized PCA (Halko–Martinsson–Tropp randomized range finder with
+//! power iterations) — the paper's feature pipeline runs "a randomized
+//! approximation to PCA on 100,000 rows" and thresholds "the top 256
+//! principal components ... at their component-wise median" (§6).
+//!
+//! Algorithm: Ω ~ N(0,1)^{d×(k+p)}; Y = A Ω; q power iterations
+//! Y ← A (Aᵀ Y) with re-orthonormalization; Q = orth(Y);
+//! B = Qᵀ A; eigendecompose the small Gram B Bᵀ; right singular vectors
+//! V = Bᵀ U Λ^{-1/2}; principal scores = A V.
+
+use crate::linalg::{jacobi_eigen_sym, Mat};
+use crate::rng::{normal, Pcg64};
+
+/// Result of a randomized PCA.
+#[derive(Debug, Clone)]
+pub struct Rpca {
+    /// [d, k] right singular vectors (principal directions)
+    pub components: Mat,
+    /// top-k singular values of the (centred) data matrix
+    pub singular_values: Vec<f64>,
+    /// column means subtracted before factorization
+    pub means: Vec<f64>,
+}
+
+/// Randomized PCA of `a` (n×d, consumed centred in place): top `k`
+/// components with oversampling `p` and `q` power iterations.
+pub fn rpca(a: &mut Mat, k: usize, p: usize, q: usize, seed: u64) -> Rpca {
+    let (n, d) = (a.rows, a.cols);
+    assert!(k >= 1 && k + p <= d.min(n), "k+p must be <= min(n,d)");
+    let means = a.center_columns();
+    let l = k + p;
+    let mut rng = Pcg64::new(seed, 0x9ca);
+
+    // Ω: d × l gaussian
+    let mut omega = Mat::zeros(d, l);
+    for x in omega.data.iter_mut() {
+        *x = normal(&mut rng);
+    }
+
+    // range finder with power iterations
+    let mut y = a.matmul(&omega); // n × l
+    y.orthonormalize_columns();
+    for _ in 0..q {
+        let z = a.t_matmul(&y); // d × l  (Aᵀ Y)
+        let mut z = z;
+        z.orthonormalize_columns();
+        y = a.matmul(&z); // n × l
+        y.orthonormalize_columns();
+    }
+
+    // B = Qᵀ A : l × d  — small
+    let b = y.t_matmul(a);
+    // Gram G = B Bᵀ : l × l ; eigen G = U Λ Uᵀ
+    let g = b.matmul(&b.transpose());
+    let (evals, u) = jacobi_eigen_sym(&g, 60);
+
+    // V = Bᵀ U Λ^{-1/2}, keep top k
+    let mut components = Mat::zeros(d, k);
+    let mut singular_values = Vec::with_capacity(k);
+    let bt = b.transpose(); // d × l
+    for j in 0..k {
+        let lam = evals[j].max(0.0);
+        let sv = lam.sqrt();
+        singular_values.push(sv);
+        if sv > 1e-12 {
+            for r in 0..d {
+                let mut acc = 0.0;
+                for c in 0..bt.cols {
+                    acc += bt.at(r, c) * u.at(c, j);
+                }
+                *components.at_mut(r, j) = acc / sv;
+            }
+        }
+    }
+
+    Rpca {
+        components,
+        singular_values,
+        means,
+    }
+}
+
+impl Rpca {
+    /// Project (already-raw) rows onto the principal components:
+    /// scores = (X - mean) · V, shape [n, k].
+    pub fn project(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.components.rows);
+        let mut centred = x.clone();
+        for r in 0..centred.rows {
+            for c in 0..centred.cols {
+                *centred.at_mut(r, c) -= self.means[c];
+            }
+        }
+        centred.matmul(&self.components)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a low-rank-plus-noise matrix with known dominant directions.
+    fn low_rank_matrix(n: usize, d: usize, rank: usize, noise: f64, seed: u64) -> Mat {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut u = Mat::zeros(n, rank);
+        let mut v = Mat::zeros(rank, d);
+        for x in u.data.iter_mut() {
+            *x = normal(&mut rng);
+        }
+        for x in v.data.iter_mut() {
+            *x = normal(&mut rng);
+        }
+        // scale factor per rank so singular values are separated
+        for r in 0..rank {
+            let s = 10.0 / (r + 1) as f64;
+            for c in 0..d {
+                *v.at_mut(r, c) *= s;
+            }
+        }
+        let mut a = u.matmul(&v);
+        for x in a.data.iter_mut() {
+            *x += noise * normal(&mut rng);
+        }
+        a
+    }
+
+    #[test]
+    fn recovers_low_rank_energy() {
+        let mut a = low_rank_matrix(120, 40, 3, 0.01, 1);
+        let total_energy = {
+            let mut c = a.clone();
+            c.center_columns();
+            c.fro_norm().powi(2)
+        };
+        let res = rpca(&mut a, 3, 8, 3, 2);
+        let captured: f64 = res.singular_values.iter().map(|s| s * s).sum();
+        assert!(
+            captured > 0.98 * total_energy,
+            "captured {captured} of {total_energy}"
+        );
+        // singular values sorted descending
+        assert!(res
+            .singular_values
+            .windows(2)
+            .all(|w| w[0] >= w[1] - 1e-9));
+    }
+
+    #[test]
+    fn components_are_orthonormal() {
+        let mut a = low_rank_matrix(80, 30, 4, 0.05, 3);
+        let res = rpca(&mut a, 4, 6, 2, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut dot = 0.0;
+                for r in 0..30 {
+                    dot += res.components.at(r, i) * res.components.at(r, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6, "({i},{j}) = {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_matches_training_scores() {
+        // project() on the training data should reproduce A_centred · V
+        let mut a = low_rank_matrix(50, 20, 2, 0.0, 5);
+        let raw = a.clone();
+        let res = rpca(&mut a, 2, 4, 2, 6);
+        let scores = res.project(&raw);
+        assert_eq!(scores.rows, 50);
+        assert_eq!(scores.cols, 2);
+        // score variance along component 0 ≈ (σ_0² / n)
+        let var0: f64 = (0..50).map(|r| scores.at(r, 0).powi(2)).sum::<f64>();
+        let sv0 = res.singular_values[0];
+        assert!(
+            (var0 - sv0 * sv0).abs() / (sv0 * sv0) < 0.05,
+            "var {var0} vs σ² {}",
+            sv0 * sv0
+        );
+    }
+}

@@ -1,0 +1,228 @@
+//! The paper's synthetic workload (§6): balanced finite Bernoulli mixtures.
+//!
+//! "Each mixture component θ_j was parameterized by a set of coin weights
+//! drawn from a Beta(β_d, β_d) distribution ... The binary data were
+//! Bernoulli draws based on the weight parameters of their respective
+//! clusters." Datasets range 200k–1MM rows, 128–2048 clusters, 256 dims;
+//! this generator is parameterized over the whole grid (scaled defaults
+//! in the benches, full-scale behind flags).
+
+use super::binmat::BinMat;
+use crate::rng::{beta, Pcg64};
+
+/// Configuration for a balanced synthetic mixture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyntheticConfig {
+    /// total number of training rows (split evenly over clusters)
+    pub n: usize,
+    /// binary dimensionality (paper: 256)
+    pub d: usize,
+    /// number of true mixture components
+    pub clusters: usize,
+    /// Beta(β, β) hyperparameter for the coin weights (paper's β_d;
+    /// small β ⇒ near-deterministic coins ⇒ well-separated clusters)
+    pub beta: f64,
+    pub seed: u64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            n: 10_000,
+            d: 256,
+            clusters: 128,
+            beta: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// A generated dataset: train/test splits, ground-truth assignments and
+/// component coin weights, and the generator's entropy estimate.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub train: BinMat,
+    pub test: BinMat,
+    /// ground-truth cluster of each train row
+    pub train_z: Vec<u32>,
+    pub test_z: Vec<u32>,
+    /// true coin weights, [clusters][d]
+    pub weights: Vec<Vec<f64>>,
+    pub config: SyntheticConfig,
+}
+
+impl SyntheticConfig {
+    /// Generate with a 10% held-out test split (paper evaluates test-set
+    /// predictive log-likelihood).
+    pub fn generate(&self) -> Dataset {
+        self.generate_with_test_fraction(0.10)
+    }
+
+    pub fn generate_with_test_fraction(&self, test_frac: f64) -> Dataset {
+        assert!(self.clusters >= 1 && self.d >= 1 && self.n >= self.clusters);
+        let mut rng = Pcg64::new(self.seed, 0x5337);
+
+        // component coin weights θ_jd ~ Beta(β, β)
+        let weights: Vec<Vec<f64>> = (0..self.clusters)
+            .map(|_| (0..self.d).map(|_| beta(&mut rng, self.beta, self.beta)).collect())
+            .collect();
+
+        let n_test = ((self.n as f64) * test_frac).round() as usize;
+        let n_train = self.n - n_test;
+
+        // balanced assignment then shuffle (paper: balanced mixtures)
+        let mut z_all: Vec<u32> = (0..self.n)
+            .map(|i| (i % self.clusters) as u32)
+            .collect();
+        rng.shuffle(&mut z_all);
+
+        let mut train = BinMat::zeros(n_train, self.d);
+        let mut test = BinMat::zeros(n_test, self.d);
+        let mut train_z = Vec::with_capacity(n_train);
+        let mut test_z = Vec::with_capacity(n_test);
+        for (i, &z) in z_all.iter().enumerate() {
+            let w = &weights[z as usize];
+            if i < n_train {
+                for (dim, &p) in w.iter().enumerate() {
+                    if rng.next_f64() < p {
+                        train.set(i, dim, true);
+                    }
+                }
+                train_z.push(z);
+            } else {
+                let r = i - n_train;
+                for (dim, &p) in w.iter().enumerate() {
+                    if rng.next_f64() < p {
+                        test.set(r, dim, true);
+                    }
+                }
+                test_z.push(z);
+            }
+        }
+
+        Dataset {
+            train,
+            test,
+            train_z,
+            test_z,
+            weights,
+            config: *self,
+        }
+    }
+}
+
+impl Dataset {
+    /// True per-datum log density of row `r` of `m` under the generating
+    /// mixture (uniform weights over components — the balanced design).
+    pub fn true_log_density(&self, m: &BinMat, r: usize) -> f64 {
+        let logj = (self.config.clusters as f64).ln();
+        let mut terms = Vec::with_capacity(self.config.clusters);
+        for w in &self.weights {
+            let mut ll = 0.0;
+            for (dim, &p) in w.iter().enumerate() {
+                // clamp: beta draws can be within float-eps of 0/1
+                let p = p.clamp(1e-12, 1.0 - 1e-12);
+                ll += if m.get(r, dim) { p.ln() } else { (1.0 - p).ln() };
+            }
+            terms.push(ll);
+        }
+        crate::special::logsumexp(&terms) - logj
+    }
+
+    /// Monte-Carlo estimate of the generator's entropy rate
+    /// H = E[-log p(x)] using the test rows — the "true entropy" line of
+    /// Fig. 5.
+    pub fn true_entropy_estimate(&self) -> f64 {
+        let n = self.test.rows();
+        assert!(n > 0, "need a test split for the entropy estimate");
+        let mut acc = 0.0;
+        for r in 0..n {
+            acc -= self.true_log_density(&self.test, r);
+        }
+        acc / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_counts_and_shapes() {
+        let cfg = SyntheticConfig {
+            n: 1000,
+            d: 16,
+            clusters: 10,
+            beta: 0.5,
+            seed: 1,
+        };
+        let ds = cfg.generate();
+        assert_eq!(ds.train.rows() + ds.test.rows(), 1000);
+        assert_eq!(ds.test.rows(), 100);
+        assert_eq!(ds.train.dims(), 16);
+        // balanced: every cluster appears n/clusters times overall
+        let mut counts = [0u32; 10];
+        for &z in ds.train_z.iter().chain(&ds.test_z) {
+            counts[z as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SyntheticConfig {
+            n: 200,
+            d: 8,
+            clusters: 4,
+            beta: 0.3,
+            seed: 42,
+        };
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.train_z, b.train_z);
+    }
+
+    #[test]
+    fn small_beta_separates_clusters() {
+        // with β → 0 the coins are near 0/1: rows of the same cluster are
+        // near-identical, rows of different clusters differ a lot
+        let cfg = SyntheticConfig {
+            n: 200,
+            d: 64,
+            clusters: 2,
+            beta: 0.02,
+            seed: 7,
+        };
+        let ds = cfg.generate_with_test_fraction(0.0);
+        let ham = |a: usize, b: usize| -> u32 {
+            let mut h = 0;
+            for dim in 0..64 {
+                if ds.train.get(a, dim) != ds.train.get(b, dim) {
+                    h += 1;
+                }
+            }
+            h
+        };
+        // find two same-cluster and two different-cluster rows
+        let z = &ds.train_z;
+        let same = (1..200).find(|&i| z[i] == z[0]).unwrap();
+        let diff = (1..200).find(|&i| z[i] != z[0]).unwrap();
+        assert!(ham(0, same) + 5 < ham(0, diff), "{} vs {}", ham(0, same), ham(0, diff));
+    }
+
+    #[test]
+    fn entropy_estimate_close_to_marginal_bound() {
+        // entropy of the mixture is at most D·ln2 and at least 0
+        let cfg = SyntheticConfig {
+            n: 500,
+            d: 16,
+            clusters: 4,
+            beta: 1.0,
+            seed: 3,
+        };
+        let ds = cfg.generate();
+        let h = ds.true_entropy_estimate();
+        assert!(h > 0.0 && h < 16.0 * std::f64::consts::LN_2 + 1.0, "H = {h}");
+    }
+}

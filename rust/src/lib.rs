@@ -1,0 +1,69 @@
+//! # ClusterCluster
+//!
+//! A production-quality reproduction of *ClusterCluster: Parallel Markov
+//! chain Monte Carlo for Dirichlet Process Mixtures* (Lovell, Malmaud,
+//! Adams, Mansinghka; 2013) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's insight: a Dirichlet process `DP(α, H)` can be generated as
+//! a Dirichlet-weighted mixture of `K` *independent* Dirichlet processes
+//! `DP(αμ_k, H)` ("superclusters"). The induced conditional independencies
+//! let the expensive per-datum Gibbs sweeps run in parallel — one
+//! supercluster per worker — while three cheap centralized updates keep
+//! the chain *exactly* invariant for the true DPM posterior:
+//!
+//! * concentration `α` (Eq. 6, slice sampling),
+//! * base-measure hyperparameters `β_d` (griddy Gibbs on pooled stats),
+//! * cluster→supercluster assignments `s_j` (Eq. 7, Dirichlet-multinomial).
+//!
+//! ## Layer map
+//!
+//! * **Layer 3 (this crate)** — [`coordinator`]: the map-reduce-shaped
+//!   parallel sampler; [`serial`]: the Neal-Algorithm-3 baseline;
+//!   [`mapreduce`]: the in-process map-reduce runtime with a communication
+//!   cost model; plus every substrate ([`rng`], [`special`], [`data`],
+//!   [`linalg`], [`metrics`], [`bench`], [`testing`], [`cli`], [`util`]).
+//! * **Layer 2/1 (build-time Python)** — `python/compile/`: the JAX model
+//!   graph calling a Pallas kernel, AOT-lowered to HLO text artifacts.
+//! * **Runtime bridge** — [`runtime`]: loads `artifacts/*.hlo.txt` through
+//!   the PJRT CPU client (`xla` crate) and serves batched scoring on the
+//!   Rust hot path. Python never runs at sampling time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use clustercluster::prelude::*;
+//!
+//! let mut rng = Pcg64::seed_from(7);
+//! let data = SyntheticConfig { n: 2_000, d: 16, clusters: 8, beta: 0.2, seed: 7 }
+//!     .generate();
+//! let cfg = CoordinatorConfig { workers: 4, ..Default::default() };
+//! let mut coord = Coordinator::new(&data.train, cfg, &mut rng);
+//! for _ in 0..20 { coord.step(&mut rng); }
+//! println!("clusters: {}", coord.num_clusters());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod mapreduce;
+pub mod metrics;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod serial;
+pub mod special;
+pub mod supercluster;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig};
+    pub use crate::data::synthetic::{Dataset, SyntheticConfig};
+    pub use crate::model::{BetaBernoulli, ClusterStats};
+    pub use crate::rng::Pcg64;
+    pub use crate::runtime::{FallbackScorer, Scorer};
+    pub use crate::serial::SerialGibbs;
+}

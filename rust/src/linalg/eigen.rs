@@ -1,0 +1,123 @@
+//! Cyclic Jacobi eigendecomposition for small symmetric matrices — used
+//! by the randomized-PCA pipeline (`data::rpca`) to diagonalize the
+//! (k+p)×(k+p) Gram matrix B·Bᵀ. O(n³) per sweep but n ≲ 300 here.
+
+use super::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues,
+/// eigenvectors-as-columns), sorted by descending eigenvalue.
+pub fn jacobi_eigen_sym(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "jacobi needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::zeros(n, n);
+    for i in 0..n {
+        *v.at_mut(i, i) = 1.0;
+    }
+
+    for _ in 0..max_sweeps {
+        // off-diagonal magnitude
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.at(i, j) * m.at(i, j);
+            }
+        }
+        if off.sqrt() < 1e-11 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    *m.at_mut(k, p) = c * mkp - s * mkq;
+                    *m.at_mut(k, q) = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    *m.at_mut(p, k) = c * mpk - s * mqk;
+                    *m.at_mut(q, k) = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    *v.at_mut(k, p) = c * vkp - s * vkq;
+                    *v.at_mut(k, q) = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| m.at(i, i)).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            *sorted_vecs.at_mut(r, newc) = v.at(r, oldc);
+        }
+    }
+    (sorted_vals, sorted_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonalizes_known_matrix() {
+        // eigenvalues of [[2,1],[1,2]] are 3 and 1
+        let a = Mat::from_rows(vec![vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (vals, vecs) = jacobi_eigen_sym(&a, 50);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 1.0).abs() < 1e-10);
+        // eigenvector for 3 is (1,1)/sqrt2 up to sign
+        let (v0, v1) = (vecs.at(0, 0), vecs.at(1, 0));
+        assert!((v0.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-8);
+        assert!((v0 - v1).abs() < 1e-8);
+    }
+
+    #[test]
+    fn reconstructs_a_random_symmetric_matrix() {
+        use crate::rng::{normal, Pcg64};
+        let n = 12;
+        let mut rng = Pcg64::seed_from(9);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = normal(&mut rng);
+                *a.at_mut(i, j) = x;
+                *a.at_mut(j, i) = x;
+            }
+        }
+        let (vals, vecs) = jacobi_eigen_sym(&a, 100);
+        // A ≈ V Λ Vᵀ
+        let mut lam = Mat::zeros(n, n);
+        for i in 0..n {
+            *lam.at_mut(i, i) = vals[i];
+        }
+        let recon = vecs.matmul(&lam).matmul(&vecs.transpose());
+        let mut err = 0.0;
+        for i in 0..n * n {
+            err += (recon.data[i] - a.data[i]).powi(2);
+        }
+        assert!(err.sqrt() < 1e-8, "reconstruction error {err}");
+        // eigenvalues sorted descending
+        assert!(vals.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+}

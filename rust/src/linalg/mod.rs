@@ -1,0 +1,249 @@
+//! Minimal dense linear algebra — just enough to implement the paper's
+//! feature pipeline (§6: "a randomized approximation to PCA ... top 256
+//! principal components"): row-major matrices, matmul, transpose-matmul,
+//! Gram–Schmidt QR, and column centring. Built from scratch; validated
+//! against hand-computed and power-iteration ground truths in tests and
+//! against dense eigendecomposition in `data::rpca` tests.
+
+pub mod eigen;
+
+pub use eigen::jacobi_eigen_sym;
+
+/// Row-major dense f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat {
+            rows: r,
+            cols: c,
+            data: rows.into_iter().flatten().collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// C = A · B (ikj loop order for cache friendliness).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// C = Aᵀ · B without materializing Aᵀ.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for r in 0..self.rows {
+            let arow = self.row(r);
+            let brow = other.row(r);
+            for i in 0..self.cols {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for j in 0..other.cols {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *out.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        out
+    }
+
+    /// Subtract the column means in place; returns the means.
+    pub fn center_columns(&mut self) -> Vec<f64> {
+        let mut means = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                means[c] += self.at(r, c);
+            }
+        }
+        for m in &mut means {
+            *m /= self.rows.max(1) as f64;
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *self.at_mut(r, c) -= means[c];
+            }
+        }
+        means
+    }
+
+    /// In-place modified Gram–Schmidt orthonormalization of the columns.
+    /// Columns with near-zero residual norm are replaced by zeros.
+    pub fn orthonormalize_columns(&mut self) {
+        for j in 0..self.cols {
+            // subtract projections on previous columns
+            for p in 0..j {
+                let mut dot = 0.0;
+                for r in 0..self.rows {
+                    dot += self.at(r, j) * self.at(r, p);
+                }
+                for r in 0..self.rows {
+                    *self.at_mut(r, j) -= dot * self.at(r, p);
+                }
+            }
+            let mut norm = 0.0;
+            for r in 0..self.rows {
+                norm += self.at(r, j) * self.at(r, j);
+            }
+            let norm = norm.sqrt();
+            if norm > 1e-12 {
+                for r in 0..self.rows {
+                    *self.at_mut(r, j) /= norm;
+                }
+            } else {
+                for r in 0..self.rows {
+                    *self.at_mut(r, j) = 0.0;
+                }
+            }
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// Column-wise median of a row-major matrix (used by the §6 binarization
+/// pipeline: threshold each principal component at its median).
+pub fn column_medians(m: &Mat) -> Vec<f64> {
+    let mut out = Vec::with_capacity(m.cols);
+    let mut buf = vec![0.0; m.rows];
+    for c in 0..m.cols {
+        for r in 0..m.rows {
+            buf[r] = m.at(r, c);
+        }
+        buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mid = m.rows / 2;
+        out.push(if m.rows % 2 == 1 {
+            buf[mid]
+        } else {
+            0.5 * (buf[mid - 1] + buf[mid])
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let b = Mat::from_rows(vec![vec![1.0, 0.0], vec![0.0, 1.0]]);
+        let got = a.t_matmul(&b);
+        let want = a.transpose().matmul(&b);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn center_columns_zeroes_means() {
+        let mut a = Mat::from_rows(vec![vec![1.0, 10.0], vec![3.0, 30.0]]);
+        let means = a.center_columns();
+        assert_eq!(means, vec![2.0, 20.0]);
+        for c in 0..2 {
+            let s: f64 = (0..2).map(|r| a.at(r, c)).sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut a = Mat::from_rows(vec![
+            vec![1.0, 1.0, 0.5],
+            vec![1.0, 0.0, 0.3],
+            vec![0.0, 1.0, 0.9],
+            vec![1.0, 2.0, 0.1],
+        ]);
+        a.orthonormalize_columns();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut dot = 0.0;
+                for r in 0..4 {
+                    dot += a.at(r, i) * a.at(r, j);
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-10, "({i},{j}) dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_column_is_zeroed() {
+        let mut a = Mat::from_rows(vec![vec![1.0, 2.0], vec![1.0, 2.0]]);
+        a.orthonormalize_columns();
+        // second column is linearly dependent — must be zero
+        assert!(a.at(0, 1).abs() < 1e-12 && a.at(1, 1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_medians_even_odd() {
+        let m = Mat::from_rows(vec![vec![1.0], vec![9.0], vec![5.0]]);
+        assert_eq!(column_medians(&m), vec![5.0]);
+        let m2 = Mat::from_rows(vec![vec![1.0], vec![9.0], vec![5.0], vec![7.0]]);
+        assert_eq!(column_medians(&m2), vec![6.0]);
+    }
+}

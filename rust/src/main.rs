@@ -1,0 +1,251 @@
+//! `repro` — the ClusterCluster launcher.
+//!
+//! Subcommands:
+//! * `gen-data`    — generate a synthetic balanced Bernoulli-mixture dataset
+//! * `serial`      — run the serial collapsed-Gibbs baseline (Neal Alg. 3)
+//! * `run`         — run the parallel supercluster sampler (the paper)
+//! * `tiny-images` — build the Tiny-Images-substitute corpus and run VQ
+//! * `help`        — this text
+
+use clustercluster::cli::Args;
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig, LocalKernel};
+use clustercluster::data::io::save_binmat;
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::tinyimages::{generate as gen_tiny, TinyImagesConfig};
+use clustercluster::mapreduce::CommModel;
+use clustercluster::metrics::trace::{McmcTrace, TraceRow};
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::auto_scorer;
+use clustercluster::serial::{SerialConfig, SerialGibbs};
+use clustercluster::supercluster::ShuffleKernel;
+use std::path::Path;
+
+const HELP: &str = "\
+repro — ClusterCluster: parallel MCMC for Dirichlet process mixtures
+
+USAGE: repro <command> [--flag value]...
+
+COMMANDS
+  gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
+  serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--update-beta] [--trace out.csv]
+  run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
+               [--local-sweeps 1] [--no-shuffle] [--eq7] [--walker] [--update-beta]
+               [--latency 2.0] [--bandwidth 1e8] [--trace out.csv] [--threads 1]
+               [--checkpoint state.ccckpt]
+  tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
+  help
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "gen-data" => cmd_gen_data(&args),
+        "serial" => cmd_serial(&args),
+        "run" => cmd_run(&args),
+        "tiny-images" => cmd_tiny_images(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n{HELP}")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn synth_cfg(args: &Args) -> Result<SyntheticConfig, String> {
+    Ok(SyntheticConfig {
+        n: args.get_usize("n", 5_000)?,
+        d: args.get_usize("d", 64)?,
+        clusters: args.get_usize("clusters", 32)?,
+        beta: args.get_f64("beta", 0.1)?,
+        seed: args.get_u64("seed", 0)?,
+    })
+}
+
+fn cmd_gen_data(args: &Args) -> Result<(), String> {
+    let cfg = synth_cfg(args)?;
+    let out = args.get_str("out", "data.ccbin");
+    let ds = cfg.generate();
+    save_binmat(Path::new(&out), &ds.train, Some(&ds.train_z)).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} ({} rows x {} dims, {} true clusters, H≈{:.3} nats)",
+        out,
+        ds.train.rows(),
+        ds.train.dims(),
+        cfg.clusters,
+        ds.true_entropy_estimate()
+    );
+    Ok(())
+}
+
+fn cmd_serial(args: &Args) -> Result<(), String> {
+    let cfg = synth_cfg(args)?;
+    let sweeps = args.get_usize("sweeps", 50)?;
+    let ds = cfg.generate();
+    let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xc0ffee);
+    let scfg = SerialConfig {
+        update_beta: args.has("update-beta"),
+        ..Default::default()
+    };
+    let mut g = SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng);
+    let h = ds.true_entropy_estimate();
+    println!("serial baseline: N={} D={} true J={} (H≈{h:.3})", cfg.n, cfg.d, cfg.clusters);
+    let mut trace = McmcTrace::new("serial");
+    let t0 = std::time::Instant::now();
+    for it in 0..sweeps {
+        g.sweep(&mut rng);
+        let ll = g.predictive_loglik(&ds.test);
+        let el = t0.elapsed().as_secs_f64();
+        trace.push(TraceRow {
+            iter: it as u64,
+            modeled_time_s: el,
+            measured_time_s: el,
+            predictive_loglik: ll,
+            num_clusters: g.num_clusters() as u64,
+            alpha: g.alpha(),
+            bytes: 0,
+        });
+        if it % 10 == 0 || it + 1 == sweeps {
+            println!(
+                "  sweep {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} (target ≈ {:.4})",
+                g.num_clusters(),
+                g.alpha(),
+                -h
+            );
+        }
+    }
+    if let Some(path) = args.get("trace") {
+        trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("trace -> {path}");
+    }
+    Ok(())
+}
+
+fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
+    Ok(CoordinatorConfig {
+        workers: args.get_usize("workers", 8)?,
+        local_sweeps: args.get_usize("local-sweeps", 1)?,
+        update_beta: args.has("update-beta"),
+        shuffle: !args.has("no-shuffle"),
+        shuffle_kernel: if args.has("eq7") {
+            ShuffleKernel::PaperEq7
+        } else {
+            ShuffleKernel::Exact
+        },
+        local_kernel: if args.has("walker") {
+            LocalKernel::WalkerSlice
+        } else {
+            LocalKernel::CollapsedGibbs
+        },
+        comm: CommModel {
+            round_latency_s: args.get_f64("latency", 2.0)?,
+            per_worker_latency_s: args.get_f64("worker-latency", 0.05)?,
+            bandwidth_bytes_per_s: args.get_f64("bandwidth", 100e6)?,
+        },
+        parallelism: args.get_usize("threads", 1)?,
+        ..Default::default()
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = synth_cfg(args)?;
+    let ccfg = coordinator_cfg(args)?;
+    let rounds = args.get_usize("rounds", 50)?;
+    let ds = cfg.generate();
+    let h = ds.true_entropy_estimate();
+    let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
+    let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng);
+    let mut scorer = auto_scorer();
+    println!(
+        "parallel sampler: N={} D={} true J={} | K={} workers, {} local sweeps/round, scorer={} (H≈{h:.3})",
+        cfg.n,
+        cfg.d,
+        cfg.clusters,
+        ccfg.workers,
+        ccfg.local_sweeps,
+        scorer.name()
+    );
+    let mut trace = McmcTrace::new(&format!("run_k{}", ccfg.workers));
+    for it in 0..rounds {
+        let rs = coord.step(&mut rng);
+        let ll = coord.predictive_loglik(&ds.test, scorer.as_mut());
+        trace.push(TraceRow {
+            iter: it as u64,
+            modeled_time_s: coord.modeled_time_s,
+            measured_time_s: coord.measured_time_s,
+            predictive_loglik: ll,
+            num_clusters: coord.num_clusters() as u64,
+            alpha: coord.alpha(),
+            bytes: rs.bytes_transferred,
+        });
+        if it % 10 == 0 || it + 1 == rounds {
+            println!(
+                "  round {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} modeled_t {:.2}s (target ≈ {:.4})",
+                coord.num_clusters(),
+                coord.alpha(),
+                coord.modeled_time_s,
+                -h
+            );
+        }
+    }
+    println!("\nphase profile:\n{}", coord.timer.render());
+    if let Some(path) = args.get("checkpoint") {
+        coord
+            .save_checkpoint(Path::new(path))
+            .map_err(|e| e.to_string())?;
+        println!("checkpoint -> {path}");
+    }
+    if let Some(path) = args.get("trace") {
+        trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("trace -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_tiny_images(args: &Args) -> Result<(), String> {
+    let features = args.get_usize("features", 128)?;
+    let tcfg = TinyImagesConfig {
+        n: args.get_usize("n", 5_000)?,
+        features,
+        side: args.get_usize("side", 24)?,
+        categories: args.get_usize("categories", 100)?,
+        calibration_rows: args.get_usize("calibration", 2_000)?.max(2 * features),
+        noise: args.get_f64("noise", 0.6)?,
+        seed: args.get_u64("seed", 0)?,
+    };
+    println!(
+        "building tiny-images substitute: {} images, {}x{} px, {} features...",
+        tcfg.n, tcfg.side, tcfg.side, tcfg.features
+    );
+    let corpus = gen_tiny(&tcfg);
+    let ccfg = coordinator_cfg(args)?;
+    let rounds = args.get_usize("rounds", 30)?;
+    let mut rng = Pcg64::seed_from(tcfg.seed ^ 0x717);
+    let mut coord = Coordinator::new(&corpus.features, ccfg, &mut rng);
+    println!("vector quantization with K={} workers:", ccfg.workers);
+    for it in 0..rounds {
+        coord.step(&mut rng);
+        if it % 5 == 0 || it + 1 == rounds {
+            println!(
+                "  round {it:>4}: J={:<5} α={:<8.3} modeled_t {:.2}s",
+                coord.num_clusters(),
+                coord.alpha(),
+                coord.modeled_time_s
+            );
+        }
+    }
+    Ok(())
+}

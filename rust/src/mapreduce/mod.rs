@@ -1,0 +1,279 @@
+//! In-process map-reduce runtime — the substitute for the paper's Hadoop
+//! deployment (§5, Fig. 3/4). Mappers run on worker threads; per-task
+//! compute time is measured individually so the **modeled wall-clock**
+//! (what a K-machine cluster would see: `max_k(map_k) + reduce + comm`)
+//! is well-defined even on a single-core container. The communication
+//! cost model is parameterized on per-round latency (Hadoop job overhead)
+//! and bandwidth, and drives the Fig. 8 saturation behaviour.
+
+use std::time::{Duration, Instant};
+
+/// Communication/overhead model for one map-reduce round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommModel {
+    /// fixed per-round overhead (job scheduling, barrier, shuffle start).
+    /// The paper's Hadoop-era overhead is seconds; default reflects a
+    /// modest cluster (tunable from every bench/CLI).
+    pub round_latency_s: f64,
+    /// per-worker connection setup cost
+    pub per_worker_latency_s: f64,
+    /// bytes/second for state transfer (both directions pooled)
+    pub bandwidth_bytes_per_s: f64,
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        CommModel {
+            round_latency_s: 2.0,           // Hadoop job launch overhead
+            per_worker_latency_s: 0.05,     // per-mapper startup
+            bandwidth_bytes_per_s: 100e6,   // ~1 Gb/s effective
+        }
+    }
+}
+
+impl CommModel {
+    /// No communication cost at all (pure algorithmic comparisons).
+    pub fn free() -> Self {
+        CommModel {
+            round_latency_s: 0.0,
+            per_worker_latency_s: 0.0,
+            bandwidth_bytes_per_s: f64::INFINITY,
+        }
+    }
+
+    /// Modeled communication time for a round with `workers` mappers
+    /// moving `bytes` of state.
+    pub fn round_time(&self, workers: usize, bytes: u64) -> f64 {
+        self.round_latency_s
+            + self.per_worker_latency_s * workers as f64
+            + bytes as f64 / self.bandwidth_bytes_per_s
+    }
+}
+
+/// Timing/traffic record of one map-reduce round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundStats {
+    /// measured compute duration of each map task
+    pub map_durations: Vec<Duration>,
+    /// measured reduce-step duration
+    pub reduce_duration: Duration,
+    /// bytes the round moved (stats up + state down)
+    pub bytes_transferred: u64,
+    /// modeled distributed wall-clock for the round (seconds)
+    pub modeled_wall_s: f64,
+    /// actually measured wall-clock on this host (seconds)
+    pub measured_wall_s: f64,
+}
+
+impl RoundStats {
+    /// max_k map time — the parallel critical path.
+    pub fn map_critical_path(&self) -> Duration {
+        self.map_durations.iter().copied().max().unwrap_or_default()
+    }
+
+    /// Σ_k map time — what a serial execution would pay.
+    pub fn map_total(&self) -> Duration {
+        self.map_durations.iter().sum()
+    }
+}
+
+/// The map-reduce executor. `parallelism` caps the number of OS threads
+/// (tasks beyond it queue, exactly like mappers on a small cluster).
+#[derive(Debug, Clone)]
+pub struct MapReduce {
+    pub parallelism: usize,
+}
+
+impl MapReduce {
+    pub fn new(parallelism: usize) -> Self {
+        assert!(parallelism >= 1);
+        MapReduce { parallelism }
+    }
+
+    /// Use all available cores.
+    pub fn host_parallel() -> Self {
+        let p = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        MapReduce { parallelism: p }
+    }
+
+    /// Run `f` over `tasks`, returning results (input order) and each
+    /// task's measured compute duration. Tasks are distributed over at
+    /// most `parallelism` threads; with `parallelism == 1` execution is
+    /// in-place (no thread overhead, cleanest per-task timing on a
+    /// single-core host).
+    pub fn map<T, R, F>(&self, tasks: Vec<T>, f: F) -> (Vec<R>, Vec<Duration>)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        if self.parallelism == 1 || n == 1 {
+            let mut out = Vec::with_capacity(n);
+            let mut durs = Vec::with_capacity(n);
+            for (i, t) in tasks.into_iter().enumerate() {
+                let t0 = Instant::now();
+                out.push(f(i, t));
+                durs.push(t0.elapsed());
+            }
+            return (out, durs);
+        }
+
+        // work-stealing by atomic counter; results stream back over a
+        // channel tagged with their task index
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let inputs: Vec<std::sync::Mutex<Option<T>>> = tasks
+            .into_iter()
+            .map(|t| std::sync::Mutex::new(Some(t)))
+            .collect();
+        let (tx, rx) = std::sync::mpsc::channel::<(usize, R, Duration)>();
+
+        std::thread::scope(|scope| {
+            for _ in 0..self.parallelism.min(n) {
+                let tx = tx.clone();
+                let next = &next;
+                let inputs = &inputs;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                    if i >= n {
+                        break;
+                    }
+                    let t = inputs[i].lock().unwrap().take().unwrap();
+                    let t0 = Instant::now();
+                    let r = f(i, t);
+                    tx.send((i, r, t0.elapsed())).expect("collector alive");
+                });
+            }
+        });
+        drop(tx);
+
+        let mut slots: Vec<Option<(R, Duration)>> = (0..n).map(|_| None).collect();
+        for (i, r, d) in rx {
+            slots[i] = Some((r, d));
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut durs = Vec::with_capacity(n);
+        for s in slots {
+            let (r, d) = s.expect("task not executed");
+            out.push(r);
+            durs.push(d);
+        }
+        (out, durs)
+    }
+}
+
+/// Assemble a [`RoundStats`] from measured pieces + the comm model.
+pub fn finish_round(
+    comm: &CommModel,
+    map_durations: Vec<Duration>,
+    reduce_duration: Duration,
+    bytes_transferred: u64,
+    measured_wall: Duration,
+) -> RoundStats {
+    let workers = map_durations.len();
+    let crit = map_durations
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or_default()
+        .as_secs_f64();
+    let modeled = crit
+        + reduce_duration.as_secs_f64()
+        + comm.round_time(workers, bytes_transferred);
+    RoundStats {
+        map_durations,
+        reduce_duration,
+        bytes_transferred,
+        modeled_wall_s: modeled,
+        measured_wall_s: measured_wall.as_secs_f64(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order_and_results() {
+        let mr = MapReduce::new(4);
+        let tasks: Vec<u64> = (0..37).collect();
+        let (out, durs) = mr.map(tasks, |_, x| x * x);
+        assert_eq!(out, (0..37).map(|x| x * x).collect::<Vec<_>>());
+        assert_eq!(durs.len(), 37);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let tasks: Vec<u64> = (0..16).collect();
+        let f = |_: usize, x: u64| {
+            // tiny busy-work so durations are nonzero
+            let mut acc = x;
+            for i in 0..1000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            acc
+        };
+        let (a, _) = MapReduce::new(1).map(tasks.clone(), f);
+        let (b, _) = MapReduce::new(3).map(tasks, f);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_task_list() {
+        let mr = MapReduce::new(2);
+        let (out, durs) = mr.map(Vec::<u32>::new(), |_, x| x);
+        assert!(out.is_empty() && durs.is_empty());
+    }
+
+    #[test]
+    fn comm_model_costs_scale() {
+        let c = CommModel {
+            round_latency_s: 1.0,
+            per_worker_latency_s: 0.1,
+            bandwidth_bytes_per_s: 1000.0,
+        };
+        let t = c.round_time(10, 5000);
+        assert!((t - (1.0 + 1.0 + 5.0)).abs() < 1e-12);
+        assert_eq!(CommModel::free().round_time(128, u64::MAX), 0.0);
+    }
+
+    #[test]
+    fn round_stats_critical_path() {
+        let durs = vec![
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            Duration::from_millis(10),
+        ];
+        let rs = finish_round(
+            &CommModel::free(),
+            durs,
+            Duration::from_millis(2),
+            0,
+            Duration::from_millis(40),
+        );
+        assert_eq!(rs.map_critical_path(), Duration::from_millis(20));
+        assert_eq!(rs.map_total(), Duration::from_millis(35));
+        assert!((rs.modeled_wall_s - 0.022).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_workers_raise_comm_but_cut_critical_path() {
+        // the Fig. 8 mechanism in miniature: total work W split over K
+        // workers has modeled time W/K + comm(K); check the tradeoff turns
+        let comm = CommModel {
+            round_latency_s: 0.5,
+            per_worker_latency_s: 0.2,
+            bandwidth_bytes_per_s: f64::INFINITY,
+        };
+        let total_work = 10.0;
+        let modeled = |k: usize| total_work / k as f64 + comm.round_time(k, 0);
+        assert!(modeled(4) < modeled(1));
+        assert!(modeled(64) > modeled(8), "saturation must kick in");
+    }
+}

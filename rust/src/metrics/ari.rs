@@ -1,0 +1,74 @@
+//! Adjusted Rand index between two labelings — quantifies latent-
+//! structure recovery against the synthetic generator's ground truth
+//! (supports the Fig. 6/7 "latent structure" series).
+
+use std::collections::HashMap;
+
+/// Adjusted Rand index in [-1, 1]; 1 = identical partitions, ~0 = chance.
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "labelings must align");
+    let n = a.len();
+    if n <= 1 {
+        return 1.0;
+    }
+    // contingency table
+    let mut table: HashMap<(u32, u32), u64> = HashMap::new();
+    let mut rows: HashMap<u32, u64> = HashMap::new();
+    let mut cols: HashMap<u32, u64> = HashMap::new();
+    for i in 0..n {
+        *table.entry((a[i], b[i])).or_default() += 1;
+        *rows.entry(a[i]).or_default() += 1;
+        *cols.entry(b[i]).or_default() += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1)) as f64 / 2.0;
+    let sum_ij: f64 = table.values().map(|&v| c2(v)).sum();
+    let sum_a: f64 = rows.values().map(|&v| c2(v)).sum();
+    let sum_b: f64 = cols.values().map(|&v| c2(v)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // both partitions trivial (all-singletons or all-one)
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn identical_partitions_score_one() {
+        let z = [0u32, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&z, &z) - 1.0).abs() < 1e-12);
+        // label permutation is still perfect
+        let relabeled = [5u32, 5, 9, 9, 7, 7];
+        assert!((adjusted_rand_index(&z, &relabeled) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_partitions_score_near_zero() {
+        let mut rng = Pcg64::seed_from(1);
+        let n = 5000;
+        let a: Vec<u32> = (0..n).map(|_| rng.next_below(10) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.next_below(10) as u32).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.02, "chance ARI {ari}");
+    }
+
+    #[test]
+    fn partial_agreement_in_between() {
+        // b merges two of a's clusters
+        let a = [0u32, 0, 1, 1, 2, 2, 3, 3];
+        let b = [0u32, 0, 0, 0, 1, 1, 2, 2];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.3 && ari < 1.0, "merge ARI {ari}");
+    }
+
+    #[test]
+    fn trivial_inputs() {
+        assert_eq!(adjusted_rand_index(&[], &[]), 1.0);
+        assert_eq!(adjusted_rand_index(&[1], &[7]), 1.0);
+    }
+}

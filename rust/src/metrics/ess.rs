@@ -1,0 +1,106 @@
+//! Effective sample size via autocorrelation with Geyer's initial
+//! positive sequence truncation — the Fig. 2a metric ("effective number
+//! of samples per MCMC iteration").
+
+use crate::util::mean;
+
+/// Autocovariance at lag `k` (biased normalization, standard for ESS).
+fn autocov(xs: &[f64], m: f64, k: usize) -> f64 {
+    let n = xs.len();
+    let mut acc = 0.0;
+    for i in 0..n - k {
+        acc += (xs[i] - m) * (xs[i + k] - m);
+    }
+    acc / n as f64
+}
+
+/// ESS of a scalar chain: `n / (1 + 2 Σ ρ_t)`, truncating the sum at the
+/// first non-positive *pair* of autocorrelations (Geyer 1992). Returns
+/// `n` for white noise, ~0 for a frozen chain.
+pub fn effective_sample_size(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 4 {
+        return n as f64;
+    }
+    let m = mean(xs);
+    let c0 = autocov(xs, m, 0);
+    if c0 <= 1e-300 {
+        // constant chain: no information at all
+        return 1.0;
+    }
+    let mut rho_sum = 0.0;
+    let max_lag = n / 2;
+    let mut t = 1;
+    while t + 1 < max_lag {
+        let pair = (autocov(xs, m, t) + autocov(xs, m, t + 1)) / c0;
+        if pair <= 0.0 {
+            break;
+        }
+        rho_sum += pair;
+        t += 2;
+    }
+    let ess = n as f64 / (1.0 + 2.0 * rho_sum);
+    ess.clamp(1.0, n as f64)
+}
+
+/// ESS per iteration — the Fig. 2a y-axis.
+pub fn ess_per_iteration(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    effective_sample_size(xs) / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{normal, Pcg64};
+
+    #[test]
+    fn white_noise_ess_near_n() {
+        let mut rng = Pcg64::seed_from(1);
+        let xs: Vec<f64> = (0..4000).map(|_| normal(&mut rng)).collect();
+        let ess = effective_sample_size(&xs);
+        assert!(ess > 2500.0, "white-noise ESS {ess} of 4000");
+    }
+
+    #[test]
+    fn ar1_ess_matches_closed_form() {
+        // AR(1) with coefficient φ has ESS/n = (1-φ)/(1+φ)
+        let phi: f64 = 0.8;
+        let mut rng = Pcg64::seed_from(2);
+        let n = 60_000;
+        let mut xs = Vec::with_capacity(n);
+        let mut x = 0.0;
+        for _ in 0..n {
+            x = phi * x + (1.0 - phi * phi).sqrt() * normal(&mut rng);
+            xs.push(x);
+        }
+        let want = n as f64 * (1.0 - phi) / (1.0 + phi);
+        let got = effective_sample_size(&xs);
+        assert!(
+            (got - want).abs() < 0.25 * want,
+            "AR(1) ESS {got}, closed form {want}"
+        );
+    }
+
+    #[test]
+    fn frozen_chain_ess_is_minimal() {
+        let xs = vec![3.0; 1000];
+        assert_eq!(effective_sample_size(&xs), 1.0);
+    }
+
+    #[test]
+    fn short_chains_dont_panic() {
+        assert_eq!(effective_sample_size(&[]), 0.0);
+        assert_eq!(effective_sample_size(&[1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn ess_per_iteration_bounded() {
+        let mut rng = Pcg64::seed_from(3);
+        let xs: Vec<f64> = (0..1000).map(|_| normal(&mut rng)).collect();
+        let e = ess_per_iteration(&xs);
+        assert!(e > 0.0 && e <= 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation metrics: effective sample size (Fig. 2a), adjusted Rand
+//! index for latent-structure recovery, and MCMC trace recording with
+//! CSV/JSON emission for the figure benches.
+
+pub mod ari;
+pub mod ess;
+pub mod trace;
+
+pub use ari::adjusted_rand_index;
+pub use ess::effective_sample_size;
+pub use trace::{McmcTrace, TraceRow};

@@ -1,0 +1,175 @@
+//! MCMC trace recording: one row per global iteration with the metrics
+//! every figure needs (modeled/measured wall-clock, predictive log-lik,
+//! cluster count, α, comm bytes), plus CSV/JSON emitters.
+
+use crate::data::io::CsvWriter;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One global-iteration record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceRow {
+    pub iter: u64,
+    /// modeled distributed wall-clock, cumulative seconds
+    pub modeled_time_s: f64,
+    /// measured single-host wall-clock, cumulative seconds
+    pub measured_time_s: f64,
+    /// mean test-set predictive log-likelihood per datum
+    pub predictive_loglik: f64,
+    pub num_clusters: u64,
+    pub alpha: f64,
+    /// bytes moved this round by map/reduce/shuffle
+    pub bytes: u64,
+}
+
+/// A full run trace.
+#[derive(Debug, Clone, Default)]
+pub struct McmcTrace {
+    pub rows: Vec<TraceRow>,
+    pub label: String,
+}
+
+impl McmcTrace {
+    pub fn new(label: &str) -> Self {
+        McmcTrace {
+            rows: Vec::new(),
+            label: label.to_string(),
+        }
+    }
+
+    pub fn push(&mut self, row: TraceRow) {
+        self.rows.push(row);
+    }
+
+    pub fn final_loglik(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.predictive_loglik)
+    }
+
+    pub fn final_clusters(&self) -> Option<u64> {
+        self.rows.last().map(|r| r.num_clusters)
+    }
+
+    /// Modeled time to first reach a predictive log-lik threshold — the
+    /// speedup/saturation statistic of Figs. 6–8.
+    pub fn time_to_loglik(&self, threshold: f64) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.predictive_loglik >= threshold)
+            .map(|r| r.modeled_time_s)
+    }
+
+    /// Series of (modeled_time, loglik) for plotting.
+    pub fn loglik_series(&self) -> Vec<(f64, f64)> {
+        self.rows
+            .iter()
+            .map(|r| (r.modeled_time_s, r.predictive_loglik))
+            .collect()
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "iter",
+                "modeled_time_s",
+                "measured_time_s",
+                "predictive_loglik",
+                "num_clusters",
+                "alpha",
+                "bytes",
+            ],
+        )?;
+        for r in &self.rows {
+            w.row(&[
+                r.iter as f64,
+                r.modeled_time_s,
+                r.measured_time_s,
+                r.predictive_loglik,
+                r.num_clusters as f64,
+                r.alpha,
+                r.bytes as f64,
+            ])?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("label", Json::str(&self.label));
+        obj.set(
+            "iters",
+            Json::arr_nums(&self.rows.iter().map(|r| r.iter as f64).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "modeled_time_s",
+            Json::arr_nums(&self.rows.iter().map(|r| r.modeled_time_s).collect::<Vec<_>>()),
+        );
+        obj.set(
+            "predictive_loglik",
+            Json::arr_nums(
+                &self
+                    .rows
+                    .iter()
+                    .map(|r| r.predictive_loglik)
+                    .collect::<Vec<_>>(),
+            ),
+        );
+        obj.set(
+            "num_clusters",
+            Json::arr_nums(
+                &self
+                    .rows
+                    .iter()
+                    .map(|r| r.num_clusters as f64)
+                    .collect::<Vec<_>>(),
+            ),
+        );
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(iter: u64, t: f64, ll: f64) -> TraceRow {
+        TraceRow {
+            iter,
+            modeled_time_s: t,
+            measured_time_s: t * 0.5,
+            predictive_loglik: ll,
+            num_clusters: 10 + iter,
+            alpha: 1.0,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn time_to_threshold() {
+        let mut t = McmcTrace::new("test");
+        t.push(row(0, 1.0, -10.0));
+        t.push(row(1, 2.0, -5.0));
+        t.push(row(2, 3.0, -2.0));
+        assert_eq!(t.time_to_loglik(-5.0), Some(2.0));
+        assert_eq!(t.time_to_loglik(-1.0), None);
+        assert_eq!(t.final_loglik(), Some(-2.0));
+        assert_eq!(t.final_clusters(), Some(12));
+    }
+
+    #[test]
+    fn csv_and_json_emission() {
+        let mut t = McmcTrace::new("emit");
+        t.push(row(0, 1.0, -3.0));
+        let dir = std::env::temp_dir().join("cc_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("predictive_loglik"));
+        assert!(text.contains("-3"));
+        let j = t.to_json().to_string();
+        assert!(j.contains("\"label\":\"emit\""));
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str().unwrap(), "emit");
+    }
+}

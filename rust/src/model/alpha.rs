@@ -1,0 +1,164 @@
+//! The concentration-parameter conditional, Eq. 6 of the paper:
+//!
+//! ```text
+//!   p(α | {z}) ∝ p(α) · Γ(α)/Γ(N+α) · α^{Σ_k J_k}
+//! ```
+//!
+//! A remarkable property of the supercluster representation (Eq. 5) is
+//! that this is the SAME conditional as for a plain CRP — only the total
+//! number of extant clusters `Σ_k J_k` enters. The update is centralized
+//! but lightweight: each worker communicates one integer. Sampled by
+//! slice sampling (the paper's suggestion).
+
+use crate::rng::{slice_sample, Pcg64};
+use crate::special::lgamma;
+
+/// Gamma(shape, rate) prior on α.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GammaPrior {
+    pub shape: f64,
+    pub rate: f64,
+}
+
+impl Default for GammaPrior {
+    fn default() -> Self {
+        // weakly informative: mean 1, variance 1
+        GammaPrior {
+            shape: 1.0,
+            rate: 1.0,
+        }
+    }
+}
+
+impl GammaPrior {
+    pub fn logpdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return f64::NEG_INFINITY;
+        }
+        (self.shape - 1.0) * x.ln() - self.rate * x
+    }
+}
+
+/// Log of Eq. 6 (up to a constant): `ln p(α) + lnΓ(α) − lnΓ(N+α) + J·ln α`.
+pub fn log_alpha_conditional(alpha: f64, n: u64, total_clusters: u64, prior: &GammaPrior) -> f64 {
+    if alpha <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    prior.logpdf(alpha) + lgamma(alpha) - lgamma(n as f64 + alpha)
+        + total_clusters as f64 * alpha.ln()
+}
+
+/// One slice-sampling transition for α given (N, ΣJ_k). Operates on
+/// ln α (scale parameter ⇒ log parameterization mixes far better), with
+/// the Jacobian term `+ln α` included.
+pub fn sample_alpha(
+    rng: &mut Pcg64,
+    current: f64,
+    n: u64,
+    total_clusters: u64,
+    prior: &GammaPrior,
+) -> f64 {
+    let logf = |la: f64| {
+        let a = la.exp();
+        log_alpha_conditional(a, n, total_clusters, prior) + la // Jacobian
+    };
+    let la = slice_sample(rng, logf, current.ln(), 1.0, 64, (-40.0, 40.0));
+    la.exp()
+}
+
+/// Grid quadrature of the normalized posterior p(α | z) on a log-spaced
+/// grid — used to regenerate Fig. 2b exactly (no Monte-Carlo noise).
+pub fn alpha_posterior_grid(
+    n: u64,
+    total_clusters: u64,
+    prior: &GammaPrior,
+    lo: f64,
+    hi: f64,
+    points: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    assert!(points >= 2 && lo > 0.0 && hi > lo);
+    let (ll, lh) = (lo.ln(), hi.ln());
+    let grid: Vec<f64> = (0..points)
+        .map(|i| (ll + (lh - ll) * i as f64 / (points - 1) as f64).exp())
+        .collect();
+    // density on the log grid (with Jacobian α for measure dα = α d lnα)
+    let mut logp: Vec<f64> = grid
+        .iter()
+        .map(|&a| log_alpha_conditional(a, n, total_clusters, prior) + a.ln())
+        .collect();
+    crate::special::exp_normalize(&mut logp);
+    (grid, logp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mean;
+
+    #[test]
+    fn conditional_is_finite_and_peaked() {
+        let prior = GammaPrior::default();
+        let f = |a: f64| log_alpha_conditional(a, 1000, 50, &prior);
+        assert!(f(1.0).is_finite() && f(10.0).is_finite());
+        assert_eq!(f(-1.0), f64::NEG_INFINITY);
+        // more clusters ⇒ conditional prefers larger α:
+        // compare where the density puts relative mass
+        let small_j = log_alpha_conditional(20.0, 1000, 10, &prior)
+            - log_alpha_conditional(2.0, 1000, 10, &prior);
+        let big_j = log_alpha_conditional(20.0, 1000, 200, &prior)
+            - log_alpha_conditional(2.0, 1000, 200, &prior);
+        assert!(big_j > small_j);
+    }
+
+    #[test]
+    fn sampler_tracks_cluster_count() {
+        // With many clusters the posterior concentrates at large α; with
+        // few clusters at small α. Check the sampled means are ordered
+        // and in sensible ranges.
+        let prior = GammaPrior {
+            shape: 1.0,
+            rate: 0.1,
+        };
+        let run = |j: u64, seed: u64| {
+            let mut rng = Pcg64::seed_from(seed);
+            let mut a = 1.0;
+            let mut xs = Vec::new();
+            for i in 0..6000 {
+                a = sample_alpha(&mut rng, a, 10_000, j, &prior);
+                if i > 1000 {
+                    xs.push(a);
+                }
+            }
+            mean(&xs)
+        };
+        let low = run(5, 1);
+        let high = run(500, 2);
+        assert!(low < high, "E[α|J=5] = {low} should be < E[α|J=500] = {high}");
+        assert!(low > 0.05 && low < 5.0, "low {low}");
+        assert!(high > 30.0 && high < 500.0, "high {high}");
+    }
+
+    #[test]
+    fn grid_posterior_normalizes_and_orders() {
+        let prior = GammaPrior::default();
+        let (grid, p) = alpha_posterior_grid(100_000, 128, &prior, 0.1, 1000.0, 200);
+        assert_eq!(grid.len(), 200);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        // posterior mean for J=128, N=100k sits roughly near α where
+        // J ≈ α ln(1 + N/α); sanity: between 5 and 60
+        let m: f64 = grid.iter().zip(&p).map(|(&g, &q)| g * q).sum();
+        assert!(m > 5.0 && m < 60.0, "posterior mean {m}");
+    }
+
+    #[test]
+    fn more_clusters_shift_grid_posterior_right() {
+        let prior = GammaPrior::default();
+        let mean_for = |j: u64| {
+            let (grid, p) = alpha_posterior_grid(1_000_000, j, &prior, 0.01, 10_000.0, 400);
+            grid.iter().zip(&p).map(|(&g, &q)| g * q).sum::<f64>()
+        };
+        // the Fig. 2b trend: 128 → 2048 clusters increases α
+        assert!(mean_for(128) < mean_for(512));
+        assert!(mean_for(512) < mean_for(2048));
+    }
+}

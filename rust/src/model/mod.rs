@@ -1,0 +1,416 @@
+//! The paper's observation model (§6): product-Bernoulli components with
+//! per-dimension `Beta(β_d, β_d)` priors, coin weights collapsed out.
+//!
+//! * [`BetaBernoulli`] — the model spec (dimensionality + β vector).
+//! * [`ClusterStats`] — a cluster's sufficient statistics with a cached
+//!   log-predictive table (`bias + Σ_{d: x_d=1} diff[d]`) — the Layer-3
+//!   hot path; caches invalidate on count or hyperparameter change.
+//! * [`alpha`] — the concentration conditional (Eq. 6) and its slice-
+//!   sampling update.
+//! * [`hyper`] — the `β_d` griddy-Gibbs update from pooled sufficient
+//!   statistics (reduce step).
+
+pub mod alpha;
+pub mod hyper;
+
+use crate::data::BinMat;
+use crate::special::log_beta;
+
+/// Log lookup table for symmetric-β scoring-cache rebuilds: `ln(x + β)`
+/// and `ln(x + 2β)` indexed by integer count. Rebuilding a cluster's
+/// predictive table is the per-datum hot cost of the Gibbs sweep (two
+/// rebuilds per move, O(D) `ln` calls each); with a uniform β the
+/// transcendentals become array lookups (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogLut {
+    beta: f64,
+    ln_xb: Vec<f64>,
+    ln_n2b: Vec<f64>,
+}
+
+impl LogLut {
+    pub fn new(beta: f64, n_max: usize) -> LogLut {
+        LogLut {
+            beta,
+            ln_xb: (0..=n_max).map(|x| (x as f64 + beta).ln()).collect(),
+            ln_n2b: (0..=n_max).map(|x| (x as f64 + 2.0 * beta).ln()).collect(),
+        }
+    }
+
+    #[inline]
+    fn covers(&self, beta: f64, n: u64) -> bool {
+        beta == self.beta && (n as usize) < self.ln_xb.len()
+    }
+}
+
+/// Model spec: binary dimensionality and per-dimension symmetric Beta
+/// hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BetaBernoulli {
+    pub d: usize,
+    pub beta: Vec<f64>,
+    /// fast-rebuild LUT; valid only while β is uniform across dims
+    lut: Option<LogLut>,
+}
+
+impl BetaBernoulli {
+    /// Symmetric spec: β_d = β for all d.
+    pub fn symmetric(d: usize, beta: f64) -> Self {
+        assert!(beta > 0.0);
+        BetaBernoulli {
+            d,
+            beta: vec![beta; d],
+            lut: None,
+        }
+    }
+
+    /// Install the symmetric-β log LUT covering counts up to `n_max`
+    /// (call once at sampler construction; drop with [`Self::drop_lut`]
+    /// when β_d become per-dimension after a griddy update).
+    pub fn build_lut(&mut self, n_max: usize) {
+        let b0 = self.beta[0];
+        if self.beta.iter().all(|&b| b == b0) {
+            self.lut = Some(LogLut::new(b0, n_max));
+        }
+    }
+
+    /// Invalidate the LUT (β no longer uniform).
+    pub fn drop_lut(&mut self) {
+        self.lut = None;
+    }
+
+    /// Log predictive of a fresh (empty) cluster for ANY datum: with a
+    /// symmetric Beta(β_d, β_d) prior the predictive coin is 1/2 per dim,
+    /// so the score is a constant −D·ln 2 regardless of x or β.
+    pub fn empty_cluster_loglik(&self) -> f64 {
+        -(self.d as f64) * std::f64::consts::LN_2
+    }
+}
+
+/// Sufficient statistics for one cluster: datum count `n` and per-dim
+/// one-counts, plus the cached scoring table.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    n: u64,
+    ones: Vec<u32>,
+    /// cache: bias = Σ_d log p̂0_d ; diff[d] = log p̂1_d − log p̂0_d
+    cache_bias: f64,
+    cache_diff: Vec<f64>,
+    cache_valid: bool,
+    /// ln(n), maintained incrementally (perf: the Gibbs hot loop reads
+    /// it once per cluster per datum — see EXPERIMENTS.md §Perf)
+    log_n: f64,
+}
+
+impl ClusterStats {
+    pub fn empty(d: usize) -> Self {
+        ClusterStats {
+            n: 0,
+            ones: vec![0; d],
+            cache_bias: 0.0,
+            cache_diff: vec![0.0; d],
+            cache_valid: false,
+            log_n: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// ln(n) without a transcendental call on the hot path.
+    #[inline]
+    pub fn log_n(&self) -> f64 {
+        self.log_n
+    }
+
+    pub fn ones(&self) -> &[u32] {
+        &self.ones
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Add datum (row `r` of `data`) to the cluster.
+    pub fn add(&mut self, data: &BinMat, r: usize) {
+        self.n += 1;
+        self.log_n = (self.n as f64).ln();
+        data.for_each_one(r, |d| self.ones[d] += 1);
+        self.cache_valid = false;
+    }
+
+    /// Remove datum from the cluster (must have been added).
+    pub fn remove(&mut self, data: &BinMat, r: usize) {
+        debug_assert!(self.n > 0, "remove from empty cluster");
+        self.n -= 1;
+        self.log_n = if self.n == 0 {
+            f64::NEG_INFINITY
+        } else {
+            (self.n as f64).ln()
+        };
+        data.for_each_one(r, |d| {
+            debug_assert!(self.ones[d] > 0, "one-count underflow at dim {d}");
+            self.ones[d] -= 1;
+        });
+        self.cache_valid = false;
+    }
+
+    /// Merge another cluster's statistics into this one (shuffle moves).
+    pub fn absorb(&mut self, other: &ClusterStats) {
+        assert_eq!(self.ones.len(), other.ones.len());
+        self.n += other.n;
+        self.log_n = (self.n as f64).ln();
+        for (a, b) in self.ones.iter_mut().zip(&other.ones) {
+            *a += *b;
+        }
+        self.cache_valid = false;
+    }
+
+    /// Rebuild the cached log-predictive table for the current counts and
+    /// hyperparameters. O(D); called lazily from [`Self::score`]. With a
+    /// uniform β the `ln` calls become LUT lookups:
+    /// `diff[d] = ln(c_d+β) − ln(n−c_d+β)`,
+    /// `bias = Σ_d ln(n−c_d+β) − D·ln(n+2β)`.
+    fn rebuild_cache(&mut self, model: &BetaBernoulli) {
+        if let Some(lut) = &model.lut {
+            if lut.covers(model.beta[0], self.n) {
+                let n = self.n as usize;
+                let ln_xb = &lut.ln_xb;
+                let mut bias = 0.0;
+                for d in 0..model.d {
+                    let c = self.ones[d] as usize;
+                    let l1 = ln_xb[c];
+                    let l0 = ln_xb[n - c];
+                    bias += l0;
+                    self.cache_diff[d] = l1 - l0;
+                }
+                self.cache_bias = bias - model.d as f64 * lut.ln_n2b[n];
+                self.cache_valid = true;
+                return;
+            }
+        }
+        let nf = self.n as f64;
+        let mut bias = 0.0;
+        for d in 0..model.d {
+            let b = model.beta[d];
+            let denom = nf + 2.0 * b;
+            let p1 = (self.ones[d] as f64 + b) / denom;
+            let p0 = (nf - self.ones[d] as f64 + b) / denom;
+            let l1 = p1.ln();
+            let l0 = p0.ln();
+            bias += l0;
+            self.cache_diff[d] = l1 - l0;
+        }
+        self.cache_bias = bias;
+        self.cache_valid = true;
+    }
+
+    /// Explicitly invalidate the cache (hyperparameters changed).
+    pub fn invalidate_cache(&mut self) {
+        self.cache_valid = false;
+    }
+
+    /// Log predictive likelihood of row `r` under this cluster
+    /// (collapsed): `Σ_d log p̂(x_d)`. Uses the cached table — O(#ones)
+    /// after an O(D) rebuild.
+    pub fn score(&mut self, model: &BetaBernoulli, data: &BinMat, r: usize) -> f64 {
+        if !self.cache_valid {
+            self.rebuild_cache(model);
+        }
+        let mut s = self.cache_bias;
+        let diff = &self.cache_diff;
+        data.for_each_one(r, |d| s += diff[d]);
+        s
+    }
+
+    /// Score from a pre-decoded ones-index list (the Gibbs hot loop
+    /// decodes each datum's bits once and scores all local clusters from
+    /// the same list — see EXPERIMENTS.md §Perf).
+    #[inline]
+    pub fn score_ones(&mut self, model: &BetaBernoulli, ones_idx: &[u32]) -> f64 {
+        if !self.cache_valid {
+            self.rebuild_cache(model);
+        }
+        let diff = &self.cache_diff;
+        let mut s = self.cache_bias;
+        for &d in ones_idx {
+            s += diff[d as usize];
+        }
+        s
+    }
+
+    /// Uncached reference scoring (tests + failure injection).
+    pub fn score_uncached(&self, model: &BetaBernoulli, data: &BinMat, r: usize) -> f64 {
+        let nf = self.n as f64;
+        let mut s = 0.0;
+        for d in 0..model.d {
+            let b = model.beta[d];
+            let denom = nf + 2.0 * b;
+            let p = if data.get(r, d) {
+                (self.ones[d] as f64 + b) / denom
+            } else {
+                (nf - self.ones[d] as f64 + b) / denom
+            };
+            s += p.ln();
+        }
+        s
+    }
+
+    /// Collapsed log marginal likelihood of the whole cluster:
+    /// `Σ_d [ln B(c_d+β_d, n−c_d+β_d) − ln B(β_d, β_d)]`.
+    pub fn log_marginal(&self, model: &BetaBernoulli) -> f64 {
+        let nf = self.n as f64;
+        let mut s = 0.0;
+        for d in 0..model.d {
+            let b = model.beta[d];
+            let c = self.ones[d] as f64;
+            s += log_beta(c + b, nf - c + b) - log_beta(b, b);
+        }
+        s
+    }
+
+    /// Predictive Bernoulli parameters p̂_1 per dim (f32, for the PJRT
+    /// artifact weight matrices).
+    pub fn predictive_p1(&self, model: &BetaBernoulli, out: &mut [f32]) {
+        assert_eq!(out.len(), model.d);
+        let nf = self.n as f64;
+        for d in 0..model.d {
+            let b = model.beta[d];
+            out[d] = ((self.ones[d] as f64 + b) / (nf + 2.0 * b)) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = BinMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                if rng.next_f64() < 0.4 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn add_remove_roundtrip_restores_stats() {
+        let data = rand_data(10, 33, 1);
+        let model = BetaBernoulli::symmetric(33, 0.5);
+        let mut c = ClusterStats::empty(33);
+        for r in 0..10 {
+            c.add(&data, r);
+        }
+        let before_n = c.n();
+        let before_ones = c.ones().to_vec();
+        let before_score = c.score(&model, &data, 0);
+        c.add(&data, 3);
+        c.remove(&data, 3);
+        assert_eq!(c.n(), before_n);
+        assert_eq!(c.ones(), &before_ones[..]);
+        assert!((c.score(&model, &data, 0) - before_score).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_score_matches_uncached() {
+        let data = rand_data(20, 65, 2);
+        let model = BetaBernoulli::symmetric(65, 0.3);
+        let mut c = ClusterStats::empty(65);
+        for r in 0..12 {
+            c.add(&data, r);
+        }
+        for r in 0..20 {
+            let cached = c.score(&model, &data, r);
+            let plain = c.score_uncached(&model, &data, r);
+            assert!(
+                (cached - plain).abs() < 1e-10,
+                "row {r}: {cached} vs {plain}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_cluster_score_is_neg_d_ln2() {
+        let data = rand_data(3, 17, 3);
+        let model = BetaBernoulli::symmetric(17, 0.7);
+        let mut c = ClusterStats::empty(17);
+        let want = model.empty_cluster_loglik();
+        for r in 0..3 {
+            assert!((c.score(&model, &data, r) - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cache_invalidates_on_hyper_change() {
+        let data = rand_data(8, 9, 4);
+        let mut model = BetaBernoulli::symmetric(9, 0.5);
+        let mut c = ClusterStats::empty(9);
+        for r in 0..8 {
+            c.add(&data, r);
+        }
+        let s_before = c.score(&model, &data, 0);
+        model.beta = vec![2.0; 9];
+        c.invalidate_cache();
+        let s_after = c.score(&model, &data, 0);
+        assert!((s_after - c.score_uncached(&model, &data, 0)).abs() < 1e-10);
+        assert!((s_before - s_after).abs() > 1e-6, "score must respond to β");
+    }
+
+    #[test]
+    fn log_marginal_matches_sequential_predictives() {
+        // chain rule: log m(x_1..x_n) = Σ_i log p(x_i | x_<i)
+        let data = rand_data(6, 21, 5);
+        let model = BetaBernoulli::symmetric(21, 0.4);
+        let mut c = ClusterStats::empty(21);
+        let mut chain = 0.0;
+        for r in 0..6 {
+            chain += c.score(&model, &data, r);
+            c.add(&data, r);
+        }
+        let marginal = c.log_marginal(&model);
+        assert!(
+            (chain - marginal).abs() < 1e-8,
+            "chain {chain} vs marginal {marginal}"
+        );
+    }
+
+    #[test]
+    fn absorb_equals_adding_all_rows() {
+        let data = rand_data(10, 15, 6);
+        let mut a = ClusterStats::empty(15);
+        let mut b = ClusterStats::empty(15);
+        for r in 0..5 {
+            a.add(&data, r);
+        }
+        for r in 5..10 {
+            b.add(&data, r);
+        }
+        a.absorb(&b);
+        let mut all = ClusterStats::empty(15);
+        for r in 0..10 {
+            all.add(&data, r);
+        }
+        assert_eq!(a.n(), all.n());
+        assert_eq!(a.ones(), all.ones());
+    }
+
+    #[test]
+    fn predictive_p1_in_unit_interval() {
+        let data = rand_data(30, 12, 7);
+        let model = BetaBernoulli::symmetric(12, 0.1);
+        let mut c = ClusterStats::empty(12);
+        for r in 0..30 {
+            c.add(&data, r);
+        }
+        let mut p = vec![0.0f32; 12];
+        c.predictive_p1(&model, &mut p);
+        assert!(p.iter().all(|&x| x > 0.0 && x < 1.0));
+    }
+}

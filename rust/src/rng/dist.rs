@@ -1,0 +1,243 @@
+//! Distribution samplers over [`Pcg64`]: Normal (Marsaglia polar), Gamma
+//! (Marsaglia–Tsang with the α<1 boost), Beta, Dirichlet, Bernoulli, and
+//! categorical sampling from (log-)weights — the building blocks of every
+//! transition operator in the paper.
+
+use super::pcg::Pcg64;
+use crate::special::logsumexp;
+
+/// Standard normal via Marsaglia's polar method.
+pub fn normal(rng: &mut Pcg64) -> f64 {
+    loop {
+        let u = 2.0 * rng.next_f64() - 1.0;
+        let v = 2.0 * rng.next_f64() - 1.0;
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            return u * (-2.0 * s.ln() / s).sqrt();
+        }
+    }
+}
+
+/// Gamma(shape α, scale 1) via Marsaglia & Tsang (2000); α < 1 handled by
+/// the standard U^{1/α} boost.
+pub fn gamma(rng: &mut Pcg64, alpha: f64) -> f64 {
+    assert!(alpha > 0.0, "gamma shape must be positive, got {alpha}");
+    if alpha < 1.0 {
+        // G(α) = G(α+1) · U^{1/α}
+        let u = rng.next_f64_open();
+        return gamma(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = normal(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v = v * v * v;
+        let u = rng.next_f64_open();
+        let x2 = x * x;
+        if u < 1.0 - 0.0331 * x2 * x2 {
+            return d * v;
+        }
+        if u.ln() < 0.5 * x2 + d * (1.0 - v + v.ln()) {
+            return d * v;
+        }
+    }
+}
+
+/// Beta(a, b) as Ga/(Ga+Gb).
+pub fn beta(rng: &mut Pcg64, a: f64, b: f64) -> f64 {
+    let x = gamma(rng, a);
+    let y = gamma(rng, b);
+    x / (x + y)
+}
+
+/// Dirichlet(αs) via normalized Gammas. Returns a probability vector.
+pub fn dirichlet(rng: &mut Pcg64, alphas: &[f64]) -> Vec<f64> {
+    assert!(!alphas.is_empty());
+    let mut g: Vec<f64> = alphas.iter().map(|&a| gamma(rng, a)).collect();
+    let s: f64 = g.iter().sum();
+    if s <= 0.0 {
+        // all-tiny shapes can underflow; fall back to a one-hot at the
+        // largest shape (the distribution's own degenerate limit)
+        let k = crate::util::argmax(alphas);
+        g.iter_mut().for_each(|x| *x = 0.0);
+        g[k] = 1.0;
+        return g;
+    }
+    g.iter_mut().for_each(|x| *x /= s);
+    g
+}
+
+pub fn bernoulli(rng: &mut Pcg64, p: f64) -> bool {
+    rng.next_f64() < p
+}
+
+/// Categorical draw from *unnormalized probabilities* (linear scale).
+pub fn categorical(rng: &mut Pcg64, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(
+        total > 0.0 && total.is_finite(),
+        "categorical needs positive finite total, got {total}"
+    );
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1 // floating-point tail
+}
+
+/// Categorical draw from *log*-weights, destroying the buffer: max-shift,
+/// exp in place, then one linear sampling pass — half the `exp` calls of
+/// [`categorical_log`]. The Gibbs hot loop owns its scratch buffer, so
+/// the destruction is free (perf: see EXPERIMENTS.md §Perf).
+pub fn categorical_log_inplace(rng: &mut Pcg64, logw: &mut [f64]) -> usize {
+    let m = logw.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    assert!(m.is_finite(), "categorical_log_inplace: all weights are -inf");
+    let mut total = 0.0;
+    for x in logw.iter_mut() {
+        *x = (*x - m).exp();
+        total += *x;
+    }
+    let mut u = rng.next_f64() * total;
+    for (i, &w) in logw.iter().enumerate() {
+        u -= w;
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    logw
+        .iter()
+        .rposition(|&w| w > 0.0)
+        .expect("categorical_log_inplace: empty support")
+}
+
+/// Categorical draw from *log*-weights (any common offset). Uses a single
+/// max-shift + linear pass; robust to −∞ entries (zero probability).
+pub fn categorical_log(rng: &mut Pcg64, logw: &[f64]) -> usize {
+    let z = logsumexp(logw);
+    assert!(z.is_finite(), "categorical_log: all weights are -inf");
+    let mut u = rng.next_f64();
+    for (i, &lw) in logw.iter().enumerate() {
+        u -= (lw - z).exp();
+        if u <= 0.0 {
+            return i;
+        }
+    }
+    // floating-point tail: return the last non-(-inf) index
+    logw.iter()
+        .rposition(|&lw| lw > f64::NEG_INFINITY)
+        .expect("categorical_log: all weights are -inf")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mean, variance};
+
+    fn draws(f: impl Fn(&mut Pcg64) -> f64, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::seed_from(seed);
+        (0..n).map(|_| f(&mut rng)).collect()
+    }
+
+    #[test]
+    fn normal_moments() {
+        let xs = draws(normal, 100_000, 1);
+        assert!(mean(&xs).abs() < 0.02);
+        assert!((variance(&xs) - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn gamma_moments_across_shapes() {
+        for &a in &[0.3, 0.9, 1.0, 2.5, 10.0, 100.0] {
+            let xs = draws(|r| gamma(r, a), 60_000, 2);
+            // E = a, Var = a (scale 1)
+            assert!(
+                (mean(&xs) - a).abs() < 0.05 * a.max(1.0),
+                "gamma({a}) mean {}",
+                mean(&xs)
+            );
+            assert!(
+                (variance(&xs) - a).abs() < 0.12 * a.max(1.0),
+                "gamma({a}) var {}",
+                variance(&xs)
+            );
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn beta_moments() {
+        let (a, b) = (2.0, 5.0);
+        let xs = draws(|r| beta(r, a, b), 60_000, 3);
+        let want_mean = a / (a + b);
+        let want_var = a * b / ((a + b) * (a + b) * (a + b + 1.0));
+        assert!((mean(&xs) - want_mean).abs() < 0.01);
+        assert!((variance(&xs) - want_var).abs() < 0.005);
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_with_correct_means() {
+        let alphas = [1.0, 2.0, 7.0];
+        let mut rng = Pcg64::seed_from(4);
+        let n = 30_000;
+        let mut acc = [0.0; 3];
+        for _ in 0..n {
+            let p = dirichlet(&mut rng, &alphas);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+            for i in 0..3 {
+                acc[i] += p[i];
+            }
+        }
+        let a0: f64 = alphas.iter().sum();
+        for i in 0..3 {
+            assert!((acc[i] / n as f64 - alphas[i] / a0).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let mut rng = Pcg64::seed_from(5);
+        let mut counts = [0u64; 4];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[categorical(&mut rng, &w)] += 1;
+        }
+        for i in 0..4 {
+            let p = counts[i] as f64 / n as f64;
+            assert!((p - w[i] / 10.0).abs() < 0.01, "bucket {i}: {p}");
+        }
+    }
+
+    #[test]
+    fn categorical_log_matches_linear_and_handles_offsets() {
+        let w = [0.1f64, 0.6, 0.3];
+        let logw: Vec<f64> = w.iter().map(|x| x.ln() - 1234.0).collect();
+        let mut rng = Pcg64::seed_from(6);
+        let mut counts = [0u64; 3];
+        let n = 200_000;
+        for _ in 0..n {
+            counts[categorical_log(&mut rng, &logw)] += 1;
+        }
+        for i in 0..3 {
+            let p = counts[i] as f64 / n as f64;
+            assert!((p - w[i]).abs() < 0.01, "bucket {i}: {p}");
+        }
+    }
+
+    #[test]
+    fn categorical_log_skips_neg_inf() {
+        let logw = [f64::NEG_INFINITY, 0.0, f64::NEG_INFINITY];
+        let mut rng = Pcg64::seed_from(7);
+        for _ in 0..100 {
+            assert_eq!(categorical_log(&mut rng, &logw), 1);
+        }
+    }
+}

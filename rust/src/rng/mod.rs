@@ -1,0 +1,15 @@
+//! Random-number substrate, built from scratch (no `rand` in the offline
+//! crate universe): a PCG64 generator plus every sampler the paper's MCMC
+//! needs — Gamma/Beta/Dirichlet draws, log-space categorical sampling,
+//! univariate slice sampling (for the concentration update, Eq. 6), and a
+//! griddy-Gibbs kernel (for the `β_d` hyperparameter update, §6).
+
+pub mod dist;
+pub mod griddy;
+pub mod pcg;
+pub mod slice;
+
+pub use dist::*;
+pub use griddy::GriddyGibbs;
+pub use pcg::Pcg64;
+pub use slice::slice_sample;

@@ -1,0 +1,162 @@
+//! PCG-XSL-RR 128/64: O'Neill's PCG64 — the workhorse generator.
+//!
+//! 128-bit LCG state with an xor-shift-low + random-rotate output
+//! permutation. Fast, tiny state, excellent statistical quality, and —
+//! critical for MCMC reproducibility — trivially seedable and `split`able
+//! so every worker/supercluster gets an independent deterministic stream.
+
+const MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// PCG64 generator (PCG-XSL-RR 128/64 variant).
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd stream selector
+}
+
+impl Pcg64 {
+    /// Seed with explicit state/stream (any values — both get mixed).
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Pcg64 {
+            state: 0,
+            inc,
+        };
+        rng.state = rng.state.wrapping_mul(MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(MULT).wrapping_add(rng.inc);
+        // a few warmup steps decorrelate close seeds
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Convenience single-value seeding (stream 0xda3e39cb94b95bdb).
+    pub fn seed_from(seed: u64) -> Self {
+        Pcg64::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Derive an independent generator for worker `id` — used to hand
+    /// each supercluster its own stream with deterministic global seeding.
+    pub fn split(&mut self, id: u64) -> Pcg64 {
+        let s = self.next_u64() ^ (id.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        Pcg64::new(s, id.wrapping_add(0x853c_49e6_748f_ea9b))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 random bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1) — never exactly 0 (safe for `ln`).
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        loop {
+            let x = self.next_f64();
+            if x > 0.0 {
+                return x;
+            }
+        }
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_stream_dependent() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        let mut c = Pcg64::new(42, 2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::seed_from(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_unbiased_small_n() {
+        let mut rng = Pcg64::seed_from(3);
+        let mut counts = [0u64; 5];
+        let n = 250_000;
+        for _ in 0..n {
+            counts[rng.next_below(5) as usize] += 1;
+        }
+        for &c in &counts {
+            let p = c as f64 / n as f64;
+            assert!((p - 0.2).abs() < 0.01, "bucket p = {p}");
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut root = Pcg64::seed_from(11);
+        let mut w0 = root.split(0);
+        let mut w1 = root.split(1);
+        let a: Vec<u64> = (0..8).map(|_| w0.next_u64()).collect();
+        let b: Vec<u64> = (0..8).map(|_| w1.next_u64()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seed_from(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

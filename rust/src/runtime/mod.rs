@@ -1,0 +1,296 @@
+//! Runtime bridge: executes the AOT-compiled JAX/Pallas scoring graphs
+//! from the Rust hot path via the PJRT C API (`xla` crate).
+//!
+//! `make artifacts` lowers the Layer-2 entry points to HLO **text**
+//! (`artifacts/*.hlo.txt` + `manifest.txt`); [`PjrtScorer`] loads and
+//! compiles them once (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile`) and then serves batched scoring with
+//! padding/chunking onto the fixed compiled shapes. Padding contracts
+//! (verified by the Python L1/L2 tests and the cross-check integration
+//! test):
+//!
+//! * pad dims `d → d_v`: `W1 = W0 = 0` (log 1 — exact no-op);
+//! * pad clusters `j → j_v`: `logpi = -1e30` (masked by logsumexp);
+//! * pad rows `b → b_v`: zero rows, outputs ignored.
+//!
+//! [`FallbackScorer`] is the pure-Rust implementation of the identical
+//! contract — used when artifacts are absent and as the cross-check
+//! oracle in integration tests.
+
+pub mod pjrt;
+
+use crate::data::BinMat;
+use crate::special::logsumexp;
+
+pub use pjrt::PjrtScorer;
+
+/// Batched mixture scoring: everything the samplers need from the
+/// compiled artifacts.
+///
+/// Weight layout: `w1[d * j_total + j] = ln p̂(x_d = 1 | cluster j)`,
+/// row-major `[D, J]`; `logpi[j]` = log mixture weight.
+pub trait Scorer {
+    /// Per-row log predictive density `ln Σ_j exp(S[r,j] + logpi[j])`.
+    fn predictive_density(
+        &mut self,
+        test: &BinMat,
+        w1: &[f32],
+        w0: &[f32],
+        logpi: &[f32],
+        d: usize,
+        j: usize,
+    ) -> Vec<f32>;
+
+    /// The full `[rows, J]` log-likelihood matrix (row-major).
+    fn loglik_matrix(
+        &mut self,
+        test: &BinMat,
+        w1: &[f32],
+        w0: &[f32],
+        d: usize,
+        j: usize,
+    ) -> Vec<f32>;
+
+    /// Implementation name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust scorer: same contract as the artifacts, no PJRT. Uses the
+/// bit-sparse identity `S = colsum(W0) + Σ_{d: x_d=1} (W1-W0)[d,·]`.
+#[derive(Debug, Default)]
+pub struct FallbackScorer;
+
+impl FallbackScorer {
+    pub fn new() -> Self {
+        FallbackScorer
+    }
+
+    fn scores_into(
+        test: &BinMat,
+        r: usize,
+        w1: &[f32],
+        w0: &[f32],
+        d: usize,
+        j: usize,
+        acc: &mut [f64],
+    ) {
+        debug_assert_eq!(acc.len(), j);
+        // bias: column sums of w0 — cheap relative to row loop, but we
+        // recompute per call batch, not per row (see loglik_matrix)
+        for jj in 0..j {
+            acc[jj] = 0.0;
+        }
+        for dd in 0..d {
+            let row = &w0[dd * j..(dd + 1) * j];
+            for jj in 0..j {
+                acc[jj] += row[jj] as f64;
+            }
+        }
+        test.for_each_one(r, |dd| {
+            if dd < d {
+                let r1 = &w1[dd * j..(dd + 1) * j];
+                let r0 = &w0[dd * j..(dd + 1) * j];
+                for jj in 0..j {
+                    acc[jj] += (r1[jj] - r0[jj]) as f64;
+                }
+            }
+        });
+    }
+}
+
+impl Scorer for FallbackScorer {
+    fn predictive_density(
+        &mut self,
+        test: &BinMat,
+        w1: &[f32],
+        w0: &[f32],
+        logpi: &[f32],
+        d: usize,
+        j: usize,
+    ) -> Vec<f32> {
+        assert_eq!(w1.len(), d * j);
+        assert_eq!(w0.len(), d * j);
+        assert_eq!(logpi.len(), j);
+        let n = test.rows();
+        // precompute bias once
+        let mut bias = vec![0.0f64; j];
+        for dd in 0..d {
+            let row = &w0[dd * j..(dd + 1) * j];
+            for jj in 0..j {
+                bias[jj] += row[jj] as f64;
+            }
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut acc = vec![0.0f64; j];
+        for r in 0..n {
+            acc.copy_from_slice(&bias);
+            test.for_each_one(r, |dd| {
+                if dd < d {
+                    let r1 = &w1[dd * j..(dd + 1) * j];
+                    let r0 = &w0[dd * j..(dd + 1) * j];
+                    for jj in 0..j {
+                        acc[jj] += (r1[jj] - r0[jj]) as f64;
+                    }
+                }
+            });
+            for jj in 0..j {
+                acc[jj] += logpi[jj] as f64;
+            }
+            out.push(logsumexp(&acc) as f32);
+        }
+        out
+    }
+
+    fn loglik_matrix(
+        &mut self,
+        test: &BinMat,
+        w1: &[f32],
+        w0: &[f32],
+        d: usize,
+        j: usize,
+    ) -> Vec<f32> {
+        assert_eq!(w1.len(), d * j);
+        assert_eq!(w0.len(), d * j);
+        let n = test.rows();
+        let mut out = vec![0.0f32; n * j];
+        let mut acc = vec![0.0f64; j];
+        for r in 0..n {
+            Self::scores_into(test, r, w1, w0, d, j, &mut acc);
+            for jj in 0..j {
+                out[r * j + jj] = acc[jj] as f32;
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "fallback"
+    }
+}
+
+/// Best-available scorer: PJRT artifacts if present (CC_ARTIFACTS env or
+/// ./artifacts), pure-Rust fallback otherwise.
+pub fn auto_scorer() -> Box<dyn Scorer> {
+    let dir = std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    match PjrtScorer::load(std::path::Path::new(&dir)) {
+        Ok(s) => Box::new(s),
+        Err(e) => {
+            eprintln!("[runtime] artifacts unavailable ({e}); using pure-Rust fallback scorer");
+            Box::new(FallbackScorer::new())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_problem(
+        n: usize,
+        d: usize,
+        j: usize,
+        seed: u64,
+    ) -> (BinMat, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = BinMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                if rng.next_f64() < 0.5 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        let mut w1 = vec![0.0f32; d * j];
+        let mut w0 = vec![0.0f32; d * j];
+        for i in 0..d * j {
+            let p = 0.05 + 0.9 * rng.next_f64();
+            w1[i] = (p as f32).ln();
+            w0[i] = (1.0 - p as f32).ln();
+        }
+        let mut logpi = vec![0.0f32; j];
+        let z = (j as f32).ln();
+        for x in logpi.iter_mut() {
+            *x = -z;
+        }
+        (m, w1, w0, logpi)
+    }
+
+    /// Brute-force oracle using the dense per-element definition.
+    fn oracle_matrix(m: &BinMat, w1: &[f32], w0: &[f32], d: usize, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0f64; m.rows() * j];
+        for r in 0..m.rows() {
+            for jj in 0..j {
+                let mut s = 0.0f64;
+                for dd in 0..d {
+                    s += if m.get(r, dd) {
+                        w1[dd * j + jj] as f64
+                    } else {
+                        w0[dd * j + jj] as f64
+                    };
+                }
+                out[r * j + jj] = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fallback_matches_bruteforce_matrix() {
+        let (m, w1, w0, _) = rand_problem(7, 33, 5, 1);
+        let mut s = FallbackScorer::new();
+        let got = s.loglik_matrix(&m, &w1, &w0, 33, 5);
+        let want = oracle_matrix(&m, &w1, &w0, 33, 5);
+        for i in 0..got.len() {
+            assert!(
+                (got[i] as f64 - want[i]).abs() < 1e-4,
+                "idx {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn fallback_density_matches_matrix_logsumexp() {
+        let (m, w1, w0, logpi) = rand_problem(6, 20, 4, 2);
+        let mut s = FallbackScorer::new();
+        let mat = s.loglik_matrix(&m, &w1, &w0, 20, 4);
+        let dens = s.predictive_density(&m, &w1, &w0, &logpi, 20, 4);
+        for r in 0..6 {
+            let terms: Vec<f64> = (0..4)
+                .map(|jj| mat[r * 4 + jj] as f64 + logpi[jj] as f64)
+                .collect();
+            let want = logsumexp(&terms);
+            assert!(
+                (dens[r] as f64 - want).abs() < 1e-4,
+                "row {r}: {} vs {want}",
+                dens[r]
+            );
+        }
+    }
+
+    #[test]
+    fn padded_clusters_do_not_change_density() {
+        let (m, mut w1, mut w0, mut logpi) = rand_problem(5, 16, 3, 3);
+        let mut s = FallbackScorer::new();
+        let base = s.predictive_density(&m, &w1, &w0, &logpi, 16, 3);
+        // pad to j=6 — column-major-in-d layout means rebuilding rows
+        let (d, j, jp) = (16, 3, 6);
+        let mut w1p = vec![0.0f32; d * jp];
+        let mut w0p = vec![0.0f32; d * jp];
+        for dd in 0..d {
+            for jj in 0..j {
+                w1p[dd * jp + jj] = w1[dd * j + jj];
+                w0p[dd * jp + jj] = w0[dd * j + jj];
+            }
+        }
+        let mut logpip = vec![-1.0e30f32; jp];
+        logpip[..j].copy_from_slice(&logpi);
+        let padded = s.predictive_density(&m, &w1p, &w0p, &logpip, d, jp);
+        for r in 0..5 {
+            assert!((padded[r] - base[r]).abs() < 1e-5, "row {r}");
+        }
+        let _ = (&mut w1, &mut w0, &mut logpi);
+    }
+}

@@ -1,0 +1,10 @@
+//! Serial baseline: collapsed Gibbs sampling for the Dirichlet-process
+//! mixture — Neal (2000) Algorithm 3. This is the "gold standard" chain
+//! the paper parallelizes, the comparator for the speedup figures, and
+//! the calibration sampler used for initialization (§5: "we perform a
+//! small calibration run (on 1-10% of the data) using a serial
+//! implementation").
+
+pub mod gibbs;
+
+pub use gibbs::{calibrate_alpha, SerialConfig, SerialGibbs};

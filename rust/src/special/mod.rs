@@ -1,0 +1,223 @@
+//! Special functions for the collapsed Dirichlet-process math: `lgamma`
+//! (Lanczos), `digamma`, `log_beta`, stable `logsumexp` / `log_add_exp`.
+//!
+//! Everything here is built from scratch (no libm-extras in the offline
+//! crate universe) and unit-tested against high-precision reference
+//! values. Accuracies are ~1e-12 relative — far beyond what MCMC needs.
+
+/// Lanczos approximation (g = 7, n = 9) of `ln Γ(x)` for x > 0.
+///
+/// Reference: Numerical Recipes / Godfrey coefficients. Relative error
+/// < 1e-13 over the tested range; reflection handles 0 < x < 0.5.
+pub fn lgamma(x: f64) -> f64 {
+    assert!(x > 0.0, "lgamma requires x > 0, got {x}");
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// `ln Γ(x+n) - ln Γ(x)` — the rising-factorial log, computed stably.
+/// For small integer `n` this is a plain product (exact and faster);
+/// used in CRP predictive terms where `n` is a count delta.
+pub fn lgamma_ratio(x: f64, n: u64) -> f64 {
+    if n <= 16 {
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += (x + i as f64).ln();
+        }
+        acc
+    } else {
+        lgamma(x + n as f64) - lgamma(x)
+    }
+}
+
+/// Digamma ψ(x) = d/dx ln Γ(x), for x > 0.
+///
+/// Recurrence up to x ≥ 6, then the asymptotic series. Abs error < 1e-11.
+pub fn digamma(x: f64) -> f64 {
+    assert!(x > 0.0, "digamma requires x > 0, got {x}");
+    let mut x = x;
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    // ψ(x) ≈ ln x − 1/(2x) − Σ B_2n / (2n x^{2n})
+    result + x.ln() - 0.5 * inv
+        - inv2
+            * (1.0 / 12.0
+                - inv2
+                    * (1.0 / 120.0
+                        - inv2 * (1.0 / 252.0 - inv2 * (1.0 / 240.0 - inv2 * (1.0 / 132.0)))))
+}
+
+/// `ln B(a, b) = lnΓ(a) + lnΓ(b) − lnΓ(a+b)`.
+pub fn log_beta(a: f64, b: f64) -> f64 {
+    lgamma(a) + lgamma(b) - lgamma(a + b)
+}
+
+/// Numerically stable `ln Σ exp(x_i)`. Returns −∞ for an empty slice.
+pub fn logsumexp(xs: &[f64]) -> f64 {
+    let m = xs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    if !m.is_finite() {
+        return m; // empty, all -inf, or a +inf/NaN dominates
+    }
+    let s: f64 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// `ln(e^a + e^b)` without materializing a slice.
+pub fn log_add_exp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// In-place exp-normalize of log-weights; returns the log-normalizer.
+/// After the call `xs` holds a probability vector.
+pub fn exp_normalize(xs: &mut [f64]) -> f64 {
+    let z = logsumexp(xs);
+    if !z.is_finite() {
+        // degenerate: uniform fallback keeps samplers alive
+        let u = 1.0 / xs.len().max(1) as f64;
+        for x in xs.iter_mut() {
+            *x = u;
+        }
+        return z;
+    }
+    for x in xs.iter_mut() {
+        *x = (*x - z).exp();
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Reference values from libm lgamma (cross-checked against mpmath).
+    const LGAMMA_REF: &[(f64, f64)] = &[
+        (0.1, 2.2527126517342055),
+        (0.5, 0.5723649429247004),
+        (1.0, 0.0),
+        (1.5, -0.12078223763524543),
+        (2.0, 0.0),
+        (3.7, 1.4280723266653883),
+        (10.0, 12.801827480081467),
+        (100.5, 361.4355404677776),
+        (1e6, 12815504.569147611),
+    ];
+
+    #[test]
+    fn lgamma_matches_reference() {
+        for &(x, want) in LGAMMA_REF {
+            let got = lgamma(x);
+            let tol = 1e-11 * want.abs().max(1.0);
+            assert!(
+                (got - want).abs() < tol,
+                "lgamma({x}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn lgamma_recurrence() {
+        // Γ(x+1) = x Γ(x)  ⇒  lgamma(x+1) − lgamma(x) = ln x
+        for &x in &[0.3, 1.7, 5.0, 42.5, 1234.0] {
+            let lhs = lgamma(x + 1.0) - lgamma(x);
+            assert!((lhs - x.ln()).abs() < 1e-10, "recurrence fails at {x}");
+        }
+    }
+
+    #[test]
+    fn lgamma_ratio_matches_direct() {
+        for &(x, n) in &[(0.5, 3u64), (2.0, 16), (7.3, 17), (0.01, 40)] {
+            let want = lgamma(x + n as f64) - lgamma(x);
+            let got = lgamma_ratio(x, n);
+            assert!((got - want).abs() < 1e-9, "ratio({x},{n})");
+        }
+    }
+
+    #[test]
+    fn digamma_matches_reference() {
+        let refs = [
+            (0.5, -1.9635100260214235),
+            (1.0, -0.5772156649015329),
+            (2.0, 0.4227843350984671),
+            (10.0, 2.2517525890667211),
+            (100.0, 4.6001618527380874),
+        ];
+        for (x, want) in refs {
+            assert!((digamma(x) - want).abs() < 1e-11, "digamma({x})");
+        }
+    }
+
+    #[test]
+    fn digamma_recurrence() {
+        // ψ(x+1) = ψ(x) + 1/x
+        for &x in &[0.2, 1.0, 3.5, 77.0] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-11);
+        }
+    }
+
+    #[test]
+    fn log_beta_symmetry_and_value() {
+        assert!((log_beta(2.0, 3.0) - (1.0f64 / 12.0).ln()).abs() < 1e-12);
+        assert!((log_beta(0.7, 4.2) - log_beta(4.2, 0.7)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn logsumexp_stability() {
+        assert!((logsumexp(&[0.0, 0.0]) - 2.0f64.ln()).abs() < 1e-12);
+        // huge offsets don't overflow
+        let z = logsumexp(&[1000.0, 1000.0 + (3.0f64).ln()]);
+        assert!((z - (1000.0 + (4.0f64).ln())).abs() < 1e-9);
+        assert_eq!(logsumexp(&[]), f64::NEG_INFINITY);
+        assert_eq!(logsumexp(&[f64::NEG_INFINITY]), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn log_add_exp_matches_logsumexp() {
+        for &(a, b) in &[(0.0, 0.0), (-700.0, 700.0), (3.0, -1.0)] {
+            assert!((log_add_exp(a, b) - logsumexp(&[a, b])).abs() < 1e-12);
+        }
+        assert_eq!(log_add_exp(f64::NEG_INFINITY, 5.0), 5.0);
+    }
+
+    #[test]
+    fn exp_normalize_sums_to_one() {
+        let mut xs = vec![-1000.0, -1001.0, -999.5];
+        exp_normalize(&mut xs);
+        let s: f64 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+        assert!(xs.iter().all(|&p| p >= 0.0));
+    }
+}

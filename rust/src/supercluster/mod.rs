@@ -1,0 +1,382 @@
+//! The paper's auxiliary-variable representation (§3): nesting partitions
+//! in the Dirichlet process.
+//!
+//! `DP(α, H)` is generated in stages: `γ ~ Dir(αμ)`, `G_k ~ DP(αμ_k, H)`
+//! independently, `G = Σ_k γ_k G_k` — and `G ~ DP(α, H)` again. With the
+//! sticks marginalized this yields the **two-stage Chinese restaurant
+//! process**: a datum first picks a restaurant (supercluster) by
+//! Dirichlet-multinomial popularity, then a table within it by local CRP
+//! popularity with concentration `αμ_k`.
+//!
+//! This module implements:
+//! * prior simulators for the standard CRP and the two-stage CRP — the
+//!   marginal-equivalence test (two-stage ⇒ CRP(α)) is the paper's
+//!   central theorem, checked numerically in `rust/tests/`;
+//! * the joint priors of Eq. 4 (Dirichlet-multinomial × K local CRPs)
+//!   and Eq. 5 (their cancellation), checked equal term-by-term;
+//! * the cluster→supercluster shuffle kernel.
+//!
+//! ## A note on Eq. 7
+//!
+//! The paper states the shuffle conditional as
+//! `Pr(s_j = k | ·) = μ_k (αμ_k + J_{k∖j}) / (α + Σ_{k'} J_{k'∖j})`.
+//! However, from the paper's own Eq. 5 the joint depends on `{s_j}` only
+//! through `Π_k μ_k^{J_k}`, so the exact Gibbs conditional is simply
+//! `Pr(s_j = k | ·) ∝ μ_k` — conditioned on the partition, supercluster
+//! labels are i.i.d. categorical(μ). (A direct two-datum generative
+//! calculation confirms this; see `eq7_vs_exact` tests and DESIGN.md.)
+//! We implement **both**: [`ShuffleKernel::Exact`] (default; provably
+//! leaves Eq. 5 invariant) and [`ShuffleKernel::PaperEq7`] (as printed,
+//! kept for ablation/comparison).
+
+use crate::rng::{categorical, categorical_log, Pcg64};
+use crate::special::{lgamma, logsumexp};
+
+/// Which shuffle conditional to use for `s_j` updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShuffleKernel {
+    /// `Pr(s_j=k) ∝ μ_k` — exact Gibbs under Eq. 5 (default).
+    Exact,
+    /// The conditional exactly as printed in the paper's Eq. 7.
+    PaperEq7,
+}
+
+/// A sampled partition with supercluster structure.
+#[derive(Debug, Clone)]
+pub struct NestedPartition {
+    /// cluster id per datum (dense, 0-based)
+    pub z: Vec<u32>,
+    /// supercluster id per cluster
+    pub s: Vec<u32>,
+    pub num_superclusters: usize,
+}
+
+impl NestedPartition {
+    pub fn num_clusters(&self) -> usize {
+        self.s.len()
+    }
+
+    /// cluster sizes n_j
+    pub fn cluster_sizes(&self) -> Vec<u64> {
+        let mut sizes = vec![0u64; self.s.len()];
+        for &z in &self.z {
+            sizes[z as usize] += 1;
+        }
+        sizes
+    }
+
+    /// clusters per supercluster J_k
+    pub fn clusters_per_super(&self) -> Vec<u64> {
+        let mut j = vec![0u64; self.num_superclusters];
+        for &s in &self.s {
+            j[s as usize] += 1;
+        }
+        j
+    }
+
+    /// data per supercluster #_k
+    pub fn data_per_super(&self) -> Vec<u64> {
+        let sizes = self.cluster_sizes();
+        let mut out = vec![0u64; self.num_superclusters];
+        for (jj, &s) in self.s.iter().enumerate() {
+            out[s as usize] += sizes[jj];
+        }
+        out
+    }
+}
+
+/// Simulate a standard CRP(α) partition of `n` data.
+pub fn crp_prior(rng: &mut Pcg64, n: usize, alpha: f64) -> Vec<u32> {
+    let mut z = Vec::with_capacity(n);
+    let mut sizes: Vec<f64> = Vec::new();
+    for i in 0..n {
+        let mut w = sizes.clone();
+        w.push(alpha);
+        let pick = categorical(rng, &w);
+        if pick == sizes.len() {
+            sizes.push(1.0);
+        } else {
+            sizes[pick] += 1.0;
+        }
+        let _ = i;
+        z.push(pick as u32);
+    }
+    z
+}
+
+/// Simulate the two-stage CRP (§3): restaurant by Dirichlet-multinomial
+/// popularity, then table by local CRP(αμ_k). Returns the nested
+/// partition with globally-unique cluster ids.
+pub fn two_stage_crp_prior(
+    rng: &mut Pcg64,
+    n: usize,
+    alpha: f64,
+    mu: &[f64],
+) -> NestedPartition {
+    let k = mu.len();
+    assert!(k >= 1);
+    let mut z: Vec<u32> = Vec::with_capacity(n);
+    let mut s: Vec<u32> = Vec::new(); // supercluster of each cluster
+    let mut cluster_sizes: Vec<f64> = Vec::new();
+    let mut data_per_super = vec![0.0f64; k];
+
+    for _ in 0..n {
+        // stage 1: restaurant choice ∝ αμ_k + #_k
+        let w: Vec<f64> = (0..k)
+            .map(|kk| alpha * mu[kk] + data_per_super[kk])
+            .collect();
+        let pick_k = categorical(rng, &w);
+
+        // stage 2: table within restaurant — extant ∝ n_j, new ∝ αμ_k
+        let mut table_ids: Vec<usize> = Vec::new();
+        let mut table_w: Vec<f64> = Vec::new();
+        for (j, &sj) in s.iter().enumerate() {
+            if sj as usize == pick_k {
+                table_ids.push(j);
+                table_w.push(cluster_sizes[j]);
+            }
+        }
+        table_ids.push(usize::MAX);
+        table_w.push(alpha * mu[pick_k]);
+        let t = categorical(rng, &table_w);
+        let cluster = if table_ids[t] == usize::MAX {
+            s.push(pick_k as u32);
+            cluster_sizes.push(1.0);
+            s.len() - 1
+        } else {
+            cluster_sizes[table_ids[t]] += 1.0;
+            table_ids[t]
+        };
+        data_per_super[pick_k] += 1.0;
+        z.push(cluster as u32);
+    }
+
+    NestedPartition {
+        z,
+        s,
+        num_superclusters: k,
+    }
+}
+
+/// Log prior of Eq. 4: the Dirichlet-multinomial over superclusters times
+/// K independent local CRPs (full EPPF, including the Π Γ(n_j) factors).
+pub fn log_prior_eq4(p: &NestedPartition, alpha: f64, mu: &[f64]) -> f64 {
+    let n: u64 = p.z.len() as u64;
+    let sizes = p.cluster_sizes();
+    let data_k = p.data_per_super();
+    let mut lp = lgamma(alpha) - lgamma(n as f64 + alpha);
+    // Dirichlet-multinomial over data→supercluster counts
+    for (kk, &nk) in data_k.iter().enumerate() {
+        let am = alpha * mu[kk];
+        lp += lgamma(nk as f64 + am) - lgamma(am);
+    }
+    // K independent CRP EPPFs with concentration αμ_k
+    for (kk, &nk) in data_k.iter().enumerate() {
+        let am = alpha * mu[kk];
+        let jk = p.s.iter().filter(|&&s| s as usize == kk).count() as f64;
+        lp += jk * am.ln() + lgamma(am) - lgamma(am + nk as f64);
+    }
+    for (j, &nj) in sizes.iter().enumerate() {
+        debug_assert!(nj > 0, "cluster {j} empty");
+        lp += lgamma(nj as f64); // Γ(n_j)
+    }
+    lp
+}
+
+/// Log prior of Eq. 5: the cancelled form
+/// `Γ(α)/Γ(N+α) · α^{ΣJ_k} · Π_k μ_k^{J_k} · Π_j Γ(n_j)`.
+pub fn log_prior_eq5(p: &NestedPartition, alpha: f64, mu: &[f64]) -> f64 {
+    let n = p.z.len() as f64;
+    let jk = p.clusters_per_super();
+    let total_j: u64 = jk.iter().sum();
+    let mut lp = lgamma(alpha) - lgamma(n + alpha) + total_j as f64 * alpha.ln();
+    for (kk, &j) in jk.iter().enumerate() {
+        lp += j as f64 * mu[kk].ln();
+    }
+    for &nj in &p.cluster_sizes() {
+        lp += lgamma(nj as f64);
+    }
+    lp
+}
+
+/// Log conditional `ln Pr(s_j = k | rest)` for each k under the chosen
+/// kernel. `j_minus[k]` = number of extant clusters in supercluster k
+/// *excluding* cluster j.
+pub fn shuffle_log_conditional(
+    kernel: ShuffleKernel,
+    alpha: f64,
+    mu: &[f64],
+    j_minus: &[u64],
+) -> Vec<f64> {
+    match kernel {
+        ShuffleKernel::Exact => {
+            let mut lw: Vec<f64> = mu.iter().map(|&m| m.ln()).collect();
+            let z = logsumexp(&lw);
+            lw.iter_mut().for_each(|x| *x -= z);
+            lw
+        }
+        ShuffleKernel::PaperEq7 => {
+            let total: f64 = alpha + j_minus.iter().sum::<u64>() as f64;
+            let mut lw: Vec<f64> = mu
+                .iter()
+                .zip(j_minus)
+                .map(|(&m, &j)| (m * (alpha * m + j as f64) / total).ln())
+                .collect();
+            let z = logsumexp(&lw);
+            lw.iter_mut().for_each(|x| *x -= z);
+            lw
+        }
+    }
+}
+
+/// Sample a new supercluster for one cluster.
+pub fn sample_shuffle(
+    rng: &mut Pcg64,
+    kernel: ShuffleKernel,
+    alpha: f64,
+    mu: &[f64],
+    j_minus: &[u64],
+) -> usize {
+    let lw = shuffle_log_conditional(kernel, alpha, mu, j_minus);
+    categorical_log(rng, &lw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mean;
+
+    fn uniform_mu(k: usize) -> Vec<f64> {
+        vec![1.0 / k as f64; k]
+    }
+
+    #[test]
+    fn eq4_equals_eq5_on_random_partitions() {
+        // the paper's cancellation (Eq. 4 ≡ Eq. 5), term-for-term, on
+        // random two-stage draws with non-uniform μ
+        let mut rng = Pcg64::seed_from(1);
+        let mu = vec![0.5, 0.3, 0.2];
+        for trial in 0..50 {
+            let alpha = 0.5 + 3.0 * rng.next_f64();
+            let p = two_stage_crp_prior(&mut rng, 60, alpha, &mu);
+            let a = log_prior_eq4(&p, alpha, &mu);
+            let b = log_prior_eq5(&p, alpha, &mu);
+            assert!(
+                (a - b).abs() < 1e-8,
+                "trial {trial}: eq4 {a} != eq5 {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_stage_marginal_matches_crp_cluster_count() {
+        // E[J] under CRP(α) = Σ_i α/(α+i-1); the two-stage construction
+        // must reproduce it for any K (the paper's central claim)
+        let n = 200;
+        let alpha = 3.0;
+        let want: f64 = (0..n).map(|i| alpha / (alpha + i as f64)).sum();
+        for k in [1usize, 4, 10] {
+            let mu = uniform_mu(k);
+            let mut rng = Pcg64::seed_from(42 + k as u64);
+            let trials = 3000;
+            let js: Vec<f64> = (0..trials)
+                .map(|_| two_stage_crp_prior(&mut rng, n, alpha, &mu).num_clusters() as f64)
+                .collect();
+            let got = mean(&js);
+            assert!(
+                (got - want).abs() < 0.15 * want,
+                "K={k}: E[J] {got} vs CRP {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn two_stage_matches_crp_partition_distribution_small_n() {
+        // exact distribution check on n=3: P(all same cluster), P(all
+        // separate) under CRP(α) vs two-stage with K=2
+        let alpha = 1.5;
+        let n = 3;
+        // CRP: P(all same) = 1/(1+α) · 2/(2+α) ; P(all sep) = α/(1+α) · α/(2+α)
+        let p_same = (1.0 / (1.0 + alpha)) * (2.0 / (2.0 + alpha));
+        let p_sep = (alpha / (1.0 + alpha)) * (alpha / (2.0 + alpha));
+        let mu = uniform_mu(2);
+        let mut rng = Pcg64::seed_from(9);
+        let trials = 60_000;
+        let (mut same, mut sep) = (0u64, 0u64);
+        for _ in 0..trials {
+            let p = two_stage_crp_prior(&mut rng, n, alpha, &mu);
+            match p.num_clusters() {
+                1 => same += 1,
+                3 => sep += 1,
+                _ => {}
+            }
+        }
+        let got_same = same as f64 / trials as f64;
+        let got_sep = sep as f64 / trials as f64;
+        assert!((got_same - p_same).abs() < 0.01, "same {got_same} vs {p_same}");
+        assert!((got_sep - p_sep).abs() < 0.01, "sep {got_sep} vs {p_sep}");
+    }
+
+    #[test]
+    fn exact_kernel_is_iid_mu_and_invariant_for_eq5() {
+        // moving cluster j anywhere under Exact leaves eq5 changed by
+        // exactly ln μ_k − ln μ_k0 — i.e. the conditional IS ∝ μ_k
+        let mut rng = Pcg64::seed_from(3);
+        let mu = vec![0.6, 0.3, 0.1];
+        let alpha = 2.0;
+        let mut p = two_stage_crp_prior(&mut rng, 40, alpha, &mu);
+        if p.num_clusters() == 0 {
+            return;
+        }
+        let j = 0usize;
+        let mut lps = Vec::new();
+        for k in 0..3 {
+            p.s[j] = k as u32;
+            lps.push(log_prior_eq5(&p, alpha, &mu));
+        }
+        // conditional from joint
+        let z = logsumexp(&lps);
+        let cond: Vec<f64> = lps.iter().map(|&x| (x - z).exp()).collect();
+        for k in 0..3 {
+            assert!(
+                (cond[k] - mu[k]).abs() < 1e-9,
+                "exact conditional {cond:?} != μ {mu:?}"
+            );
+        }
+        // and the Exact kernel emits exactly ln μ
+        let lw = shuffle_log_conditional(ShuffleKernel::Exact, alpha, &mu, &[5, 5, 5]);
+        for k in 0..3 {
+            assert!((lw[k] - mu[k].ln()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn eq7_kernel_differs_and_prefers_populated_superclusters() {
+        let mu = uniform_mu(2);
+        let lw = shuffle_log_conditional(ShuffleKernel::PaperEq7, 1.0, &mu, &[10, 0]);
+        assert!(lw[0] > lw[1], "Eq.7 should prefer the populated supercluster");
+        let le = shuffle_log_conditional(ShuffleKernel::Exact, 1.0, &mu, &[10, 0]);
+        assert!((le[0] - le[1]).abs() < 1e-12, "Exact is uniform under uniform μ");
+    }
+
+    #[test]
+    fn shuffle_conditionals_normalize() {
+        for kernel in [ShuffleKernel::Exact, ShuffleKernel::PaperEq7] {
+            let lw = shuffle_log_conditional(kernel, 0.7, &[0.2, 0.5, 0.3], &[3, 1, 7]);
+            let z = logsumexp(&lw);
+            assert!(z.abs() < 1e-10, "{kernel:?} normalizer {z}");
+        }
+    }
+
+    #[test]
+    fn sample_shuffle_respects_mu() {
+        let mut rng = Pcg64::seed_from(4);
+        let mu = vec![0.8, 0.2];
+        let mut counts = [0u64; 2];
+        for _ in 0..20_000 {
+            counts[sample_shuffle(&mut rng, ShuffleKernel::Exact, 1.0, &mu, &[0, 0])] += 1;
+        }
+        let p0 = counts[0] as f64 / 20_000.0;
+        assert!((p0 - 0.8).abs() < 0.02, "p0 {p0}");
+    }
+}

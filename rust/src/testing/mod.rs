@@ -1,0 +1,82 @@
+//! Property-test harness (proptest is not in the offline crate universe):
+//! seeded random generation, many cases, and first-failure reporting with
+//! the reproducing seed. Used by the invariant suites in `rust/tests/`.
+
+use crate::rng::Pcg64;
+
+/// Run `prop` on `cases` values drawn by `generate`. Panics on the first
+/// failure with the case index, seed, and debug rendering of the input.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    mut generate: impl FnMut(&mut Pcg64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Pcg64::seed_from(seed);
+        let value = generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  {msg}\n  input: {value:?}"
+            );
+        }
+    }
+}
+
+/// Assert two floats agree to a tolerance, with a labelled error.
+pub fn assert_close(label: &str, got: f64, want: f64, tol: f64) -> Result<(), String> {
+    if (got - want).abs() <= tol * want.abs().max(1.0) {
+        Ok(())
+    } else {
+        Err(format!("{label}: got {got}, want {want} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "count",
+            25,
+            1,
+            |rng| rng.next_below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_context() {
+        check(
+            "fails",
+            10,
+            2,
+            |rng| rng.next_below(100),
+            |&v| {
+                if v < 90 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert!(assert_close("x", 1.0001, 1.0, 1e-3).is_ok());
+        assert!(assert_close("x", 1.1, 1.0, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Phase timer: the manual profiler used for the §Perf pass (the
+//! container has no `perf`/flamegraph). Accumulates wall-clock per named
+//! phase with negligible overhead; the coordinator instruments
+//! map/reduce/shuffle, the serial sampler instruments score/sample/update.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates durations per phase name.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `phase`.
+    pub fn time<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    /// Manually add a duration (for phases timed across call sites).
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.acc.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    /// Merge another timer's accumulators into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.acc.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or_default()
+    }
+
+    /// All phases sorted by total time, descending — the profile report.
+    pub fn report(&self) -> Vec<(&'static str, Duration, u64)> {
+        let mut rows: Vec<_> = self
+            .acc
+            .iter()
+            .map(|(&k, &v)| (k, v, self.count(k)))
+            .collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        rows
+    }
+
+    /// Human-readable profile table.
+    pub fn render(&self) -> String {
+        let grand: Duration = self.acc.values().sum();
+        let mut out = String::new();
+        out.push_str("phase                       total(s)    calls   share\n");
+        for (name, dur, calls) in self.report() {
+            let share = if grand.as_nanos() > 0 {
+                dur.as_secs_f64() / grand.as_secs_f64() * 100.0
+            } else {
+                0.0
+            };
+            out.push_str(&format!(
+                "{:<26} {:>9.4} {:>8} {:>6.1}%\n",
+                name,
+                dur.as_secs_f64(),
+                calls,
+                share
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut t = PhaseTimer::new();
+        let x = t.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        t.add("work", Duration::from_millis(5));
+        assert_eq!(t.count("work"), 2);
+        assert!(t.total("work") >= Duration::from_millis(5));
+        assert_eq!(t.count("absent"), 0);
+    }
+
+    #[test]
+    fn merge_and_report_ordering() {
+        let mut a = PhaseTimer::new();
+        a.add("fast", Duration::from_millis(1));
+        let mut b = PhaseTimer::new();
+        b.add("slow", Duration::from_millis(50));
+        a.merge(&b);
+        let rows = a.report();
+        assert_eq!(rows[0].0, "slow");
+        assert!(a.render().contains("slow"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Failure injection: the runtime and IO layers must fail loudly and
+//! cleanly on corrupt or missing inputs — no partial loads, no silent
+//! wrong numbers.
+
+use clustercluster::data::io::{load_binmat, save_binmat};
+use clustercluster::data::BinMat;
+use clustercluster::runtime::PjrtScorer;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("cc_failures").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let d = tmpdir("missing");
+    let err = PjrtScorer::load(&d).unwrap_err();
+    assert!(err.to_string().contains("manifest"), "{err}");
+}
+
+#[test]
+fn malformed_manifest_line_is_an_error() {
+    let d = tmpdir("malformed");
+    std::fs::write(d.join("manifest.txt"), "only three fields\n").unwrap();
+    let err = PjrtScorer::load(&d).unwrap_err();
+    assert!(err.to_string().contains("malformed"), "{err}");
+}
+
+#[test]
+fn empty_manifest_is_an_error() {
+    let d = tmpdir("empty");
+    std::fs::write(d.join("manifest.txt"), "# nothing but comments\n\n").unwrap();
+    let err = PjrtScorer::load(&d).unwrap_err();
+    assert!(err.to_string().contains("no variants"), "{err}");
+}
+
+#[test]
+fn corrupt_hlo_text_is_an_error() {
+    let d = tmpdir("corrupt_hlo");
+    std::fs::write(d.join("bad.hlo.txt"), "HloModule this is not valid hlo {{{").unwrap();
+    std::fs::write(
+        d.join("manifest.txt"),
+        "bad loglik 64 256 128 bad.hlo.txt\n",
+    )
+    .unwrap();
+    assert!(PjrtScorer::load(&d).is_err());
+}
+
+#[test]
+fn manifest_pointing_at_missing_file_is_an_error() {
+    let d = tmpdir("dangling");
+    std::fs::write(
+        d.join("manifest.txt"),
+        "ghost loglik 64 256 128 ghost.hlo.txt\n",
+    )
+    .unwrap();
+    assert!(PjrtScorer::load(&d).is_err());
+}
+
+#[test]
+fn truncated_dataset_file_is_an_error() {
+    let d = tmpdir("truncated");
+    let p = d.join("data.ccbin");
+    let mut m = BinMat::zeros(10, 100);
+    m.set(3, 42, true);
+    save_binmat(&p, &m, None).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap();
+    assert!(load_binmat(&p).is_err());
+}
+
+#[test]
+fn dataset_roundtrip_survives_reload() {
+    // positive control for the negative tests above
+    let d = tmpdir("ok");
+    let p = d.join("data.ccbin");
+    let mut m = BinMat::zeros(5, 70);
+    m.set(0, 69, true);
+    m.set(4, 0, true);
+    save_binmat(&p, &m, Some(&[1, 2, 3, 4, 5])).unwrap();
+    let (m2, l2) = load_binmat(&p).unwrap();
+    assert_eq!(m, m2);
+    assert_eq!(l2.unwrap(), vec![1, 2, 3, 4, 5]);
+}
+
+#[test]
+fn cli_rejects_bad_arguments() {
+    use clustercluster::cli::Args;
+    assert!(Args::parse(vec!["run".into(), "notaflag".into()]).is_err());
+    let a = Args::parse(vec!["run".into(), "--workers".into(), "x".into()]).unwrap();
+    assert!(a.get_usize("workers", 1).is_err());
+}
+
+#[test]
+fn scorer_asserts_on_shape_mismatch() {
+    use clustercluster::runtime::{FallbackScorer, Scorer};
+    let m = BinMat::zeros(4, 8);
+    let mut s = FallbackScorer::new();
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // w1 has the wrong length for (d=8, j=3)
+        s.predictive_density(&m, &[0.0; 10], &[0.0; 24], &[0.0; 3], 8, 3)
+    }));
+    assert!(res.is_err(), "shape mismatch must not be silent");
+}
+
+#[test]
+fn bad_magic_rejected() {
+    let d = tmpdir("magic");
+    let p = d.join("data.ccbin");
+    std::fs::write(&p, b"GARBAGE!________________________").unwrap();
+    assert!(load_binmat(Path::new(&p)).is_err());
+}

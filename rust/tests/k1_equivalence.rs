@@ -1,0 +1,102 @@
+//! K=1 reduction: with a single supercluster the coordinator's transition
+//! operators collapse to plain Neal-Alg.-3 collapsed Gibbs (μ = [1],
+//! local concentration α·1, no shuffle). The two implementations share
+//! the posterior but not the RNG stream, so the comparison is
+//! distributional: long-run moments of the cluster count and the joint
+//! log-probability must agree.
+
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::rng::Pcg64;
+use clustercluster::serial::{SerialConfig, SerialGibbs};
+use clustercluster::util::mean;
+
+const ALPHA: f64 = 1.5;
+const BETA: f64 = 0.4;
+
+fn dataset() -> clustercluster::data::Dataset {
+    SyntheticConfig {
+        n: 120,
+        d: 12,
+        clusters: 3,
+        beta: 0.15,
+        seed: 10,
+    }
+    .generate_with_test_fraction(0.0)
+}
+
+#[test]
+fn k1_coordinator_matches_serial_moments() {
+    let ds = dataset();
+
+    // serial chain
+    let scfg = SerialConfig {
+        init_alpha: ALPHA,
+        init_beta: BETA,
+        update_alpha: false,
+        update_beta: false,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(1);
+    let mut serial = SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng);
+    let mut sj = Vec::new();
+    let mut slp = Vec::new();
+    for it in 0..6_000 {
+        serial.sweep(&mut rng);
+        if it >= 1_000 {
+            sj.push(serial.num_clusters() as f64);
+            slp.push(serial.joint_log_prob());
+        }
+    }
+
+    // K=1 coordinator
+    let ccfg = CoordinatorConfig {
+        workers: 1,
+        init_alpha: ALPHA,
+        init_beta: BETA,
+        update_alpha: false,
+        update_beta: false,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng2 = Pcg64::seed_from(2);
+    let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng2);
+    let mut cj = Vec::new();
+    let mut clp = Vec::new();
+    for it in 0..6_000 {
+        coord.step(&mut rng2);
+        if it >= 1_000 {
+            cj.push(coord.num_clusters() as f64);
+            clp.push(coord.joint_log_prob());
+        }
+    }
+
+    let (mj_s, mj_c) = (mean(&sj), mean(&cj));
+    let (mlp_s, mlp_c) = (mean(&slp), mean(&clp));
+    assert!(
+        (mj_s - mj_c).abs() < 0.25,
+        "mean #clusters: serial {mj_s} vs K=1 coordinator {mj_c}"
+    );
+    assert!(
+        (mlp_s - mlp_c).abs() < 0.02 * mlp_s.abs(),
+        "mean joint logp: serial {mlp_s} vs K=1 coordinator {mlp_c}"
+    );
+}
+
+#[test]
+fn k1_has_no_shuffle_bytes() {
+    let ds = dataset();
+    let ccfg = CoordinatorConfig {
+        workers: 1,
+        comm: CommModel::free(),
+        update_beta: false,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(3);
+    let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng);
+    let rs = coord.step(&mut rng);
+    // only the J_k integer is communicated per round at K=1
+    assert_eq!(rs.bytes_transferred, 8, "bytes = {}", rs.bytes_transferred);
+}

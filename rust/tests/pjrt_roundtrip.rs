@@ -1,0 +1,121 @@
+//! Integration: the PJRT-compiled artifacts produce the same scoring
+//! numbers as the pure-Rust fallback (and hence the same numbers the
+//! Python L1/L2 tests pinned against the jnp oracle).
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use clustercluster::data::BinMat;
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::{FallbackScorer, PjrtScorer, Scorer};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    let p = Path::new(&dir).to_path_buf();
+    if p.join("manifest.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: no artifacts at {}; run `make artifacts`", p.display());
+        None
+    }
+}
+
+fn rand_problem(
+    n: usize,
+    d: usize,
+    j: usize,
+    seed: u64,
+) -> (BinMat, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut m = BinMat::zeros(n, d);
+    for r in 0..n {
+        for c in 0..d {
+            if rng.next_f64() < 0.5 {
+                m.set(r, c, true);
+            }
+        }
+    }
+    let mut w1 = vec![0.0f32; d * j];
+    let mut w0 = vec![0.0f32; d * j];
+    for i in 0..d * j {
+        let p = 0.05 + 0.9 * rng.next_f64();
+        w1[i] = (p as f32).ln();
+        w0[i] = (1.0f32 - p as f32).ln();
+    }
+    let mut logpi = vec![-(j as f32).ln(); j];
+    logpi[0] += 0.1; // slightly non-uniform, then renormalize roughly
+    (m, w1, w0, logpi)
+}
+
+#[test]
+fn pjrt_loads_all_manifest_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let s = PjrtScorer::load(&dir).expect("load artifacts");
+    let names = s.variant_names();
+    assert!(names.iter().any(|n| n.starts_with("loglik_")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("density_")), "{names:?}");
+}
+
+#[test]
+fn pjrt_matches_fallback_exact_shape() {
+    // problem exactly matching a compiled variant (64, 256, 128)
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtScorer::load(&dir).expect("load artifacts");
+    let mut fall = FallbackScorer::new();
+    let (m, w1, w0, logpi) = rand_problem(64, 256, 128, 1);
+    let a = pjrt.loglik_matrix(&m, &w1, &w0, 256, 128);
+    let b = fall.loglik_matrix(&m, &w1, &w0, 256, 128);
+    assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() < 2e-3,
+            "idx {i}: pjrt {} vs fallback {}",
+            a[i],
+            b[i]
+        );
+    }
+    let da = pjrt.predictive_density(&m, &w1, &w0, &logpi, 256, 128);
+    let db = fall.predictive_density(&m, &w1, &w0, &logpi, 256, 128);
+    for i in 0..da.len() {
+        assert!((da[i] - db[i]).abs() < 2e-3, "density idx {i}");
+    }
+}
+
+#[test]
+fn pjrt_matches_fallback_with_padding_and_chunking() {
+    // odd shape: D smaller than compiled, rows not a multiple of the
+    // block, J larger than the largest compiled variant (forces chunking)
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtScorer::load(&dir).expect("load artifacts");
+    let mut fall = FallbackScorer::new();
+    let (n, d, j) = (77, 100, 600);
+    let (m, w1, w0, logpi) = rand_problem(n, d, j, 2);
+    let a = pjrt.loglik_matrix(&m, &w1, &w0, d, j);
+    let b = fall.loglik_matrix(&m, &w1, &w0, d, j);
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() < 2e-3,
+            "idx {i}: pjrt {} vs fallback {}",
+            a[i],
+            b[i]
+        );
+    }
+    let da = pjrt.predictive_density(&m, &w1, &w0, &logpi, d, j);
+    let db = fall.predictive_density(&m, &w1, &w0, &logpi, d, j);
+    for i in 0..da.len() {
+        assert!((da[i] - db[i]).abs() < 2e-3, "density idx {i}");
+    }
+    assert!(pjrt.executions > 0, "artifact was actually executed");
+}
+
+#[test]
+fn pjrt_single_row_and_single_cluster() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtScorer::load(&dir).expect("load artifacts");
+    let mut fall = FallbackScorer::new();
+    let (m, w1, w0, logpi) = rand_problem(1, 16, 1, 3);
+    let a = pjrt.predictive_density(&m, &w1, &w0, &logpi, 16, 1);
+    let b = fall.predictive_density(&m, &w1, &w0, &logpi, 16, 1);
+    assert_eq!(a.len(), 1);
+    assert!((a[0] - b[0]).abs() < 2e-3, "{} vs {}", a[0], b[0]);
+}

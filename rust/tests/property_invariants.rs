@@ -1,0 +1,310 @@
+//! Property-test suites (via the in-repo `testing` harness — proptest is
+//! not in the offline crate universe): randomized invariants over the
+//! representation theorems, sufficient statistics, packing, and the
+//! coordinator's state machinery.
+
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::BinMat;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::rng::{dirichlet, Pcg64};
+use clustercluster::runtime::{FallbackScorer, Scorer};
+use clustercluster::special::logsumexp;
+use clustercluster::supercluster::{
+    log_prior_eq4, log_prior_eq5, shuffle_log_conditional, two_stage_crp_prior, ShuffleKernel,
+};
+use clustercluster::testing::check;
+
+#[test]
+fn prop_eq4_equals_eq5() {
+    // the paper's cancellation identity on random configurations
+    check(
+        "eq4 == eq5",
+        40,
+        1,
+        |rng| {
+            let k = 1 + rng.next_below(5) as usize;
+            let alpha = 0.2 + 5.0 * rng.next_f64();
+            let mu = dirichlet(rng, &vec![1.0; k]);
+            let n = 5 + rng.next_below(80) as usize;
+            let p = two_stage_crp_prior(rng, n, alpha, &mu);
+            (alpha, mu, p)
+        },
+        |(alpha, mu, p)| {
+            let a = log_prior_eq4(p, *alpha, mu);
+            let b = log_prior_eq5(p, *alpha, mu);
+            if (a - b).abs() < 1e-7 {
+                Ok(())
+            } else {
+                Err(format!("eq4 {a} != eq5 {b}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_shuffle_kernels_are_distributions() {
+    check(
+        "shuffle kernels normalize",
+        50,
+        2,
+        |rng| {
+            let k = 1 + rng.next_below(8) as usize;
+            let mu = dirichlet(rng, &vec![0.5; k]);
+            let alpha = 0.1 + 10.0 * rng.next_f64();
+            let jm: Vec<u64> = (0..k).map(|_| rng.next_below(20)).collect();
+            (alpha, mu, jm)
+        },
+        |(alpha, mu, jm)| {
+            for kernel in [ShuffleKernel::Exact, ShuffleKernel::PaperEq7] {
+                let lw = shuffle_log_conditional(kernel, *alpha, mu, jm);
+                let z = logsumexp(&lw);
+                if z.abs() > 1e-9 {
+                    return Err(format!("{kernel:?} normalizer {z}"));
+                }
+                if lw.len() != mu.len() {
+                    return Err("length mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_suffstats_add_remove_inverse() {
+    check(
+        "add/remove inverse",
+        30,
+        3,
+        |rng| {
+            let d = 1 + rng.next_below(100) as usize;
+            let n = 2 + rng.next_below(30) as usize;
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.5 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            let order: Vec<usize> = (0..n).collect();
+            (m, order)
+        },
+        |(m, order)| {
+            let d = m.dims();
+            let mut c = ClusterStats::empty(d);
+            for &r in order {
+                c.add(m, r);
+            }
+            // remove in a scrambled order, then re-add — stats identical
+            let snapshot = (c.n(), c.ones().to_vec());
+            for &r in order.iter().rev() {
+                c.remove(m, r);
+            }
+            if c.n() != 0 || c.ones().iter().any(|&x| x != 0) {
+                return Err("empty-state not reached".into());
+            }
+            for &r in order {
+                c.add(m, r);
+            }
+            if (c.n(), c.ones().to_vec()) != snapshot {
+                return Err("roundtrip changed stats".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cached_score_equals_uncached() {
+    check(
+        "cached == uncached scoring",
+        25,
+        4,
+        |rng| {
+            let d = 1 + rng.next_below(80) as usize;
+            let n = 3 + rng.next_below(20) as usize;
+            let beta = 0.05 + 2.0 * rng.next_f64();
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < rng.next_f64() {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            (m, beta)
+        },
+        |(m, beta)| {
+            let model = BetaBernoulli::symmetric(m.dims(), *beta);
+            let mut c = ClusterStats::empty(m.dims());
+            for r in 0..m.rows() - 1 {
+                c.add(m, r);
+            }
+            let r = m.rows() - 1;
+            let cached = c.score(&model, m, r);
+            let plain = c.score_uncached(&model, m, r);
+            if (cached - plain).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("{cached} vs {plain}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_unpack_block_matches_bits() {
+    check(
+        "unpack_block_f32 contract",
+        25,
+        5,
+        |rng| {
+            let d = 1 + rng.next_below(130) as usize;
+            let n = 1 + rng.next_below(20) as usize;
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.4 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            let start = rng.next_below(n as u64) as usize;
+            let len = 1 + rng.next_below(8) as usize;
+            let d_out = d + rng.next_below(70) as usize;
+            (m, start, len, d_out)
+        },
+        |(m, start, len, d_out)| {
+            let mut buf = vec![7.0f32; len * d_out];
+            m.unpack_block_f32(*start, *len, *d_out, &mut buf);
+            for i in 0..*len {
+                for c in 0..*d_out {
+                    let want = if *start + i < m.rows() && c < m.dims() && m.get(*start + i, c) {
+                        1.0
+                    } else {
+                        0.0
+                    };
+                    if buf[i * d_out + c] != want {
+                        return Err(format!("({i},{c}) = {}", buf[i * d_out + c]));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_rounds_preserve_data_integrity() {
+    check(
+        "coordinator integrity across random configs",
+        8,
+        6,
+        |rng| {
+            let k = 1 + rng.next_below(6) as usize;
+            let n = 50 + rng.next_below(200) as usize;
+            let seed = rng.next_u64();
+            (k, n, seed)
+        },
+        |&(k, n, seed)| {
+            let ds = SyntheticConfig {
+                n,
+                d: 16,
+                clusters: 4,
+                beta: 0.2,
+                seed,
+            }
+            .generate_with_test_fraction(0.0);
+            let cfg = CoordinatorConfig {
+                workers: k,
+                comm: CommModel::free(),
+                update_beta: true,
+                ..Default::default()
+            };
+            let mut rng = Pcg64::seed_from(seed ^ 0xabc);
+            let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+            for _ in 0..3 {
+                coord.step(&mut rng);
+                coord.check_invariants().map_err(|e| e)?;
+            }
+            // assignments are a complete labeling
+            let z = coord.assignments();
+            if z.len() != ds.train.rows() {
+                return Err("assignment length mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_predictive_density_agrees_native_vs_scorer() {
+    // Coordinator's scorer-based predictive equals its native loop
+    check(
+        "native == scorer predictive",
+        6,
+        7,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let ds = SyntheticConfig {
+                n: 300,
+                d: 24,
+                clusters: 4,
+                beta: 0.2,
+                seed,
+            }
+            .generate();
+            let cfg = CoordinatorConfig {
+                workers: 3,
+                comm: CommModel::free(),
+                ..Default::default()
+            };
+            let mut rng = Pcg64::seed_from(seed);
+            let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+            for _ in 0..3 {
+                coord.step(&mut rng);
+            }
+            let mut scorer = FallbackScorer::new();
+            let via_scorer = coord.predictive_loglik(&ds.test, &mut scorer);
+            let native = coord.predictive_loglik_native(&ds.test);
+            if (via_scorer - native).abs() < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("scorer {via_scorer} vs native {native}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_two_stage_prior_total_mass() {
+    // cluster sizes always sum to n; supercluster ids in range
+    check(
+        "two-stage CRP bookkeeping",
+        40,
+        8,
+        |rng| {
+            let k = 1 + rng.next_below(6) as usize;
+            let n = 1 + rng.next_below(120) as usize;
+            let alpha = 0.1 + 8.0 * rng.next_f64();
+            let mu = dirichlet(rng, &vec![1.0; k]);
+            let p = two_stage_crp_prior(rng, n, alpha, &mu);
+            (n, k, p)
+        },
+        |(n, k, p)| {
+            if p.cluster_sizes().iter().sum::<u64>() != *n as u64 {
+                return Err("sizes don't sum to n".into());
+            }
+            if p.s.iter().any(|&s| s as usize >= *k) {
+                return Err("supercluster id out of range".into());
+            }
+            if p.z.iter().any(|&z| z as usize >= p.num_clusters()) {
+                return Err("cluster id out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
