@@ -9,10 +9,10 @@
 //! the file small and makes corruption structurally impossible to carry
 //! into the stats.
 
-use super::supercluster_state::SuperclusterState;
 use super::{Coordinator, CoordinatorConfig};
 use crate::data::BinMat;
 use crate::rng::Pcg64;
+use crate::sampler::Shard;
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -168,23 +168,19 @@ impl<'a> Coordinator<'a> {
         }
         let mut coord = Coordinator::new(data, cfg, rng);
         coord.alpha = ckpt.alpha;
-        let symmetric = ckpt.beta.iter().all(|&b| b == ckpt.beta[0]);
         coord.model.beta = ckpt.beta.clone();
-        if symmetric {
-            coord.model.build_lut(data.rows() + 1);
-        } else {
-            coord.model.drop_lut();
-        }
+        // build_lut handles the asymmetric-β case itself (clears the LUT)
+        coord.model.build_lut(data.rows() + 1);
         coord.rounds = ckpt.rounds;
         coord.modeled_time_s = ckpt.modeled_time_s;
         coord.measured_time_s = ckpt.measured_time_s;
-        let states: Result<Vec<SuperclusterState>, String> = ckpt
+        let states: Result<Vec<Shard>, String> = ckpt
             .shards
             .iter()
             .enumerate()
             .map(|(kk, (rows, assign))| {
                 let rows: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
-                let st = SuperclusterState::from_parts(
+                let st = Shard::from_parts(
                     data,
                     rows,
                     assign.clone(),

@@ -3,10 +3,12 @@
 //!
 //! Every global round is one map-reduce cycle:
 //!
-//! * **map** — each supercluster (= compute node) runs `R` local collapsed
-//!   Gibbs sweeps over its own data with concentration `αμ_k`, using
-//!   standard DPM operators *without modification* (Neal Alg. 3 here);
-//!   data may instantiate new clusters locally but cannot cross nodes.
+//! * **map** — each supercluster (= compute node, one [`Shard`]) runs
+//!   `R` local sweeps of the configured [`TransitionKernel`] over its
+//!   own data with concentration `αμ_k`, using standard DPM operators
+//!   *without modification* (Neal Alg. 3 or Walker slice — see
+//!   [`crate::sampler`]); data may instantiate new clusters locally but
+//!   cannot cross nodes.
 //! * **reduce** — centralized, lightweight: sample `α` from Eq. 6 given
 //!   `Σ_k J_k` (each worker ships one integer), and the base-measure
 //!   hyperparameters `β_d` by griddy Gibbs from pooled sufficient
@@ -18,8 +20,6 @@
 //! "learns how to parallelize itself".
 
 pub mod checkpoint;
-pub mod supercluster_state;
-pub mod walker;
 
 use crate::data::BinMat;
 use crate::mapreduce::{finish_round, CommModel, MapReduce, RoundStats};
@@ -28,14 +28,17 @@ use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::BetaBernoulli;
 use crate::rng::Pcg64;
 use crate::runtime::Scorer;
+use crate::sampler::Shard;
 use crate::special::logsumexp;
 use crate::supercluster::{sample_shuffle, ShuffleKernel};
 use crate::util::timer::PhaseTimer;
 use std::time::Instant;
 
 pub use checkpoint::Checkpoint;
-pub use supercluster_state::SuperclusterState;
-pub use walker::LocalKernel;
+// Back-compat names: the per-worker state is a plain sampler Shard, and
+// the kernel selector is the sampler-level KernelKind.
+pub use crate::sampler::KernelKind as LocalKernel;
+pub use crate::sampler::Shard as SuperclusterState;
 
 /// How the supercluster base weights μ are set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -49,7 +52,7 @@ pub enum MuMode {
 pub struct CoordinatorConfig {
     /// number of superclusters K (= simulated compute nodes)
     pub workers: usize,
-    /// local Gibbs sweeps per global round (Fig. 2a's ratio)
+    /// local kernel sweeps per global round (Fig. 2a's ratio)
     pub local_sweeps: usize,
     pub init_alpha: f64,
     pub alpha_prior: GammaPrior,
@@ -92,14 +95,14 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// The distributed sampler state: K superclusters + global hypers.
+/// The distributed sampler state: K supercluster shards + global hypers.
 pub struct Coordinator<'a> {
     data: &'a BinMat,
     pub model: BetaBernoulli,
     pub alpha: f64,
     mu: Vec<f64>,
     cfg: CoordinatorConfig,
-    states: Vec<SuperclusterState>,
+    states: Vec<Shard>,
     beta_updater: BetaUpdater,
     mr: MapReduce,
     pub timer: PhaseTimer,
@@ -113,7 +116,10 @@ pub struct Coordinator<'a> {
 impl<'a> Coordinator<'a> {
     /// Initialize per the paper (§5): data assigned to superclusters
     /// uniformly at random, clustering initialized by a draw from the
-    /// local Chinese restaurant prior.
+    /// local Chinese restaurant prior. With K=1 the (trivial) random
+    /// data placement is skipped, so the master stream is consumed
+    /// exactly as by [`crate::serial::SerialGibbs::init_from_prior`] —
+    /// the coordinate that makes K=1 equivalence chain-exact.
     pub fn new(data: &'a BinMat, cfg: CoordinatorConfig, rng: &mut Pcg64) -> Self {
         assert!(cfg.workers >= 1 && cfg.local_sweeps >= 1);
         let k = cfg.workers;
@@ -121,34 +127,34 @@ impl<'a> Coordinator<'a> {
             MuMode::Uniform => vec![1.0 / k as f64; k],
         };
         let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
-        // symmetric-beta fast-rebuild LUT for the Gibbs hot loop (perf)
+        // symmetric-beta fast-rebuild LUT for the kernel hot loop (perf)
         model.build_lut(data.rows() + 1);
 
         // uniform random data → supercluster assignment
         let mut rows_per: Vec<Vec<usize>> = vec![Vec::new(); k];
-        for r in 0..data.rows() {
-            rows_per[rng.next_below(k as u64) as usize].push(r);
+        if k == 1 {
+            rows_per[0] = (0..data.rows()).collect();
+        } else {
+            for r in 0..data.rows() {
+                rows_per[rng.next_below(k as u64) as usize].push(r);
+            }
         }
-        let states: Vec<SuperclusterState> = rows_per
+        let states: Vec<Shard> = rows_per
             .into_iter()
             .enumerate()
             .map(|(kk, rows)| {
                 let worker_rng = rng.split(kk as u64);
-                SuperclusterState::init_from_prior(
-                    data,
-                    rows,
-                    cfg.init_alpha * mu[kk],
-                    &model,
-                    worker_rng,
-                )
+                Shard::init_from_prior(data, rows, cfg.init_alpha * mu[kk], worker_rng)
             })
             .collect();
 
+        // never keep more pool threads than there are map tasks per round
         let parallelism = if cfg.parallelism == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             cfg.parallelism
-        };
+        }
+        .min(cfg.workers);
 
         Coordinator {
             data,
@@ -175,17 +181,15 @@ impl<'a> Coordinator<'a> {
         let alpha = self.alpha;
         let mu = &self.mu;
         let sweeps = self.cfg.local_sweeps;
-        let kernel = self.cfg.local_kernel;
+        let kernel = self.cfg.local_kernel.kernel();
 
-        // ---- map: local sweeps, one task per supercluster ----
+        // ---- map: local kernel sweeps, one task per supercluster ----
         let states = std::mem::take(&mut self.states);
         let map_t0 = Instant::now();
-        let (mut states, map_durs) = self.mr.map(states, |kk, mut st| {
+        let (mut states, map_durs) = self.mr.map(states, |kk, mut st: Shard| {
+            st.set_theta(alpha * mu[kk]);
             for _ in 0..sweeps {
-                match kernel {
-                    LocalKernel::CollapsedGibbs => st.gibbs_sweep(data, model, alpha * mu[kk]),
-                    LocalKernel::WalkerSlice => st.walker_sweep(data, model, alpha * mu[kk]),
-                }
+                kernel.sweep(&mut st, data, model);
             }
             st
         });
@@ -208,19 +212,22 @@ impl<'a> Coordinator<'a> {
             );
         }
         if self.cfg.update_beta {
-            bytes += total_j * (8 + 4 * model.d as u64);
+            bytes += total_j * (8 + 4 * self.model.d as u64);
             let mut stats: Vec<(u64, u32)> = Vec::new();
-            for d in 0..self.model.d {
+            let mut new_beta = self.model.beta.clone();
+            for (d, b) in new_beta.iter_mut().enumerate() {
                 stats.clear();
                 for st in &states {
                     st.collect_dim_stats(d, &mut stats);
                 }
-                self.model.beta[d] = self.beta_updater.sample(rng, &stats);
+                *b = self.beta_updater.sample(rng, &stats);
             }
-            // beta is now per-dimension: the symmetric LUT no longer applies
-            self.model.drop_lut();
-            for st in &mut states {
-                st.invalidate_caches();
+            // only touch the LUT / score caches when some β_d moved;
+            // a still-symmetric refresh retargets the LUT in place
+            if self.model.update_betas(&new_beta, self.data.rows() + 1) {
+                for st in &mut states {
+                    st.invalidate_caches();
+                }
             }
             bytes += 8 * self.model.d as u64; // broadcast β
         }
@@ -251,12 +258,12 @@ impl<'a> Coordinator<'a> {
 
     /// Gibbs-resample every cluster's supercluster assignment and move
     /// the clusters. Returns the bytes the moves would transfer.
-    fn shuffle(&mut self, states: &mut [SuperclusterState], rng: &mut Pcg64) -> u64 {
+    fn shuffle(&mut self, states: &mut [Shard], rng: &mut Pcg64) -> u64 {
         let k = states.len();
         // extract all clusters: (stats, member rows, current supercluster)
         let mut all: Vec<(crate::model::ClusterStats, Vec<usize>, usize)> = Vec::new();
         for (kk, st) in states.iter_mut().enumerate() {
-            for (stats, rows) in st.drain_clusters(self.data) {
+            for (stats, rows) in st.drain_clusters() {
                 all.push((stats, rows, kk));
             }
         }
@@ -296,12 +303,12 @@ impl<'a> Coordinator<'a> {
         &self.mu
     }
 
-    pub fn states(&self) -> &[SuperclusterState] {
+    pub fn states(&self) -> &[Shard] {
         &self.states
     }
 
     /// Replace the shard states (checkpoint resume).
-    pub(crate) fn replace_states(&mut self, states: Vec<SuperclusterState>) {
+    pub(crate) fn replace_states(&mut self, states: Vec<Shard>) {
         self.states = states;
     }
 

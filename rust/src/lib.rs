@@ -17,11 +17,14 @@
 //!
 //! ## Layer map
 //!
-//! * **Layer 3 (this crate)** — [`coordinator`]: the map-reduce-shaped
-//!   parallel sampler; [`serial`]: the Neal-Algorithm-3 baseline;
-//!   [`mapreduce`]: the in-process map-reduce runtime with a communication
-//!   cost model; plus every substrate ([`rng`], [`special`], [`data`],
-//!   [`linalg`], [`metrics`], [`bench`], [`testing`], [`cli`], [`util`]).
+//! * **Layer 3 (this crate)** — [`sampler`]: the unified sampler core
+//!   (`ClusterSet` + `Shard` + the pluggable `TransitionKernel`s);
+//!   [`coordinator`]: the map-reduce-shaped parallel sampler;
+//!   [`serial`]: the single-shard baseline; [`mapreduce`]: the
+//!   in-process map-reduce runtime (persistent worker pool) with a
+//!   communication cost model; plus every substrate ([`rng`],
+//!   [`special`], [`data`], [`linalg`], [`metrics`], [`bench`],
+//!   [`testing`], [`cli`], [`util`]).
 //! * **Layer 2/1 (build-time Python)** — `python/compile/`: the JAX model
 //!   graph calling a Pallas kernel, AOT-lowered to HLO text artifacts.
 //! * **Runtime bridge** — [`runtime`]: loads `artifacts/*.hlo.txt` through
@@ -52,6 +55,7 @@ pub mod metrics;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod sampler;
 pub mod serial;
 pub mod special;
 pub mod supercluster;
@@ -65,5 +69,6 @@ pub mod prelude {
     pub use crate::model::{BetaBernoulli, ClusterStats};
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{FallbackScorer, Scorer};
+    pub use crate::sampler::{ClusterSet, KernelKind, Shard, TransitionKernel};
     pub use crate::serial::SerialGibbs;
 }

@@ -27,14 +27,33 @@ USAGE: repro <command> [--flag value]...
 
 COMMANDS
   gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
-  serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--update-beta] [--trace out.csv]
+  serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--local-kernel gibbs|walker]
+               [--update-beta] [--trace out.csv]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
-               [--local-sweeps 1] [--no-shuffle] [--eq7] [--walker] [--update-beta]
-               [--latency 2.0] [--bandwidth 1e8] [--trace out.csv] [--threads 1]
-               [--checkpoint state.ccckpt]
+               [--local-sweeps 1] [--no-shuffle] [--eq7] [--local-kernel gibbs|walker]
+               [--update-beta] [--latency 2.0] [--bandwidth 1e8] [--trace out.csv]
+               [--threads 1] [--checkpoint state.ccckpt]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
+
+Both samplers run the same pluggable per-shard transition kernel
+(--local-kernel): \"gibbs\" = Neal (2000) Alg. 3 collapsed Gibbs,
+\"walker\" = Walker (2007) slice sampling. (--walker is accepted as a
+legacy spelling of --local-kernel walker.)
 ";
+
+/// Shared `--local-kernel` / legacy `--walker` parsing for both entry
+/// points.
+fn kernel_arg(args: &Args) -> Result<LocalKernel, String> {
+    match args.get("local-kernel") {
+        Some(_) if args.has("walker") => {
+            Err("pass either --local-kernel or the legacy --walker, not both".into())
+        }
+        Some(s) => LocalKernel::parse(s),
+        None if args.has("walker") => Ok(LocalKernel::WalkerSlice),
+        None => Ok(LocalKernel::CollapsedGibbs),
+    }
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -98,11 +117,18 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xc0ffee);
     let scfg = SerialConfig {
         update_beta: args.has("update-beta"),
+        kernel: kernel_arg(args)?,
         ..Default::default()
     };
     let mut g = SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng);
     let h = ds.true_entropy_estimate();
-    println!("serial baseline: N={} D={} true J={} (H≈{h:.3})", cfg.n, cfg.d, cfg.clusters);
+    println!(
+        "serial baseline: N={} D={} true J={} kernel={} (H≈{h:.3})",
+        cfg.n,
+        cfg.d,
+        cfg.clusters,
+        scfg.kernel.name()
+    );
     let mut trace = McmcTrace::new("serial");
     let t0 = std::time::Instant::now();
     for it in 0..sweeps {
@@ -145,11 +171,7 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
         } else {
             ShuffleKernel::Exact
         },
-        local_kernel: if args.has("walker") {
-            LocalKernel::WalkerSlice
-        } else {
-            LocalKernel::CollapsedGibbs
-        },
+        local_kernel: kernel_arg(args)?,
         comm: CommModel {
             round_latency_s: args.get_f64("latency", 2.0)?,
             per_worker_latency_s: args.get_f64("worker-latency", 0.05)?,
@@ -170,12 +192,13 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng);
     let mut scorer = auto_scorer();
     println!(
-        "parallel sampler: N={} D={} true J={} | K={} workers, {} local sweeps/round, scorer={} (H≈{h:.3})",
+        "parallel sampler: N={} D={} true J={} | K={} workers, {} local sweeps/round, kernel={}, scorer={} (H≈{h:.3})",
         cfg.n,
         cfg.d,
         cfg.clusters,
         ccfg.workers,
         ccfg.local_sweeps,
+        ccfg.local_kernel.name(),
         scorer.name()
     );
     let mut trace = McmcTrace::new(&format!("run_k{}", ccfg.workers));

@@ -1,11 +1,17 @@
 //! In-process map-reduce runtime — the substitute for the paper's Hadoop
-//! deployment (§5, Fig. 3/4). Mappers run on worker threads; per-task
-//! compute time is measured individually so the **modeled wall-clock**
-//! (what a K-machine cluster would see: `max_k(map_k) + reduce + comm`)
-//! is well-defined even on a single-core container. The communication
-//! cost model is parameterized on per-round latency (Hadoop job overhead)
-//! and bandwidth, and drives the Fig. 8 saturation behaviour.
+//! deployment (§5, Fig. 3/4). Mappers run on a **persistent worker
+//! pool** (threads are spawned once at construction and reused across
+//! rounds, so a 1000-round chain pays thread startup once, not 1000
+//! times); per-task compute time is measured individually so the
+//! **modeled wall-clock** (what a K-machine cluster would see:
+//! `max_k(map_k) + reduce + comm`) is well-defined even on a single-core
+//! container. The communication cost model is parameterized on per-round
+//! latency (Hadoop job overhead) and bandwidth, and drives the Fig. 8
+//! saturation behaviour.
 
+use std::any::Any;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Communication/overhead model for one map-reduce round.
@@ -77,17 +83,86 @@ impl RoundStats {
     }
 }
 
-/// The map-reduce executor. `parallelism` caps the number of OS threads
-/// (tasks beyond it queue, exactly like mappers on a small cluster).
-#[derive(Debug, Clone)]
+/// A type-erased unit of work shipped to the pool. Jobs are *logically*
+/// non-`'static` (they borrow the caller's stack); [`MapReduce::map`]
+/// guarantees completion before returning, which is what makes the
+/// lifetime erasure sound — see the safety comment there.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// The persistent worker threads. Shared one `Receiver` behind a mutex
+/// (the lock is held while idle-waiting in `recv`, which serializes job
+/// *pickup*, not execution — pickup is nanoseconds against millisecond
+/// sweep tasks). Dropping the pool closes the channel and joins.
+struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    fn new(threads: usize) -> WorkerPool {
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok(job) => job(),
+                        Err(_) => break, // channel closed: pool dropped
+                    }
+                })
+            })
+            .collect();
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    fn submit(&self, job: Job) {
+        self.tx
+            .as_ref()
+            .expect("pool sender alive until drop")
+            .send(job)
+            .expect("worker pool alive");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the channel so workers exit their loop
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The map-reduce executor. `parallelism` caps the number of worker
+/// threads (tasks beyond it queue, exactly like mappers on a small
+/// cluster). Workers are spawned once here and reused by every
+/// subsequent [`Self::map`] round.
 pub struct MapReduce {
-    pub parallelism: usize,
+    parallelism: usize,
+    pool: Option<WorkerPool>,
+}
+
+impl std::fmt::Debug for MapReduce {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MapReduce")
+            .field("parallelism", &self.parallelism)
+            .field("pooled", &self.pool.is_some())
+            .finish()
+    }
 }
 
 impl MapReduce {
     pub fn new(parallelism: usize) -> Self {
         assert!(parallelism >= 1);
-        MapReduce { parallelism }
+        // parallelism == 1 runs inline on the caller thread: no pool,
+        // no thread overhead, cleanest per-task timing on one core
+        let pool = (parallelism > 1).then(|| WorkerPool::new(parallelism));
+        MapReduce { parallelism, pool }
     }
 
     /// Use all available cores.
@@ -95,14 +170,17 @@ impl MapReduce {
         let p = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        MapReduce { parallelism: p }
+        MapReduce::new(p)
+    }
+
+    pub fn parallelism(&self) -> usize {
+        self.parallelism
     }
 
     /// Run `f` over `tasks`, returning results (input order) and each
-    /// task's measured compute duration. Tasks are distributed over at
-    /// most `parallelism` threads; with `parallelism == 1` execution is
-    /// in-place (no thread overhead, cleanest per-task timing on a
-    /// single-core host).
+    /// task's measured compute duration (queue wait excluded). Tasks are
+    /// distributed over the persistent pool; with `parallelism == 1`
+    /// (or a single task) execution is in-place.
     pub fn map<T, R, F>(&self, tasks: Vec<T>, f: F) -> (Vec<R>, Vec<Duration>)
     where
         T: Send,
@@ -113,54 +191,82 @@ impl MapReduce {
         if n == 0 {
             return (Vec::new(), Vec::new());
         }
-        if self.parallelism == 1 || n == 1 {
-            let mut out = Vec::with_capacity(n);
-            let mut durs = Vec::with_capacity(n);
-            for (i, t) in tasks.into_iter().enumerate() {
-                let t0 = Instant::now();
-                out.push(f(i, t));
-                durs.push(t0.elapsed());
+        let pool = match &self.pool {
+            Some(pool) if n > 1 => pool,
+            _ => {
+                let mut out = Vec::with_capacity(n);
+                let mut durs = Vec::with_capacity(n);
+                for (i, t) in tasks.into_iter().enumerate() {
+                    let t0 = Instant::now();
+                    out.push(f(i, t));
+                    durs.push(t0.elapsed());
+                }
+                return (out, durs);
             }
-            return (out, durs);
-        }
+        };
 
-        // work-stealing by atomic counter; results stream back over a
-        // channel tagged with their task index
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let inputs: Vec<std::sync::Mutex<Option<T>>> = tasks
-            .into_iter()
-            .map(|t| std::sync::Mutex::new(Some(t)))
-            .collect();
-        let (tx, rx) = std::sync::mpsc::channel::<(usize, R, Duration)>();
-
-        std::thread::scope(|scope| {
-            for _ in 0..self.parallelism.min(n) {
-                let tx = tx.clone();
-                let next = &next;
-                let inputs = &inputs;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                    if i >= n {
-                        break;
-                    }
-                    let t = inputs[i].lock().unwrap().take().unwrap();
+        // Hand each task to the pool as a type-erased job. The jobs
+        // borrow this stack frame (`inputs`, `slots`, `f`), so their
+        // lifetime is transmuted up to 'static.
+        //
+        // SAFETY: every borrow the jobs capture outlives the jobs
+        // themselves because this function blocks on the completion
+        // latch below until ALL n jobs have run (panicking jobs are
+        // caught and still count), and the pool can only execute a job
+        // once. Nothing below the latch-wait can observe a live job.
+        let inputs: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let slots: Vec<Mutex<Option<(R, Duration)>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
+        // first caught panic payload, re-raised on the caller thread so
+        // the original message survives (as std::thread::scope would)
+        let panic_payload: Arc<Mutex<Option<Box<dyn Any + Send>>>> = Arc::new(Mutex::new(None));
+        for i in 0..n {
+            let inputs = &inputs;
+            let slots = &slots;
+            let f = &f;
+            let latch = Arc::clone(&latch);
+            let panic_payload = Arc::clone(&panic_payload);
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let t = inputs[i].lock().unwrap().take().expect("task taken once");
                     let t0 = Instant::now();
                     let r = f(i, t);
-                    tx.send((i, r, t0.elapsed())).expect("collector alive");
-                });
-            }
-        });
-        drop(tx);
-
-        let mut slots: Vec<Option<(R, Duration)>> = (0..n).map(|_| None).collect();
-        for (i, r, d) in rx {
-            slots[i] = Some((r, d));
+                    (r, t0.elapsed())
+                }));
+                match ran {
+                    Ok(rd) => *slots[i].lock().unwrap() = Some(rd),
+                    Err(p) => {
+                        let mut slot = panic_payload.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(p);
+                        }
+                    }
+                }
+                let (count, cv) = &*latch;
+                *count.lock().unwrap() += 1;
+                cv.notify_one();
+            });
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+            };
+            pool.submit(job);
         }
+        // completion latch: block until every job has reported in
+        let (count, cv) = &*latch;
+        let mut done = count.lock().unwrap();
+        while *done < n {
+            done = cv.wait(done).unwrap();
+        }
+        drop(done);
+        if let Some(p) = panic_payload.lock().unwrap().take() {
+            std::panic::resume_unwind(p);
+        }
+
         let mut out = Vec::with_capacity(n);
         let mut durs = Vec::with_capacity(n);
         for s in slots {
-            let (r, d) = s.expect("task not executed");
+            let (r, d) = s.into_inner().unwrap().expect("task not executed");
             out.push(r);
             durs.push(d);
         }
@@ -222,6 +328,44 @@ mod tests {
         let (a, _) = MapReduce::new(1).map(tasks.clone(), f);
         let (b, _) = MapReduce::new(3).map(tasks, f);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pool_is_reused_across_rounds() {
+        // many rounds through ONE executor: results stay correct and no
+        // per-round spawn is needed (the pool threads persist)
+        let mr = MapReduce::new(3);
+        for round in 0..50u64 {
+            let tasks: Vec<u64> = (0..7).collect();
+            let (out, durs) = mr.map(tasks, |_, x| x + round);
+            assert_eq!(out, (0..7).map(|x| x + round).collect::<Vec<_>>());
+            assert_eq!(durs.len(), 7);
+        }
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_to_tasks() {
+        // tasks may capture caller-stack borrows (the coordinator hands
+        // shards &data and &model this way)
+        let shared: Vec<u64> = (0..100).collect();
+        let mr = MapReduce::new(2);
+        let tasks: Vec<usize> = (0..10).collect();
+        let (out, _) = mr.map(tasks, |_, i| shared[i * 10]);
+        assert_eq!(out, (0..10).map(|i| (i as u64) * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn task_panic_propagates_with_payload() {
+        // the original panic message must survive the pool boundary
+        let mr = MapReduce::new(2);
+        let tasks: Vec<u64> = (0..4).collect();
+        let _ = mr.map(tasks, |_, x| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
     }
 
     #[test]

@@ -37,6 +37,45 @@ impl LogLut {
         }
     }
 
+    /// Largest count the table covers.
+    pub fn max_count(&self) -> usize {
+        self.ln_xb.len().saturating_sub(1)
+    }
+
+    /// Grow the table to cover counts up to `n_max`, at least doubling
+    /// the capacity so repeated one-step growth is amortized O(1)
+    /// (instead of the old full-table rebuild per overflow).
+    pub fn ensure(&mut self, n_max: usize) {
+        let cur = self.ln_xb.len();
+        if n_max < cur {
+            return;
+        }
+        let target = (n_max + 1).max(cur.saturating_mul(2));
+        self.ln_xb.reserve(target - cur);
+        self.ln_n2b.reserve(target - cur);
+        for x in cur..target {
+            self.ln_xb.push((x as f64 + self.beta).ln());
+            self.ln_n2b.push((x as f64 + 2.0 * self.beta).ln());
+        }
+    }
+
+    /// Re-point the table at a new symmetric β, recomputing entries in
+    /// place (reusing the allocation). A refresh to the *same* β — the
+    /// common case when griddy Gibbs re-draws the same grid point every
+    /// sweep — is free, so hyper refreshes no longer thrash the cache.
+    pub fn retarget(&mut self, beta: f64) {
+        if beta.to_bits() == self.beta.to_bits() {
+            return;
+        }
+        self.beta = beta;
+        for (x, slot) in self.ln_xb.iter_mut().enumerate() {
+            *slot = (x as f64 + beta).ln();
+        }
+        for (x, slot) in self.ln_n2b.iter_mut().enumerate() {
+            *slot = (x as f64 + 2.0 * beta).ln();
+        }
+    }
+
     #[inline]
     fn covers(&self, beta: f64, n: u64) -> bool {
         beta == self.beta && (n as usize) < self.ln_xb.len()
@@ -64,19 +103,47 @@ impl BetaBernoulli {
         }
     }
 
-    /// Install the symmetric-β log LUT covering counts up to `n_max`
-    /// (call once at sampler construction; drop with [`Self::drop_lut`]
-    /// when β_d become per-dimension after a griddy update).
+    /// Install (or refresh) the symmetric-β log LUT covering counts up
+    /// to `n_max`. An existing table is retargeted/grown in place —
+    /// allocation is reused, and a same-β refresh is free.
     pub fn build_lut(&mut self, n_max: usize) {
         let b0 = self.beta[0];
-        if self.beta.iter().all(|&b| b == b0) {
-            self.lut = Some(LogLut::new(b0, n_max));
+        if !self.beta.iter().all(|&b| b == b0) {
+            self.lut = None;
+            return;
+        }
+        match &mut self.lut {
+            Some(lut) => {
+                lut.retarget(b0);
+                lut.ensure(n_max);
+            }
+            None => self.lut = Some(LogLut::new(b0, n_max)),
         }
     }
 
     /// Invalidate the LUT (β no longer uniform).
     pub fn drop_lut(&mut self) {
         self.lut = None;
+    }
+
+    /// Install freshly sampled per-dimension β values; returns whether
+    /// anything actually changed (callers skip cache invalidation when
+    /// the griddy update re-drew the incumbent grid points). If the new
+    /// values are still uniform the LUT is retargeted rather than
+    /// dropped.
+    pub fn update_betas(&mut self, new_beta: &[f64], n_max: usize) -> bool {
+        assert_eq!(new_beta.len(), self.d);
+        let changed = self
+            .beta
+            .iter()
+            .zip(new_beta)
+            .any(|(a, b)| a.to_bits() != b.to_bits());
+        if !changed {
+            return false;
+        }
+        self.beta.copy_from_slice(new_beta);
+        self.build_lut(n_max);
+        true
     }
 
     /// Log predictive of a fresh (empty) cluster for ANY datum: with a
@@ -399,6 +466,61 @@ mod tests {
         }
         assert_eq!(a.n(), all.n());
         assert_eq!(a.ones(), all.ones());
+    }
+
+    #[test]
+    fn lut_grows_geometrically_and_retargets() {
+        let mut lut = LogLut::new(0.5, 10);
+        assert_eq!(lut.max_count(), 10);
+        lut.ensure(11); // one past the end: must at least double
+        assert!(lut.max_count() >= 21, "got {}", lut.max_count());
+        let before = lut.max_count();
+        lut.ensure(5); // already covered: no-op
+        assert_eq!(lut.max_count(), before);
+        assert!(lut.covers(0.5, before as u64));
+        assert!(!lut.covers(0.5, before as u64 + 1));
+        // retarget to a new β recomputes entries in place
+        lut.retarget(2.0);
+        assert!(lut.covers(2.0, 3));
+        assert!(!lut.covers(0.5, 3));
+        let fresh = LogLut::new(2.0, lut.max_count());
+        assert_eq!(lut.ln_xb, fresh.ln_xb);
+        assert_eq!(lut.ln_n2b, fresh.ln_n2b);
+    }
+
+    #[test]
+    fn lut_backed_score_correct_after_growth() {
+        let data = rand_data(30, 9, 8);
+        let mut model = BetaBernoulli::symmetric(9, 0.5);
+        model.build_lut(5); // deliberately too small for 30 rows
+        let mut c = ClusterStats::empty(9);
+        for r in 0..30 {
+            c.add(&data, r);
+        }
+        // count 30 exceeds the table: must fall back to the slow path
+        let slow = c.score(&model, &data, 0);
+        assert!((slow - c.score_uncached(&model, &data, 0)).abs() < 1e-10);
+        // grow, invalidate, rescore through the LUT: same number
+        model.build_lut(31);
+        c.invalidate_cache();
+        let fast = c.score(&model, &data, 0);
+        assert!((fast - slow).abs() < 1e-10, "{fast} vs {slow}");
+    }
+
+    #[test]
+    fn update_betas_reports_change_and_keeps_symmetric_lut() {
+        let mut model = BetaBernoulli::symmetric(4, 0.5);
+        model.build_lut(16);
+        // same values: no change, LUT untouched
+        assert!(!model.update_betas(&[0.5; 4], 16));
+        assert!(model.lut.is_some());
+        // new symmetric values: change reported, LUT retargeted not dropped
+        assert!(model.update_betas(&[0.25; 4], 16));
+        let lut = model.lut.as_ref().expect("symmetric refresh keeps LUT");
+        assert!(lut.covers(0.25, 10));
+        // asymmetric values: LUT dropped
+        assert!(model.update_betas(&[0.25, 0.5, 0.25, 0.25], 16));
+        assert!(model.lut.is_none());
     }
 
     #[test]

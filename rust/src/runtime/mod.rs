@@ -1,5 +1,6 @@
 //! Runtime bridge: executes the AOT-compiled JAX/Pallas scoring graphs
-//! from the Rust hot path via the PJRT C API (`xla` crate).
+//! from the Rust hot path via the PJRT C API (`xla` crate — currently
+//! stubbed, see [`pjrt`]; every caller is served by [`FallbackScorer`]).
 //!
 //! `make artifacts` lowers the Layer-2 entry points to HLO **text**
 //! (`artifacts/*.hlo.txt` + `manifest.txt`); [`PjrtScorer`] loads and

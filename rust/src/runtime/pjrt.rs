@@ -1,31 +1,67 @@
-//! PJRT-backed scorer: loads `artifacts/manifest.txt`, compiles every HLO
-//! text module on the CPU PJRT client once, and serves scoring by padding
-//! and chunking workloads onto the fixed compiled shapes.
+//! PJRT-backed scorer — **offline stub**.
 //!
-//! Wiring per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! The real implementation loads `artifacts/manifest.txt`, compiles every
+//! HLO text module on the CPU PJRT client once (`PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`. HLO *text* is the interchange format
-//! (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects in proto form; the text parser reassigns ids).
+//! `client.compile` → `execute`), and serves scoring by padding and
+//! chunking workloads onto the fixed compiled shapes.
+//!
+//! The `xla` crate that provides the PJRT C-API bindings is not in this
+//! build's offline dependency universe, so this module keeps the full
+//! *frontend* — manifest parsing, artifact validation, and the error
+//! contract the failure-injection suite pins down — and fails loading
+//! with a clear "backend unavailable" error instead of compiling HLO.
+//! [`super::FallbackScorer`] (the pure-Rust implementation of the
+//! identical scoring contract, cross-checked against the Python L1/L2
+//! oracle) serves every caller through [`super::auto_scorer`] in the
+//! meantime. Restoring the backend is purely additive: implement
+//! [`PjrtScorer::load`]'s final step against the manifest entries this
+//! stub already validates.
 
 use super::Scorer;
 use crate::data::BinMat;
-use crate::special::logsumexp;
-use anyhow::{anyhow, bail, Context, Result};
+use std::fmt;
 use std::path::Path;
 
-/// One compiled artifact variant.
+/// Artifact-loading error (Display is what `auto_scorer` logs and the
+/// failure-injection tests match on).
+#[derive(Debug)]
+pub struct PjrtError(String);
+
+impl fmt::Display for PjrtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for PjrtError {}
+
+fn err(msg: impl Into<String>) -> PjrtError {
+    PjrtError(msg.into())
+}
+
+/// One validated artifact variant from the manifest: `name entry b d j
+/// file`, where (b, d, j) is the compiled (rows, dims, clusters) shape.
+#[allow(dead_code)] // consumed by the xla-backed build; stub only validates
 struct Variant {
     name: String,
     entry: String,
     b: usize,
     d: usize,
     j: usize,
-    exe: xla::PjRtLoadedExecutable,
+    hlo_text: String,
 }
 
-impl std::fmt::Debug for PjrtScorer {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+/// Scorer backed by AOT-compiled PJRT executables (stubbed: loading
+/// always fails after validation — see the module docs).
+pub struct PjrtScorer {
+    variants: Vec<Variant>,
+    /// calls served (for bench introspection)
+    pub executions: u64,
+}
+
+impl fmt::Debug for PjrtScorer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("PjrtScorer")
             .field("variants", &self.variant_names())
             .field("executions", &self.executions)
@@ -33,20 +69,15 @@ impl std::fmt::Debug for PjrtScorer {
     }
 }
 
-/// Scorer backed by AOT-compiled PJRT executables.
-pub struct PjrtScorer {
-    variants: Vec<Variant>,
-    /// calls served (for bench introspection)
-    pub executions: u64,
-}
-
 impl PjrtScorer {
-    /// Load and compile every artifact listed in `<dir>/manifest.txt`.
-    pub fn load(dir: &Path) -> Result<PjrtScorer> {
+    /// Load and validate every artifact listed in `<dir>/manifest.txt`.
+    /// In this offline build the final compile step is unavailable, so a
+    /// *valid* manifest still returns an error (backend unavailable) —
+    /// after all validation errors have had their chance to surface.
+    pub fn load(dir: &Path) -> Result<PjrtScorer, PjrtError> {
         let manifest = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("reading {}", manifest.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            .map_err(|e| err(format!("reading {}: {e}", manifest.display())))?;
         let mut variants = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
@@ -55,172 +86,110 @@ impl PjrtScorer {
             }
             let f: Vec<&str> = line.split_whitespace().collect();
             if f.len() != 6 {
-                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+                return Err(err(format!(
+                    "manifest line {} malformed: {line:?}",
+                    lineno + 1
+                )));
             }
             let (name, entry) = (f[0].to_string(), f[1].to_string());
-            let b: usize = f[2].parse()?;
-            let d: usize = f[3].parse()?;
-            let j: usize = f[4].parse()?;
+            let parse = |s: &str, what: &str| -> Result<usize, PjrtError> {
+                s.parse()
+                    .map_err(|_| err(format!("manifest line {}: bad {what} {s:?}", lineno + 1)))
+            };
+            let b = parse(f[2], "batch")?;
+            let d = parse(f[3], "dims")?;
+            let j = parse(f[4], "clusters")?;
             let path = dir.join(f[5]);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            let hlo_text = std::fs::read_to_string(&path)
+                .map_err(|e| err(format!("reading {}: {e}", path.display())))?;
+            if !hlo_text.trim_start().starts_with("HloModule") {
+                return Err(err(format!("{} is not HLO text", path.display())));
+            }
             variants.push(Variant {
                 name,
                 entry,
                 b,
                 d,
                 j,
-                exe,
+                hlo_text,
             });
         }
         if variants.is_empty() {
-            bail!("manifest {} lists no variants", manifest.display());
+            return Err(err(format!(
+                "manifest {} lists no variants",
+                manifest.display()
+            )));
         }
-        Ok(PjrtScorer {
-            variants,
-            executions: 0,
-        })
+        // Everything checked out — but there is no PJRT client to compile
+        // the modules with in this build.
+        drop(variants);
+        Err(err(
+            "PJRT backend unavailable: the `xla` crate is not in the offline \
+             dependency universe (pure-Rust FallbackScorer serves this contract)",
+        ))
     }
 
     pub fn variant_names(&self) -> Vec<&str> {
         self.variants.iter().map(|v| v.name.as_str()).collect()
-    }
-
-    /// Pick the variant of `entry` with the smallest padded area that
-    /// covers `d` dims; J is chunkable so any `j_v` works.
-    fn pick(&self, entry: &str, d: usize) -> Result<usize> {
-        let mut best: Option<(usize, usize)> = None; // (cost, idx)
-        for (i, v) in self.variants.iter().enumerate() {
-            if v.entry == entry && v.d >= d {
-                let cost = v.b * v.d * v.j;
-                if best.map(|(c, _)| cost < c).unwrap_or(true) {
-                    best = Some((cost, i));
-                }
-            }
-        }
-        best.map(|(_, i)| i)
-            .ok_or_else(|| anyhow!("no '{entry}' artifact covers d={d}"))
-    }
-
-    /// Build the padded [d_v, j_v] weight block for cluster columns
-    /// [j0, j0+jn) from the logical [d, j] matrices.
-    fn pad_weights(
-        w: &[f32],
-        d: usize,
-        j: usize,
-        d_v: usize,
-        j_v: usize,
-        j0: usize,
-        jn: usize,
-        out: &mut [f32],
-    ) {
-        debug_assert_eq!(out.len(), d_v * j_v);
-        out.fill(0.0);
-        for dd in 0..d {
-            let src = &w[dd * j + j0..dd * j + j0 + jn];
-            let dst = &mut out[dd * j_v..dd * j_v + jn];
-            dst.copy_from_slice(src);
-        }
-    }
-
-    /// Execute the loglik artifact on one (row-block, cluster-chunk).
-    fn exec_loglik(
-        &mut self,
-        vi: usize,
-        x: &[f32],
-        w1: &[f32],
-        w0: &[f32],
-    ) -> Result<Vec<f32>> {
-        let v = &self.variants[vi];
-        let xl = xla::Literal::vec1(x).reshape(&[v.b as i64, v.d as i64])?;
-        let w1l = xla::Literal::vec1(w1).reshape(&[v.d as i64, v.j as i64])?;
-        let w0l = xla::Literal::vec1(w0).reshape(&[v.d as i64, v.j as i64])?;
-        let result = v.exe.execute::<xla::Literal>(&[xl, w1l, w0l])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        self.executions += 1;
-        Ok(out.to_vec::<f32>()?)
     }
 }
 
 impl Scorer for PjrtScorer {
     fn predictive_density(
         &mut self,
-        test: &BinMat,
-        w1: &[f32],
-        w0: &[f32],
-        logpi: &[f32],
-        d: usize,
-        j: usize,
+        _test: &BinMat,
+        _w1: &[f32],
+        _w0: &[f32],
+        _logpi: &[f32],
+        _d: usize,
+        _j: usize,
     ) -> Vec<f32> {
-        // density = logsumexp over J of (loglik + logpi); chunk J through
-        // the loglik artifact and combine here (exact, any J)
-        let mat = self.loglik_matrix(test, w1, w0, d, j);
-        let n = test.rows();
-        let mut out = Vec::with_capacity(n);
-        let mut terms = vec![0.0f64; j];
-        for r in 0..n {
-            for jj in 0..j {
-                terms[jj] = mat[r * j + jj] as f64 + logpi[jj] as f64;
-            }
-            out.push(logsumexp(&terms) as f32);
-        }
-        out
+        unreachable!("PjrtScorer cannot be constructed without the xla backend")
     }
 
     fn loglik_matrix(
         &mut self,
-        test: &BinMat,
-        w1: &[f32],
-        w0: &[f32],
-        d: usize,
-        j: usize,
+        _test: &BinMat,
+        _w1: &[f32],
+        _w0: &[f32],
+        _d: usize,
+        _j: usize,
     ) -> Vec<f32> {
-        assert_eq!(w1.len(), d * j);
-        assert_eq!(w0.len(), d * j);
-        let vi = self
-            .pick("loglik", d)
-            .expect("no loglik artifact for these dims");
-        let (b_v, d_v, j_v) = {
-            let v = &self.variants[vi];
-            (v.b, v.d, v.j)
-        };
-        let n = test.rows();
-        let mut out = vec![0.0f32; n * j];
-        let mut xbuf = vec![0.0f32; b_v * d_v];
-        let mut w1buf = vec![0.0f32; d_v * j_v];
-        let mut w0buf = vec![0.0f32; d_v * j_v];
-
-        let mut j0 = 0;
-        while j0 < j {
-            let jn = (j - j0).min(j_v);
-            Self::pad_weights(w1, d, j, d_v, j_v, j0, jn, &mut w1buf);
-            Self::pad_weights(w0, d, j, d_v, j_v, j0, jn, &mut w0buf);
-            let mut r0 = 0;
-            while r0 < n {
-                let rn = (n - r0).min(b_v);
-                test.unpack_block_f32(r0, b_v, d_v, &mut xbuf);
-                let block = self
-                    .exec_loglik(vi, &xbuf, &w1buf, &w0buf)
-                    .expect("PJRT execution failed");
-                for r in 0..rn {
-                    let src = &block[r * j_v..r * j_v + jn];
-                    let dst = &mut out[(r0 + r) * j + j0..(r0 + r) * j + j0 + jn];
-                    dst.copy_from_slice(src);
-                }
-                r0 += rn;
-            }
-            j0 += jn;
-        }
-        out
+        unreachable!("PjrtScorer cannot be constructed without the xla backend")
     }
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("cc_pjrt_stub").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn valid_manifest_reports_backend_unavailable() {
+        let d = tmpdir("valid");
+        std::fs::write(d.join("m.hlo.txt"), "HloModule loglik\n").unwrap();
+        std::fs::write(d.join("manifest.txt"), "loglik_64 loglik 64 256 128 m.hlo.txt\n")
+            .unwrap();
+        let e = PjrtScorer::load(&d).unwrap_err().to_string();
+        assert!(e.contains("backend unavailable"), "{e}");
+    }
+
+    #[test]
+    fn validation_errors_win_over_backend_error() {
+        let d = tmpdir("badnum");
+        std::fs::write(d.join("m.hlo.txt"), "HloModule x\n").unwrap();
+        std::fs::write(d.join("manifest.txt"), "a loglik sixty 256 128 m.hlo.txt\n").unwrap();
+        let e = PjrtScorer::load(&d).unwrap_err().to_string();
+        assert!(e.contains("bad batch"), "{e}");
     }
 }

@@ -1,0 +1,305 @@
+//! The slotted cluster store shared by every sampler entry point.
+//!
+//! Clusters live in stable *slots* (`Vec<Option<ClusterStats>>`): a
+//! datum's assignment is a slot index that stays valid across sweeps, a
+//! cluster that empties returns its slot to a free list, and a new
+//! cluster reuses the lowest-recently-freed slot before growing the
+//! vector. This keeps the per-sweep allocation profile flat (the Gibbs
+//! hot loop never allocates after warm-up) and makes assignment vectors
+//! cheap to persist.
+//!
+//! Invariants (checked by [`ClusterSet::check_slot_invariants`] and the
+//! property suite in `rust/tests/property_invariants.rs`):
+//!
+//! * every `None` slot is on the free list exactly once;
+//! * every free-list entry points at a `None` slot;
+//! * no occupied slot holds an empty cluster — except transiently inside
+//!   a Walker sweep, which uses [`ClusterSet::remove_row_keep_slot`] and
+//!   restores the invariant with [`ClusterSet::compact_free_slots`].
+
+use crate::data::BinMat;
+use crate::model::{BetaBernoulli, ClusterStats};
+
+/// Slotted storage for the clusters of one shard.
+#[derive(Debug, Clone)]
+pub struct ClusterSet {
+    slots: Vec<Option<ClusterStats>>,
+    free: Vec<usize>,
+    dims: usize,
+}
+
+impl ClusterSet {
+    /// An empty store for `dims`-dimensional sufficient statistics.
+    pub fn new(dims: usize) -> ClusterSet {
+        ClusterSet {
+            slots: Vec::new(),
+            free: Vec::new(),
+            dims,
+        }
+    }
+
+    /// Rebuild from raw slots (checkpoint resume); recomputes the free list.
+    pub(crate) fn from_slots(slots: Vec<Option<ClusterStats>>, dims: usize) -> ClusterSet {
+        let free = slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, c)| c.is_none().then_some(s))
+            .collect();
+        ClusterSet { slots, free, dims }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    /// Number of occupied slots (live clusters).
+    pub fn num_active(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Total slot-vector length (occupied + free).
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Current free-list length (introspection for the property tests).
+    pub fn num_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn get(&self, slot: usize) -> Option<&ClusterStats> {
+        self.slots.get(slot).and_then(|c| c.as_ref())
+    }
+
+    /// Datum count of `slot` (0 for a dead or empty slot).
+    pub fn n_of(&self, slot: usize) -> u64 {
+        self.get(slot).map(|c| c.n()).unwrap_or(0)
+    }
+
+    /// Materialize a fresh empty cluster, reusing a freed slot if any.
+    pub fn alloc_empty(&mut self) -> usize {
+        self.insert(ClusterStats::empty(self.dims))
+    }
+
+    /// Insert fully-formed stats (shuffle moves, single-cluster init).
+    pub fn insert(&mut self, stats: ClusterStats) -> usize {
+        match self.free.pop() {
+            Some(s) => {
+                self.slots[s] = Some(stats);
+                s
+            }
+            None => {
+                self.slots.push(Some(stats));
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    /// Add datum (row `r` of `data`) to the cluster in `slot`.
+    pub fn add_row(&mut self, slot: usize, data: &BinMat, r: usize) {
+        self.slots[slot]
+            .as_mut()
+            .expect("add_row to dead slot")
+            .add(data, r);
+    }
+
+    /// Remove datum from its cluster, freeing the slot if it empties.
+    pub fn remove_row(&mut self, slot: usize, data: &BinMat, r: usize) {
+        let c = self.slots[slot]
+            .as_mut()
+            .expect("remove_row from dead slot");
+        c.remove(data, r);
+        if c.is_empty() {
+            self.slots[slot] = None;
+            self.free.push(slot);
+        }
+    }
+
+    /// Remove datum WITHOUT freeing an emptied slot (Walker keeps emptied
+    /// tables selectable through their stick until the end of the sweep;
+    /// call [`Self::compact_free_slots`] afterwards).
+    pub fn remove_row_keep_slot(&mut self, slot: usize, data: &BinMat, r: usize) {
+        self.slots[slot]
+            .as_mut()
+            .expect("remove_row from dead slot")
+            .remove(data, r);
+    }
+
+    /// Free every empty-but-alive slot (end of a Walker sweep).
+    pub fn compact_free_slots(&mut self) {
+        for s in 0..self.slots.len() {
+            let empty = matches!(&self.slots[s], Some(c) if c.is_empty());
+            if empty {
+                self.slots[s] = None;
+                self.free.push(s);
+            }
+        }
+    }
+
+    /// Occupied slots in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &ClusterStats)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(s, c)| c.as_ref().map(|c| (s, c)))
+    }
+
+    /// Occupied slots in slot order, mutably (cached scoring).
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (usize, &mut ClusterStats)> {
+        self.slots
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(s, c)| c.as_mut().map(|c| (s, c)))
+    }
+
+    /// Occupied slot indices in slot order.
+    pub fn occupied_slots(&self) -> Vec<usize> {
+        self.iter().map(|(s, _)| s).collect()
+    }
+
+    /// Collapsed predictive log-likelihood of row `r` under `slot`
+    /// (empty-but-alive clusters score as fresh tables).
+    pub fn score_slot(
+        &mut self,
+        slot: usize,
+        model: &BetaBernoulli,
+        data: &BinMat,
+        r: usize,
+    ) -> f64 {
+        self.slots[slot]
+            .as_mut()
+            .expect("score_slot on dead slot")
+            .score(model, data, r)
+    }
+
+    /// Push `(n_j, c_jd)` for every live cluster into `out` (reduce-step
+    /// sufficient statistics for dimension `d`).
+    pub fn collect_dim_stats(&self, d: usize, out: &mut Vec<(u64, u32)>) {
+        for (_, c) in self.iter() {
+            out.push((c.n(), c.ones()[d]));
+        }
+    }
+
+    /// Invalidate every cluster's predictive cache (hypers changed).
+    pub fn invalidate_caches(&mut self) {
+        for (_, c) in self.iter_mut() {
+            c.invalidate_cache();
+        }
+    }
+
+    /// Take the raw slot vector, leaving this store empty (shuffle drain).
+    pub(crate) fn take_all(&mut self) -> Vec<Option<ClusterStats>> {
+        self.free.clear();
+        std::mem::take(&mut self.slots)
+    }
+
+    /// Verify the slot/free-list bookkeeping invariants.
+    pub fn check_slot_invariants(&self) -> Result<(), String> {
+        let mut on_free = vec![0usize; self.slots.len()];
+        for &s in &self.free {
+            if s >= self.slots.len() {
+                return Err(format!("free-list entry {s} out of range"));
+            }
+            on_free[s] += 1;
+        }
+        for (s, c) in self.slots.iter().enumerate() {
+            match c {
+                None if on_free[s] != 1 => {
+                    return Err(format!(
+                        "dead slot {s} appears {} times on the free list",
+                        on_free[s]
+                    ));
+                }
+                Some(_) if on_free[s] != 0 => {
+                    return Err(format!("live slot {s} is on the free list"));
+                }
+                Some(c) if c.is_empty() => {
+                    return Err(format!("slot {s} empty but not freed"));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = BinMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                if rng.next_f64() < 0.4 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn alloc_reuses_freed_slots() {
+        let data = rand_data(4, 8, 1);
+        let mut cs = ClusterSet::new(8);
+        let a = cs.alloc_empty();
+        cs.add_row(a, &data, 0);
+        let b = cs.alloc_empty();
+        cs.add_row(b, &data, 1);
+        assert_eq!(cs.num_slots(), 2);
+        cs.remove_row(a, &data, 0);
+        assert_eq!(cs.num_active(), 1);
+        assert_eq!(cs.num_free(), 1);
+        let c = cs.alloc_empty();
+        assert_eq!(c, a, "freed slot must be reused before growing");
+        cs.add_row(c, &data, 2);
+        assert_eq!(cs.num_slots(), 2);
+        cs.check_slot_invariants().unwrap();
+    }
+
+    #[test]
+    fn keep_slot_then_compact_frees_empties() {
+        let data = rand_data(3, 8, 2);
+        let mut cs = ClusterSet::new(8);
+        let a = cs.alloc_empty();
+        cs.add_row(a, &data, 0);
+        cs.remove_row_keep_slot(a, &data, 0);
+        // transiently empty-but-alive: slot invariant deliberately broken
+        assert!(cs.check_slot_invariants().is_err());
+        assert_eq!(cs.n_of(a), 0);
+        cs.compact_free_slots();
+        cs.check_slot_invariants().unwrap();
+        assert_eq!(cs.num_active(), 0);
+        assert_eq!(cs.num_free(), 1);
+    }
+
+    #[test]
+    fn iter_orders_by_slot_and_skips_dead() {
+        let data = rand_data(6, 8, 3);
+        let mut cs = ClusterSet::new(8);
+        for r in 0..3 {
+            let s = cs.alloc_empty();
+            cs.add_row(s, &data, r);
+        }
+        cs.remove_row(1, &data, 1);
+        let slots: Vec<usize> = cs.iter().map(|(s, _)| s).collect();
+        assert_eq!(slots, vec![0, 2]);
+        assert_eq!(cs.occupied_slots(), vec![0, 2]);
+    }
+
+    #[test]
+    fn take_all_empties_the_store() {
+        let data = rand_data(2, 8, 4);
+        let mut cs = ClusterSet::new(8);
+        let s = cs.alloc_empty();
+        cs.add_row(s, &data, 0);
+        let slots = cs.take_all();
+        assert_eq!(slots.len(), 1);
+        assert_eq!(cs.num_slots(), 0);
+        assert_eq!(cs.num_free(), 0);
+        cs.check_slot_invariants().unwrap();
+    }
+}

@@ -1,0 +1,33 @@
+//! The unified sampler core: one cluster store + one kernel contract
+//! shared by every MCMC entry point in the repo.
+//!
+//! Layering (see `DESIGN.md` §"Sampler core"):
+//!
+//! ```text
+//!   TransitionKernel  (CollapsedGibbs | WalkerSlice)   — the operator
+//!        │  sweeps
+//!        ▼
+//!   Shard  (rows + assignments + private RNG + θ)      — the unit of work
+//!        │  owns
+//!        ▼
+//!   ClusterSet  (slotted stats, free-slot reuse)       — the hot-path store
+//! ```
+//!
+//! The serial baseline ([`crate::serial::SerialGibbs`]) is one [`Shard`]
+//! over the whole dataset with `θ = α`; the parallel coordinator
+//! ([`crate::coordinator::Coordinator`]) holds one shard per supercluster
+//! with `θ = α·μ_k`. Both dispatch their sweeps through the same
+//! [`TransitionKernel`] trait object, so:
+//!
+//! * a kernel is written (and optimized) exactly once,
+//! * any kernel is selectable from either entry point (`--local-kernel`),
+//! * K=1 coordinator ≡ serial chain holds *by construction* — asserted
+//!   sweep-by-sweep in `rust/tests/k1_equivalence.rs`.
+
+pub mod cluster_set;
+pub mod kernel;
+pub mod shard;
+
+pub use cluster_set::ClusterSet;
+pub use kernel::{CollapsedGibbs, KernelKind, TransitionKernel, WalkerSlice};
+pub use shard::Shard;

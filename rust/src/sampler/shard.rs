@@ -1,0 +1,406 @@
+//! One shard of the latent state: the unit every [`TransitionKernel`]
+//! operates on.
+//!
+//! A shard owns a set of data rows, their cluster assignments, the
+//! [`ClusterSet`] those assignments index into, a *private* RNG stream
+//! (so chains are deterministic regardless of thread scheduling), and a
+//! concentration `θ`. The serial sampler is exactly one shard with
+//! `θ = α`; each supercluster of the parallel coordinator is a shard
+//! with `θ = α·μ_k`. That both are literally the same type is what makes
+//! the K=1 ≡ serial equivalence structural (asserted chain-exactly in
+//! `rust/tests/k1_equivalence.rs`) rather than coincidental.
+//!
+//! [`TransitionKernel`]: crate::sampler::TransitionKernel
+
+use super::cluster_set::ClusterSet;
+use crate::data::BinMat;
+use crate::model::{BetaBernoulli, ClusterStats};
+use crate::rng::{categorical_log, Pcg64};
+
+/// One shard (= the serial chain, or one supercluster / compute node).
+pub struct Shard {
+    /// global row ids resident on this shard
+    pub(crate) rows: Vec<usize>,
+    /// cluster slot per resident row (parallel to `rows`)
+    pub(crate) assign: Vec<u32>,
+    /// slotted local clusters
+    pub(crate) clusters: ClusterSet,
+    /// private RNG stream driving the transition kernel
+    pub(crate) rng: Pcg64,
+    /// concentration θ the kernel sweeps with (α serial, α·μ_k parallel)
+    pub(crate) theta: f64,
+    // scratch buffers (reused across sweeps; never on the alloc hot path)
+    pub(crate) scratch_ids: Vec<u32>,
+    pub(crate) scratch_logw: Vec<f64>,
+    pub(crate) scratch_ones: Vec<u32>,
+}
+
+impl Shard {
+    /// Initialize by a sequential draw from the local CRP(θ) prior — the
+    /// paper's §5 initialization ("initialize the clustering via a draw
+    /// from the prior using the local Chinese restaurant process"). The
+    /// draw consumes the shard's private stream.
+    pub fn init_from_prior(data: &BinMat, rows: Vec<usize>, theta: f64, rng: Pcg64) -> Shard {
+        let n = rows.len();
+        let mut sh = Shard {
+            rows,
+            assign: vec![0; n],
+            clusters: ClusterSet::new(data.dims()),
+            rng,
+            theta,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+        };
+        // sequential CRP: P(new) ∝ θ, P(j) ∝ n_j (prior draw — the data
+        // likelihood enters only through subsequent kernel sweeps)
+        for i in 0..n {
+            let r = sh.rows[i];
+            sh.scratch_ids.clear();
+            sh.scratch_logw.clear();
+            for (slot, c) in sh.clusters.iter() {
+                sh.scratch_ids.push(slot as u32);
+                sh.scratch_logw.push((c.n() as f64).ln());
+            }
+            sh.scratch_ids.push(u32::MAX);
+            sh.scratch_logw.push(theta.max(1e-300).ln());
+            let pick = categorical_log(&mut sh.rng, &sh.scratch_logw);
+            let slot = sh.place_pick(pick, data, r);
+            sh.assign[i] = slot;
+        }
+        sh
+    }
+
+    /// Initialize with every resident row in a single cluster (worst-case
+    /// start, used by convergence tests).
+    pub fn init_single_cluster(data: &BinMat, rows: Vec<usize>, theta: f64, rng: Pcg64) -> Shard {
+        let n = rows.len();
+        let mut clusters = ClusterSet::new(data.dims());
+        if n > 0 {
+            let mut c = ClusterStats::empty(data.dims());
+            for &r in &rows {
+                c.add(data, r);
+            }
+            clusters.insert(c);
+        }
+        Shard {
+            rows,
+            assign: vec![0; n],
+            clusters,
+            rng,
+            theta,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+        }
+    }
+
+    /// Rebuild a shard from persisted (rows, assign) — cluster stats are
+    /// recomputed from the data (checkpoint resume). `theta` is set by
+    /// the owner before the next sweep.
+    pub fn from_parts(
+        data: &BinMat,
+        rows: Vec<usize>,
+        assign: Vec<u32>,
+        rng: Pcg64,
+    ) -> Result<Shard, String> {
+        if rows.len() != assign.len() {
+            return Err("rows/assign length mismatch".into());
+        }
+        let nslots = assign.iter().map(|&a| a as usize + 1).max().unwrap_or(0);
+        let mut slots: Vec<Option<ClusterStats>> = (0..nslots).map(|_| None).collect();
+        for (i, &slot) in assign.iter().enumerate() {
+            let c = slots[slot as usize].get_or_insert_with(|| ClusterStats::empty(data.dims()));
+            if rows[i] >= data.rows() {
+                return Err(format!("row id {} out of range", rows[i]));
+            }
+            c.add(data, rows[i]);
+        }
+        Ok(Shard {
+            rows,
+            assign,
+            clusters: ClusterSet::from_slots(slots, data.dims()),
+            rng,
+            theta: 0.0,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+        })
+    }
+
+    /// Resolve a categorical pick over `scratch_ids` (sentinel `u32::MAX`
+    /// = "new table") into a cluster slot and add datum `r` to it.
+    pub(crate) fn place_pick(&mut self, pick: usize, data: &BinMat, r: usize) -> u32 {
+        let slot = if self.scratch_ids[pick] == u32::MAX {
+            self.clusters.alloc_empty()
+        } else {
+            self.scratch_ids[pick] as usize
+        };
+        self.clusters.add_row(slot, data, r);
+        slot as u32
+    }
+
+    /// Set the concentration for subsequent kernel sweeps.
+    pub fn set_theta(&mut self, theta: f64) {
+        self.theta = theta;
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.num_active()
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn rows(&self) -> &[usize] {
+        &self.rows
+    }
+
+    /// The slotted cluster store (read-only view).
+    pub fn cluster_set(&self) -> &ClusterSet {
+        &self.clusters
+    }
+
+    /// Live cluster stats in slot order.
+    pub fn clusters(&self) -> impl Iterator<Item = &ClusterStats> {
+        self.clusters.iter().map(|(_, c)| c)
+    }
+
+    /// Live clusters with their slots, in slot order.
+    pub fn active_clusters(&self) -> impl Iterator<Item = (usize, &ClusterStats)> {
+        self.clusters.iter()
+    }
+
+    /// Local cluster-slot assignment per resident row (aligned with
+    /// [`Self::rows`]; for the serial whole-dataset shard this IS the
+    /// global assignment vector).
+    pub fn assignments_local(&self) -> &[u32] {
+        &self.assign
+    }
+
+    /// Push (n_j, c_jd) for every local cluster into `out` (reduce-step
+    /// sufficient statistics for dimension `d`).
+    pub fn collect_dim_stats(&self, d: usize, out: &mut Vec<(u64, u32)>) {
+        self.clusters.collect_dim_stats(d, out);
+    }
+
+    pub fn invalidate_caches(&mut self) {
+        self.clusters.invalidate_caches();
+    }
+
+    /// Remove and return every cluster as (stats, member-row-ids); leaves
+    /// this shard empty. Used by the coordinator's shuffle step.
+    pub fn drain_clusters(&mut self) -> Vec<(ClusterStats, Vec<usize>)> {
+        let nslots = self.clusters.num_slots();
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); nslots];
+        for (i, &slot) in self.assign.iter().enumerate() {
+            members[slot as usize].push(self.rows[i]);
+        }
+        let mut out = Vec::new();
+        for (slot, c) in self.clusters.take_all().into_iter().enumerate() {
+            if let Some(c) = c {
+                out.push((c, std::mem::take(&mut members[slot])));
+            }
+        }
+        self.rows.clear();
+        self.assign.clear();
+        out
+    }
+
+    /// Insert a cluster (stats + member rows) into this shard.
+    pub fn insert_cluster(&mut self, stats: ClusterStats, member_rows: Vec<usize>) {
+        debug_assert_eq!(stats.n() as usize, member_rows.len());
+        let slot = self.clusters.insert(stats);
+        for r in member_rows {
+            self.rows.push(r);
+            self.assign.push(slot as u32);
+        }
+    }
+
+    /// Write this shard's assignments into the global z vector with
+    /// globally-unique ids starting at `next_id`; returns the next free id.
+    pub fn export_assignments(&self, z: &mut [u32], mut next_id: u32) -> u32 {
+        let mut slot_to_id: Vec<Option<u32>> = vec![None; self.clusters.num_slots()];
+        for (i, &slot) in self.assign.iter().enumerate() {
+            let id = *slot_to_id[slot as usize].get_or_insert_with(|| {
+                let id = next_id;
+                next_id += 1;
+                id
+            });
+            z[self.rows[i]] = id;
+        }
+        next_id
+    }
+
+    /// Append `ln(n_j/(N+α)) + ln p(x_r | cluster)` for every local
+    /// cluster (mutable for the score cache).
+    pub fn score_against_all(
+        &mut self,
+        model: &BetaBernoulli,
+        test: &BinMat,
+        r: usize,
+        n_total: f64,
+        out: &mut Vec<f64>,
+    ) {
+        for (_, c) in self.clusters.iter_mut() {
+            out.push((c.n() as f64 / n_total).ln() + c.score(model, test, r));
+        }
+    }
+
+    /// Occupied cluster slots in order of first appearance along the
+    /// shard's datum sequence (the labeling under which Pitman's
+    /// size-biased stick posterior applies — see the Walker kernel).
+    pub(crate) fn slots_by_appearance(&self) -> Vec<usize> {
+        let mut seen = vec![false; self.clusters.num_slots()];
+        let mut out = Vec::new();
+        for &slot in &self.assign {
+            let s = slot as usize;
+            if !seen[s] {
+                seen[s] = true;
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Integrity check: stats match the member rows exactly, the slot
+    /// machinery is consistent.
+    pub fn check_invariants(&self, data: &BinMat) -> Result<(), String> {
+        if self.rows.len() != self.assign.len() {
+            return Err("rows/assign length mismatch".into());
+        }
+        self.clusters.check_slot_invariants()?;
+        let nslots = self.clusters.num_slots();
+        let mut rebuilt: Vec<ClusterStats> =
+            (0..nslots).map(|_| ClusterStats::empty(data.dims())).collect();
+        for (i, &slot) in self.assign.iter().enumerate() {
+            let slot = slot as usize;
+            if slot >= nslots || self.clusters.get(slot).is_none() {
+                return Err(format!("row idx {i} assigned to dead slot {slot}"));
+            }
+            rebuilt[slot].add(data, self.rows[i]);
+        }
+        for (slot, c) in self.clusters.iter() {
+            if c.n() != rebuilt[slot].n() || c.ones() != rebuilt[slot].ones() {
+                return Err(format!("slot {slot} stats mismatch"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticConfig;
+    use crate::sampler::kernel::{CollapsedGibbs, TransitionKernel};
+
+    fn make_shard(seed: u64) -> (crate::data::Dataset, Shard, BetaBernoulli) {
+        let ds = SyntheticConfig {
+            n: 200,
+            d: 16,
+            clusters: 4,
+            beta: 0.1,
+            seed,
+        }
+        .generate_with_test_fraction(0.0);
+        let model = BetaBernoulli::symmetric(16, 0.5);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(seed));
+        (ds, st, model)
+    }
+
+    #[test]
+    fn init_and_sweeps_preserve_invariants() {
+        let (ds, mut st, model) = make_shard(1);
+        st.check_invariants(&ds.train).unwrap();
+        for _ in 0..3 {
+            CollapsedGibbs.sweep(&mut st, &ds.train, &model);
+            st.check_invariants(&ds.train).unwrap();
+        }
+        assert!(st.num_clusters() >= 1);
+        assert_eq!(st.num_rows(), 200);
+    }
+
+    #[test]
+    fn drain_insert_roundtrip() {
+        let (ds, mut st, _model) = make_shard(2);
+        let nc = st.num_clusters();
+        let nr = st.num_rows();
+        let drained = st.drain_clusters();
+        assert_eq!(drained.len(), nc);
+        assert_eq!(st.num_rows(), 0);
+        for (stats, rows) in drained {
+            st.insert_cluster(stats, rows);
+        }
+        assert_eq!(st.num_clusters(), nc);
+        assert_eq!(st.num_rows(), nr);
+        st.check_invariants(&ds.train).unwrap();
+    }
+
+    #[test]
+    fn export_assignments_unique_ids() {
+        let (ds, st, _model) = make_shard(3);
+        let mut z = vec![u32::MAX; ds.train.rows()];
+        let next = st.export_assignments(&mut z, 5);
+        assert_eq!(next as usize, 5 + st.num_clusters());
+        assert!(z.iter().all(|&id| id >= 5 && id < next));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (ds, mut a, model) = make_shard(4);
+        let (_, mut b, _) = make_shard(4);
+        a.set_theta(0.7);
+        b.set_theta(0.7);
+        for _ in 0..2 {
+            CollapsedGibbs.sweep(&mut a, &ds.train, &model);
+            CollapsedGibbs.sweep(&mut b, &ds.train, &model);
+        }
+        let mut za = vec![0u32; ds.train.rows()];
+        let mut zb = vec![0u32; ds.train.rows()];
+        a.export_assignments(&mut za, 0);
+        b.export_assignments(&mut zb, 0);
+        assert_eq!(za, zb);
+    }
+
+    #[test]
+    fn single_cluster_init_counts() {
+        let ds = SyntheticConfig {
+            n: 50,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 5,
+        }
+        .generate_with_test_fraction(0.0);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let st = Shard::init_single_cluster(&ds.train, rows, 1.0, Pcg64::seed_from(5));
+        assert_eq!(st.num_clusters(), 1);
+        st.check_invariants(&ds.train).unwrap();
+        let (_, c) = st.active_clusters().next().unwrap();
+        assert_eq!(c.n() as usize, ds.train.rows());
+    }
+
+    #[test]
+    fn from_parts_rejects_corrupt_input() {
+        let ds = SyntheticConfig {
+            n: 20,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 6,
+        }
+        .generate_with_test_fraction(0.0);
+        assert!(Shard::from_parts(&ds.train, vec![0, 1], vec![0], Pcg64::seed_from(1)).is_err());
+        assert!(Shard::from_parts(&ds.train, vec![999], vec![0], Pcg64::seed_from(1)).is_err());
+        let ok = Shard::from_parts(&ds.train, vec![0, 1], vec![0, 0], Pcg64::seed_from(1)).unwrap();
+        ok.check_invariants(&ds.train).unwrap();
+        assert_eq!(ok.num_clusters(), 1);
+    }
+}

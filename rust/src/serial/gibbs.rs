@@ -1,17 +1,24 @@
-//! Neal (2000) Algorithm 3: collapsed Gibbs for the DPM.
+//! The serial DPM sampler: one [`Shard`] over the whole dataset, swept
+//! by a pluggable [`TransitionKernel`] (Neal Alg. 3 collapsed Gibbs by
+//! default, Walker slice via [`SerialConfig::kernel`]).
 //!
-//! Per datum: remove from its cluster, score against every extant cluster
-//! (`n_j · p(x|stats_j)` in log space) and a fresh cluster (`α · p(x|∅)`),
-//! sample, reinsert. Hyperparameters (α via Eq. 6 slice sampling, β_d via
-//! griddy Gibbs) are updated once per sweep — the same operators the
-//! parallel coordinator runs in its reduce step, which is what makes the
-//! K=1 equivalence test meaningful.
+//! Hyperparameters (α via Eq. 6 slice sampling, β_d via griddy Gibbs)
+//! are updated once per sweep from the *caller's* RNG — the same
+//! operators, in the same order, as the parallel coordinator's reduce
+//! step. The kernel itself runs on the shard's private stream, split
+//! from the caller's RNG at construction exactly like the coordinator
+//! splits per-worker streams. Together these make the K=1 coordinator
+//! and this sampler produce *identical* chains from the same master
+//! seed (asserted in `rust/tests/k1_equivalence.rs`).
+//!
+//! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 use crate::data::BinMat;
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
-use crate::model::{BetaBernoulli, ClusterStats};
-use crate::rng::{categorical_log, categorical_log_inplace, Pcg64};
+use crate::model::BetaBernoulli;
+use crate::rng::Pcg64;
+use crate::sampler::{KernelKind, Shard};
 use crate::special::{lgamma, logsumexp};
 use crate::util::timer::PhaseTimer;
 
@@ -27,6 +34,8 @@ pub struct SerialConfig {
     pub update_alpha: bool,
     /// update β_d each sweep
     pub update_beta: bool,
+    /// per-sweep transition operator (paper §4: any standard DPM kernel)
+    pub kernel: KernelKind,
 }
 
 impl Default for SerialConfig {
@@ -38,6 +47,7 @@ impl Default for SerialConfig {
             init_beta: 0.5,
             update_alpha: true,
             update_beta: false, // β updates are O(D·grid·J) — opt in
+            kernel: KernelKind::CollapsedGibbs,
         }
     }
 }
@@ -50,12 +60,7 @@ impl Default for SerialConfig {
 /// bottleneck) and returns the adapted concentration — "sufficient to
 /// roughly estimate (within an order of magnitude) the correct number
 /// of clusters".
-pub fn calibrate_alpha(
-    data: &BinMat,
-    fraction: f64,
-    sweeps: usize,
-    rng: &mut Pcg64,
-) -> f64 {
+pub fn calibrate_alpha(data: &BinMat, fraction: f64, sweeps: usize, rng: &mut Pcg64) -> f64 {
     let n = data.rows();
     let n_sub = ((n as f64 * fraction) as usize).clamp(50.min(n), n);
     let mut rows: Vec<usize> = (0..n).collect();
@@ -77,148 +82,79 @@ pub fn calibrate_alpha(
     g.alpha()
 }
 
-/// The collapsed Gibbs sampler state.
+/// The serial sampler state: one shard + global hyperparameters.
 pub struct SerialGibbs<'a> {
     data: &'a BinMat,
     pub model: BetaBernoulli,
     pub alpha: f64,
     cfg: SerialConfig,
-    /// cluster assignment per datum (slot index into `clusters`)
-    z: Vec<u32>,
-    /// slotted cluster storage; `None` = free slot
-    clusters: Vec<Option<ClusterStats>>,
-    free_slots: Vec<usize>,
-    /// scratch: active slot ids and log-weights (reused across data)
-    scratch_ids: Vec<u32>,
-    scratch_logw: Vec<f64>,
+    shard: Shard,
     beta_updater: BetaUpdater,
     pub timer: PhaseTimer,
 }
 
 impl<'a> SerialGibbs<'a> {
     /// Initialize by a sequential draw from the CRP prior (the paper's
-    /// initialization: "initialize the clustering via a draw from the
-    /// prior using the local Chinese restaurant process").
+    /// initialization). The shard's private kernel stream is
+    /// `rng.split(0)` — the same derivation the coordinator uses for its
+    /// worker 0, which is what makes K=1 equivalence exact.
     pub fn init_from_prior(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
         let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
         model.build_lut(data.rows() + 1); // symmetric-beta fast rebuilds
-        let mut s = SerialGibbs {
+        let shard = Shard::init_from_prior(
             data,
-            model,
-            alpha: cfg.init_alpha,
-            cfg,
-            z: vec![0; data.rows()],
-            clusters: Vec::new(),
-            free_slots: Vec::new(),
-            scratch_ids: Vec::new(),
-            scratch_logw: Vec::new(),
-            beta_updater: BetaUpdater::new(cfg.beta_grid),
-            timer: PhaseTimer::new(),
-        };
-        // sequential CRP: P(new) ∝ α, P(j) ∝ n_j (prior draw — the data
-        // likelihood enters only through subsequent Gibbs sweeps)
-        for r in 0..data.rows() {
-            s.scratch_ids.clear();
-            s.scratch_logw.clear();
-            for (slot, c) in s.clusters.iter().enumerate() {
-                if let Some(c) = c {
-                    s.scratch_ids.push(slot as u32);
-                    s.scratch_logw.push((c.n() as f64).ln());
-                }
-            }
-            s.scratch_ids.push(u32::MAX);
-            s.scratch_logw.push(s.alpha.ln());
-            let pick = categorical_log(rng, &s.scratch_logw);
-            let slot = s.assign_pick(pick, r);
-            s.z[r] = slot;
-        }
-        s
-    }
-
-    /// Initialize with every datum in a single cluster (worst-case start,
-    /// used in convergence tests).
-    pub fn init_single_cluster(data: &'a BinMat, cfg: SerialConfig) -> Self {
-        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
-        model.build_lut(data.rows() + 1);
-        let mut c = ClusterStats::empty(data.dims());
-        for r in 0..data.rows() {
-            c.add(data, r);
-        }
+            (0..data.rows()).collect(),
+            cfg.init_alpha,
+            rng.split(0),
+        );
         SerialGibbs {
             data,
             model,
             alpha: cfg.init_alpha,
             cfg,
-            z: vec![0; data.rows()],
-            clusters: vec![Some(c)],
-            free_slots: Vec::new(),
-            scratch_ids: Vec::new(),
-            scratch_logw: Vec::new(),
+            shard,
             beta_updater: BetaUpdater::new(cfg.beta_grid),
             timer: PhaseTimer::new(),
         }
     }
 
-    /// Resolve a categorical pick into a cluster slot, creating a new
-    /// cluster if the "new table" option (sentinel) was chosen, and add
-    /// datum `r` to it. Returns the slot.
-    fn assign_pick(&mut self, pick: usize, r: usize) -> u32 {
-        let slot = if self.scratch_ids[pick] == u32::MAX {
-            match self.free_slots.pop() {
-                Some(s) => {
-                    self.clusters[s] = Some(ClusterStats::empty(self.data.dims()));
-                    s
-                }
-                None => {
-                    self.clusters.push(Some(ClusterStats::empty(self.data.dims())));
-                    self.clusters.len() - 1
-                }
-            }
-        } else {
-            self.scratch_ids[pick] as usize
-        };
-        self.clusters[slot].as_mut().unwrap().add(self.data, r);
-        slot as u32
+    /// Initialize with every datum in a single cluster (worst-case start,
+    /// used in convergence tests). As in [`Self::init_from_prior`], the
+    /// shard's private kernel stream is split off the caller's RNG.
+    pub fn init_single_cluster(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
+        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
+        model.build_lut(data.rows() + 1);
+        let shard = Shard::init_single_cluster(
+            data,
+            (0..data.rows()).collect(),
+            cfg.init_alpha,
+            rng.split(0),
+        );
+        SerialGibbs {
+            data,
+            model,
+            alpha: cfg.init_alpha,
+            cfg,
+            shard,
+            beta_updater: BetaUpdater::new(cfg.beta_grid),
+            timer: PhaseTimer::new(),
+        }
     }
 
-    /// One full Gibbs sweep over all data (+ hyper updates per config).
+    /// One full kernel sweep over all data (+ hyper updates per config).
+    /// The kernel consumes the shard's private stream; `rng` drives the
+    /// centralized α/β updates (mirroring the coordinator's reduce).
     pub fn sweep(&mut self, rng: &mut Pcg64) {
-        for r in 0..self.data.rows() {
-            self.resample_datum(r, rng);
-        }
+        self.shard.set_theta(self.alpha);
+        let t0 = std::time::Instant::now();
+        self.cfg.kernel.kernel().sweep(&mut self.shard, self.data, &self.model);
+        self.timer.add("sweep", t0.elapsed());
         if self.cfg.update_alpha {
             self.update_alpha(rng);
         }
         if self.cfg.update_beta {
             self.update_beta(rng);
         }
-    }
-
-    /// Gibbs update of one datum's assignment (Neal Alg. 3 step).
-    pub fn resample_datum(&mut self, r: usize, rng: &mut Pcg64) {
-        let old = self.z[r] as usize;
-        {
-            let c = self.clusters[old].as_mut().unwrap();
-            c.remove(self.data, r);
-            if c.is_empty() {
-                self.clusters[old] = None;
-                self.free_slots.push(old);
-            }
-        }
-        self.scratch_ids.clear();
-        self.scratch_logw.clear();
-        for (slot, c) in self.clusters.iter_mut().enumerate() {
-            if let Some(c) = c {
-                self.scratch_ids.push(slot as u32);
-                self.scratch_logw
-                    .push(c.log_n() + c.score(&self.model, self.data, r));
-            }
-        }
-        self.scratch_ids.push(u32::MAX);
-        self.scratch_logw
-            .push(self.alpha.ln() + self.model.empty_cluster_loglik());
-        let pick = categorical_log_inplace(rng, &mut self.scratch_logw);
-        self.z[r] = self.assign_pick(pick, r);
     }
 
     /// Eq. 6 slice update for α.
@@ -234,27 +170,27 @@ impl<'a> SerialGibbs<'a> {
     }
 
     /// Griddy-Gibbs update of every β_d from cluster sufficient stats.
+    /// Score caches are only invalidated when some β_d actually moved.
     pub fn update_beta(&mut self, rng: &mut Pcg64) {
         let mut stats: Vec<(u64, u32)> = Vec::new();
-        for d in 0..self.model.d {
+        let mut new_beta = self.model.beta.clone();
+        for (d, b) in new_beta.iter_mut().enumerate() {
             stats.clear();
-            for c in self.clusters.iter().flatten() {
-                stats.push((c.n(), c.ones()[d]));
-            }
-            self.model.beta[d] = self.beta_updater.sample(rng, &stats);
+            self.shard.collect_dim_stats(d, &mut stats);
+            *b = self.beta_updater.sample(rng, &stats);
         }
-        self.model.drop_lut(); // beta is per-dimension now
-        for c in self.clusters.iter_mut().flatten() {
-            c.invalidate_cache();
+        if self.model.update_betas(&new_beta, self.data.rows() + 1) {
+            self.shard.invalidate_caches();
         }
     }
 
     pub fn num_clusters(&self) -> usize {
-        self.clusters.iter().filter(|c| c.is_some()).count()
+        self.shard.num_clusters()
     }
 
+    /// Cluster-slot assignment per datum (aligned with data row order).
     pub fn assignments(&self) -> &[u32] {
-        &self.z
+        self.shard.assignments_local()
     }
 
     pub fn alpha(&self) -> f64 {
@@ -262,11 +198,8 @@ impl<'a> SerialGibbs<'a> {
     }
 
     /// Active clusters (slot, stats).
-    pub fn active_clusters(&self) -> impl Iterator<Item = (usize, &ClusterStats)> {
-        self.clusters
-            .iter()
-            .enumerate()
-            .filter_map(|(i, c)| c.as_ref().map(|c| (i, c)))
+    pub fn active_clusters(&self) -> impl Iterator<Item = (usize, &crate::model::ClusterStats)> {
+        self.shard.active_clusters()
     }
 
     /// Test-set predictive log-likelihood per datum:
@@ -276,12 +209,10 @@ impl<'a> SerialGibbs<'a> {
         let n_total = self.data.rows() as f64 + self.alpha;
         let mut acc = 0.0;
         let mut terms: Vec<f64> = Vec::new();
-        // borrow clusters mutably one at a time for cached scoring
         for r in 0..test.rows() {
             terms.clear();
-            for c in self.clusters.iter_mut().flatten() {
-                terms.push((c.n() as f64 / n_total).ln() + c.score(&self.model, test, r));
-            }
+            self.shard
+                .score_against_all(&self.model, test, r, n_total, &mut terms);
             terms.push((self.alpha / n_total).ln() + self.model.empty_cluster_loglik());
             acc += logsumexp(&terms);
         }
@@ -295,7 +226,7 @@ impl<'a> SerialGibbs<'a> {
         let n = self.data.rows() as f64;
         let j = self.num_clusters() as f64;
         let mut lp = lgamma(self.alpha) - lgamma(self.alpha + n) + j * self.alpha.ln();
-        for c in self.clusters.iter().flatten() {
+        for c in self.shard.clusters() {
             lp += lgamma(c.n() as f64); // Γ(n_j) = (n_j−1)!
             lp += c.log_marginal(&self.model);
         }
@@ -305,36 +236,10 @@ impl<'a> SerialGibbs<'a> {
     /// Internal consistency check: every cluster's stats equal the sum of
     /// its members' bits, all counts match. Test/debug aid.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut rebuilt: Vec<ClusterStats> = self
-            .clusters
-            .iter()
-            .map(|_| ClusterStats::empty(self.data.dims()))
-            .collect();
-        for (r, &zr) in self.z.iter().enumerate() {
-            let slot = zr as usize;
-            if slot >= self.clusters.len() || self.clusters[slot].is_none() {
-                return Err(format!("datum {r} assigned to dead slot {slot}"));
-            }
-            rebuilt[slot].add(self.data, r);
+        if self.shard.num_rows() != self.data.rows() {
+            return Err("serial shard must own every data row".into());
         }
-        for (slot, c) in self.clusters.iter().enumerate() {
-            if let Some(c) = c {
-                if c.n() != rebuilt[slot].n() {
-                    return Err(format!(
-                        "slot {slot}: n {} != rebuilt {}",
-                        c.n(),
-                        rebuilt[slot].n()
-                    ));
-                }
-                if c.ones() != rebuilt[slot].ones() {
-                    return Err(format!("slot {slot}: ones mismatch"));
-                }
-                if c.is_empty() {
-                    return Err(format!("slot {slot}: empty but not freed"));
-                }
-            }
-        }
-        Ok(())
+        self.shard.check_invariants(self.data)
     }
 }
 
@@ -381,6 +286,23 @@ mod tests {
     }
 
     #[test]
+    fn walker_kernel_runs_in_the_serial_chain() {
+        let ds = small_dataset(2);
+        let mut rng = Pcg64::seed_from(17);
+        let cfg = SerialConfig {
+            kernel: KernelKind::WalkerSlice,
+            ..Default::default()
+        };
+        let mut g = SerialGibbs::init_from_prior(&ds.train, cfg, &mut rng);
+        for _ in 0..20 {
+            g.sweep(&mut rng);
+            g.check_invariants().unwrap();
+        }
+        let j = g.num_clusters();
+        assert!((2..=16).contains(&j), "Walker-serial found {j} clusters");
+    }
+
+    #[test]
     fn predictive_loglik_converges_to_true_entropy() {
         // prior init (the paper's §5 choice — single-site Gibbs nucleates
         // new clusters too slowly from a fully-merged start)
@@ -412,7 +334,7 @@ mod tests {
         // mode that motivates prior initialization)
         let ds = small_dataset(3);
         let mut rng = Pcg64::seed_from(4);
-        let mut g = SerialGibbs::init_single_cluster(&ds.train, SerialConfig::default());
+        let mut g = SerialGibbs::init_single_cluster(&ds.train, SerialConfig::default(), &mut rng);
         for _ in 0..5 {
             g.sweep(&mut rng);
             g.check_invariants().unwrap();
@@ -423,7 +345,8 @@ mod tests {
     #[test]
     fn single_cluster_init_counts() {
         let ds = small_dataset(4);
-        let g = SerialGibbs::init_single_cluster(&ds.train, SerialConfig::default());
+        let mut rng = Pcg64::seed_from(9);
+        let g = SerialGibbs::init_single_cluster(&ds.train, SerialConfig::default(), &mut rng);
         assert_eq!(g.num_clusters(), 1);
         g.check_invariants().unwrap();
         let (_, c) = g.active_clusters().next().unwrap();

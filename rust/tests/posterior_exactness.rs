@@ -110,8 +110,7 @@ fn tv_distance(truth: &HashMap<Vec<u8>, f64>, counts: &HashMap<Vec<u8>, u64>, to
     tv / 2.0
 }
 
-#[test]
-fn serial_gibbs_matches_enumerated_posterior() {
+fn serial_tv(kernel: clustercluster::sampler::KernelKind, seed: u64) -> f64 {
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);
@@ -121,9 +120,10 @@ fn serial_gibbs_matches_enumerated_posterior() {
         init_beta: BETA,
         update_alpha: false,
         update_beta: false,
+        kernel,
         ..Default::default()
     };
-    let mut rng = Pcg64::seed_from(11);
+    let mut rng = Pcg64::seed_from(seed);
     let mut g = SerialGibbs::init_from_prior(&data, cfg, &mut rng);
     let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
     let burn = 2_000;
@@ -134,8 +134,21 @@ fn serial_gibbs_matches_enumerated_posterior() {
             *counts.entry(canonical(g.assignments())).or_default() += 1;
         }
     }
-    let tv = tv_distance(&truth, &counts, samples);
+    tv_distance(&truth, &counts, samples)
+}
+
+#[test]
+fn serial_gibbs_matches_enumerated_posterior() {
+    let tv = serial_tv(clustercluster::sampler::KernelKind::CollapsedGibbs, 11);
     assert!(tv < 0.05, "serial TV distance {tv} too large");
+}
+
+#[test]
+fn serial_walker_matches_enumerated_posterior() {
+    // the same WalkerSlice kernel object that the coordinator dispatches
+    // must also be exact when driven by the serial entry point
+    let tv = serial_tv(clustercluster::sampler::KernelKind::WalkerSlice, 12);
+    assert!(tv < 0.05, "serial Walker TV distance {tv} too large");
 }
 
 fn coordinator_tv_kernel(

@@ -10,6 +10,7 @@ use clustercluster::mapreduce::CommModel;
 use clustercluster::model::{BetaBernoulli, ClusterStats};
 use clustercluster::rng::{dirichlet, Pcg64};
 use clustercluster::runtime::{FallbackScorer, Scorer};
+use clustercluster::sampler::{ClusterSet, KernelKind, Shard};
 use clustercluster::special::logsumexp;
 use clustercluster::supercluster::{
     log_prior_eq4, log_prior_eq5, shuffle_log_conditional, two_stage_crp_prior, ShuffleKernel,
@@ -275,6 +276,203 @@ fn prop_predictive_density_agrees_native_vs_scorer() {
             } else {
                 Err(format!("scorer {via_scorer} vs native {native}"))
             }
+        },
+    );
+}
+
+#[test]
+fn prop_cluster_set_slot_reuse_and_compaction() {
+    // randomized add/remove sequences against a reference membership
+    // model: slot bookkeeping stays exact, freed slots are reused before
+    // the store grows, and the slot vector never exceeds the peak number
+    // of concurrently-live clusters
+    check(
+        "cluster-set slot machine",
+        20,
+        9,
+        |rng| {
+            let d = 1 + rng.next_below(40) as usize;
+            let n = 5 + rng.next_below(60) as usize;
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.4 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            (m, rng.next_u64())
+        },
+        |(m, seed)| {
+            let mut rng = Pcg64::seed_from(*seed);
+            let mut cs = ClusterSet::new(m.dims());
+            let mut members: Vec<Vec<usize>> = Vec::new(); // reference: slot -> rows
+            let mut live: Vec<usize> = Vec::new();
+            let mut peak_live = 0usize;
+            for step in 0..400 {
+                let grow = live.is_empty() || rng.next_f64() < 0.55;
+                if grow {
+                    let r = rng.next_below(m.rows() as u64) as usize;
+                    let slot = if live.is_empty() || rng.next_f64() < 0.3 {
+                        let s = cs.alloc_empty();
+                        if members.len() <= s {
+                            members.resize(s + 1, Vec::new());
+                        }
+                        if !members[s].is_empty() {
+                            return Err(format!(
+                                "step {step}: allocator handed out slot {s} that still has members"
+                            ));
+                        }
+                        live.push(s);
+                        s
+                    } else {
+                        live[rng.next_below(live.len() as u64) as usize]
+                    };
+                    cs.add_row(slot, m, r);
+                    members[slot].push(r);
+                } else {
+                    let li = rng.next_below(live.len() as u64) as usize;
+                    let slot = live[li];
+                    let mi = rng.next_below(members[slot].len() as u64) as usize;
+                    let r = members[slot].swap_remove(mi);
+                    cs.remove_row(slot, m, r);
+                    if members[slot].is_empty() {
+                        live.swap_remove(li);
+                    }
+                }
+                peak_live = peak_live.max(live.len());
+                cs.check_slot_invariants()
+                    .map_err(|e| format!("step {step}: {e}"))?;
+                if cs.num_active() != live.len() {
+                    return Err(format!(
+                        "step {step}: {} active vs reference {}",
+                        cs.num_active(),
+                        live.len()
+                    ));
+                }
+                if cs.num_slots() > peak_live {
+                    return Err(format!(
+                        "step {step}: {} slots exceeds peak {} live clusters — free-slot reuse broken",
+                        cs.num_slots(),
+                        peak_live
+                    ));
+                }
+                if cs.num_slots() - cs.num_active() != cs.num_free() {
+                    return Err(format!("step {step}: free-list length inconsistent"));
+                }
+            }
+            // surviving stats match the reference memberships exactly
+            for &slot in &live {
+                let c = cs.get(slot).ok_or_else(|| format!("live slot {slot} missing"))?;
+                if c.n() as usize != members[slot].len() {
+                    return Err(format!(
+                        "slot {slot}: n={} vs reference {}",
+                        c.n(),
+                        members[slot].len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cluster_set_keep_slot_then_compact() {
+    // the Walker-sweep protocol: remove_row_keep_slot may leave empty
+    // live slots mid-sweep; compact_free_slots must restore the full
+    // invariant and free exactly the emptied slots
+    check(
+        "keep-slot + compaction",
+        20,
+        11,
+        |rng| {
+            let d = 1 + rng.next_below(16) as usize;
+            let n = 4 + rng.next_below(30) as usize;
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.5 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            let k = 1 + rng.next_below(6) as usize;
+            (m, k, rng.next_u64())
+        },
+        |(m, k, seed)| {
+            let mut rng = Pcg64::seed_from(*seed);
+            let mut cs = ClusterSet::new(m.dims());
+            let mut slot_of = vec![0usize; m.rows()];
+            for r in 0..m.rows() {
+                let s = (rng.next_below(*k as u64) as usize).min(cs.num_slots());
+                let slot = if s == cs.num_slots() { cs.alloc_empty() } else { s };
+                cs.add_row(slot, m, r);
+                slot_of[r] = slot;
+            }
+            let before_active = cs.num_active();
+            // empty some clusters via keep-slot removal
+            let victim = rng.next_below(cs.num_slots() as u64) as usize;
+            let mut emptied = 0usize;
+            if cs.get(victim).is_some() {
+                for r in 0..m.rows() {
+                    if slot_of[r] == victim {
+                        cs.remove_row_keep_slot(victim, m, r);
+                    }
+                }
+                emptied = 1;
+            }
+            cs.compact_free_slots();
+            cs.check_slot_invariants()?;
+            if cs.num_active() != before_active - emptied {
+                return Err(format!(
+                    "active {} after emptying {emptied} of {before_active}",
+                    cs.num_active()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_kernel_interleaving_preserves_invariants() {
+    // arbitrary interleavings of the two kernels on one shard keep the
+    // full data/stats/slot invariants — the kernels share one state
+    // contract, so they must compose
+    check(
+        "shard kernel interleaving",
+        6,
+        12,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let ds = SyntheticConfig {
+                n: 80 + (seed % 60) as usize,
+                d: 12,
+                clusters: 3,
+                beta: 0.2,
+                seed,
+            }
+            .generate_with_test_fraction(0.0);
+            let mut model = clustercluster::model::BetaBernoulli::symmetric(12, 0.5);
+            model.build_lut(ds.train.rows() + 1);
+            let rows: Vec<usize> = (0..ds.train.rows()).collect();
+            let mut sh = Shard::init_from_prior(&ds.train, rows, 1.2, Pcg64::seed_from(seed));
+            let mut pick = Pcg64::seed_from(seed ^ 0xfeed);
+            for step in 0..8 {
+                let kind = if pick.next_f64() < 0.5 {
+                    KernelKind::CollapsedGibbs
+                } else {
+                    KernelKind::WalkerSlice
+                };
+                kind.kernel().sweep(&mut sh, &ds.train, &model);
+                sh.check_invariants(&ds.train)
+                    .map_err(|e| format!("step {step} ({kind:?}): {e}"))?;
+                if sh.num_rows() != ds.train.rows() {
+                    return Err(format!("step {step}: rows not conserved"));
+                }
+            }
+            Ok(())
         },
     );
 }
