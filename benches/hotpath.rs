@@ -4,6 +4,9 @@
 //!   the compiled (256, 256, 512) shape;
 //! * per-datum Gibbs scan throughput (rows/s), with the cached-table vs
 //!   uncached-scoring ablation (DESIGN.md §9);
+//! * full-sweep dispatch comparison: scalar candidate scoring vs the
+//!   batched `Scorer::score_rows_against_clusters` path (the acceptance
+//!   gate: batched must not be slower on the synthetic workload);
 //! * coordinator phase split (map / reduce / shuffle shares).
 
 use clustercluster::bench::{bench, FigureEmitter};
@@ -13,7 +16,8 @@ use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
 use clustercluster::model::{BetaBernoulli, ClusterStats};
 use clustercluster::rng::Pcg64;
-use clustercluster::runtime::{FallbackScorer, PjrtScorer, Scorer};
+use clustercluster::runtime::{FallbackScorer, PjrtScorer, Scorer, ScorerKind};
+use clustercluster::sampler::{KernelKind, ScoreMode, Shard};
 use std::path::Path;
 
 fn rand_problem(n: usize, d: usize, j: usize, seed: u64) -> (BinMat, Vec<f32>, Vec<f32>) {
@@ -103,6 +107,41 @@ fn main() {
         ("uncached_rows_per_s", rows / ru.mean_s),
         ("cache_speedup", ru.mean_s / rc.mean_s),
     ]);
+
+    // --- full-sweep dispatch: scalar vs batched candidate scoring ---
+    let ds3 = SyntheticConfig {
+        n: 2_000,
+        d: 64,
+        clusters: 16,
+        beta: 0.1,
+        seed: 4,
+    }
+    .generate_with_test_fraction(0.0);
+    let mut model3 = BetaBernoulli::symmetric(64, 0.5);
+    model3.build_lut(ds3.train.rows() + 1);
+    let make_shard = |mode: ScoreMode| {
+        let rows: Vec<usize> = (0..ds3.train.rows()).collect();
+        let mut sh = Shard::init_from_prior(&ds3.train, rows, 8.0, Pcg64::seed_from(9));
+        sh.set_score_mode(mode);
+        sh
+    };
+    let rows3 = ds3.train.rows() as f64;
+    for kind in [KernelKind::CollapsedGibbs, KernelKind::WalkerSlice] {
+        let kernel = kind.kernel();
+        let mut scalar_sh = make_shard(ScoreMode::Scalar);
+        let r_scalar = bench(&format!("sweep scalar  2000x64 {}", kernel.name()), 2, 10, || {
+            kernel.sweep(&mut scalar_sh, &ds3.train, &model3);
+        });
+        let mut batched_sh = make_shard(ScoreMode::Batched(ScorerKind::Fallback));
+        let r_batched = bench(&format!("sweep batched 2000x64 {}", kernel.name()), 2, 10, || {
+            kernel.sweep(&mut batched_sh, &ds3.train, &model3);
+        });
+        fig.row(&[
+            ("sweep_scalar_rows_per_s", rows3 / r_scalar.mean_s),
+            ("sweep_batched_rows_per_s", rows3 / r_batched.mean_s),
+            ("batched_vs_scalar", r_scalar.mean_s / r_batched.mean_s),
+        ]);
+    }
 
     // --- full coordinator round phase split ---
     let ds2 = SyntheticConfig {

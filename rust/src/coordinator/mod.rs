@@ -28,8 +28,7 @@ use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::BetaBernoulli;
 use crate::rng::Pcg64;
 use crate::runtime::Scorer;
-use crate::sampler::Shard;
-use crate::special::logsumexp;
+use crate::sampler::{ScoreMode, Shard};
 use crate::supercluster::{sample_shuffle, ShuffleKernel};
 use crate::util::timer::PhaseTimer;
 use std::time::Instant;
@@ -69,6 +68,9 @@ pub struct CoordinatorConfig {
     /// per-supercluster transition operator (paper §4: any standard DPM
     /// kernel applies unmodified — Neal Alg. 3 or Walker slice)
     pub local_kernel: LocalKernel,
+    /// candidate-cluster scoring dispatch inside the map-step sweeps
+    /// (`--scorer auto|fallback|pjrt`; one scorer instance per shard)
+    pub scoring: ScoreMode,
     pub comm: CommModel,
     /// host threads for the map step (0 = one per available core)
     pub parallelism: usize,
@@ -89,6 +91,7 @@ impl Default for CoordinatorConfig {
             shuffle_kernel: ShuffleKernel::Exact,
             mu_mode: MuMode::Uniform,
             local_kernel: LocalKernel::CollapsedGibbs,
+            scoring: ScoreMode::default(),
             comm: CommModel::default(),
             parallelism: 1,
         }
@@ -144,7 +147,10 @@ impl<'a> Coordinator<'a> {
             .enumerate()
             .map(|(kk, rows)| {
                 let worker_rng = rng.split(kk as u64);
-                Shard::init_from_prior(data, rows, cfg.init_alpha * mu[kk], worker_rng)
+                let mut st =
+                    Shard::init_from_prior(data, rows, cfg.init_alpha * mu[kk], worker_rng);
+                st.set_score_mode(cfg.scoring);
+                st
             })
             .collect();
 
@@ -307,8 +313,12 @@ impl<'a> Coordinator<'a> {
         &self.states
     }
 
-    /// Replace the shard states (checkpoint resume).
-    pub(crate) fn replace_states(&mut self, states: Vec<Shard>) {
+    /// Replace the shard states (checkpoint resume); the configured
+    /// scoring dispatch is re-applied to the incoming shards.
+    pub(crate) fn replace_states(&mut self, mut states: Vec<Shard>) {
+        for st in &mut states {
+            st.set_score_mode(self.cfg.scoring);
+        }
         self.states = states;
     }
 
@@ -330,26 +340,31 @@ impl<'a> Coordinator<'a> {
 
     /// Mean test-set predictive log-likelihood per datum, computed through
     /// a [`Scorer`] (the PJRT artifact on the production path; the pure-
-    /// Rust fallback in tests).
+    /// Rust fallback in tests). The packed `[D, J]` weight matrices are
+    /// exported per shard by [`crate::sampler::ClusterSet`] — the same
+    /// layout the sweep-side batched path scores through.
     pub fn predictive_loglik(&self, test: &BinMat, scorer: &mut dyn Scorer) -> f64 {
-        let clusters = self.global_clusters();
         let n_total = self.data.rows() as f64 + self.alpha;
-        let j = clusters.len();
+        let j: usize = self.states.iter().map(|s| s.num_clusters()).sum();
         let d = self.model.d;
         // weight matrices [D, J+1]: J extant clusters + the fresh cluster
         let jj = j + 1;
         let mut w1 = vec![0.0f32; d * jj];
         let mut w0 = vec![0.0f32; d * jj];
         let mut logpi = vec![0.0f32; jj];
-        let mut p1 = vec![0.0f32; d];
-        for (ji, c) in clusters.iter().enumerate() {
-            c.predictive_p1(&self.model, &mut p1);
-            for dd in 0..d {
-                w1[dd * jj + ji] = p1[dd].ln();
-                w0[dd * jj + ji] = (1.0 - p1[dd]).ln();
-            }
-            logpi[ji] = ((c.n() as f64 / n_total).ln()) as f32;
+        let mut col = 0usize;
+        for st in &self.states {
+            col = st.cluster_set().export_weight_columns(
+                &self.model,
+                n_total,
+                &mut w1,
+                &mut w0,
+                &mut logpi,
+                jj,
+                col,
+            );
         }
+        debug_assert_eq!(col, j);
         // fresh cluster: predictive coin 1/2 in every dim
         let half = 0.5f32.ln();
         for dd in 0..d {
@@ -397,24 +412,5 @@ impl<'a> Coordinator<'a> {
             return Err(format!("row {r} owned by no supercluster"));
         }
         Ok(())
-    }
-
-    /// Native (non-Scorer) predictive log-lik — small helper for tests
-    /// and for environments without artifacts.
-    pub fn predictive_loglik_native(&mut self, test: &BinMat) -> f64 {
-        let n_total = self.data.rows() as f64 + self.alpha;
-        let model = self.model.clone();
-        let alpha = self.alpha;
-        let mut terms: Vec<f64> = Vec::new();
-        let mut acc = 0.0;
-        for r in 0..test.rows() {
-            terms.clear();
-            for st in &mut self.states {
-                st.score_against_all(&model, test, r, n_total, &mut terms);
-            }
-            terms.push((alpha / n_total).ln() + model.empty_cluster_loglik());
-            acc += logsumexp(&terms);
-        }
-        acc / test.rows() as f64
     }
 }

@@ -68,7 +68,7 @@ pub mod prelude {
     pub use crate::data::synthetic::{Dataset, SyntheticConfig};
     pub use crate::model::{BetaBernoulli, ClusterStats};
     pub use crate::rng::Pcg64;
-    pub use crate::runtime::{FallbackScorer, Scorer};
-    pub use crate::sampler::{ClusterSet, KernelKind, Shard, TransitionKernel};
+    pub use crate::runtime::{FallbackScorer, Scorer, ScorerKind};
+    pub use crate::sampler::{ClusterSet, KernelKind, ScoreMode, Shard, TransitionKernel};
     pub use crate::serial::SerialGibbs;
 }

@@ -15,7 +15,8 @@ use clustercluster::data::tinyimages::{generate as gen_tiny, TinyImagesConfig};
 use clustercluster::mapreduce::CommModel;
 use clustercluster::metrics::trace::{McmcTrace, TraceRow};
 use clustercluster::rng::Pcg64;
-use clustercluster::runtime::auto_scorer;
+use clustercluster::runtime::ScorerKind;
+use clustercluster::sampler::ScoreMode;
 use clustercluster::serial::{SerialConfig, SerialGibbs};
 use clustercluster::supercluster::ShuffleKernel;
 use std::path::Path;
@@ -28,11 +29,12 @@ USAGE: repro <command> [--flag value]...
 COMMANDS
   gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
   serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--local-kernel gibbs|walker]
-               [--update-beta] [--trace out.csv]
+               [--scorer auto|fallback|pjrt] [--update-beta] [--trace out.csv]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
                [--local-sweeps 1] [--no-shuffle] [--eq7] [--local-kernel gibbs|walker]
-               [--update-beta] [--latency 2.0] [--bandwidth 1e8] [--trace out.csv]
-               [--threads 1] [--checkpoint state.ccckpt]
+               [--scorer auto|fallback|pjrt] [--update-beta] [--latency 2.0]
+               [--bandwidth 1e8] [--trace out.csv] [--threads 1]
+               [--checkpoint state.ccckpt]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
 
@@ -40,6 +42,11 @@ Both samplers run the same pluggable per-shard transition kernel
 (--local-kernel): \"gibbs\" = Neal (2000) Alg. 3 collapsed Gibbs,
 \"walker\" = Walker (2007) slice sampling. (--walker is accepted as a
 legacy spelling of --local-kernel walker.)
+
+--scorer picks the batched scoring backend the kernel sweeps (and
+trace-time evaluation) run through: \"auto\" = PJRT artifacts when
+loadable, pure-Rust fallback otherwise; \"fallback\" = always pure
+Rust; \"pjrt\" = artifacts required (errors when unavailable).
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
@@ -53,6 +60,15 @@ fn kernel_arg(args: &Args) -> Result<LocalKernel, String> {
         None if args.has("walker") => Ok(LocalKernel::WalkerSlice),
         None => Ok(LocalKernel::CollapsedGibbs),
     }
+}
+
+/// Shared `--scorer` parsing for both entry points. An explicit
+/// `--scorer pjrt` is validated up front so the run fails before any
+/// sampling when the backend is unavailable.
+fn scorer_arg(args: &Args) -> Result<ScorerKind, String> {
+    let kind = ScorerKind::parse(&args.get_str("scorer", "auto"))?;
+    kind.try_build().map_err(|e| format!("--scorer {}: {e}", kind.name()))?;
+    Ok(kind)
 }
 
 fn main() {
@@ -115,19 +131,22 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
     let sweeps = args.get_usize("sweeps", 50)?;
     let ds = cfg.generate();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xc0ffee);
+    let scorer_kind = scorer_arg(args)?;
     let scfg = SerialConfig {
         update_beta: args.has("update-beta"),
         kernel: kernel_arg(args)?,
+        scoring: ScoreMode::Batched(scorer_kind),
         ..Default::default()
     };
     let mut g = SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng);
     let h = ds.true_entropy_estimate();
     println!(
-        "serial baseline: N={} D={} true J={} kernel={} (H≈{h:.3})",
+        "serial baseline: N={} D={} true J={} kernel={} scorer={} (H≈{h:.3})",
         cfg.n,
         cfg.d,
         cfg.clusters,
-        scfg.kernel.name()
+        scfg.kernel.name(),
+        scfg.scoring.name()
     );
     let mut trace = McmcTrace::new("serial");
     let t0 = std::time::Instant::now();
@@ -172,6 +191,7 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
             ShuffleKernel::Exact
         },
         local_kernel: kernel_arg(args)?,
+        scoring: ScoreMode::Batched(scorer_arg(args)?),
         comm: CommModel {
             round_latency_s: args.get_f64("latency", 2.0)?,
             per_worker_latency_s: args.get_f64("worker-latency", 0.05)?,
@@ -190,7 +210,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let h = ds.true_entropy_estimate();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
     let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng);
-    let mut scorer = auto_scorer();
+    // trace-time predictive evaluation runs through the same backend
+    // selection as the sweep path
+    let mut scorer = scorer_arg(args)?.try_build()?;
     println!(
         "parallel sampler: N={} D={} true J={} | K={} workers, {} local sweeps/round, kernel={}, scorer={} (H≈{h:.3})",
         cfg.n,

@@ -278,6 +278,17 @@ impl ClusterStats {
         self.cache_valid = false;
     }
 
+    /// The cached predictive table `(bias, diff)` for the current counts
+    /// and hyperparameters, rebuilding it first if stale. This is what
+    /// the batched sweep path copies into its packed `[D, J]` columns,
+    /// so batched and scalar scoring read the *same* table bits.
+    pub fn cached_table(&mut self, model: &BetaBernoulli) -> (f64, &[f64]) {
+        if !self.cache_valid {
+            self.rebuild_cache(model);
+        }
+        (self.cache_bias, &self.cache_diff)
+    }
+
     /// Log predictive likelihood of row `r` under this cluster
     /// (collapsed): `Σ_d log p̂(x_d)`. Uses the cached table — O(#ones)
     /// after an O(D) rebuild.

@@ -17,6 +17,15 @@
 //! [`FallbackScorer`] is the pure-Rust implementation of the identical
 //! contract — used when artifacts are absent and as the cross-check
 //! oracle in integration tests.
+//!
+//! Besides trace-time evaluation ([`Scorer::predictive_density`] /
+//! [`Scorer::loglik_matrix`]), the trait carries the sweep-side entry
+//! point [`Scorer::score_rows_against_clusters`]: the kernel hot loop
+//! packs each shard's cached predictive tables into the `[D, J]` layout
+//! and scores a datum's whole candidate set in one batched call, so a
+//! PJRT artifact that implements the entry point accelerates the map
+//! step itself with zero kernel changes. [`ScorerKind`] is the backend
+//! selector both CLI entry points expose as `--scorer`.
 
 pub mod pjrt;
 
@@ -30,7 +39,11 @@ pub use pjrt::PjrtScorer;
 ///
 /// Weight layout: `w1[d * j_total + j] = ln p̂(x_d = 1 | cluster j)`,
 /// row-major `[D, J]`; `logpi[j]` = log mixture weight.
-pub trait Scorer {
+///
+/// Implementations must be `Send`: the kernel sweep path owns one scorer
+/// per [`crate::sampler::Shard`], and shards migrate across the
+/// coordinator's map-step worker threads.
+pub trait Scorer: Send {
     /// Per-row log predictive density `ln Σ_j exp(S[r,j] + logpi[j])`.
     fn predictive_density(
         &mut self,
@@ -52,8 +65,128 @@ pub trait Scorer {
         j: usize,
     ) -> Vec<f32>;
 
+    /// Sweep-side batched scoring: the log-likelihood block of the given
+    /// data `rows` against `j` packed cluster columns. `out` is CLEARED
+    /// and refilled row-major `[rows.len(), j]` — implementations must
+    /// not append (callers reuse one buffer across data and index the
+    /// first `j` entries per row).
+    ///
+    /// The weights arrive pre-reduced to the bit-sparse form of the
+    /// `[D, J]` contract (`bias = colsum(W0)`, `diff = W1 − W0`, both
+    /// f64 so the block is bit-identical to the scalar per-cluster
+    /// path), and the block is evaluated by the same identity
+    /// [`Self::loglik_matrix`] uses:
+    /// `S[r, s] = bias[s] + Σ_{dd < d: x_{r,dd}=1} diff[dd*j + s]`.
+    ///
+    /// Padding contract (property-tested in
+    /// `rust/tests/scorer_equivalence.rs`): padded dims carry
+    /// `diff = 0`/`bias += 0` (exact no-op), padded/dead columns are
+    /// simply never read by the caller, padded rows never perturb real
+    /// rows (each row's block is independent).
+    ///
+    /// The default implementation is the pure-Rust evaluation every
+    /// scorer starts from; a PJRT-backed scorer overrides it with
+    /// artifact execution without any kernel change.
+    #[allow(clippy::too_many_arguments)] // mirrors the artifact ABI
+    fn score_rows_against_clusters(
+        &mut self,
+        data: &BinMat,
+        rows: &[usize],
+        bias: &[f64],
+        diff: &[f64],
+        d: usize,
+        j: usize,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(bias.len(), j);
+        assert_eq!(diff.len(), d * j);
+        out.clear();
+        out.reserve(rows.len() * j);
+        for &r in rows {
+            let start = out.len();
+            out.extend_from_slice(bias);
+            let block = &mut out[start..];
+            data.for_each_one(r, |dd| {
+                if dd < d {
+                    let drow = &diff[dd * j..(dd + 1) * j];
+                    for (b, &x) in block.iter_mut().zip(drow) {
+                        *b += x;
+                    }
+                }
+            });
+        }
+    }
+
     /// Implementation name for logs/benches.
     fn name(&self) -> &'static str;
+}
+
+/// Scorer backend selector — what `--scorer auto|fallback|pjrt` parses
+/// into on both CLI entry points, and what the sweep-side
+/// [`crate::sampler::ScoreMode::Batched`] carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScorerKind {
+    /// PJRT artifacts when loadable, pure-Rust fallback otherwise.
+    #[default]
+    Auto,
+    /// Always the pure-Rust [`FallbackScorer`].
+    Fallback,
+    /// PJRT artifacts, failing loudly when the backend is unavailable.
+    Pjrt,
+}
+
+impl ScorerKind {
+    /// Parse a `--scorer` value.
+    pub fn parse(s: &str) -> Result<ScorerKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(ScorerKind::Auto),
+            "fallback" | "rust" => Ok(ScorerKind::Fallback),
+            "pjrt" => Ok(ScorerKind::Pjrt),
+            other => Err(format!(
+                "unknown scorer {other:?} (expected \"auto\", \"fallback\" or \"pjrt\")"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScorerKind::Auto => "auto",
+            ScorerKind::Fallback => "fallback",
+            ScorerKind::Pjrt => "pjrt",
+        }
+    }
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::PathBuf::from(
+            std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+        )
+    }
+
+    /// Materialize the scorer this selector names. `Pjrt` errors when the
+    /// backend is unavailable — the CLI entry points call this so an
+    /// explicit `--scorer pjrt` fails up front, not mid-chain.
+    pub fn try_build(self) -> Result<Box<dyn Scorer>, String> {
+        match self {
+            ScorerKind::Fallback => Ok(Box::new(FallbackScorer::new())),
+            ScorerKind::Pjrt => PjrtScorer::load(&Self::artifacts_dir())
+                .map(|s| Box::new(s) as Box<dyn Scorer>)
+                .map_err(|e| e.to_string()),
+            ScorerKind::Auto => Ok(PjrtScorer::load(&Self::artifacts_dir())
+                .map(|s| Box::new(s) as Box<dyn Scorer>)
+                .unwrap_or_else(|_| Box::new(FallbackScorer::new()))),
+        }
+    }
+
+    /// Materialize with best-effort degradation: an unavailable backend
+    /// warns and serves the fallback. This is the library-side path (a
+    /// running chain must not die because artifacts moved); strict
+    /// callers use [`Self::try_build`].
+    pub fn build_or_fallback(self) -> Box<dyn Scorer> {
+        self.try_build().unwrap_or_else(|e| {
+            eprintln!("[runtime] scorer {:?}: {e}; using pure-Rust fallback", self.name());
+            Box::new(FallbackScorer::new())
+        })
+    }
 }
 
 /// Pure-Rust scorer: same contract as the artifacts, no PJRT. Uses the
@@ -170,11 +303,12 @@ impl Scorer for FallbackScorer {
 }
 
 /// Best-available scorer: PJRT artifacts if present (CC_ARTIFACTS env or
-/// ./artifacts), pure-Rust fallback otherwise.
+/// ./artifacts), pure-Rust fallback otherwise. Same resolution policy as
+/// `--scorer auto` ([`ScorerKind::Auto`]), plus a stderr note when the
+/// backend degrades.
 pub fn auto_scorer() -> Box<dyn Scorer> {
-    let dir = std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
-    match PjrtScorer::load(std::path::Path::new(&dir)) {
-        Ok(s) => Box::new(s),
+    match ScorerKind::Pjrt.try_build() {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("[runtime] artifacts unavailable ({e}); using pure-Rust fallback scorer");
             Box::new(FallbackScorer::new())
@@ -293,5 +427,48 @@ mod tests {
             assert!((padded[r] - base[r]).abs() < 1e-5, "row {r}");
         }
         let _ = (&mut w1, &mut w0, &mut logpi);
+    }
+
+    #[test]
+    fn score_rows_against_clusters_matches_loglik_matrix() {
+        let (m, w1, w0, _) = rand_problem(9, 27, 6, 4);
+        let (d, j) = (27usize, 6usize);
+        // reduce the f32 contract weights to the bit-sparse f64 form
+        let mut bias = vec![0.0f64; j];
+        let mut diff = vec![0.0f64; d * j];
+        for dd in 0..d {
+            for jj in 0..j {
+                bias[jj] += w0[dd * j + jj] as f64;
+                diff[dd * j + jj] = w1[dd * j + jj] as f64 - w0[dd * j + jj] as f64;
+            }
+        }
+        let mut s = FallbackScorer::new();
+        let want = s.loglik_matrix(&m, &w1, &w0, d, j);
+        let rows: Vec<usize> = (0..m.rows()).collect();
+        let mut got = Vec::new();
+        s.score_rows_against_clusters(&m, &rows, &bias, &diff, d, j, &mut got);
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - want[i] as f64).abs() < 1e-3,
+                "idx {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn scorer_kind_parses_and_builds() {
+        assert_eq!(ScorerKind::parse("auto").unwrap(), ScorerKind::Auto);
+        assert_eq!(ScorerKind::parse("Fallback").unwrap(), ScorerKind::Fallback);
+        assert_eq!(ScorerKind::parse("pjrt").unwrap(), ScorerKind::Pjrt);
+        assert!(ScorerKind::parse("gpu").is_err());
+        // offline universe: auto degrades to the fallback silently,
+        // explicit pjrt errors, fallback always builds
+        assert_eq!(ScorerKind::Auto.try_build().unwrap().name(), "fallback");
+        assert_eq!(ScorerKind::Fallback.try_build().unwrap().name(), "fallback");
+        assert!(ScorerKind::Pjrt.try_build().is_err());
+        assert_eq!(ScorerKind::Pjrt.build_or_fallback().name(), "fallback");
     }
 }

@@ -17,6 +17,7 @@
 //!   a Walker sweep, which uses [`ClusterSet::remove_row_keep_slot`] and
 //!   restores the invariant with [`ClusterSet::compact_free_slots`].
 
+use super::score::PackedTables;
 use crate::data::BinMat;
 use crate::model::{BetaBernoulli, ClusterStats};
 
@@ -170,6 +171,62 @@ impl ClusterSet {
             .as_mut()
             .expect("score_slot on dead slot")
             .score(model, data, r)
+    }
+
+    /// Refresh the stale columns of the packed `[D, J]` predictive
+    /// tables from each live cluster's cached table — the export the
+    /// batched sweep dispatch scores through. Only columns whose dirty
+    /// flag is set are re-packed, so the per-datum cost is O(D) per
+    /// changed cluster, not O(D·J).
+    pub(crate) fn refresh_packed(&mut self, model: &BetaBernoulli, tables: &mut PackedTables) {
+        tables.ensure_stride(self.slots.len());
+        let stride = tables.stride;
+        for (slot, c) in self.slots.iter_mut().enumerate() {
+            let c = match c {
+                Some(c) if tables.dirty[slot] => c,
+                _ => continue,
+            };
+            let ln_n = c.log_n();
+            let (bias, dtab) = c.cached_table(model);
+            tables.bias[slot] = bias;
+            tables.logn[slot] = ln_n;
+            for (dd, &v) in dtab.iter().enumerate() {
+                tables.diff[dd * stride + slot] = v;
+            }
+            tables.dirty[slot] = false;
+        }
+    }
+
+    /// Append each live cluster's predictive log-weight column
+    /// (`ln p̂1`, `ln p̂0`) and log mixture mass `ln(n_j / denom)` into
+    /// the packed row-major `[D, stride]` matrices starting at column
+    /// `col` — the f32 `[D, J]` layout the Scorer contract defines.
+    /// Returns the next free column.
+    #[allow(clippy::too_many_arguments)] // mirrors the Scorer weight ABI
+    pub fn export_weight_columns(
+        &self,
+        model: &BetaBernoulli,
+        denom: f64,
+        w1: &mut [f32],
+        w0: &mut [f32],
+        logpi: &mut [f32],
+        stride: usize,
+        mut col: usize,
+    ) -> usize {
+        assert_eq!(w1.len(), self.dims * stride);
+        assert_eq!(w0.len(), self.dims * stride);
+        assert_eq!(logpi.len(), stride);
+        let mut p1 = vec![0.0f32; self.dims];
+        for (_, c) in self.iter() {
+            c.predictive_p1(model, &mut p1);
+            for dd in 0..self.dims {
+                w1[dd * stride + col] = p1[dd].ln();
+                w0[dd * stride + col] = (1.0 - p1[dd]).ln();
+            }
+            logpi[col] = ((c.n() as f64 / denom).ln()) as f32;
+            col += 1;
+        }
+        col
     }
 
     /// Push `(n_j, c_jd)` for every live cluster into `out` (reduce-step

@@ -33,6 +33,13 @@
 //!      eligibility, not the weights). Sticks/slices are discarded after
 //!      the sweep (auxiliary variables).
 //!
+//! Both kernels score a datum's candidate clusters through the shard's
+//! [`crate::sampler::ScoreMode`] dispatch: the scalar per-cluster
+//! reference path, or one
+//! batched [`crate::runtime::Scorer::score_rows_against_clusters`] call
+//! over the shard's packed predictive tables (bit-identical by
+//! construction — see `rust/src/sampler/score.rs`).
+//!
 //! Exactness of both kernels — through both entry points — is certified
 //! by the posterior-enumeration gate in `rust/tests/posterior_exactness.rs`.
 
@@ -65,26 +72,20 @@ impl TransitionKernel for CollapsedGibbs {
     fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli) {
         let log_theta = shard.theta.max(1e-300).ln();
         let empty_ll = model.empty_cluster_loglik();
+        shard.scoring_begin_sweep();
         for i in 0..shard.rows.len() {
             let r = shard.rows[i];
             let old = shard.assign[i] as usize;
             shard.clusters.remove_row(old, data, r);
-            shard.scratch_ids.clear();
-            shard.scratch_logw.clear();
-            // decode the datum's set bits ONCE, score every local
-            // cluster from the same index list
-            shard.scratch_ones.clear();
-            data.for_each_one(r, |d| shard.scratch_ones.push(d as u32));
-            for (slot, c) in shard.clusters.iter_mut() {
-                shard.scratch_ids.push(slot as u32);
-                shard
-                    .scratch_logw
-                    .push(c.log_n() + c.score_ones(model, &shard.scratch_ones));
-            }
+            shard.scoring_mark_dirty(old);
+            // score the whole candidate set through the shard's scoring
+            // dispatch (scalar reference, or one batched Scorer call)
+            shard.score_crp_candidates(data, r, model);
             shard.scratch_ids.push(u32::MAX);
             shard.scratch_logw.push(log_theta + empty_ll);
             let pick = categorical_log_inplace(&mut shard.rng, &mut shard.scratch_logw);
             let slot = shard.place_pick(pick, data, r);
+            shard.scoring_mark_dirty(slot as usize);
             shard.assign[i] = slot;
         }
     }
@@ -174,24 +175,31 @@ impl TransitionKernel for WalkerSlice {
         // cluster, which later data in the same sweep can then join.
         let empty_loglik = model.empty_cluster_loglik();
         let mut cand: Vec<usize> = Vec::new();
+        let mut cand_slots: Vec<u32> = Vec::new();
         let mut logw: Vec<f64> = Vec::new();
+        shard.scoring_begin_sweep();
         for i in 0..n {
             let r = shard.rows[i];
             let old_slot = shard.assign[i] as usize;
             let old_stick = slot_to_stick[old_slot];
             shard.clusters.remove_row_keep_slot(old_slot, data, r);
+            shard.scoring_mark_dirty(old_slot);
 
+            // collect the eligible sticks, then score them through the
+            // shard's dispatch (one batched block per datum)
             cand.clear();
-            logw.clear();
+            cand_slots.clear();
             for (idx, st) in sticks.iter().enumerate() {
                 if st.pi > u[i] {
                     cand.push(idx);
-                    logw.push(match st.slot {
-                        Some(s) => shard.clusters.score_slot(s, model, data, r),
-                        None => empty_loglik,
+                    cand_slots.push(match st.slot {
+                        Some(s) => s as u32,
+                        None => u32::MAX,
                     });
                 }
             }
+            logw.clear();
+            shard.score_slots_for_row(data, r, model, &cand_slots, empty_loglik, &mut logw);
             // float-tail guard: the datum's own stick is eligible by
             // construction, but keep a fallback anyway
             if cand.is_empty() {
@@ -202,11 +210,13 @@ impl TransitionKernel for WalkerSlice {
             match sticks[pick].slot {
                 Some(s) => {
                     shard.clusters.add_row(s, data, r);
+                    shard.scoring_mark_dirty(s);
                     shard.assign[i] = s as u32;
                 }
                 None => {
                     let s = shard.clusters.alloc_empty();
                     shard.clusters.add_row(s, data, r);
+                    shard.scoring_mark_dirty(s);
                     shard.assign[i] = s as u32;
                     sticks[pick].slot = Some(s);
                     if slot_to_stick.len() <= s {

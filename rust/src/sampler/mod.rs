@@ -24,10 +24,20 @@
 //! * K=1 coordinator ≡ serial chain holds *by construction* — asserted
 //!   sweep-by-sweep in `rust/tests/k1_equivalence.rs`.
 
+//!
+//! Candidate-cluster scoring inside a sweep goes through a per-shard
+//! [`ScoreMode`] dispatch (see [`score`]): either the scalar reference
+//! path or the packed batched path through
+//! [`crate::runtime::Scorer::score_rows_against_clusters`] — selected
+//! from both entry points as `--scorer auto|fallback|pjrt` and proven
+//! bit-identical in `rust/tests/scorer_equivalence.rs`.
+
 pub mod cluster_set;
 pub mod kernel;
+pub mod score;
 pub mod shard;
 
 pub use cluster_set::ClusterSet;
 pub use kernel::{CollapsedGibbs, KernelKind, TransitionKernel, WalkerSlice};
+pub use score::ScoreMode;
 pub use shard::Shard;

@@ -1,0 +1,192 @@
+//! Sweep-side scoring dispatch: the scalar reference path vs the packed
+//! batched path through [`crate::runtime::Scorer`].
+//!
+//! Every kernel scores each datum against its candidate clusters. The
+//! **scalar** dispatch walks the live clusters one by one through each
+//! cluster's cached predictive table — the pre-batching hot loop, kept
+//! as the bit-exact reference. The **batched** dispatch maintains the
+//! same cached tables packed column-wise into the `[D, J]` weight layout
+//! of the Scorer contract (`bias[s]`, `diff[d·stride + s]`, `logn[s]`,
+//! one column per `ClusterSet` slot) and scores a datum's whole
+//! candidate set in one [`Scorer::score_rows_against_clusters`] call.
+//!
+//! Two properties make the batched path a drop-in:
+//!
+//! * **Bit-identity.** Columns are copied from the very `ClusterStats`
+//!   cache the scalar path reads, in f64, and the default scorer adds
+//!   the same terms in the same order (`bias`, then `diff[d]` for each
+//!   set bit ascending, then `ln n_j`) — so weights, categorical picks,
+//!   and the RNG stream are *bit-identical* to the scalar path
+//!   (asserted in `rust/tests/scorer_equivalence.rs`).
+//! * **Incremental updates.** Per datum at most two clusters change (the
+//!   one the datum left, the one it joined), so only those columns are
+//!   re-packed (`O(D)` each) and the per-datum table maintenance stays
+//!   `O(J + D)`, not `O(D·J)`. A full re-pack happens once per sweep.
+
+use crate::runtime::{Scorer, ScorerKind};
+
+/// Config-level selector for how a shard scores candidate clusters
+/// inside kernel sweeps (materialized per shard as [`ScoreDispatch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// Per-cluster scalar scoring through the `ClusterStats` cache — the
+    /// pre-batching reference path the equivalence suite pins.
+    Scalar,
+    /// Packed-table scoring through
+    /// [`Scorer::score_rows_against_clusters`], with the named backend.
+    Batched(ScorerKind),
+}
+
+impl Default for ScoreMode {
+    fn default() -> Self {
+        ScoreMode::Batched(ScorerKind::Auto)
+    }
+}
+
+impl ScoreMode {
+    /// Display name for logs/CLI banners.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoreMode::Scalar => "scalar",
+            ScoreMode::Batched(k) => k.name(),
+        }
+    }
+
+    /// Materialize the per-shard dispatch state.
+    pub(crate) fn dispatch(self, dims: usize) -> ScoreDispatch {
+        match self {
+            ScoreMode::Scalar => ScoreDispatch::Scalar,
+            ScoreMode::Batched(kind) => ScoreDispatch::Batched {
+                scorer: kind.build_or_fallback(),
+                tables: PackedTables::new(dims),
+            },
+        }
+    }
+
+    /// The dispatch shard constructors start from: batched via the
+    /// pure-Rust fallback. Unlike [`ScoreMode::default`]'s `Auto`, this
+    /// never probes the filesystem for artifacts — entry points that
+    /// carry a configured [`ScoreMode`] install it right after
+    /// construction via `Shard::set_score_mode`.
+    pub(crate) fn initial_dispatch(dims: usize) -> ScoreDispatch {
+        ScoreMode::Batched(ScorerKind::Fallback).dispatch(dims)
+    }
+}
+
+/// Materialized per-shard scoring state (owned by the shard so the
+/// scorer instance and table allocations travel with it across the
+/// coordinator's map-step worker threads).
+pub(crate) enum ScoreDispatch {
+    Scalar,
+    Batched {
+        scorer: Box<dyn Scorer>,
+        tables: PackedTables,
+    },
+}
+
+impl ScoreDispatch {
+    pub(crate) fn name(&self) -> &'static str {
+        match self {
+            ScoreDispatch::Scalar => "scalar",
+            ScoreDispatch::Batched { scorer, .. } => scorer.name(),
+        }
+    }
+}
+
+/// The packed `[D, J]` predictive tables of one shard: one column per
+/// `ClusterSet` slot (`stride` columns allocated, grown geometrically),
+/// refreshed lazily from the per-cluster caches via the dirty flags.
+/// Dead slots keep stale columns — they are never read.
+pub(crate) struct PackedTables {
+    pub(crate) dims: usize,
+    /// column capacity; always ≥ the cluster store's slot count
+    pub(crate) stride: usize,
+    /// `bias[s]` = Σ_d ln p̂(x_d = 0 | slot s)
+    pub(crate) bias: Vec<f64>,
+    /// `logn[s]` = ln n_s (the CRP prior factor, added *after* the
+    /// likelihood block to match scalar addition order)
+    pub(crate) logn: Vec<f64>,
+    /// `diff[d·stride + s]` = ln p̂(x_d=1|s) − ln p̂(x_d=0|s)
+    pub(crate) diff: Vec<f64>,
+    /// column needs a re-pack before the next batched score
+    pub(crate) dirty: Vec<bool>,
+    /// scratch output of the last batched block (one row × stride)
+    pub(crate) scores: Vec<f64>,
+}
+
+impl PackedTables {
+    pub(crate) fn new(dims: usize) -> PackedTables {
+        PackedTables {
+            dims,
+            stride: 0,
+            bias: Vec::new(),
+            logn: Vec::new(),
+            diff: Vec::new(),
+            dirty: Vec::new(),
+            scores: Vec::new(),
+        }
+    }
+
+    /// Begin-of-sweep hook: size for `nslots` columns and mark every
+    /// column stale (cluster membership may have changed arbitrarily
+    /// between sweeps — shuffle moves, hyper updates, checkpoint resume).
+    pub(crate) fn begin_sweep(&mut self, nslots: usize) {
+        self.ensure_stride(nslots);
+        for f in self.dirty.iter_mut() {
+            *f = true;
+        }
+    }
+
+    /// Grow the column capacity to cover `nslots`, at least doubling so
+    /// mid-sweep slot growth is amortized O(1). Existing columns are
+    /// re-laid out; new columns start dirty.
+    pub(crate) fn ensure_stride(&mut self, nslots: usize) {
+        if nslots <= self.stride {
+            return;
+        }
+        let new_stride = (nslots + 8).max(self.stride * 2);
+        let mut diff = vec![0.0f64; self.dims * new_stride];
+        if self.stride > 0 {
+            for d in 0..self.dims {
+                diff[d * new_stride..d * new_stride + self.stride]
+                    .copy_from_slice(&self.diff[d * self.stride..(d + 1) * self.stride]);
+            }
+        }
+        self.diff = diff;
+        self.bias.resize(new_stride, 0.0);
+        self.logn.resize(new_stride, f64::NEG_INFINITY);
+        self.dirty.resize(new_stride, true);
+        self.stride = new_stride;
+    }
+
+    /// Membership of `slot` changed: stale its column. Slots beyond the
+    /// current capacity are covered by [`Self::ensure_stride`], which
+    /// marks every new column dirty.
+    #[inline]
+    pub(crate) fn mark_dirty(&mut self, slot: usize) {
+        if slot < self.stride {
+            self.dirty[slot] = true;
+        }
+    }
+
+    /// Batched log-likelihood block of data row `r` against every
+    /// column; the result lands in `self.scores[0..stride]`. Columns of
+    /// dead slots hold stale values — callers gather live slots only.
+    pub(crate) fn score_row(
+        &mut self,
+        scorer: &mut dyn Scorer,
+        data: &crate::data::BinMat,
+        r: usize,
+    ) {
+        let rows = [r];
+        scorer.score_rows_against_clusters(
+            data,
+            &rows,
+            &self.bias,
+            &self.diff,
+            self.dims,
+            self.stride,
+            &mut self.scores,
+        );
+    }
+}

@@ -13,6 +13,7 @@
 //! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 use super::cluster_set::ClusterSet;
+use super::score::{ScoreDispatch, ScoreMode};
 use crate::data::BinMat;
 use crate::model::{BetaBernoulli, ClusterStats};
 use crate::rng::{categorical_log, Pcg64};
@@ -29,6 +30,10 @@ pub struct Shard {
     pub(crate) rng: Pcg64,
     /// concentration θ the kernel sweeps with (α serial, α·μ_k parallel)
     pub(crate) theta: f64,
+    /// candidate-cluster scoring dispatch (scalar reference or packed
+    /// batched tables + a Scorer backend); travels with the shard across
+    /// the coordinator's map-step threads
+    pub(crate) scoring: ScoreDispatch,
     // scratch buffers (reused across sweeps; never on the alloc hot path)
     pub(crate) scratch_ids: Vec<u32>,
     pub(crate) scratch_logw: Vec<f64>,
@@ -48,6 +53,7 @@ impl Shard {
             clusters: ClusterSet::new(data.dims()),
             rng,
             theta,
+            scoring: ScoreMode::initial_dispatch(data.dims()),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -89,6 +95,7 @@ impl Shard {
             clusters,
             rng,
             theta,
+            scoring: ScoreMode::initial_dispatch(data.dims()),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -122,6 +129,7 @@ impl Shard {
             clusters: ClusterSet::from_slots(slots, data.dims()),
             rng,
             theta: 0.0,
+            scoring: ScoreMode::initial_dispatch(data.dims()),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -143,6 +151,139 @@ impl Shard {
     /// Set the concentration for subsequent kernel sweeps.
     pub fn set_theta(&mut self, theta: f64) {
         self.theta = theta;
+    }
+
+    /// Select how kernel sweeps score candidate clusters (scalar
+    /// reference vs batched Scorer path). Consumes no randomness, so it
+    /// never perturbs the chain's RNG streams.
+    pub fn set_score_mode(&mut self, mode: ScoreMode) {
+        self.scoring = mode.dispatch(self.clusters.dims());
+    }
+
+    /// Display name of the active scoring dispatch.
+    pub fn score_dispatch_name(&self) -> &'static str {
+        self.scoring.name()
+    }
+
+    /// Begin-of-sweep hook for the scoring dispatch: (re)size the packed
+    /// tables and mark every column stale.
+    pub(crate) fn scoring_begin_sweep(&mut self) {
+        if let ScoreDispatch::Batched { tables, .. } = &mut self.scoring {
+            tables.begin_sweep(self.clusters.num_slots());
+        }
+    }
+
+    /// Membership of `slot` changed: stale its packed column.
+    #[inline]
+    pub(crate) fn scoring_mark_dirty(&mut self, slot: usize) {
+        if let ScoreDispatch::Batched { tables, .. } = &mut self.scoring {
+            tables.mark_dirty(slot);
+        }
+    }
+
+    /// Fill `scratch_ids`/`scratch_logw` with `(slot, ln n_j + ln p(x_r |
+    /// cluster))` for every live cluster in slot order, through the
+    /// configured dispatch. Both scratch vectors are cleared first; the
+    /// kernel appends its own new-table candidate afterwards.
+    pub(crate) fn score_crp_candidates(&mut self, data: &BinMat, r: usize, model: &BetaBernoulli) {
+        self.scratch_ids.clear();
+        self.scratch_logw.clear();
+        match &mut self.scoring {
+            ScoreDispatch::Scalar => {
+                // decode the datum's set bits ONCE, score every local
+                // cluster from the same index list
+                self.scratch_ones.clear();
+                data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
+                for (slot, c) in self.clusters.iter_mut() {
+                    self.scratch_ids.push(slot as u32);
+                    self.scratch_logw
+                        .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
+                }
+            }
+            ScoreDispatch::Batched { scorer, tables } => {
+                // Columns are indexed by slot id and the slot vector
+                // never shrinks, so after a transient cluster peak the
+                // block would keep scoring mostly-dead columns. When
+                // live clusters are a small fraction of a LARGE column
+                // capacity, score them directly from the same caches —
+                // bit-identical values, purely a cost cutover (the size
+                // floor keeps small workloads, and every test regime,
+                // on the block path).
+                if tables.stride > 32 && self.clusters.num_active() * 4 < tables.stride {
+                    self.scratch_ones.clear();
+                    data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
+                    for (slot, c) in self.clusters.iter_mut() {
+                        self.scratch_ids.push(slot as u32);
+                        self.scratch_logw
+                            .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
+                    }
+                    return;
+                }
+                self.clusters.refresh_packed(model, tables);
+                tables.score_row(scorer.as_mut(), data, r);
+                for (slot, _) in self.clusters.iter() {
+                    self.scratch_ids.push(slot as u32);
+                    self.scratch_logw
+                        .push(tables.logn[slot] + tables.scores[slot]);
+                }
+            }
+        }
+    }
+
+    /// Append the log-likelihood of row `r` under each requested slot to
+    /// `out` (`u32::MAX` = an unmaterialized table, scored as
+    /// `empty_loglik`), through the configured dispatch — under the
+    /// batched dispatch this is one block evaluation per call.
+    pub(crate) fn score_slots_for_row(
+        &mut self,
+        data: &BinMat,
+        r: usize,
+        model: &BetaBernoulli,
+        slots: &[u32],
+        empty_loglik: f64,
+        out: &mut Vec<f64>,
+    ) {
+        match &mut self.scoring {
+            ScoreDispatch::Scalar => {
+                for &s in slots {
+                    out.push(if s == u32::MAX {
+                        empty_loglik
+                    } else {
+                        self.clusters.score_slot(s as usize, model, data, r)
+                    });
+                }
+            }
+            ScoreDispatch::Batched { scorer, tables } => {
+                // The dense block pays only when the candidate set is a
+                // decent fraction of the live clusters. Tiny eligible
+                // sets on LARGE shards (Walker's common regime once
+                // slices tighten) score directly from the same
+                // per-cluster caches the block would be packed from —
+                // bit-identical values, purely a cost cutover; the size
+                // floor keeps small workloads, and every test regime,
+                // on the block path.
+                if self.clusters.num_active() > 32 && slots.len() * 4 < self.clusters.num_active()
+                {
+                    for &s in slots {
+                        out.push(if s == u32::MAX {
+                            empty_loglik
+                        } else {
+                            self.clusters.score_slot(s as usize, model, data, r)
+                        });
+                    }
+                    return;
+                }
+                self.clusters.refresh_packed(model, tables);
+                tables.score_row(scorer.as_mut(), data, r);
+                for &s in slots {
+                    out.push(if s == u32::MAX {
+                        empty_loglik
+                    } else {
+                        tables.scores[s as usize]
+                    });
+                }
+            }
+        }
     }
 
     pub fn theta(&self) -> f64 {

@@ -18,7 +18,7 @@ use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::BetaBernoulli;
 use crate::rng::Pcg64;
-use crate::sampler::{KernelKind, Shard};
+use crate::sampler::{KernelKind, ScoreMode, Shard};
 use crate::special::{lgamma, logsumexp};
 use crate::util::timer::PhaseTimer;
 
@@ -36,6 +36,8 @@ pub struct SerialConfig {
     pub update_beta: bool,
     /// per-sweep transition operator (paper §4: any standard DPM kernel)
     pub kernel: KernelKind,
+    /// candidate-cluster scoring dispatch inside sweeps (`--scorer`)
+    pub scoring: ScoreMode,
 }
 
 impl Default for SerialConfig {
@@ -48,6 +50,7 @@ impl Default for SerialConfig {
             update_alpha: true,
             update_beta: false, // β updates are O(D·grid·J) — opt in
             kernel: KernelKind::CollapsedGibbs,
+            scoring: ScoreMode::default(),
         }
     }
 }
@@ -101,12 +104,13 @@ impl<'a> SerialGibbs<'a> {
     pub fn init_from_prior(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
         let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
         model.build_lut(data.rows() + 1); // symmetric-beta fast rebuilds
-        let shard = Shard::init_from_prior(
+        let mut shard = Shard::init_from_prior(
             data,
             (0..data.rows()).collect(),
             cfg.init_alpha,
             rng.split(0),
         );
+        shard.set_score_mode(cfg.scoring);
         SerialGibbs {
             data,
             model,
@@ -124,12 +128,13 @@ impl<'a> SerialGibbs<'a> {
     pub fn init_single_cluster(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
         let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
         model.build_lut(data.rows() + 1);
-        let shard = Shard::init_single_cluster(
+        let mut shard = Shard::init_single_cluster(
             data,
             (0..data.rows()).collect(),
             cfg.init_alpha,
             rng.split(0),
         );
+        shard.set_score_mode(cfg.scoring);
         SerialGibbs {
             data,
             model,

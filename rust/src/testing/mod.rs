@@ -27,6 +27,32 @@ pub fn check<T: std::fmt::Debug>(
     }
 }
 
+/// Exact-f64 predictive-mixture oracle for a coordinator state:
+/// mean over test rows of
+/// `log [ Σ_j (n_j/(N+α)) p(x|j) + (α/(N+α)) p(x|∅) ]`,
+/// computed straight from uncached cluster stats. Shared by the
+/// scorer-equivalence and property suites so both gates assert the
+/// *same* predictive contract against the Scorer trait path.
+pub fn coordinator_predictive_oracle(
+    coord: &crate::coordinator::Coordinator<'_>,
+    test: &crate::data::BinMat,
+) -> f64 {
+    use crate::special::logsumexp;
+    let n: usize = coord.states().iter().map(|s| s.num_rows()).sum();
+    let n_total = n as f64 + coord.alpha();
+    let clusters = coord.global_clusters();
+    let mut acc = 0.0f64;
+    for r in 0..test.rows() {
+        let mut terms: Vec<f64> = clusters
+            .iter()
+            .map(|c| (c.n() as f64 / n_total).ln() + c.score_uncached(&coord.model, test, r))
+            .collect();
+        terms.push((coord.alpha() / n_total).ln() + coord.model.empty_cluster_loglik());
+        acc += logsumexp(&terms);
+    }
+    acc / test.rows() as f64
+}
+
 /// Assert two floats agree to a tolerance, with a labelled error.
 pub fn assert_close(label: &str, got: f64, want: f64, tol: f64) -> Result<(), String> {
     if (got - want).abs() <= tol * want.abs().max(1.0) {

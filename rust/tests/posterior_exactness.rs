@@ -7,6 +7,11 @@
 //! This validates the paper's central claim end-to-end: the auxiliary
 //! supercluster representation leaves the TRUE DPM posterior invariant —
 //! including the `αμ_k` scaling of local CRPs and the cluster shuffle.
+//!
+//! The serial chains run under BOTH sweep-scoring dispatches: the scalar
+//! reference path and the batched `Scorer` path (which is also what the
+//! coordinator runs by default), so the gate certifies the batched
+//! restructuring directly, not only via bit-equivalence.
 
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
 use clustercluster::data::BinMat;
@@ -110,7 +115,11 @@ fn tv_distance(truth: &HashMap<Vec<u8>, f64>, counts: &HashMap<Vec<u8>, u64>, to
     tv / 2.0
 }
 
-fn serial_tv(kernel: clustercluster::sampler::KernelKind, seed: u64) -> f64 {
+fn serial_tv(
+    kernel: clustercluster::sampler::KernelKind,
+    scoring: clustercluster::sampler::ScoreMode,
+    seed: u64,
+) -> f64 {
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);
@@ -121,6 +130,7 @@ fn serial_tv(kernel: clustercluster::sampler::KernelKind, seed: u64) -> f64 {
         update_alpha: false,
         update_beta: false,
         kernel,
+        scoring,
         ..Default::default()
     };
     let mut rng = Pcg64::seed_from(seed);
@@ -139,7 +149,12 @@ fn serial_tv(kernel: clustercluster::sampler::KernelKind, seed: u64) -> f64 {
 
 #[test]
 fn serial_gibbs_matches_enumerated_posterior() {
-    let tv = serial_tv(clustercluster::sampler::KernelKind::CollapsedGibbs, 11);
+    // the pre-batching scalar dispatch, pinned explicitly as the reference
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::CollapsedGibbs,
+        clustercluster::sampler::ScoreMode::Scalar,
+        11,
+    );
     assert!(tv < 0.05, "serial TV distance {tv} too large");
 }
 
@@ -147,8 +162,38 @@ fn serial_gibbs_matches_enumerated_posterior() {
 fn serial_walker_matches_enumerated_posterior() {
     // the same WalkerSlice kernel object that the coordinator dispatches
     // must also be exact when driven by the serial entry point
-    let tv = serial_tv(clustercluster::sampler::KernelKind::WalkerSlice, 12);
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::WalkerSlice,
+        clustercluster::sampler::ScoreMode::Scalar,
+        12,
+    );
     assert!(tv < 0.05, "serial Walker TV distance {tv} too large");
+}
+
+#[test]
+fn serial_gibbs_batched_dispatch_matches_enumerated_posterior() {
+    // the 203-partition gate also certifies the batched Scorer dispatch
+    // (independent seed from the scalar run, so this is not a replay)
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::CollapsedGibbs,
+        clustercluster::sampler::ScoreMode::Batched(
+            clustercluster::runtime::ScorerKind::Fallback,
+        ),
+        13,
+    );
+    assert!(tv < 0.05, "serial batched TV distance {tv} too large");
+}
+
+#[test]
+fn serial_walker_batched_dispatch_matches_enumerated_posterior() {
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::WalkerSlice,
+        clustercluster::sampler::ScoreMode::Batched(
+            clustercluster::runtime::ScorerKind::Fallback,
+        ),
+        14,
+    );
+    assert!(tv < 0.05, "serial Walker batched TV distance {tv} too large");
 }
 
 fn coordinator_tv_kernel(

@@ -242,10 +242,12 @@ fn prop_coordinator_rounds_preserve_data_integrity() {
 }
 
 #[test]
-fn prop_predictive_density_agrees_native_vs_scorer() {
-    // Coordinator's scorer-based predictive equals its native loop
+fn prop_predictive_density_agrees_oracle_vs_scorer() {
+    // The coordinator's Scorer-trait predictive (built on the ClusterSet
+    // packed [D, J] weight export) equals an exact-f64 inline mixture
+    // oracle on random chains.
     check(
-        "native == scorer predictive",
+        "oracle == scorer predictive",
         6,
         7,
         |rng| rng.next_u64(),
@@ -270,11 +272,12 @@ fn prop_predictive_density_agrees_native_vs_scorer() {
             }
             let mut scorer = FallbackScorer::new();
             let via_scorer = coord.predictive_loglik(&ds.test, &mut scorer);
-            let native = coord.predictive_loglik_native(&ds.test);
-            if (via_scorer - native).abs() < 1e-3 {
+            let oracle =
+                clustercluster::testing::coordinator_predictive_oracle(&coord, &ds.test);
+            if (via_scorer - oracle).abs() < 1e-3 {
                 Ok(())
             } else {
-                Err(format!("scorer {via_scorer} vs native {native}"))
+                Err(format!("scorer {via_scorer} vs oracle {oracle}"))
             }
         },
     );

@@ -1,0 +1,415 @@
+//! The scorer-equivalence gate for the batched sweep path.
+//!
+//! Two suites:
+//!
+//! 1. **Bit-identity.** A sweep whose candidate scoring runs through the
+//!    batched `Scorer::score_rows_against_clusters` dispatch must be
+//!    *bit-identical* — same RNG stream, same assignments, same α bits —
+//!    to the pre-refactor scalar per-cluster path, on fixed seeds, for
+//!    both kernels, from both entry points (serial and the K=3
+//!    coordinator with shuffling). The packed tables are copied from the
+//!    same `ClusterStats` caches the scalar path reads and the default
+//!    scorer adds the same f64 terms in the same order, so any
+//!    divergence is a real dispatch bug, not float noise.
+//!
+//! 2. **Padding contract.** Property tests (previously asserted only in
+//!    the Python L1/L2 suites) for the `Scorer` padding rules against
+//!    `FallbackScorer`: padded dims with `W1 = W0 = 0` are an exact
+//!    no-op, padded clusters at `logpi = -1e30` never win the logsumexp,
+//!    padded rows never perturb real rows.
+
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::BinMat;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::{FallbackScorer, Scorer, ScorerKind};
+use clustercluster::sampler::{KernelKind, ScoreMode};
+use clustercluster::serial::{SerialConfig, SerialGibbs};
+use clustercluster::testing::check;
+
+// ---------------------------------------------------------------------
+// 1. scalar vs batched bit-identity
+// ---------------------------------------------------------------------
+
+fn equivalence_dataset(seed: u64) -> clustercluster::data::Dataset {
+    SyntheticConfig {
+        n: 160,
+        d: 16,
+        clusters: 3,
+        beta: 0.15,
+        seed,
+    }
+    .generate_with_test_fraction(0.0)
+}
+
+/// Serial chain: the batched dispatch must reproduce the scalar chain
+/// sweep-by-sweep, bit for bit (raw slot assignments, not just the
+/// partition, and the exact α bits — i.e. the RNG streams never
+/// diverge).
+fn assert_serial_bit_identical(kernel: KernelKind) {
+    let ds = equivalence_dataset(21);
+    let mk = |scoring: ScoreMode| SerialConfig {
+        update_alpha: true,
+        update_beta: true,
+        kernel,
+        scoring,
+        ..Default::default()
+    };
+    let mut rng_s = Pcg64::seed_from(77);
+    let mut scalar = SerialGibbs::init_from_prior(&ds.train, mk(ScoreMode::Scalar), &mut rng_s);
+    let mut rng_b = Pcg64::seed_from(77);
+    let mut batched = SerialGibbs::init_from_prior(
+        &ds.train,
+        mk(ScoreMode::Batched(ScorerKind::Fallback)),
+        &mut rng_b,
+    );
+    assert_eq!(
+        scalar.assignments(),
+        batched.assignments(),
+        "prior initializations diverged ({kernel:?})"
+    );
+    for it in 0..40 {
+        scalar.sweep(&mut rng_s);
+        batched.sweep(&mut rng_b);
+        assert_eq!(
+            scalar.assignments(),
+            batched.assignments(),
+            "assignments diverged at sweep {it} ({kernel:?})"
+        );
+        assert_eq!(
+            scalar.alpha().to_bits(),
+            batched.alpha().to_bits(),
+            "α diverged at sweep {it} ({kernel:?}): {} vs {}",
+            scalar.alpha(),
+            batched.alpha()
+        );
+        for (a, b) in scalar.model.beta.iter().zip(&batched.model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "β diverged at sweep {it} ({kernel:?})");
+        }
+    }
+    scalar.check_invariants().unwrap();
+    batched.check_invariants().unwrap();
+}
+
+#[test]
+fn serial_collapsed_gibbs_batched_is_bit_identical_to_scalar() {
+    assert_serial_bit_identical(KernelKind::CollapsedGibbs);
+}
+
+#[test]
+fn serial_walker_slice_batched_is_bit_identical_to_scalar() {
+    assert_serial_bit_identical(KernelKind::WalkerSlice);
+}
+
+/// K=3 coordinator with shuffling: the batched dispatch inside the map
+/// step must leave the whole distributed chain bit-identical.
+fn assert_coordinator_bit_identical(kernel: KernelKind) {
+    let ds = equivalence_dataset(22);
+    let mk = |scoring: ScoreMode| CoordinatorConfig {
+        workers: 3,
+        local_sweeps: 2,
+        update_alpha: true,
+        update_beta: true,
+        shuffle: true,
+        local_kernel: kernel,
+        scoring,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng_s = Pcg64::seed_from(99);
+    let mut scalar = Coordinator::new(&ds.train, mk(ScoreMode::Scalar), &mut rng_s);
+    let mut rng_b = Pcg64::seed_from(99);
+    let mut batched = Coordinator::new(
+        &ds.train,
+        mk(ScoreMode::Batched(ScorerKind::Fallback)),
+        &mut rng_b,
+    );
+    for it in 0..25 {
+        scalar.step(&mut rng_s);
+        batched.step(&mut rng_b);
+        assert_eq!(
+            scalar.assignments(),
+            batched.assignments(),
+            "assignments diverged at round {it} ({kernel:?})"
+        );
+        assert_eq!(
+            scalar.alpha().to_bits(),
+            batched.alpha().to_bits(),
+            "α diverged at round {it} ({kernel:?})"
+        );
+    }
+    scalar.check_invariants().unwrap();
+    batched.check_invariants().unwrap();
+}
+
+#[test]
+fn coordinator_k3_collapsed_gibbs_batched_is_bit_identical() {
+    assert_coordinator_bit_identical(KernelKind::CollapsedGibbs);
+}
+
+#[test]
+fn coordinator_k3_walker_slice_batched_is_bit_identical() {
+    assert_coordinator_bit_identical(KernelKind::WalkerSlice);
+}
+
+// ---------------------------------------------------------------------
+// 2. Scorer padding-contract property tests
+// ---------------------------------------------------------------------
+
+fn rand_problem(
+    rng: &mut Pcg64,
+    n: usize,
+    d: usize,
+    j: usize,
+) -> (BinMat, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut m = BinMat::zeros(n, d);
+    for r in 0..n {
+        for c in 0..d {
+            if rng.next_f64() < 0.4 {
+                m.set(r, c, true);
+            }
+        }
+    }
+    let mut w1 = vec![0.0f32; d * j];
+    let mut w0 = vec![0.0f32; d * j];
+    for i in 0..d * j {
+        let p = 0.05 + 0.9 * rng.next_f64();
+        w1[i] = (p as f32).ln();
+        w0[i] = (1.0 - p as f32).ln();
+    }
+    let mut logpi = vec![0.0f32; j];
+    let mut total = 0.0f64;
+    let mut raw = vec![0.0f64; j];
+    for x in raw.iter_mut() {
+        *x = 0.1 + rng.next_f64();
+        total += *x;
+    }
+    for (jj, x) in raw.iter().enumerate() {
+        logpi[jj] = ((x / total).ln()) as f32;
+    }
+    (m, w1, w0, logpi)
+}
+
+#[test]
+fn prop_padded_dims_are_a_noop() {
+    // pad dims d -> d_v with W1 = W0 = 0 (log 1): exact no-op
+    check(
+        "dim padding no-op",
+        25,
+        41,
+        |rng| {
+            let n = 1 + rng.next_below(12) as usize;
+            let d = 1 + rng.next_below(90) as usize;
+            let j = 1 + rng.next_below(12) as usize;
+            let pad = 1 + rng.next_below(70) as usize;
+            let (m, w1, w0, logpi) = rand_problem(rng, n, d, j);
+            (m, w1, w0, logpi, d, j, pad)
+        },
+        |(m, w1, w0, logpi, d, j, pad)| {
+            let (d, j, pad) = (*d, *j, *pad);
+            let mut s = FallbackScorer::new();
+            let base = s.predictive_density(m, w1, w0, logpi, d, j);
+            // [D, J] row-major: dim padding appends zero rows
+            let dv = d + pad;
+            let mut w1p = w1.clone();
+            let mut w0p = w0.clone();
+            w1p.resize(dv * j, 0.0);
+            w0p.resize(dv * j, 0.0);
+            let padded = s.predictive_density(m, &w1p, &w0p, logpi, dv, j);
+            for r in 0..m.rows() {
+                if (padded[r] - base[r]).abs() > 1e-6 {
+                    return Err(format!("row {r}: {} vs {}", padded[r], base[r]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_padded_clusters_never_win() {
+    // pad clusters j -> j_v at logpi = -1e30, with ARBITRARY weight
+    // columns in the pad: the masked columns must never contribute
+    check(
+        "cluster padding masked",
+        25,
+        42,
+        |rng| {
+            let n = 1 + rng.next_below(10) as usize;
+            let d = 1 + rng.next_below(60) as usize;
+            let j = 1 + rng.next_below(10) as usize;
+            let pad = 1 + rng.next_below(10) as usize;
+            let (m, w1, w0, logpi) = rand_problem(rng, n, d, j);
+            // garbage (but finite) weights for the padded columns
+            let (_, g1, g0, _) = rand_problem(rng, 1, d, pad);
+            (m, w1, w0, logpi, d, j, pad, g1, g0)
+        },
+        |(m, w1, w0, logpi, d, j, pad, g1, g0)| {
+            let (d, j, pad) = (*d, *j, *pad);
+            let jv = j + pad;
+            let mut s = FallbackScorer::new();
+            let base = s.predictive_density(m, w1, w0, logpi, d, j);
+            let mut w1p = vec![0.0f32; d * jv];
+            let mut w0p = vec![0.0f32; d * jv];
+            for dd in 0..d {
+                w1p[dd * jv..dd * jv + j].copy_from_slice(&w1[dd * j..(dd + 1) * j]);
+                w0p[dd * jv..dd * jv + j].copy_from_slice(&w0[dd * j..(dd + 1) * j]);
+                w1p[dd * jv + j..(dd + 1) * jv].copy_from_slice(&g1[dd * pad..(dd + 1) * pad]);
+                w0p[dd * jv + j..(dd + 1) * jv].copy_from_slice(&g0[dd * pad..(dd + 1) * pad]);
+            }
+            let mut logpip = vec![-1.0e30f32; jv];
+            logpip[..j].copy_from_slice(logpi);
+            let padded = s.predictive_density(m, &w1p, &w0p, &logpip, d, jv);
+            for r in 0..m.rows() {
+                if (padded[r] - base[r]).abs() > 1e-5 {
+                    return Err(format!("row {r}: {} vs {}", padded[r], base[r]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_padded_rows_do_not_perturb_real_rows() {
+    // appending zero pad rows to the batch leaves every real row's
+    // output bit-identical (rows are scored independently)
+    check(
+        "row padding inert",
+        25,
+        43,
+        |rng| {
+            let n = 1 + rng.next_below(12) as usize;
+            let d = 1 + rng.next_below(80) as usize;
+            let j = 1 + rng.next_below(12) as usize;
+            let pad = 1 + rng.next_below(12) as usize;
+            let (m, w1, w0, logpi) = rand_problem(rng, n, d, j);
+            (m, w1, w0, logpi, d, j, pad)
+        },
+        |(m, w1, w0, logpi, d, j, pad)| {
+            let (d, j, pad) = (*d, *j, *pad);
+            let n = m.rows();
+            let mut s = FallbackScorer::new();
+            let base = s.predictive_density(m, w1, w0, logpi, d, j);
+            let mut mp = BinMat::zeros(n + pad, d);
+            for r in 0..n {
+                m.for_each_one(r, |dd| mp.set(r, dd, true));
+            }
+            let padded = s.predictive_density(&mp, w1, w0, logpi, d, j);
+            if padded.len() != n + pad {
+                return Err("padded output length".into());
+            }
+            for r in 0..n {
+                if padded[r].to_bits() != base[r].to_bits() {
+                    return Err(format!("row {r}: {} vs {}", padded[r], base[r]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_block_matches_cluster_cache_scoring() {
+    // the sweep-side entry point: packing cached (bias, diff) tables and
+    // scoring through Scorer::score_rows_against_clusters reproduces the
+    // per-cluster scalar scores bit-for-bit, and dim padding (diff = 0)
+    // stays an exact no-op
+    check(
+        "batched block == scalar cluster scores",
+        20,
+        44,
+        |rng| {
+            let n = 4 + rng.next_below(16) as usize;
+            let d = 1 + rng.next_below(50) as usize;
+            let j = 1 + rng.next_below(8) as usize;
+            let beta = 0.05 + 2.0 * rng.next_f64();
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.5 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            (m, j, beta, rng.next_u64())
+        },
+        |(m, j, beta, seed)| {
+            let (j, beta) = (*j, *beta);
+            let d = m.dims();
+            let model = BetaBernoulli::symmetric(d, beta);
+            let mut rng = Pcg64::seed_from(*seed);
+            let mut clusters: Vec<ClusterStats> =
+                (0..j).map(|_| ClusterStats::empty(d)).collect();
+            for r in 0..m.rows() {
+                let c = rng.next_below(j as u64) as usize;
+                clusters[c].add(m, r);
+            }
+            // pack [D, J] bias/diff from the same caches scalar reads,
+            // with one extra padded dim row of zeros (exact no-op)
+            let dv = d + 1;
+            let mut bias = vec![0.0f64; j];
+            let mut diff = vec![0.0f64; dv * j];
+            for (jj, c) in clusters.iter_mut().enumerate() {
+                let (b, dtab) = c.cached_table(&model);
+                bias[jj] = b;
+                for (dd, &v) in dtab.iter().enumerate() {
+                    diff[dd * j + jj] = v;
+                }
+            }
+            let rows: Vec<usize> = (0..m.rows()).collect();
+            let mut s = FallbackScorer::new();
+            let mut block = Vec::new();
+            s.score_rows_against_clusters(m, &rows, &bias, &diff, dv, j, &mut block);
+            if block.len() != m.rows() * j {
+                return Err("block shape".into());
+            }
+            for (ri, &r) in rows.iter().enumerate() {
+                for (jj, c) in clusters.iter_mut().enumerate() {
+                    let want = c.score(&model, m, r);
+                    let got = block[ri * j + jj];
+                    if got.to_bits() != want.to_bits() {
+                        return Err(format!("({r},{jj}): {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 3. the exported [D, J] weight columns feed the trait path correctly
+// ---------------------------------------------------------------------
+
+#[test]
+fn coordinator_trait_predictive_matches_inline_oracle() {
+    let ds = SyntheticConfig {
+        n: 300,
+        d: 24,
+        clusters: 4,
+        beta: 0.2,
+        seed: 51,
+    }
+    .generate();
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        comm: CommModel::free(),
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(51);
+    let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+    for _ in 0..3 {
+        coord.step(&mut rng);
+    }
+    let mut scorer = FallbackScorer::new();
+    let via_trait = coord.predictive_loglik(&ds.test, &mut scorer);
+    let oracle = clustercluster::testing::coordinator_predictive_oracle(&coord, &ds.test);
+    assert!(
+        (via_trait - oracle).abs() < 1e-3,
+        "trait {via_trait} vs oracle {oracle}"
+    );
+}
