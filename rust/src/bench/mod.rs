@@ -10,10 +10,15 @@ use std::time::Instant;
 /// Timing summary of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// case label
     pub name: String,
+    /// measured iterations (after warm-up)
     pub iters: usize,
+    /// mean seconds per iteration
     pub mean_s: f64,
+    /// median seconds per iteration
     pub p50_s: f64,
+    /// 95th-percentile seconds per iteration
     pub p95_s: f64,
 }
 
@@ -50,6 +55,7 @@ pub struct FigureEmitter {
 }
 
 impl FigureEmitter {
+    /// Emitter for one figure; prints the banner immediately.
     pub fn new(figure: &str) -> Self {
         println!("\n=== {figure} ===");
         FigureEmitter {

@@ -7,6 +7,7 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Args {
+    /// the subcommand (first positional token; "help" when absent)
     pub command: String,
     flags: BTreeMap<String, String>,
     presence: Vec<String>,
@@ -43,18 +44,22 @@ impl Args {
         })
     }
 
+    /// Parse from the process arguments (skipping argv[0]).
     pub fn from_env() -> Result<Args, String> {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Whether `flag` was passed (bare or with a value).
     pub fn has(&self, flag: &str) -> bool {
         self.presence.iter().any(|f| f == flag) || self.flags.contains_key(flag)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` as usize, or `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -62,6 +67,7 @@ impl Args {
         }
     }
 
+    /// `--key` as u64, or `default` when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -69,6 +75,7 @@ impl Args {
         }
     }
 
+    /// `--key` as f64, or `default` when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -76,6 +83,7 @@ impl Args {
         }
     }
 
+    /// `--key` as owned string, or `default` when absent.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.flags
             .get(key)

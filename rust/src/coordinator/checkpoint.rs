@@ -1,31 +1,82 @@
 //! Checkpoint / resume for the coordinator: serialize the full latent
-//! state (per-supercluster row ownership + assignments, α, β, round and
-//! time counters) to a versioned, checksummed binary file, and rebuild a
+//! state (per-supercluster row ownership + assignments, α, β, the μ
+//! granularity state, per-shard kernel assignment, round and time
+//! counters) to a versioned, checksummed binary file, and rebuild a
 //! running coordinator from it. Long VQ runs (the paper's Fig. 9 is a
 //! 32-CPU-day job) need this to survive restarts.
 //!
 //! Cluster sufficient statistics are NOT stored — they are a pure
 //! function of (data, assignments) and are rebuilt on load, which keeps
 //! the file small and makes corruption structurally impossible to carry
-//! into the stats.
+//! into the stats. The μ vector IS stored (bit-exact): under
+//! [`MuMode::SizeProportional`]/[`MuMode::Adaptive`] it is latent chain
+//! state, and a resume that silently reinitialized it uniform would
+//! *not* continue the same chain (`rust/tests/failure_injection.rs`
+//! pins this).
 
-use super::{Coordinator, CoordinatorConfig};
+use super::{Coordinator, CoordinatorConfig, MuMode};
 use crate::data::BinMat;
 use crate::rng::Pcg64;
-use crate::sampler::Shard;
+use crate::sampler::{KernelKind, Shard};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"CCCKPT1\n";
+const MAGIC: &[u8; 8] = b"CCCKPT2\n";
+const MAGIC_V1: &[u8; 8] = b"CCCKPT1\n";
+
+fn mu_mode_to_tag(m: MuMode) -> (u64, f64) {
+    match m {
+        MuMode::Uniform => (0, 0.0),
+        MuMode::SizeProportional => (1, 0.0),
+        MuMode::Adaptive { target_occupancy } => (2, target_occupancy),
+    }
+}
+
+fn mu_mode_from_tag(tag: u64, target: f64) -> Result<MuMode, String> {
+    match tag {
+        0 => Ok(MuMode::Uniform),
+        1 => Ok(MuMode::SizeProportional),
+        2 => Ok(MuMode::Adaptive {
+            target_occupancy: target,
+        }),
+        other => Err(format!("unknown μ-mode tag {other}")),
+    }
+}
+
+fn kernel_to_tag(k: KernelKind) -> u64 {
+    match k {
+        KernelKind::CollapsedGibbs => 0,
+        KernelKind::WalkerSlice => 1,
+    }
+}
+
+fn kernel_from_tag(tag: u64) -> Result<KernelKind, String> {
+    match tag {
+        0 => Ok(KernelKind::CollapsedGibbs),
+        1 => Ok(KernelKind::WalkerSlice),
+        other => Err(format!("unknown kernel tag {other}")),
+    }
+}
 
 /// Plain-old-data snapshot of the coordinator's latent state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// concentration α at capture time
     pub alpha: f64,
+    /// per-dimension base-measure hyperparameters β_d
     pub beta: Vec<f64>,
+    /// completed global rounds
     pub rounds: u64,
+    /// cumulative modeled distributed wall-clock (s)
     pub modeled_time_s: f64,
+    /// cumulative measured host wall-clock (s)
     pub measured_time_s: f64,
+    /// the granularity mode the run was using (resume must match)
+    pub mu_mode: MuMode,
+    /// the supercluster weights μ at capture time (bit-exact)
+    pub mu: Vec<f64>,
+    /// the resolved per-shard kernel assignment (resume must match)
+    pub kernels: Vec<KernelKind>,
     /// per supercluster: (global row ids, local cluster slot per row)
     pub shards: Vec<(Vec<u64>, Vec<u32>)>,
 }
@@ -39,6 +90,9 @@ impl Checkpoint {
             rounds: coord.rounds,
             modeled_time_s: coord.modeled_time_s,
             measured_time_s: coord.measured_time_s,
+            mu_mode: coord.cfg.mu_mode,
+            mu: coord.mu.clone(),
+            kernels: coord.shard_kernels.clone(),
             shards: coord
                 .states()
                 .iter()
@@ -52,6 +106,7 @@ impl Checkpoint {
         }
     }
 
+    /// Persist to `path` in the checksummed `CCCKPT2` binary format.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::fs::File::create(path)?;
         let mut sum: u64 = 0;
@@ -68,8 +123,15 @@ impl Checkpoint {
         w64(&mut f, self.rounds, &mut sum)?;
         w64(&mut f, self.modeled_time_s.to_bits(), &mut sum)?;
         w64(&mut f, self.measured_time_s.to_bits(), &mut sum)?;
+        let (mode_tag, mode_target) = mu_mode_to_tag(self.mu_mode);
+        w64(&mut f, mode_tag, &mut sum)?;
+        w64(&mut f, mode_target.to_bits(), &mut sum)?;
         w64(&mut f, self.shards.len() as u64, &mut sum)?;
-        for (rows, assign) in &self.shards {
+        debug_assert_eq!(self.mu.len(), self.shards.len());
+        debug_assert_eq!(self.kernels.len(), self.shards.len());
+        for (kk, (rows, assign)) in self.shards.iter().enumerate() {
+            w64(&mut f, self.mu[kk].to_bits(), &mut sum)?;
+            w64(&mut f, kernel_to_tag(self.kernels[kk]), &mut sum)?;
             w64(&mut f, rows.len() as u64, &mut sum)?;
             for &r in rows {
                 w64(&mut f, r, &mut sum)?;
@@ -82,13 +144,22 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// Load and verify a `CCCKPT2` checkpoint (magic, structure,
+    /// checksum). Older `CCCKPT1` files (which carried no μ state) are
+    /// rejected explicitly rather than silently resumed with uniform μ.
     pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
         let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
         let mut f = std::fs::File::open(path)?;
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
+        if &magic == MAGIC_V1 {
+            return Err(err(
+                "CCCKPT1 checkpoint predates μ-state serialization; \
+                 re-run from scratch (resuming it would silently reset μ)",
+            ));
+        }
         if &magic != MAGIC {
-            return Err(err("not a CCCKPT1 checkpoint"));
+            return Err(err("not a CCCKPT2 checkpoint"));
         }
         let mut sum: u64 = 0;
         let mut buf = [0u8; 8];
@@ -107,9 +178,17 @@ impl Checkpoint {
         let rounds = r64(&mut f, &mut sum)?;
         let modeled_time_s = f64::from_bits(r64(&mut f, &mut sum)?);
         let measured_time_s = f64::from_bits(r64(&mut f, &mut sum)?);
+        let mode_tag = r64(&mut f, &mut sum)?;
+        let mode_target = f64::from_bits(r64(&mut f, &mut sum)?);
+        let mu_mode = mu_mode_from_tag(mode_tag, mode_target)
+            .map_err(|e| err(&e))?;
         let nshards = r64(&mut f, &mut sum)? as usize;
+        let mut mu = Vec::with_capacity(nshards);
+        let mut kernels = Vec::with_capacity(nshards);
         let mut shards = Vec::with_capacity(nshards);
         for _ in 0..nshards {
+            mu.push(f64::from_bits(r64(&mut f, &mut sum)?));
+            kernels.push(kernel_from_tag(r64(&mut f, &mut sum)?).map_err(|e| err(&e))?);
             let n = r64(&mut f, &mut sum)? as usize;
             let mut rows = Vec::with_capacity(n);
             for _ in 0..n {
@@ -132,6 +211,9 @@ impl Checkpoint {
             rounds,
             modeled_time_s,
             measured_time_s,
+            mu_mode,
+            mu,
+            kernels,
             shards,
         })
     }
@@ -145,7 +227,10 @@ impl<'a> Coordinator<'a> {
 
     /// Rebuild a coordinator from a checkpoint against the SAME dataset
     /// (sufficient statistics are recomputed from assignments; every
-    /// shard is integrity-checked before the chain may continue).
+    /// shard is integrity-checked before the chain may continue). The
+    /// saved μ vector, granularity mode, and per-shard kernel assignment
+    /// must all be consistent with `cfg` — a mismatch is an error, never
+    /// a silent reconfiguration.
     pub fn resume(
         data: &'a BinMat,
         cfg: CoordinatorConfig,
@@ -166,7 +251,37 @@ impl<'a> Coordinator<'a> {
                 data.dims()
             ));
         }
+        if ckpt.mu_mode != cfg.mu_mode {
+            return Err(format!(
+                "checkpoint was written under μ mode {}, config wants {}",
+                ckpt.mu_mode.describe(),
+                cfg.mu_mode.describe()
+            ));
+        }
+        if ckpt.mu.len() != cfg.workers {
+            return Err(format!(
+                "checkpoint μ has {} components for {} workers",
+                ckpt.mu.len(),
+                cfg.workers
+            ));
+        }
+        let mu_total: f64 = ckpt.mu.iter().sum();
+        if !ckpt.mu.iter().all(|&m| m > 0.0 && m.is_finite())
+            || (mu_total - 1.0).abs() > 1e-6
+        {
+            return Err(format!("checkpoint μ is not a simplex: {:?}", ckpt.mu));
+        }
+        let want_kernels = cfg.kernel_assignment.resolve(cfg.workers)?;
+        if ckpt.kernels != want_kernels {
+            return Err(format!(
+                "checkpoint kernel assignment {:?} does not match config {:?}",
+                ckpt.kernels, want_kernels
+            ));
+        }
         let mut coord = Coordinator::new(data, cfg, rng);
+        // restore the granularity state: a resumed SizeProportional or
+        // Adaptive run must continue from the saved μ, not restart uniform
+        coord.mu = ckpt.mu.clone();
         coord.alpha = ckpt.alpha;
         coord.model.beta = ckpt.beta.clone();
         // build_lut handles the asymmetric-β case itself (clears the LUT)
@@ -220,13 +335,20 @@ mod tests {
             seed: 1,
         }
         .generate();
+        // non-uniform μ mode + mixed kernels: the roundtrip must carry
+        // the full granularity state, not just the partition
         let cfg = CoordinatorConfig {
             workers: 3,
             comm: CommModel::free(),
+            mu_mode: MuMode::SizeProportional,
+            kernel_assignment: crate::sampler::KernelAssignment::RoundRobin(vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+            ]),
             ..Default::default()
         };
         let mut rng = Pcg64::seed_from(2);
-        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let mut coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
         for _ in 0..5 {
             coord.step(&mut rng);
         }
@@ -234,6 +356,22 @@ mod tests {
         coord.save_checkpoint(&path).unwrap();
         let ckpt = Checkpoint::load(&path).unwrap();
         assert_eq!(ckpt, Checkpoint::capture(&coord));
+        assert_eq!(ckpt.mu_mode, MuMode::SizeProportional);
+        assert_eq!(
+            ckpt.kernels,
+            vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+                KernelKind::CollapsedGibbs,
+            ]
+        );
+        // μ has been resampled from Dir(1 + J_k): almost surely non-uniform,
+        // and the file must carry it bit-exactly
+        assert!(ckpt.mu.iter().any(|&m| (m - 1.0 / 3.0).abs() > 1e-12));
+        assert_eq!(
+            ckpt.mu.iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+            coord.mu().iter().map(|m| m.to_bits()).collect::<Vec<_>>()
+        );
 
         let mut rng2 = Pcg64::seed_from(3);
         let mut resumed = Coordinator::resume(&ds.train, cfg, &ckpt, &mut rng2).unwrap();
@@ -241,6 +379,11 @@ mod tests {
         assert_eq!(resumed.alpha(), coord.alpha());
         assert_eq!(resumed.rounds, coord.rounds);
         assert_eq!(resumed.assignments(), coord.assignments());
+        assert_eq!(
+            resumed.mu().iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+            coord.mu().iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+            "resume must continue from the saved μ, not reinitialize uniform"
+        );
         // and the resumed chain runs + scores
         resumed.step(&mut rng2);
         let mut sc = FallbackScorer::new();
@@ -290,12 +433,31 @@ mod tests {
             ..Default::default()
         };
         let mut rng = Pcg64::seed_from(7);
-        let coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
         let ckpt = Checkpoint::capture(&coord);
         let cfg4 = CoordinatorConfig {
             workers: 4,
-            ..cfg
+            ..cfg.clone()
         };
         assert!(Coordinator::resume(&ds.train, cfg4, &ckpt, &mut rng).is_err());
+        // μ-mode mismatch: a Uniform checkpoint may not silently resume
+        // as Adaptive (and vice versa)
+        let cfg_adaptive = CoordinatorConfig {
+            mu_mode: MuMode::Adaptive {
+                target_occupancy: 1.0,
+            },
+            ..cfg.clone()
+        };
+        let e = Coordinator::resume(&ds.train, cfg_adaptive, &ckpt, &mut rng).unwrap_err();
+        assert!(e.contains("μ mode"), "{e}");
+        // kernel-assignment mismatch is rejected too
+        let cfg_walker = CoordinatorConfig {
+            kernel_assignment: crate::sampler::KernelAssignment::AllSame(
+                KernelKind::WalkerSlice,
+            ),
+            ..cfg
+        };
+        let e = Coordinator::resume(&ds.train, cfg_walker, &ckpt, &mut rng).unwrap_err();
+        assert!(e.contains("kernel assignment"), "{e}");
     }
 }

@@ -4,20 +4,46 @@
 //! Every global round is one map-reduce cycle:
 //!
 //! * **map** — each supercluster (= compute node, one [`Shard`]) runs
-//!   `R` local sweeps of the configured [`TransitionKernel`] over its
-//!   own data with concentration `αμ_k`, using standard DPM operators
+//!   `R` local sweeps of its assigned [`TransitionKernel`] (kernels may
+//!   differ across shards — [`KernelAssignment`]) over its own data
+//!   with concentration `αμ_k`, using standard DPM operators
 //!   *without modification* (Neal Alg. 3 or Walker slice — see
 //!   [`crate::sampler`]); data may instantiate new clusters locally but
 //!   cannot cross nodes.
 //! * **reduce** — centralized, lightweight: sample `α` from Eq. 6 given
-//!   `Σ_k J_k` (each worker ships one integer), and the base-measure
+//!   `Σ_k J_k` (each worker ships one integer), the base-measure
 //!   hyperparameters `β_d` by griddy Gibbs from pooled sufficient
-//!   statistics.
+//!   statistics, and — under a non-uniform [`MuMode`] — the supercluster
+//!   weights μ themselves (Gibbs from `Dir(ξ/K + J_k)`, or the adaptive
+//!   load-balancing MH retarget; DESIGN.md §6).
 //! * **shuffle** — move whole clusters (stats + member rows) between
 //!   superclusters by Gibbs on `s_j`, then broadcast the new state.
 //!
 //! The representation keeps the *true* DPM posterior invariant — the DP
 //! "learns how to parallelize itself".
+//!
+//! ```
+//! use clustercluster::coordinator::{Coordinator, CoordinatorConfig, MuMode};
+//! use clustercluster::data::synthetic::SyntheticConfig;
+//! use clustercluster::mapreduce::CommModel;
+//! use clustercluster::rng::Pcg64;
+//!
+//! let ds = SyntheticConfig { n: 120, d: 8, clusters: 2, beta: 0.3, seed: 3 }
+//!     .generate_with_test_fraction(0.0);
+//! let cfg = CoordinatorConfig {
+//!     workers: 2,
+//!     mu_mode: MuMode::SizeProportional, // granularity tracks occupancy
+//!     comm: CommModel::free(),
+//!     ..Default::default()
+//! };
+//! let mut rng = Pcg64::seed_from(1);
+//! let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+//! for _ in 0..3 { coord.step(&mut rng); }
+//! assert!((coord.mu().iter().sum::<f64>() - 1.0).abs() < 1e-9);
+//! coord.check_invariants().unwrap();
+//! ```
+//!
+//! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 pub mod checkpoint;
 
@@ -28,49 +54,190 @@ use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::BetaBernoulli;
 use crate::rng::Pcg64;
 use crate::runtime::Scorer;
-use crate::sampler::{ScoreMode, Shard};
-use crate::supercluster::{sample_shuffle, ShuffleKernel};
+use crate::sampler::{KernelKind, ScoreMode, Shard};
+use crate::supercluster::{
+    adaptive_mu_step, sample_mu_given_occupancy, sample_shuffle, ShuffleKernel,
+};
 use crate::util::timer::PhaseTimer;
 use std::time::Instant;
 
 pub use checkpoint::Checkpoint;
+pub use crate::sampler::KernelAssignment;
 // Back-compat names: the per-worker state is a plain sampler Shard, and
 // the kernel selector is the sampler-level KernelKind.
 pub use crate::sampler::KernelKind as LocalKernel;
 pub use crate::sampler::Shard as SuperclusterState;
 
-/// How the supercluster base weights μ are set.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// How the supercluster base weights μ are set — the *granularity of
+/// parallelization* (paper §4: μ apportions the DP's mass, and thereby
+/// the data, across the K compute nodes, while the partition posterior
+/// is invariant to μ).
+///
+/// Every mode leaves the true DPM posterior exact (the μ updates are
+/// Gibbs/Metropolis–Hastings steps on the extended state — see
+/// DESIGN.md §6 and `rust/tests/mu_modes.rs`); they differ only in load
+/// balance and mixing:
+///
+/// * [`MuMode::Uniform`] — μ fixed at 1/K (the paper's choice); zero
+///   overhead, but load follows wherever the clusters drift.
+/// * [`MuMode::SizeProportional`] — μ resampled each round from its
+///   conditional `Dir(ξ/K + J_k)` given current supercluster cluster
+///   counts; mass tracks where structure lives, which concentrates
+///   shuffle moves on populated shards.
+/// * [`MuMode::Adaptive`] — μ retargeted each round by an MH step whose
+///   proposal shrinks superclusters exceeding the per-shard data-share
+///   ceiling `target_occupancy / K`; steers toward equalized per-shard
+///   work while remaining exact.
+///
+/// ```
+/// use clustercluster::coordinator::MuMode;
+///
+/// assert_eq!(MuMode::parse("uniform").unwrap(), MuMode::Uniform);
+/// assert_eq!(MuMode::parse("size-prop").unwrap(), MuMode::SizeProportional);
+/// assert_eq!(
+///     MuMode::parse("adaptive:1.5").unwrap(),
+///     MuMode::Adaptive { target_occupancy: 1.5 },
+/// );
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum MuMode {
-    /// μ_k = 1/K (the paper's choice).
+    /// μ_k = 1/K (the paper's choice, and the default).
+    #[default]
     Uniform,
+    /// Gibbs-resample μ from `Dir(ξ/K + J_k)` given supercluster
+    /// occupancies each global round.
+    SizeProportional,
+    /// Metropolis–Hastings retarget of μ toward equalized per-shard
+    /// work between macro-sweeps.
+    Adaptive {
+        /// Allowed per-shard data share as a multiple of the uniform
+        /// share 1/K; `1.0` steers toward strict equalization, larger
+        /// values tolerate proportionally more imbalance.
+        target_occupancy: f64,
+    },
+}
+
+impl MuMode {
+    /// Parse a `--mu-mode` value: `uniform`, `size-proportional` (alias
+    /// `size-prop`, `size`, `proportional`), or `adaptive[:TARGET]`
+    /// (TARGET = occupancy ceiling multiple, default 1.0).
+    pub fn parse(s: &str) -> Result<MuMode, String> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "uniform" => Ok(MuMode::Uniform),
+            "size-proportional" | "size-prop" | "size" | "proportional" => {
+                Ok(MuMode::SizeProportional)
+            }
+            "adaptive" => Ok(MuMode::Adaptive {
+                target_occupancy: 1.0,
+            }),
+            _ => match lower.strip_prefix("adaptive:") {
+                Some(t) => {
+                    let target: f64 = t
+                        .parse()
+                        .map_err(|_| format!("bad adaptive target {t:?}"))?;
+                    if target > 0.0 && target.is_finite() {
+                        Ok(MuMode::Adaptive {
+                            target_occupancy: target,
+                        })
+                    } else {
+                        Err(format!("adaptive target must be positive, got {t:?}"))
+                    }
+                }
+                None => Err(format!(
+                    "unknown μ mode {s:?} (expected \"uniform\", \"size-proportional\", \
+                     or \"adaptive[:target]\")"
+                )),
+            },
+        }
+    }
+
+    /// Human-readable name for run banners and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            MuMode::Uniform => "uniform".to_string(),
+            MuMode::SizeProportional => "size-proportional".to_string(),
+            MuMode::Adaptive { target_occupancy } => {
+                format!("adaptive(target={target_occupancy})")
+            }
+        }
+    }
+}
+
+/// Per-supercluster observability record for the most recent global
+/// round — what makes the non-uniform [`MuMode`]s inspectable (exported
+/// as a CSV series by `--shard-trace`, via
+/// [`crate::metrics::ShardTrace`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardRoundStat {
+    /// supercluster index k
+    pub shard: usize,
+    /// μ_k after this round's granularity update (drives the next map
+    /// step's local concentration αμ_k)
+    pub mu: f64,
+    /// data rows resident on the shard after the round
+    pub rows: u64,
+    /// live clusters on the shard after the round
+    pub clusters: u64,
+    /// measured map-step compute seconds for the shard this round
+    pub map_seconds: f64,
+    /// the transition kernel this shard runs
+    pub kernel: KernelKind,
 }
 
 /// Coordinator configuration.
-#[derive(Debug, Clone, Copy)]
+///
+/// ```
+/// use clustercluster::coordinator::{CoordinatorConfig, KernelAssignment, MuMode};
+/// use clustercluster::sampler::KernelKind;
+///
+/// // 8 workers, adaptive granularity, Gibbs/Walker alternating by shard
+/// let cfg = CoordinatorConfig {
+///     workers: 8,
+///     mu_mode: MuMode::Adaptive { target_occupancy: 1.0 },
+///     kernel_assignment: KernelAssignment::RoundRobin(vec![
+///         KernelKind::CollapsedGibbs,
+///         KernelKind::WalkerSlice,
+///     ]),
+///     ..Default::default()
+/// };
+/// assert_eq!(cfg.kernel_assignment.resolve(cfg.workers).unwrap().len(), 8);
+/// ```
+#[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// number of superclusters K (= simulated compute nodes)
     pub workers: usize,
     /// local kernel sweeps per global round (Fig. 2a's ratio)
     pub local_sweeps: usize,
+    /// initial concentration α (the §5 calibration value)
     pub init_alpha: f64,
+    /// Gamma prior driving the Eq. 6 α update
     pub alpha_prior: GammaPrior,
+    /// initial symmetric β for all dims
     pub init_beta: f64,
+    /// grid for the griddy-Gibbs β_d update
     pub beta_grid: BetaGridConfig,
+    /// update α each round (reduce step)
     pub update_alpha: bool,
     /// β_d updates are O(D · grid · J): on by default at reduce cadence
     pub update_beta: bool,
     /// enable the cluster shuffle step (ablation: without it the islands
     /// never exchange structure and the chain is NOT a DPM sampler)
     pub shuffle: bool,
+    /// which shuffle conditional updates `s_j` (Exact vs the paper's
+    /// printed Eq. 7 — see [`crate::supercluster`])
     pub shuffle_kernel: ShuffleKernel,
+    /// supercluster granularity: how μ is set/updated between rounds
+    /// (`--mu-mode`; every mode is exactness-preserving)
     pub mu_mode: MuMode,
-    /// per-supercluster transition operator (paper §4: any standard DPM
-    /// kernel applies unmodified — Neal Alg. 3 or Walker slice)
-    pub local_kernel: LocalKernel,
+    /// per-supercluster transition operators (paper §4: any standard DPM
+    /// kernel applies unmodified per supercluster, and different shards
+    /// may run different kernels — `--local-kernel gibbs,walker,…`)
+    pub kernel_assignment: KernelAssignment,
     /// candidate-cluster scoring dispatch inside the map-step sweeps
     /// (`--scorer auto|fallback|pjrt`; one scorer instance per shard)
     pub scoring: ScoreMode,
+    /// communication cost model for the modeled distributed wall-clock
     pub comm: CommModel,
     /// host threads for the map step (0 = one per available core)
     pub parallelism: usize,
@@ -90,7 +257,7 @@ impl Default for CoordinatorConfig {
             shuffle: true,
             shuffle_kernel: ShuffleKernel::Exact,
             mu_mode: MuMode::Uniform,
-            local_kernel: LocalKernel::CollapsedGibbs,
+            kernel_assignment: KernelAssignment::default(),
             scoring: ScoreMode::default(),
             comm: CommModel::default(),
             parallelism: 1,
@@ -101,19 +268,32 @@ impl Default for CoordinatorConfig {
 /// The distributed sampler state: K supercluster shards + global hypers.
 pub struct Coordinator<'a> {
     data: &'a BinMat,
+    /// collapsed Beta–Bernoulli base measure (shared read-only by shards)
     pub model: BetaBernoulli,
+    /// current concentration α
     pub alpha: f64,
     mu: Vec<f64>,
     cfg: CoordinatorConfig,
+    /// one transition kernel selector per shard, resolved from
+    /// [`CoordinatorConfig::kernel_assignment`] at construction
+    shard_kernels: Vec<KernelKind>,
     states: Vec<Shard>,
     beta_updater: BetaUpdater,
     mr: MapReduce,
+    /// per-phase wall-clock accounting (map/reduce/shuffle)
     pub timer: PhaseTimer,
     /// cumulative modeled distributed wall-clock (s)
     pub modeled_time_s: f64,
     /// cumulative measured host wall-clock (s)
     pub measured_time_s: f64,
+    /// completed global rounds
     pub rounds: u64,
+    /// per-shard observability records for the most recent round
+    last_shard_stats: Vec<ShardRoundStat>,
+    /// adaptive-μ MH proposals attempted (Adaptive mode only)
+    mu_proposals: u64,
+    /// adaptive-μ MH proposals accepted (Adaptive mode only)
+    mu_accepts: u64,
 }
 
 impl<'a> Coordinator<'a> {
@@ -123,12 +303,26 @@ impl<'a> Coordinator<'a> {
     /// data placement is skipped, so the master stream is consumed
     /// exactly as by [`crate::serial::SerialGibbs::init_from_prior`] —
     /// the coordinate that makes K=1 equivalence chain-exact.
+    ///
+    /// # Panics
+    ///
+    /// Panics on an invalid configuration: `workers == 0`,
+    /// `local_sweeps == 0`, or a [`KernelAssignment`] that does not
+    /// resolve to `workers` kernels (e.g. a `PerShard` list of the
+    /// wrong length). Validate with
+    /// [`KernelAssignment::resolve`] first for a recoverable error —
+    /// [`Coordinator::resume`] does exactly that and returns `Err`
+    /// instead.
     pub fn new(data: &'a BinMat, cfg: CoordinatorConfig, rng: &mut Pcg64) -> Self {
         assert!(cfg.workers >= 1 && cfg.local_sweeps >= 1);
         let k = cfg.workers;
-        let mu = match cfg.mu_mode {
-            MuMode::Uniform => vec![1.0 / k as f64; k],
-        };
+        // every mode starts uniform: SizeProportional/Adaptive evolve μ
+        // from there via their (exactness-preserving) per-round updates
+        let mu = vec![1.0 / k as f64; k];
+        let shard_kernels = cfg
+            .kernel_assignment
+            .resolve(k)
+            .unwrap_or_else(|e| panic!("kernel assignment invalid: {e}"));
         let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
         // symmetric-beta fast-rebuild LUT for the kernel hot loop (perf)
         model.build_lut(data.rows() + 1);
@@ -162,24 +356,30 @@ impl<'a> Coordinator<'a> {
         }
         .min(cfg.workers);
 
+        let beta_updater = BetaUpdater::new(cfg.beta_grid);
         Coordinator {
             data,
             model,
             alpha: cfg.init_alpha,
             mu,
+            shard_kernels,
             cfg,
             states,
-            beta_updater: BetaUpdater::new(cfg.beta_grid),
+            beta_updater,
             mr: MapReduce::new(parallelism),
             timer: PhaseTimer::new(),
             modeled_time_s: 0.0,
             measured_time_s: 0.0,
             rounds: 0,
+            last_shard_stats: Vec::new(),
+            mu_proposals: 0,
+            mu_accepts: 0,
         }
     }
 
-    /// One global round: map (R local sweeps per node) → reduce (α, β) →
-    /// shuffle (cluster moves + broadcast). Returns the round's stats.
+    /// One global round: map (R local sweeps per node, each shard on its
+    /// assigned kernel) → reduce (α, β, μ granularity update) → shuffle
+    /// (cluster moves + broadcast). Returns the round's stats.
     pub fn step(&mut self, rng: &mut Pcg64) -> RoundStats {
         let round_t0 = Instant::now();
         let data = self.data;
@@ -187,13 +387,14 @@ impl<'a> Coordinator<'a> {
         let alpha = self.alpha;
         let mu = &self.mu;
         let sweeps = self.cfg.local_sweeps;
-        let kernel = self.cfg.local_kernel.kernel();
+        let kernels = &self.shard_kernels;
 
         // ---- map: local kernel sweeps, one task per supercluster ----
         let states = std::mem::take(&mut self.states);
         let map_t0 = Instant::now();
         let (mut states, map_durs) = self.mr.map(states, |kk, mut st: Shard| {
             st.set_theta(alpha * mu[kk]);
+            let kernel = kernels[kk].kernel();
             for _ in 0..sweeps {
                 kernel.sweep(&mut st, data, model);
             }
@@ -237,6 +438,38 @@ impl<'a> Coordinator<'a> {
             }
             bytes += 8 * self.model.d as u64; // broadcast β
         }
+        // μ granularity update (DESIGN.md §6). Skipped at K=1, where μ is
+        // degenerate at [1]: this also keeps the master stream consumption
+        // identical to the serial chain, preserving chain-exact K=1
+        // equivalence under every mode.
+        if self.cfg.workers > 1 {
+            match self.cfg.mu_mode {
+                MuMode::Uniform => {}
+                MuMode::SizeProportional => {
+                    let j_counts: Vec<u64> =
+                        states.iter().map(|s| s.num_clusters() as u64).collect();
+                    self.mu = sample_mu_given_occupancy(rng, &j_counts);
+                    bytes += 8 * states.len() as u64; // broadcast μ
+                }
+                MuMode::Adaptive { target_occupancy } => {
+                    let j_counts: Vec<u64> =
+                        states.iter().map(|s| s.num_clusters() as u64).collect();
+                    let row_counts: Vec<u64> =
+                        states.iter().map(|s| s.num_rows() as u64).collect();
+                    self.mu_proposals += 1;
+                    if adaptive_mu_step(
+                        rng,
+                        &mut self.mu,
+                        &row_counts,
+                        &j_counts,
+                        target_occupancy,
+                    ) {
+                        self.mu_accepts += 1;
+                    }
+                    bytes += 8 * states.len() as u64; // broadcast μ
+                }
+            }
+        }
         let reduce_dur = reduce_t0.elapsed();
         self.timer.add("reduce", reduce_dur);
 
@@ -249,6 +482,22 @@ impl<'a> Coordinator<'a> {
 
         self.states = states;
         self.rounds += 1;
+
+        // per-shard observability series (μ_k, occupancy, map time) —
+        // what makes the non-uniform μ modes inspectable
+        self.last_shard_stats = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(kk, st)| ShardRoundStat {
+                shard: kk,
+                mu: self.mu[kk],
+                rows: st.num_rows() as u64,
+                clusters: st.num_clusters() as u64,
+                map_seconds: map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0),
+                kernel: self.shard_kernels[kk],
+            })
+            .collect();
 
         let rs = finish_round(
             &self.cfg.comm,
@@ -297,18 +546,49 @@ impl<'a> Coordinator<'a> {
         bytes
     }
 
+    /// Total live clusters across all superclusters.
     pub fn num_clusters(&self) -> usize {
         self.states.iter().map(|s| s.num_clusters()).sum()
     }
 
+    /// Current concentration α.
     pub fn alpha(&self) -> f64 {
         self.alpha
     }
 
+    /// Current supercluster base weights μ (simplex of length K).
     pub fn mu(&self) -> &[f64] {
         &self.mu
     }
 
+    /// The configured granularity mode.
+    pub fn mu_mode(&self) -> MuMode {
+        self.cfg.mu_mode
+    }
+
+    /// The kernel each shard runs (resolved from the config's
+    /// [`KernelAssignment`] at construction).
+    pub fn shard_kernels(&self) -> &[KernelKind] {
+        &self.shard_kernels
+    }
+
+    /// Acceptance rate of the adaptive-μ MH retarget so far (`None`
+    /// until the first proposal, i.e. for non-adaptive modes or K=1).
+    pub fn mu_acceptance_rate(&self) -> Option<f64> {
+        if self.mu_proposals == 0 {
+            None
+        } else {
+            Some(self.mu_accepts as f64 / self.mu_proposals as f64)
+        }
+    }
+
+    /// Per-shard observability records for the most recent round (empty
+    /// before the first [`Self::step`]).
+    pub fn shard_stats(&self) -> &[ShardRoundStat] {
+        &self.last_shard_stats
+    }
+
+    /// The per-supercluster shard states.
     pub fn states(&self) -> &[Shard] {
         &self.states
     }

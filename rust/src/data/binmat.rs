@@ -15,6 +15,7 @@ pub struct BinMat {
 }
 
 impl BinMat {
+    /// All-zeros matrix of `n` rows × `d` binary dims.
     pub fn zeros(n: usize, d: usize) -> BinMat {
         let wpr = d.div_ceil(64);
         BinMat {
@@ -25,14 +26,17 @@ impl BinMat {
         }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.n
     }
 
+    /// Number of binary dimensions.
     pub fn dims(&self) -> usize {
         self.d
     }
 
+    /// Bit at (row, dim).
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> bool {
         debug_assert!(r < self.n && c < self.d);
@@ -40,6 +44,7 @@ impl BinMat {
         (w >> (c % 64)) & 1 == 1
     }
 
+    /// Set the bit at (row, dim).
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: bool) {
         debug_assert!(r < self.n && c < self.d);
@@ -111,6 +116,7 @@ impl BinMat {
         &self.bits
     }
 
+    /// Rebuild from the packed word representation (see [`Self::words`]).
     pub fn from_words(n: usize, d: usize, words: Vec<u64>) -> BinMat {
         let wpr = d.div_ceil(64);
         assert_eq!(words.len(), n * wpr);

@@ -89,12 +89,14 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create the file and write the header row.
     pub fn create(path: &Path, header: &[&str]) -> std::io::Result<CsvWriter> {
         let mut file = std::fs::File::create(path)?;
         writeln!(file, "{}", header.join(","))?;
         Ok(CsvWriter { file })
     }
 
+    /// Append one row of numeric values.
     pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
         let line = values
             .iter()

@@ -22,6 +22,7 @@ pub struct SyntheticConfig {
     /// Beta(β, β) hyperparameter for the coin weights (paper's β_d;
     /// small β ⇒ near-deterministic coins ⇒ well-separated clusters)
     pub beta: f64,
+    /// master RNG seed
     pub seed: u64,
 }
 
@@ -41,13 +42,17 @@ impl Default for SyntheticConfig {
 /// component coin weights, and the generator's entropy estimate.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// training rows
     pub train: BinMat,
+    /// held-out test rows
     pub test: BinMat,
     /// ground-truth cluster of each train row
     pub train_z: Vec<u32>,
+    /// ground-truth cluster of each test row
     pub test_z: Vec<u32>,
     /// true coin weights, [clusters][d]
     pub weights: Vec<Vec<f64>>,
+    /// the configuration that generated this dataset
     pub config: SyntheticConfig,
 }
 
@@ -58,6 +63,7 @@ impl SyntheticConfig {
         self.generate_with_test_fraction(0.10)
     }
 
+    /// Generate with an explicit held-out fraction (0.0 = no test set).
     pub fn generate_with_test_fraction(&self, test_frac: f64) -> Dataset {
         assert!(self.clusters >= 1 && self.d >= 1 && self.n >= self.clusters);
         let mut rng = Pcg64::new(self.seed, 0x5337);

@@ -29,6 +29,7 @@ pub struct TinyImagesConfig {
     pub calibration_rows: usize,
     /// pixel noise stddev relative to template contrast
     pub noise: f64,
+    /// master RNG seed
     pub seed: u64,
 }
 
@@ -57,6 +58,7 @@ pub struct TinyImages {
     pub pca: Rpca,
     /// per-component median thresholds
     pub medians: Vec<f64>,
+    /// the configuration that generated this corpus
     pub config: TinyImagesConfig,
 }
 

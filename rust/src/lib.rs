@@ -31,6 +31,14 @@
 //!   the PJRT CPU client (`xla` crate) and serves batched scoring on the
 //!   Rust hot path. Python never runs at sampling time.
 //!
+//! ## Granularity and kernel mixing
+//!
+//! The supercluster weights μ are runtime-controllable
+//! ([`coordinator::MuMode`]: uniform, size-proportional, adaptive —
+//! every mode exactness-preserving, DESIGN.md §6), and different shards
+//! may run different transition kernels within one exact chain
+//! ([`sampler::KernelAssignment`], CLI `--local-kernel gibbs,walker`).
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -44,6 +52,15 @@
 //! for _ in 0..20 { coord.step(&mut rng); }
 //! println!("clusters: {}", coord.num_clusters());
 //! ```
+
+#![warn(missing_docs)]
+
+/// Compiles the README's Rust examples as doc-tests (`cargo test
+/// --doc`), so the quickstart in `README.md` can never rot against the
+/// real API. Exists only under `cfg(doctest)`.
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+pub struct ReadmeDoctests;
 
 pub mod bench;
 pub mod cli;
@@ -64,11 +81,14 @@ pub mod util;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::coordinator::{Coordinator, CoordinatorConfig};
+    pub use crate::coordinator::{Coordinator, CoordinatorConfig, MuMode, ShardRoundStat};
     pub use crate::data::synthetic::{Dataset, SyntheticConfig};
+    pub use crate::metrics::{ShardTrace, ShardTraceRow};
     pub use crate::model::{BetaBernoulli, ClusterStats};
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{FallbackScorer, Scorer, ScorerKind};
-    pub use crate::sampler::{ClusterSet, KernelKind, ScoreMode, Shard, TransitionKernel};
+    pub use crate::sampler::{
+        ClusterSet, KernelAssignment, KernelKind, ScoreMode, Shard, TransitionKernel,
+    };
     pub use crate::serial::SerialGibbs;
 }

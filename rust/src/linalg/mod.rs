@@ -12,12 +12,16 @@ pub use eigen::jacobi_eigen_sym;
 /// Row-major dense f64 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// row count
     pub rows: usize,
+    /// column count
     pub cols: usize,
+    /// row-major storage, length rows × cols
     pub data: Vec<f64>,
 }
 
 impl Mat {
+    /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat {
             rows,
@@ -26,6 +30,7 @@ impl Mat {
         }
     }
 
+    /// Build from row vectors (all must share one length).
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
         let r = rows.len();
         let c = rows.first().map(|x| x.len()).unwrap_or(0);
@@ -37,16 +42,19 @@ impl Mat {
         }
     }
 
+    /// Element at (r, c).
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f64 {
         self.data[r * self.cols + c]
     }
 
+    /// Mutable element at (r, c).
     #[inline]
     pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
         &mut self.data[r * self.cols + c]
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
@@ -92,6 +100,7 @@ impl Mat {
         out
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {

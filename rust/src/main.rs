@@ -8,15 +8,16 @@
 //! * `help`        — this text
 
 use clustercluster::cli::Args;
-use clustercluster::coordinator::{Coordinator, CoordinatorConfig, LocalKernel};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig, KernelAssignment, MuMode};
 use clustercluster::data::io::save_binmat;
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::tinyimages::{generate as gen_tiny, TinyImagesConfig};
 use clustercluster::mapreduce::CommModel;
+use clustercluster::metrics::shard::{ShardTrace, ShardTraceRow};
 use clustercluster::metrics::trace::{McmcTrace, TraceRow};
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::ScorerKind;
-use clustercluster::sampler::ScoreMode;
+use clustercluster::sampler::{KernelKind, ScoreMode};
 use clustercluster::serial::{SerialConfig, SerialGibbs};
 use clustercluster::supercluster::ShuffleKernel;
 use std::path::Path;
@@ -31,34 +32,60 @@ COMMANDS
   serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--local-kernel gibbs|walker]
                [--scorer auto|fallback|pjrt] [--update-beta] [--trace out.csv]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
-               [--local-sweeps 1] [--no-shuffle] [--eq7] [--local-kernel gibbs|walker]
+               [--local-sweeps 1] [--no-shuffle] [--eq7]
+               [--local-kernel gibbs|walker|gibbs,walker,...]
+               [--mu-mode uniform|size-proportional|adaptive[:target]]
                [--scorer auto|fallback|pjrt] [--update-beta] [--latency 2.0]
-               [--bandwidth 1e8] [--trace out.csv] [--threads 1]
-               [--checkpoint state.ccckpt]
+               [--bandwidth 1e8] [--trace out.csv] [--shard-trace shards.csv]
+               [--threads 1] [--checkpoint state.ccckpt]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
 
-Both samplers run the same pluggable per-shard transition kernel
+Both samplers run the same pluggable per-shard transition kernels
 (--local-kernel): \"gibbs\" = Neal (2000) Alg. 3 collapsed Gibbs,
-\"walker\" = Walker (2007) slice sampling. (--walker is accepted as a
-legacy spelling of --local-kernel walker.)
+\"walker\" = Walker (2007) slice sampling. A comma-separated list
+(e.g. \"gibbs,walker\") cycles the kernels over the superclusters —
+different shards run different operators within one exact chain.
+(--walker is accepted as a legacy spelling of --local-kernel walker.)
+
+--mu-mode sets the supercluster granularity (all modes are
+exactness-preserving; see DESIGN.md §6): \"uniform\" = fixed 1/K (the
+paper); \"size-proportional\" = Gibbs-resample mu from its conditional
+given supercluster occupancies each round; \"adaptive[:target]\" =
+Metropolis-Hastings retarget toward equalized per-shard work (target =
+allowed per-shard data share as a multiple of 1/K, default 1.0).
 
 --scorer picks the batched scoring backend the kernel sweeps (and
 trace-time evaluation) run through: \"auto\" = PJRT artifacts when
 loadable, pure-Rust fallback otherwise; \"fallback\" = always pure
 Rust; \"pjrt\" = artifacts required (errors when unavailable).
+
+--shard-trace writes the per-(round, shard) series (mu_k, occupancy,
+cluster count, map seconds) that make the adaptive mode observable.
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
-/// points.
-fn kernel_arg(args: &Args) -> Result<LocalKernel, String> {
+/// points. Comma-separated lists cycle kernels over the shards.
+fn kernel_arg(args: &Args) -> Result<KernelAssignment, String> {
     match args.get("local-kernel") {
         Some(_) if args.has("walker") => {
             Err("pass either --local-kernel or the legacy --walker, not both".into())
         }
-        Some(s) => LocalKernel::parse(s),
-        None if args.has("walker") => Ok(LocalKernel::WalkerSlice),
-        None => Ok(LocalKernel::CollapsedGibbs),
+        Some(s) => KernelAssignment::parse(s),
+        None if args.has("walker") => Ok(KernelAssignment::AllSame(KernelKind::WalkerSlice)),
+        None => Ok(KernelAssignment::default()),
+    }
+}
+
+/// The serial chain is a single shard: accept any `--local-kernel`
+/// value that names exactly one kernel.
+fn serial_kernel_arg(args: &Args) -> Result<KernelKind, String> {
+    match kernel_arg(args)? {
+        KernelAssignment::AllSame(k) => Ok(k),
+        other => Err(format!(
+            "the serial chain runs one kernel, got {}",
+            other.describe()
+        )),
     }
 }
 
@@ -134,7 +161,7 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
     let scorer_kind = scorer_arg(args)?;
     let scfg = SerialConfig {
         update_beta: args.has("update-beta"),
-        kernel: kernel_arg(args)?,
+        kernel: serial_kernel_arg(args)?,
         scoring: ScoreMode::Batched(scorer_kind),
         ..Default::default()
     };
@@ -190,7 +217,8 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
         } else {
             ShuffleKernel::Exact
         },
-        local_kernel: kernel_arg(args)?,
+        mu_mode: MuMode::parse(&args.get_str("mu-mode", "uniform"))?,
+        kernel_assignment: kernel_arg(args)?,
         scoring: ScoreMode::Batched(scorer_arg(args)?),
         comm: CommModel {
             round_latency_s: args.get_f64("latency", 2.0)?,
@@ -206,6 +234,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let cfg = synth_cfg(args)?;
     let ccfg = coordinator_cfg(args)?;
     let rounds = args.get_usize("rounds", 50)?;
+    let workers = ccfg.workers;
+    let local_sweeps = ccfg.local_sweeps;
+    let kernel_desc = ccfg.kernel_assignment.describe();
+    let mu_desc = ccfg.mu_mode.describe();
     let ds = cfg.generate();
     let h = ds.true_entropy_estimate();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
@@ -214,16 +246,16 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // selection as the sweep path
     let mut scorer = scorer_arg(args)?.try_build()?;
     println!(
-        "parallel sampler: N={} D={} true J={} | K={} workers, {} local sweeps/round, kernel={}, scorer={} (H≈{h:.3})",
+        "parallel sampler: N={} D={} true J={} | K={workers} workers, {local_sweeps} local sweeps/round, kernel={kernel_desc}, mu-mode={mu_desc}, scorer={} (H≈{h:.3})",
         cfg.n,
         cfg.d,
         cfg.clusters,
-        ccfg.workers,
-        ccfg.local_sweeps,
-        ccfg.local_kernel.name(),
         scorer.name()
     );
-    let mut trace = McmcTrace::new(&format!("run_k{}", ccfg.workers));
+    let mut trace = McmcTrace::new(&format!("run_k{workers}"));
+    let mut shard_trace = args
+        .get("shard-trace")
+        .map(|_| ShardTrace::new(&format!("run_k{workers}")));
     for it in 0..rounds {
         let rs = coord.step(&mut rng);
         let ll = coord.predictive_loglik(&ds.test, scorer.as_mut());
@@ -236,6 +268,18 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             alpha: coord.alpha(),
             bytes: rs.bytes_transferred,
         });
+        if let Some(st) = shard_trace.as_mut() {
+            for s in coord.shard_stats() {
+                st.push(ShardTraceRow {
+                    round: it as u64,
+                    shard: s.shard as u64,
+                    mu: s.mu,
+                    rows: s.rows,
+                    clusters: s.clusters,
+                    map_seconds: s.map_seconds,
+                });
+            }
+        }
         if it % 10 == 0 || it + 1 == rounds {
             println!(
                 "  round {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} modeled_t {:.2}s (target ≈ {:.4})",
@@ -245,6 +289,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 -h
             );
         }
+    }
+    if let Some(rate) = coord.mu_acceptance_rate() {
+        println!("adaptive μ retarget acceptance: {:.1}%", 100.0 * rate);
     }
     println!("\nphase profile:\n{}", coord.timer.render());
     if let Some(path) = args.get("checkpoint") {
@@ -256,6 +303,10 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if let Some(path) = args.get("trace") {
         trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
         println!("trace -> {path}");
+    }
+    if let (Some(st), Some(path)) = (shard_trace.as_ref(), args.get("shard-trace")) {
+        st.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("shard trace -> {path}");
     }
     Ok(())
 }
@@ -277,10 +328,11 @@ fn cmd_tiny_images(args: &Args) -> Result<(), String> {
     );
     let corpus = gen_tiny(&tcfg);
     let ccfg = coordinator_cfg(args)?;
+    let workers = ccfg.workers;
     let rounds = args.get_usize("rounds", 30)?;
     let mut rng = Pcg64::seed_from(tcfg.seed ^ 0x717);
     let mut coord = Coordinator::new(&corpus.features, ccfg, &mut rng);
-    println!("vector quantization with K={} workers:", ccfg.workers);
+    println!("vector quantization with K={workers} workers:");
     for it in 0..rounds {
         coord.step(&mut rng);
         if it % 5 == 0 || it + 1 == rounds {

@@ -157,6 +157,7 @@ impl std::fmt::Debug for MapReduce {
 }
 
 impl MapReduce {
+    /// Executor with `parallelism` persistent worker threads (≥ 1).
     pub fn new(parallelism: usize) -> Self {
         assert!(parallelism >= 1);
         // parallelism == 1 runs inline on the caller thread: no pool,
@@ -173,6 +174,7 @@ impl MapReduce {
         MapReduce::new(p)
     }
 
+    /// The configured worker-thread cap.
     pub fn parallelism(&self) -> usize {
         self.parallelism
     }

@@ -1,11 +1,15 @@
 //! Evaluation metrics: effective sample size (Fig. 2a), adjusted Rand
-//! index for latent-structure recovery, and MCMC trace recording with
-//! CSV/JSON emission for the figure benches.
+//! index for latent-structure recovery, MCMC trace recording with
+//! CSV/JSON emission for the figure benches, and the per-supercluster
+//! trace (μ_k, occupancy, map time) that makes the non-uniform
+//! [`crate::coordinator::MuMode`]s observable.
 
 pub mod ari;
 pub mod ess;
+pub mod shard;
 pub mod trace;
 
 pub use ari::adjusted_rand_index;
 pub use ess::effective_sample_size;
+pub use shard::{ShardTrace, ShardTraceRow};
 pub use trace::{McmcTrace, TraceRow};

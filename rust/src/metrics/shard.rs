@@ -1,0 +1,133 @@
+//! Per-supercluster trace recording: one row per (round, shard) with
+//! the series that make the non-uniform μ modes observable — μ_k, data
+//! occupancy, cluster count, and measured map-step seconds. This is the
+//! sink behind `repro run --shard-trace out.csv`; the rows come from
+//! [`crate::coordinator::Coordinator::shard_stats`].
+
+use crate::data::io::CsvWriter;
+use std::path::Path;
+
+/// One (round, shard) record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardTraceRow {
+    /// global round index
+    pub round: u64,
+    /// supercluster index k
+    pub shard: u64,
+    /// μ_k after the round's granularity update
+    pub mu: f64,
+    /// data rows resident on the shard after the round
+    pub rows: u64,
+    /// live clusters on the shard after the round
+    pub clusters: u64,
+    /// measured map-step compute seconds for the shard this round
+    pub map_seconds: f64,
+}
+
+/// A full per-shard run trace (K rows appended per round).
+#[derive(Debug, Clone, Default)]
+pub struct ShardTrace {
+    /// all recorded rows, in push order
+    pub rows: Vec<ShardTraceRow>,
+    /// run label for downstream tooling
+    pub label: String,
+}
+
+impl ShardTrace {
+    /// Empty trace with a run label.
+    pub fn new(label: &str) -> Self {
+        ShardTrace {
+            rows: Vec::new(),
+            label: label.to_string(),
+        }
+    }
+
+    /// Append one (round, shard) record.
+    pub fn push(&mut self, row: ShardTraceRow) {
+        self.rows.push(row);
+    }
+
+    /// Max/mean data-occupancy ratio for one round (1.0 = perfectly
+    /// balanced shards) — the load-balance statistic the adaptive μ mode
+    /// steers. `None` when the round is absent or holds no data.
+    pub fn imbalance(&self, round: u64) -> Option<f64> {
+        let occ: Vec<f64> = self
+            .rows
+            .iter()
+            .filter(|r| r.round == round)
+            .map(|r| r.rows as f64)
+            .collect();
+        if occ.is_empty() {
+            return None;
+        }
+        let mean = occ.iter().sum::<f64>() / occ.len() as f64;
+        if mean <= 0.0 {
+            return None;
+        }
+        let max = occ.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Some(max / mean)
+    }
+
+    /// Write the trace as CSV (one row per (round, shard)).
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &["round", "shard", "mu", "rows", "clusters", "map_seconds"],
+        )?;
+        for r in &self.rows {
+            w.row(&[
+                r.round as f64,
+                r.shard as f64,
+                r.mu,
+                r.rows as f64,
+                r.clusters as f64,
+                r.map_seconds,
+            ])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, shard: u64, mu: f64, rows: u64) -> ShardTraceRow {
+        ShardTraceRow {
+            round,
+            shard,
+            mu,
+            rows,
+            clusters: 2,
+            map_seconds: 0.01,
+        }
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let mut t = ShardTrace::new("test");
+        t.push(row(0, 0, 0.5, 30));
+        t.push(row(0, 1, 0.5, 10));
+        let got = t.imbalance(0).unwrap();
+        assert!((got - 1.5).abs() < 1e-12, "{got}");
+        assert_eq!(t.imbalance(7), None);
+        let mut empty_round = ShardTrace::new("z");
+        empty_round.push(row(1, 0, 1.0, 0));
+        assert_eq!(empty_round.imbalance(1), None);
+    }
+
+    #[test]
+    fn csv_emission_includes_all_series() {
+        let mut t = ShardTrace::new("emit");
+        t.push(row(0, 0, 0.25, 100));
+        t.push(row(0, 1, 0.75, 300));
+        let dir = std::env::temp_dir().join("cc_shard_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.csv");
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.contains("mu"));
+        assert!(text.contains("map_seconds"));
+        assert!(text.contains("0.75"));
+    }
+}

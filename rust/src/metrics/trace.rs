@@ -9,6 +9,7 @@ use std::path::Path;
 /// One global-iteration record.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TraceRow {
+    /// global iteration (sweep or round) index
     pub iter: u64,
     /// modeled distributed wall-clock, cumulative seconds
     pub modeled_time_s: f64,
@@ -16,7 +17,9 @@ pub struct TraceRow {
     pub measured_time_s: f64,
     /// mean test-set predictive log-likelihood per datum
     pub predictive_loglik: f64,
+    /// total live clusters
     pub num_clusters: u64,
+    /// concentration α after the iteration
     pub alpha: f64,
     /// bytes moved this round by map/reduce/shuffle
     pub bytes: u64,
@@ -25,11 +28,14 @@ pub struct TraceRow {
 /// A full run trace.
 #[derive(Debug, Clone, Default)]
 pub struct McmcTrace {
+    /// recorded rows in iteration order
     pub rows: Vec<TraceRow>,
+    /// run label for downstream tooling
     pub label: String,
 }
 
 impl McmcTrace {
+    /// Empty trace with a run label.
     pub fn new(label: &str) -> Self {
         McmcTrace {
             rows: Vec::new(),
@@ -37,14 +43,17 @@ impl McmcTrace {
         }
     }
 
+    /// Append one iteration record.
     pub fn push(&mut self, row: TraceRow) {
         self.rows.push(row);
     }
 
+    /// Last recorded predictive log-likelihood.
     pub fn final_loglik(&self) -> Option<f64> {
         self.rows.last().map(|r| r.predictive_loglik)
     }
 
+    /// Last recorded cluster count.
     pub fn final_clusters(&self) -> Option<u64> {
         self.rows.last().map(|r| r.num_clusters)
     }
@@ -66,6 +75,7 @@ impl McmcTrace {
             .collect()
     }
 
+    /// Write the trace as CSV (one row per iteration).
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
@@ -93,6 +103,7 @@ impl McmcTrace {
         Ok(())
     }
 
+    /// The trace as a JSON object (label + per-series arrays).
     pub fn to_json(&self) -> Json {
         let mut obj = Json::obj();
         obj.set("label", Json::str(&self.label));

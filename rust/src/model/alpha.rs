@@ -16,7 +16,9 @@ use crate::special::lgamma;
 /// Gamma(shape, rate) prior on α.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GammaPrior {
+    /// shape parameter a
     pub shape: f64,
+    /// rate parameter b (mean = a/b)
     pub rate: f64,
 }
 
@@ -31,6 +33,7 @@ impl Default for GammaPrior {
 }
 
 impl GammaPrior {
+    /// Log density at `x` (−∞ for x ≤ 0).
     pub fn logpdf(&self, x: f64) -> f64 {
         if x <= 0.0 {
             return f64::NEG_INFINITY;

@@ -44,8 +44,11 @@ pub fn log_beta_conditional(
 /// Configuration for the griddy-Gibbs β updates.
 #[derive(Debug, Clone, Copy)]
 pub struct BetaGridConfig {
+    /// smallest grid value
     pub lo: f64,
+    /// largest grid value
     pub hi: f64,
+    /// number of log-spaced grid points
     pub points: usize,
 }
 
@@ -67,6 +70,7 @@ pub struct BetaUpdater {
 }
 
 impl BetaUpdater {
+    /// Updater over the configured log-spaced grid.
     pub fn new(cfg: BetaGridConfig) -> Self {
         BetaUpdater {
             grid: GriddyGibbs::log_spaced(cfg.lo, cfg.hi, cfg.points),

@@ -29,6 +29,7 @@ pub struct LogLut {
 }
 
 impl LogLut {
+    /// Table of `ln(x + β)` for x in 0..=n_max.
     pub fn new(beta: f64, n_max: usize) -> LogLut {
         LogLut {
             beta,
@@ -86,7 +87,9 @@ impl LogLut {
 /// hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BetaBernoulli {
+    /// data dimensionality D
     pub d: usize,
+    /// per-dimension Beta(β_d, β_d) hyperparameters
     pub beta: Vec<f64>,
     /// fast-rebuild LUT; valid only while β is uniform across dims
     lut: Option<LogLut>,
@@ -170,6 +173,7 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
+    /// Stats of an empty cluster over `d` dims.
     pub fn empty(d: usize) -> Self {
         ClusterStats {
             n: 0,
@@ -181,6 +185,7 @@ impl ClusterStats {
         }
     }
 
+    /// Member count n_j.
     pub fn n(&self) -> u64 {
         self.n
     }
@@ -191,10 +196,12 @@ impl ClusterStats {
         self.log_n
     }
 
+    /// Per-dimension one-counts c_jd.
     pub fn ones(&self) -> &[u32] {
         &self.ones
     }
 
+    /// Whether the cluster has no members.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }

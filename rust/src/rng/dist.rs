@@ -71,6 +71,7 @@ pub fn dirichlet(rng: &mut Pcg64, alphas: &[f64]) -> Vec<f64> {
     g
 }
 
+/// Bernoulli(p) draw.
 pub fn bernoulli(rng: &mut Pcg64, p: f64) -> bool {
     rng.next_f64() < p
 }

@@ -41,6 +41,7 @@ impl GriddyGibbs {
         }
     }
 
+    /// The grid points the sampler evaluates over.
     pub fn grid(&self) -> &[f64] {
         &self.grid
     }

@@ -44,6 +44,7 @@ impl Pcg64 {
         Pcg64::new(s, id.wrapping_add(0x853c_49e6_748f_ea9b))
     }
 
+    /// Next 64 uniform bits (the PCG-XSL-RR output function).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);

@@ -43,6 +43,20 @@ pub use pjrt::PjrtScorer;
 /// Implementations must be `Send`: the kernel sweep path owns one scorer
 /// per [`crate::sampler::Shard`], and shards migrate across the
 /// coordinator's map-step worker threads.
+///
+/// ```
+/// use clustercluster::data::BinMat;
+/// use clustercluster::runtime::{FallbackScorer, Scorer};
+///
+/// // one datum x = [1, 0], one cluster with p̂(x_d = 1) = 0.5 per dim
+/// let mut x = BinMat::zeros(1, 2);
+/// x.set(0, 0, true);
+/// let half = 0.5f32.ln();
+/// let (w1, w0) = (vec![half; 2], vec![half; 2]);
+/// let mut scorer = FallbackScorer::new();
+/// let dens = scorer.predictive_density(&x, &w1, &w0, &[0.0], 2, 1);
+/// assert!((dens[0] - 2.0 * half).abs() < 1e-6);
+/// ```
 pub trait Scorer: Send {
     /// Per-row log predictive density `ln Σ_j exp(S[r,j] + logpi[j])`.
     fn predictive_density(
@@ -148,6 +162,7 @@ impl ScorerKind {
         }
     }
 
+    /// CLI name of this backend selection.
     pub fn name(self) -> &'static str {
         match self {
             ScorerKind::Auto => "auto",
@@ -195,6 +210,7 @@ impl ScorerKind {
 pub struct FallbackScorer;
 
 impl FallbackScorer {
+    /// The stateless pure-Rust scorer.
     pub fn new() -> Self {
         FallbackScorer
     }

@@ -129,6 +129,7 @@ impl PjrtScorer {
         ))
     }
 
+    /// Names of the compiled artifact variants in the manifest.
     pub fn variant_names(&self) -> Vec<&str> {
         self.variants.iter().map(|v| v.name.as_str()).collect()
     }

@@ -49,6 +49,7 @@ impl ClusterSet {
         ClusterSet { slots, free, dims }
     }
 
+    /// Binary data dimensionality every cluster's stats are sized for.
     pub fn dims(&self) -> usize {
         self.dims
     }
@@ -68,6 +69,7 @@ impl ClusterSet {
         self.free.len()
     }
 
+    /// Stats of `slot`, or `None` for a free/out-of-range slot.
     pub fn get(&self, slot: usize) -> Option<&ClusterStats> {
         self.slots.get(slot).and_then(|c| c.as_ref())
     }

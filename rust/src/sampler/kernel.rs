@@ -251,6 +251,7 @@ impl KernelKind {
         }
     }
 
+    /// Display name of the kernel this selector names.
     pub fn name(self) -> &'static str {
         self.kernel().name()
     }
@@ -267,11 +268,167 @@ impl KernelKind {
     }
 }
 
+/// How transition kernels are assigned to the coordinator's shards
+/// (paper §4 / Williamson et al.: each supercluster is an independent
+/// `DP(αμ_k, H)`, so *different* standard DPM operators may run on
+/// different superclusters within one chain without affecting
+/// exactness). This is the config-level selector behind
+/// `--local-kernel gibbs,walker,…` on the CLI; the coordinator resolves
+/// it to one [`KernelKind`] per shard at construction via
+/// [`KernelAssignment::resolve`].
+///
+/// ```
+/// use clustercluster::sampler::{KernelAssignment, KernelKind};
+///
+/// // one kernel everywhere (the default)
+/// let all = KernelAssignment::AllSame(KernelKind::CollapsedGibbs);
+/// assert_eq!(all.resolve(3).unwrap(), vec![KernelKind::CollapsedGibbs; 3]);
+///
+/// // `--local-kernel gibbs,walker` cycles the list over the shards
+/// let mixed = KernelAssignment::parse("gibbs,walker").unwrap();
+/// assert_eq!(
+///     mixed.resolve(3).unwrap(),
+///     vec![
+///         KernelKind::CollapsedGibbs,
+///         KernelKind::WalkerSlice,
+///         KernelKind::CollapsedGibbs,
+///     ],
+/// );
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KernelAssignment {
+    /// Every shard runs the same kernel.
+    AllSame(KernelKind),
+    /// Explicit kernel per shard; the vector length must equal the
+    /// worker count (checked by [`KernelAssignment::resolve`]).
+    PerShard(Vec<KernelKind>),
+    /// Cycle a non-empty kernel list over the shards in order — what a
+    /// comma-separated `--local-kernel` value parses into.
+    RoundRobin(Vec<KernelKind>),
+}
+
+impl Default for KernelAssignment {
+    fn default() -> Self {
+        KernelAssignment::AllSame(KernelKind::default())
+    }
+}
+
+impl KernelAssignment {
+    /// Resolve to one kernel selector per shard, validating shape.
+    pub fn resolve(&self, workers: usize) -> Result<Vec<KernelKind>, String> {
+        match self {
+            KernelAssignment::AllSame(k) => Ok(vec![*k; workers]),
+            KernelAssignment::PerShard(v) => {
+                if v.len() == workers {
+                    Ok(v.clone())
+                } else {
+                    Err(format!(
+                        "per-shard kernel list has {} entries for {} workers",
+                        v.len(),
+                        workers
+                    ))
+                }
+            }
+            KernelAssignment::RoundRobin(v) => {
+                if v.is_empty() {
+                    Err("round-robin kernel list is empty".into())
+                } else {
+                    Ok((0..workers).map(|i| v[i % v.len()]).collect())
+                }
+            }
+        }
+    }
+
+    /// Parse a `--local-kernel` value: a single kernel name maps to
+    /// [`KernelAssignment::AllSame`], a comma-separated list to
+    /// [`KernelAssignment::RoundRobin`] over the shards.
+    pub fn parse(s: &str) -> Result<KernelAssignment, String> {
+        let kinds: Result<Vec<KernelKind>, String> =
+            s.split(',').map(|tok| KernelKind::parse(tok.trim())).collect();
+        let kinds = kinds?;
+        match kinds.as_slice() {
+            [] => Err("empty kernel list".into()),
+            [one] => Ok(KernelAssignment::AllSame(*one)),
+            _ => Ok(KernelAssignment::RoundRobin(kinds)),
+        }
+    }
+
+    /// Human-readable description for run banners and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            KernelAssignment::AllSame(k) => k.name().to_string(),
+            KernelAssignment::PerShard(v) => {
+                let names: Vec<&str> = v.iter().map(|k| k.name()).collect();
+                format!("per-shard[{}]", names.join(","))
+            }
+            KernelAssignment::RoundRobin(v) => {
+                let names: Vec<&str> = v.iter().map(|k| k.name()).collect();
+                format!("round-robin[{}]", names.join(","))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::data::synthetic::SyntheticConfig;
     use crate::rng::Pcg64;
+
+    #[test]
+    fn assignment_parses_and_resolves() {
+        assert_eq!(
+            KernelAssignment::parse("gibbs").unwrap(),
+            KernelAssignment::AllSame(KernelKind::CollapsedGibbs)
+        );
+        let mixed = KernelAssignment::parse(" gibbs , walker ").unwrap();
+        assert_eq!(
+            mixed,
+            KernelAssignment::RoundRobin(vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+            ])
+        );
+        assert_eq!(
+            mixed.resolve(5).unwrap(),
+            vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+                KernelKind::CollapsedGibbs,
+            ]
+        );
+        assert!(KernelAssignment::parse("gibbs,metropolis").is_err());
+        assert!(KernelAssignment::PerShard(vec![KernelKind::WalkerSlice])
+            .resolve(2)
+            .is_err());
+        assert!(KernelAssignment::RoundRobin(Vec::new()).resolve(2).is_err());
+        assert_eq!(
+            KernelAssignment::default().resolve(2).unwrap(),
+            vec![KernelKind::CollapsedGibbs; 2]
+        );
+    }
+
+    #[test]
+    fn assignment_describe_names_every_variant() {
+        assert_eq!(
+            KernelAssignment::AllSame(KernelKind::WalkerSlice).describe(),
+            "walker-slice"
+        );
+        assert_eq!(
+            KernelAssignment::PerShard(vec![KernelKind::CollapsedGibbs]).describe(),
+            "per-shard[collapsed-gibbs]"
+        );
+        assert_eq!(
+            KernelAssignment::RoundRobin(vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+            ])
+            .describe(),
+            "round-robin[collapsed-gibbs,walker-slice]"
+        );
+    }
 
     #[test]
     fn kind_parses_and_names() {

@@ -31,6 +31,27 @@
 //! [`crate::runtime::Scorer::score_rows_against_clusters`] — selected
 //! from both entry points as `--scorer auto|fallback|pjrt` and proven
 //! bit-identical in `rust/tests/scorer_equivalence.rs`.
+//!
+//! ## Example: one shard, one kernel, three sweeps
+//!
+//! ```
+//! use clustercluster::data::synthetic::SyntheticConfig;
+//! use clustercluster::model::BetaBernoulli;
+//! use clustercluster::rng::Pcg64;
+//! use clustercluster::sampler::{KernelKind, Shard, TransitionKernel};
+//!
+//! let ds = SyntheticConfig { n: 120, d: 8, clusters: 3, beta: 0.2, seed: 1 }
+//!     .generate_with_test_fraction(0.0);
+//! let model = BetaBernoulli::symmetric(8, 0.5);
+//! let rows: Vec<usize> = (0..ds.train.rows()).collect();
+//! let mut shard = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(7));
+//! let kernel = KernelKind::CollapsedGibbs.kernel();
+//! for _ in 0..3 {
+//!     kernel.sweep(&mut shard, &ds.train, &model);
+//! }
+//! assert_eq!(shard.num_rows(), 120);
+//! shard.check_invariants(&ds.train).unwrap();
+//! ```
 
 pub mod cluster_set;
 pub mod kernel;
@@ -38,6 +59,6 @@ pub mod score;
 pub mod shard;
 
 pub use cluster_set::ClusterSet;
-pub use kernel::{CollapsedGibbs, KernelKind, TransitionKernel, WalkerSlice};
+pub use kernel::{CollapsedGibbs, KernelAssignment, KernelKind, TransitionKernel, WalkerSlice};
 pub use score::ScoreMode;
 pub use shard::Shard;

@@ -286,18 +286,22 @@ impl Shard {
         }
     }
 
+    /// The concentration θ the kernel sweeps with (α serial, α·μ_k parallel).
     pub fn theta(&self) -> f64 {
         self.theta
     }
 
+    /// Number of live (non-empty) clusters on this shard.
     pub fn num_clusters(&self) -> usize {
         self.clusters.num_active()
     }
 
+    /// Number of data rows resident on this shard.
     pub fn num_rows(&self) -> usize {
         self.rows.len()
     }
 
+    /// Global ids of the rows resident on this shard.
     pub fn rows(&self) -> &[usize] {
         &self.rows
     }
@@ -330,6 +334,7 @@ impl Shard {
         self.clusters.collect_dim_stats(d, out);
     }
 
+    /// Drop every per-cluster score cache (call after β changes).
     pub fn invalidate_caches(&mut self) {
         self.clusters.invalidate_caches();
     }

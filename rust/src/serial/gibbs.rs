@@ -25,8 +25,11 @@ use crate::util::timer::PhaseTimer;
 /// Configuration for the serial sampler.
 #[derive(Debug, Clone, Copy)]
 pub struct SerialConfig {
+    /// initial concentration α
     pub init_alpha: f64,
+    /// Gamma prior driving the Eq. 6 α update
     pub alpha_prior: GammaPrior,
+    /// grid for the griddy-Gibbs β_d update
     pub beta_grid: BetaGridConfig,
     /// initial symmetric β for all dims
     pub init_beta: f64,
@@ -88,11 +91,14 @@ pub fn calibrate_alpha(data: &BinMat, fraction: f64, sweeps: usize, rng: &mut Pc
 /// The serial sampler state: one shard + global hyperparameters.
 pub struct SerialGibbs<'a> {
     data: &'a BinMat,
+    /// collapsed Beta–Bernoulli base measure
     pub model: BetaBernoulli,
+    /// current concentration α
     pub alpha: f64,
     cfg: SerialConfig,
     shard: Shard,
     beta_updater: BetaUpdater,
+    /// per-phase wall-clock accounting
     pub timer: PhaseTimer,
 }
 
@@ -189,6 +195,7 @@ impl<'a> SerialGibbs<'a> {
         }
     }
 
+    /// Number of live clusters.
     pub fn num_clusters(&self) -> usize {
         self.shard.num_clusters()
     }
@@ -198,6 +205,7 @@ impl<'a> SerialGibbs<'a> {
         self.shard.assignments_local()
     }
 
+    /// Current concentration α.
     pub fn alpha(&self) -> f64 {
         self.alpha
     }

@@ -1,8 +1,131 @@
 //! Property-test harness (proptest is not in the offline crate universe):
 //! seeded random generation, many cases, and first-failure reporting with
-//! the reproducing seed. Used by the invariant suites in `rust/tests/`.
+//! the reproducing seed, plus the shared posterior-enumeration machinery
+//! behind the 203-partition exactness gates. Used by the suites in
+//! `rust/tests/` (`posterior_exactness.rs`, `mu_modes.rs`,
+//! `scorer_equivalence.rs`, `property_invariants.rs`).
 
+use crate::data::BinMat;
+use crate::model::{BetaBernoulli, ClusterStats};
 use crate::rng::Pcg64;
+use crate::special::{lgamma, logsumexp};
+use std::collections::HashMap;
+
+/// Number of rows in the [`enumeration_fixture`] dataset.
+pub const ENUM_N: usize = 6;
+/// Dimensionality of the [`enumeration_fixture`] dataset.
+pub const ENUM_D: usize = 4;
+
+/// The fixed 6×4 mildly-structured binary dataset every enumeration
+/// gate runs on — small enough that all Bell(6) = 203 partitions can be
+/// scored exactly.
+pub fn enumeration_fixture() -> BinMat {
+    let dense: [u8; ENUM_N * ENUM_D] = [
+        1, 1, 0, 0, //
+        1, 1, 0, 1, //
+        0, 0, 1, 1, //
+        0, 1, 1, 1, //
+        1, 0, 0, 0, //
+        0, 0, 1, 0, //
+    ];
+    BinMat::from_dense(ENUM_N, ENUM_D, &dense)
+}
+
+/// Canonical restricted-growth string of an assignment vector (the
+/// partition identity, independent of label values).
+pub fn canonical_partition(z: &[u32]) -> Vec<u8> {
+    let mut map: HashMap<u32, u8> = HashMap::new();
+    let mut next = 0u8;
+    z.iter()
+        .map(|&zi| {
+            *map.entry(zi).or_insert_with(|| {
+                let v = next;
+                next += 1;
+                v
+            })
+        })
+        .collect()
+}
+
+/// All set partitions of `{0..n-1}` as restricted-growth strings.
+pub fn all_partitions(n: usize) -> Vec<Vec<u8>> {
+    fn rec(i: usize, maxv: u8, cur: &mut Vec<u8>, out: &mut Vec<Vec<u8>>) {
+        if i == cur.len() {
+            out.push(cur.clone());
+            return;
+        }
+        for v in 0..=maxv {
+            cur[i] = v;
+            rec(i + 1, maxv.max(v + 1), cur, out);
+        }
+    }
+    let mut out = Vec::new();
+    let mut cur = vec![0u8; n];
+    rec(0, 0, &mut cur, &mut out);
+    out
+}
+
+/// Exact unnormalized log posterior of one partition:
+/// `J ln α + Σ_j ln Γ(n_j) + Σ_j log-marginal(cluster_j)`.
+pub fn partition_log_posterior(
+    data: &BinMat,
+    model: &BetaBernoulli,
+    alpha: f64,
+    part: &[u8],
+) -> f64 {
+    let j = (*part.iter().max().unwrap() + 1) as usize;
+    let mut lp = j as f64 * alpha.ln();
+    for cid in 0..j {
+        let mut c = ClusterStats::empty(data.dims());
+        let mut n = 0u64;
+        for (r, &p) in part.iter().enumerate() {
+            if p as usize == cid {
+                c.add(data, r);
+                n += 1;
+            }
+        }
+        lp += lgamma(n as f64) + c.log_marginal(model);
+    }
+    lp
+}
+
+/// The exact normalized DPM posterior over ALL partitions of the
+/// dataset's rows (only feasible for tiny data — the gates use the
+/// 6-row [`enumeration_fixture`], 203 partitions).
+pub fn enumerate_posterior(
+    data: &BinMat,
+    model: &BetaBernoulli,
+    alpha: f64,
+) -> HashMap<Vec<u8>, f64> {
+    let parts = all_partitions(data.rows());
+    let lps: Vec<f64> = parts
+        .iter()
+        .map(|p| partition_log_posterior(data, model, alpha, p))
+        .collect();
+    let z = logsumexp(&lps);
+    parts
+        .into_iter()
+        .zip(lps)
+        .map(|(p, lp)| (p, (lp - z).exp()))
+        .collect()
+}
+
+/// Total-variation distance between the exact posterior and an
+/// empirical partition histogram of `total` samples.
+pub fn partition_tv_distance(
+    truth: &HashMap<Vec<u8>, f64>,
+    counts: &HashMap<Vec<u8>, u64>,
+    total: u64,
+) -> f64 {
+    let mut tv = 0.0;
+    for (p, &q) in truth {
+        let emp = counts.get(p).copied().unwrap_or(0) as f64 / total as f64;
+        tv += (q - emp).abs();
+    }
+    // partitions never visited but with positive truth are already
+    // counted; visited-but-zero-truth impossible (all have support)
+    tv / 2.0
+}
 
 /// Run `prop` on `cases` values drawn by `generate`. Panics on the first
 /// failure with the case index, seed, and debug rendering of the input.
@@ -104,5 +227,35 @@ mod tests {
     fn assert_close_tolerances() {
         assert!(assert_close("x", 1.0001, 1.0, 1e-3).is_ok());
         assert!(assert_close("x", 1.1, 1.0, 1e-3).is_err());
+    }
+
+    #[test]
+    fn all_partitions_counts_are_bell_numbers() {
+        for (n, bell) in [(1usize, 1usize), (2, 2), (3, 5), (4, 15), (5, 52), (6, 203)] {
+            assert_eq!(all_partitions(n).len(), bell, "Bell({n})");
+        }
+    }
+
+    #[test]
+    fn canonical_partition_is_label_invariant() {
+        assert_eq!(
+            canonical_partition(&[7, 7, 2, 9]),
+            canonical_partition(&[0, 0, 5, 1])
+        );
+        assert_ne!(
+            canonical_partition(&[0, 1, 1]),
+            canonical_partition(&[0, 0, 1])
+        );
+    }
+
+    #[test]
+    fn enumerated_posterior_normalizes() {
+        let data = enumeration_fixture();
+        let model = BetaBernoulli::symmetric(ENUM_D, 0.6);
+        let post = enumerate_posterior(&data, &model, 1.3);
+        assert_eq!(post.len(), 203);
+        let total: f64 = post.values().sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σp = {total}");
+        assert!(post.values().all(|&p| p > 0.0));
     }
 }

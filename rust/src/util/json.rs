@@ -8,15 +8,22 @@ use std::fmt::Write as _;
 /// A JSON value restricted to what this repo emits.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// a number (always emitted as f64)
     Num(f64),
+    /// a string
     Str(String),
+    /// an array
     Arr(Vec<Json>),
+    /// an object with sorted keys (deterministic emission)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -33,18 +40,22 @@ impl Json {
         self
     }
 
+    /// Number value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// String value.
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
 
+    /// Array of numbers.
     pub fn arr_nums(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -59,6 +71,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),

@@ -14,6 +14,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Empty timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -42,10 +43,12 @@ impl PhaseTimer {
         }
     }
 
+    /// Accumulated wall-clock of `phase`.
     pub fn total(&self, phase: &str) -> Duration {
         self.acc.get(phase).copied().unwrap_or_default()
     }
 
+    /// How many times `phase` was recorded.
     pub fn count(&self, phase: &str) -> u64 {
         self.counts.get(phase).copied().unwrap_or_default()
     }

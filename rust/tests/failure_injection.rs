@@ -1,9 +1,16 @@
 //! Failure injection: the runtime and IO layers must fail loudly and
 //! cleanly on corrupt or missing inputs — no partial loads, no silent
-//! wrong numbers.
+//! wrong numbers. Includes the checkpoint μ-state contract: a resumed
+//! non-uniform-μ run must continue from the saved μ vector, and every
+//! path that could silently reset μ (legacy format, mode mismatch) must
+//! be an error instead.
 
+use clustercluster::coordinator::{Checkpoint, Coordinator, CoordinatorConfig, MuMode};
 use clustercluster::data::io::{load_binmat, save_binmat};
+use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::BinMat;
+use clustercluster::mapreduce::CommModel;
+use clustercluster::rng::Pcg64;
 use clustercluster::runtime::PjrtScorer;
 use std::path::{Path, PathBuf};
 
@@ -112,4 +119,136 @@ fn bad_magic_rejected() {
     let p = d.join("data.ccbin");
     std::fs::write(&p, b"GARBAGE!________________________").unwrap();
     assert!(load_binmat(Path::new(&p)).is_err());
+}
+
+fn adaptive_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        mu_mode: MuMode::Adaptive {
+            target_occupancy: 1.0,
+        },
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn resumed_adaptive_run_continues_from_saved_mu() {
+    // the failure being injected: a restart. The resumed chain must pick
+    // up the saved (generally non-uniform) μ bit-for-bit — resuming with
+    // a silently re-uniformized μ would be a different chain.
+    let ds = SyntheticConfig {
+        n: 300,
+        d: 12,
+        clusters: 3,
+        beta: 0.2,
+        seed: 41,
+    }
+    .generate_with_test_fraction(0.0);
+    // SizeProportional resamples μ every round, so the captured μ is
+    // guaranteed off-uniform; the same save/load/restore path serves
+    // Adaptive (exercised below for the mode-mismatch contract)
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        mu_mode: MuMode::SizeProportional,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(42);
+    let mut coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
+    for _ in 0..6 {
+        coord.step(&mut rng);
+    }
+    let saved_mu: Vec<u64> = coord.mu().iter().map(|m| m.to_bits()).collect();
+    assert!(
+        coord.mu().iter().any(|&m| (m - 1.0 / 3.0).abs() > 1e-12),
+        "test needs a non-uniform μ to be meaningful: {:?}",
+        coord.mu()
+    );
+    let d = tmpdir("mu_resume");
+    let p = d.join("state.ccckpt");
+    coord.save_checkpoint(&p).unwrap();
+
+    let ckpt = Checkpoint::load(&p).unwrap();
+    let mut rng2 = Pcg64::seed_from(43);
+    let resumed = Coordinator::resume(&ds.train, cfg, &ckpt, &mut rng2).unwrap();
+    let resumed_mu: Vec<u64> = resumed.mu().iter().map(|m| m.to_bits()).collect();
+    assert_eq!(resumed_mu, saved_mu, "resume reinitialized μ");
+}
+
+#[test]
+fn mu_mode_mismatch_on_resume_is_an_error() {
+    let ds = SyntheticConfig {
+        n: 120,
+        d: 8,
+        clusters: 2,
+        beta: 0.3,
+        seed: 44,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = adaptive_cfg(2);
+    let mut rng = Pcg64::seed_from(45);
+    let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+    coord.step(&mut rng);
+    let ckpt = Checkpoint::capture(&coord);
+    // uniform config may not consume an adaptive checkpoint…
+    let uniform = CoordinatorConfig {
+        workers: 2,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    assert!(Coordinator::resume(&ds.train, uniform, &ckpt, &mut rng).is_err());
+    // …and a different adaptive target is a different mode too
+    let other_target = CoordinatorConfig {
+        mu_mode: MuMode::Adaptive {
+            target_occupancy: 2.0,
+        },
+        ..adaptive_cfg(2)
+    };
+    assert!(Coordinator::resume(&ds.train, other_target, &ckpt, &mut rng).is_err());
+    // the matching config resumes fine (positive control), continuing
+    // from the checkpoint's exact μ
+    let ok = Coordinator::resume(&ds.train, adaptive_cfg(2), &ckpt, &mut rng).unwrap();
+    assert_eq!(
+        ok.mu().iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
+        ckpt.mu.iter().map(|m| m.to_bits()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn legacy_v1_checkpoint_is_rejected_not_silently_resumed() {
+    // a CCCKPT1 file carries no μ state; loading it must be a loud error
+    // (resuming would silently reset μ to uniform)
+    let d = tmpdir("v1_ckpt");
+    let p = d.join("old.ccckpt");
+    let mut bytes = b"CCCKPT1\n".to_vec();
+    bytes.extend_from_slice(&[0u8; 64]);
+    std::fs::write(&p, &bytes).unwrap();
+    let err = Checkpoint::load(&p).unwrap_err();
+    assert!(err.to_string().contains("CCCKPT1"), "{err}");
+}
+
+#[test]
+fn truncated_v2_checkpoint_is_rejected() {
+    let ds = SyntheticConfig {
+        n: 100,
+        d: 8,
+        clusters: 2,
+        beta: 0.3,
+        seed: 46,
+    }
+    .generate_with_test_fraction(0.0);
+    let mut rng = Pcg64::seed_from(47);
+    let mut coord = Coordinator::new(&ds.train, adaptive_cfg(2), &mut rng);
+    coord.step(&mut rng);
+    let d = tmpdir("v2_trunc");
+    let p = d.join("state.ccckpt");
+    coord.save_checkpoint(&p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    // drop the tail (checksum + part of the last shard)
+    std::fs::write(&p, &bytes[..bytes.len() - 24]).unwrap();
+    assert!(Checkpoint::load(&p).is_err());
 }

@@ -11,14 +11,14 @@
 //! matching long-run moments) is kept as a guard against accidental
 //! coupling-by-construction bugs.
 
-use clustercluster::coordinator::{Coordinator, CoordinatorConfig, LocalKernel};
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig, LocalKernel, MuMode};
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::mapreduce::CommModel;
 use clustercluster::rng::Pcg64;
 use clustercluster::sampler::KernelKind;
 use clustercluster::serial::{SerialConfig, SerialGibbs};
+use clustercluster::testing::canonical_partition as canonical;
 use clustercluster::util::mean;
-use std::collections::HashMap;
 
 const ALPHA: f64 = 1.5;
 const BETA: f64 = 0.4;
@@ -34,27 +34,18 @@ fn dataset() -> clustercluster::data::Dataset {
     .generate_with_test_fraction(0.0)
 }
 
-/// Canonical restricted-growth string of an assignment vector (partition
-/// identity independent of label values).
-fn canonical(z: &[u32]) -> Vec<u8> {
-    let mut map: HashMap<u32, u8> = HashMap::new();
-    let mut next = 0u8;
-    z.iter()
-        .map(|&zi| {
-            *map.entry(zi).or_insert_with(|| {
-                let v = next;
-                next += 1;
-                v
-            })
-        })
-        .collect()
-}
-
 /// The structural claim: same master seed ⇒ the serial sampler and the
 /// K=1 coordinator visit the same partition and the same α at every
 /// sweep, because they run the same kernel on the same shard abstraction
-/// with identically-derived streams.
+/// with identically-derived streams. This must hold under EVERY
+/// [`MuMode`]: at K=1 μ is degenerate at [1], so the non-uniform modes
+/// must consume no master-stream randomness at all (otherwise α would
+/// desynchronize from the serial chain).
 fn assert_chains_identical(kernel: KernelKind) {
+    assert_chains_identical_mu(kernel, MuMode::Uniform);
+}
+
+fn assert_chains_identical_mu(kernel: KernelKind, mu_mode: MuMode) {
     let ds = dataset();
     let seed = 2024;
 
@@ -76,7 +67,8 @@ fn assert_chains_identical(kernel: KernelKind) {
         init_beta: BETA,
         update_alpha: true,
         update_beta: false,
-        local_kernel: kernel,
+        mu_mode,
+        kernel_assignment: clustercluster::sampler::KernelAssignment::AllSame(kernel),
         comm: CommModel::free(),
         parallelism: 1,
         ..Default::default()
@@ -117,6 +109,31 @@ fn k1_chain_identical_collapsed_gibbs() {
 #[test]
 fn k1_chain_identical_walker_slice() {
     assert_chains_identical(KernelKind::WalkerSlice);
+}
+
+#[test]
+fn k1_chain_identical_size_proportional_mu() {
+    // K=1 SizeProportional must be bit-identical to the serial chain:
+    // the degenerate μ=[1] Gibbs update is skipped, so the master stream
+    // is consumed exactly as serially
+    assert_chains_identical_mu(KernelKind::CollapsedGibbs, MuMode::SizeProportional);
+    assert_chains_identical_mu(KernelKind::WalkerSlice, MuMode::SizeProportional);
+}
+
+#[test]
+fn k1_chain_identical_adaptive_mu() {
+    assert_chains_identical_mu(
+        KernelKind::CollapsedGibbs,
+        MuMode::Adaptive {
+            target_occupancy: 1.0,
+        },
+    );
+    assert_chains_identical_mu(
+        KernelKind::WalkerSlice,
+        MuMode::Adaptive {
+            target_occupancy: 1.0,
+        },
+    );
 }
 
 #[test]

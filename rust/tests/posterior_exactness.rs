@@ -14,105 +14,29 @@
 //! restructuring directly, not only via bit-equivalence.
 
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
-use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::model::BetaBernoulli;
 use clustercluster::rng::Pcg64;
 use clustercluster::serial::{SerialConfig, SerialGibbs};
-use clustercluster::special::{lgamma, logsumexp};
+use clustercluster::testing::{
+    canonical_partition as canonical, enumerate_posterior, enumeration_fixture as tiny_data,
+    partition_tv_distance as tv_distance, ENUM_D as D,
+};
 use std::collections::HashMap;
 
-const N: usize = 6;
-const D: usize = 4;
 const ALPHA: f64 = 1.3;
 const BETA: f64 = 0.6;
 
-fn tiny_data() -> BinMat {
-    // fixed, mildly-structured binary data
-    let dense: [u8; N * D] = [
-        1, 1, 0, 0, //
-        1, 1, 0, 1, //
-        0, 0, 1, 1, //
-        0, 1, 1, 1, //
-        1, 0, 0, 0, //
-        0, 0, 1, 0, //
-    ];
-    BinMat::from_dense(N, D, &dense)
-}
-
-/// Canonical restricted-growth string of an assignment vector.
-fn canonical(z: &[u32]) -> Vec<u8> {
-    let mut map: HashMap<u32, u8> = HashMap::new();
-    let mut next = 0u8;
-    z.iter()
-        .map(|&zi| {
-            *map.entry(zi).or_insert_with(|| {
-                let v = next;
-                next += 1;
-                v
-            })
-        })
-        .collect()
-}
-
-/// All set partitions of {0..n-1} as restricted growth strings.
-fn all_partitions(n: usize) -> Vec<Vec<u8>> {
-    let mut out = Vec::new();
-    let mut cur = vec![0u8; n];
-    fn rec(i: usize, maxv: u8, cur: &mut Vec<u8>, out: &mut Vec<Vec<u8>>) {
-        if i == cur.len() {
-            out.push(cur.clone());
-            return;
-        }
-        for v in 0..=maxv {
-            cur[i] = v;
-            rec(i + 1, maxv.max(v + 1), cur, out);
-        }
-    }
-    rec(0, 0, &mut cur, &mut out);
-    out
-}
-
-/// Exact unnormalized log posterior of a partition:
-/// `J ln α + Σ_j ln Γ(n_j) + Σ_j log-marginal(cluster_j)`.
-fn log_post(data: &BinMat, model: &BetaBernoulli, part: &[u8]) -> f64 {
-    let j = (*part.iter().max().unwrap() + 1) as usize;
-    let mut lp = j as f64 * ALPHA.ln();
-    for cid in 0..j {
-        let mut c = ClusterStats::empty(D);
-        let mut n = 0u64;
-        for (r, &p) in part.iter().enumerate() {
-            if p as usize == cid {
-                c.add(data, r);
-                n += 1;
-            }
-        }
-        lp += lgamma(n as f64) + c.log_marginal(model);
-    }
-    lp
-}
-
-fn exact_posterior(data: &BinMat, model: &BetaBernoulli) -> HashMap<Vec<u8>, f64> {
-    let parts = all_partitions(N);
-    assert_eq!(parts.len(), 203); // Bell(6)
-    let lps: Vec<f64> = parts.iter().map(|p| log_post(data, model, p)).collect();
-    let z = logsumexp(&lps);
-    parts
-        .into_iter()
-        .zip(lps)
-        .map(|(p, lp)| (p, (lp - z).exp()))
-        .collect()
-}
-
-fn tv_distance(truth: &HashMap<Vec<u8>, f64>, counts: &HashMap<Vec<u8>, u64>, total: u64) -> f64 {
-    let mut tv = 0.0;
-    for (p, &q) in truth {
-        let emp = counts.get(p).copied().unwrap_or(0) as f64 / total as f64;
-        tv += (q - emp).abs();
-    }
-    // partitions never visited but with positive truth are already
-    // counted; visited-but-zero-truth impossible (all have support)
-    tv / 2.0
+/// The exact posterior over the 203 partitions of the shared 6-row
+/// enumeration fixture (machinery lives in `clustercluster::testing`,
+/// shared with `rust/tests/mu_modes.rs`).
+fn exact_posterior(
+    data: &clustercluster::data::BinMat,
+    model: &BetaBernoulli,
+) -> HashMap<Vec<u8>, f64> {
+    let post = enumerate_posterior(data, model, ALPHA);
+    assert_eq!(post.len(), 203); // Bell(6)
+    post
 }
 
 fn serial_tv(
@@ -214,7 +138,7 @@ fn coordinator_tv_kernel(
         update_alpha: false,
         update_beta: false,
         shuffle: true,
-        local_kernel: kernel,
+        kernel_assignment: clustercluster::sampler::KernelAssignment::AllSame(kernel),
         comm: CommModel::free(),
         parallelism: 1,
         ..Default::default()
@@ -293,7 +217,7 @@ fn coordinator_k3_matches_enumerated_posterior() {
 #[test]
 fn no_shuffle_ablation_is_biased() {
     // without the shuffle step data can never merge across superclusters:
-    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §9.
+    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §7.
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);

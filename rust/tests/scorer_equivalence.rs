@@ -25,7 +25,7 @@ use clustercluster::mapreduce::CommModel;
 use clustercluster::model::{BetaBernoulli, ClusterStats};
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::{FallbackScorer, Scorer, ScorerKind};
-use clustercluster::sampler::{KernelKind, ScoreMode};
+use clustercluster::sampler::{KernelAssignment, KernelKind, ScoreMode};
 use clustercluster::serial::{SerialConfig, SerialGibbs};
 use clustercluster::testing::check;
 
@@ -113,7 +113,7 @@ fn assert_coordinator_bit_identical(kernel: KernelKind) {
         update_alpha: true,
         update_beta: true,
         shuffle: true,
-        local_kernel: kernel,
+        kernel_assignment: KernelAssignment::AllSame(kernel),
         scoring,
         comm: CommModel::free(),
         parallelism: 1,
