@@ -1,15 +1,22 @@
 //! Hot-path microbenchmarks (supporting the §Perf pass):
 //!
+//! * **perf-baseline matrix** — sweep throughput (rows/s) per
+//!   kernel × cluster count × bit density × scoring mode
+//!   (scalar reference | batched incremental | batched eager ≙ the
+//!   pre-incremental engine), written to
+//!   `bench_results/BENCH_hotpath.json` (and, with `--update-baseline`,
+//!   to the committed repo-root `BENCH_hotpath.json` that CI's
+//!   regression gate compares against). `--smoke` runs the same matrix
+//!   at CI scale.
 //! * batched scoring throughput — PJRT artifact vs pure-Rust fallback on
 //!   the compiled (256, 256, 512) shape;
 //! * per-datum Gibbs scan throughput (rows/s), with the cached-table vs
-//!   uncached-scoring ablation (DESIGN.md §9);
-//! * full-sweep dispatch comparison: scalar candidate scoring vs the
-//!   batched `Scorer::score_rows_against_clusters` path (the acceptance
-//!   gate: batched must not be slower on the synthetic workload);
+//!   uncached-scoring ablation (DESIGN.md §8);
 //! * coordinator phase split (map / reduce / shuffle shares).
 
-use clustercluster::bench::{bench, FigureEmitter};
+use clustercluster::bench::{
+    bench, is_smoke, update_baseline, BaselineCase, BaselineEmitter, FigureEmitter,
+};
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::BinMat;
@@ -40,15 +47,130 @@ fn rand_problem(n: usize, d: usize, j: usize, seed: u64) -> (BinMat, Vec<f32>, V
     (m, w1, w0)
 }
 
+/// Planted-prototype binary data with a controlled bit density: each of
+/// `clusters` prototypes draws every dim 1 w.p. `density`; a row copies
+/// its prototype bit w.p. 0.9 and redraws Bernoulli(density) otherwise,
+/// so the overall density stays ≈ `density` at any separation.
+fn density_data(n: usize, d: usize, clusters: usize, density: f64, seed: u64) -> BinMat {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut proto = vec![false; clusters * d];
+    for b in proto.iter_mut() {
+        *b = rng.next_f64() < density;
+    }
+    let mut m = BinMat::zeros(n, d);
+    for r in 0..n {
+        let k = r % clusters;
+        for c in 0..d {
+            let bit = if rng.next_f64() < 0.9 {
+                proto[k * d + c]
+            } else {
+                rng.next_f64() < density
+            };
+            if bit {
+                m.set(r, c, true);
+            }
+        }
+    }
+    m
+}
+
+/// A shard planted at exactly `clusters` clusters (round-robin), so the
+/// measured sweeps run at a controlled J.
+fn planted_shard(data: &BinMat, clusters: usize, mode: ScoreMode, eager: bool) -> Shard {
+    let rows: Vec<usize> = (0..data.rows()).collect();
+    let assign: Vec<u32> = (0..data.rows()).map(|r| (r % clusters) as u32).collect();
+    let mut sh = Shard::from_parts(data, rows, assign, Pcg64::seed_from(0xbead)).unwrap();
+    sh.set_theta(4.0);
+    sh.set_score_mode(mode);
+    sh.set_eager_repack(eager);
+    sh
+}
+
 fn main() {
+    let smoke = is_smoke();
     let mut fig = FigureEmitter::new("hotpath");
 
+    // --- perf-baseline matrix: kernel × J × density × scoring mode ---
+    let scale = if smoke { "smoke" } else { "full" };
+    let smoke_flag = if smoke { "--smoke " } else { "" };
+    let provenance = format!(
+        "measured ({scale} scale); refresh with: cargo bench --bench hotpath -- \
+         {smoke_flag}--update-baseline"
+    );
+    let mut base = BaselineEmitter::new("hotpath_baseline", &provenance);
+    let (bn, bd) = if smoke { (600usize, 64usize) } else { (2_000usize, 128usize) };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 8) };
+    let mut model_b = BetaBernoulli::symmetric(bd, 0.5);
+    model_b.build_lut(bn + 1);
+    let modes: [(&str, ScoreMode, bool); 3] = [
+        ("scalar", ScoreMode::Scalar, false),
+        ("batched", ScoreMode::Batched(ScorerKind::Fallback), false),
+        // the pre-incremental engine: held-out column re-packed per datum
+        ("batched-eager", ScoreMode::Batched(ScorerKind::Fallback), true),
+    ];
+    for kind in [KernelKind::CollapsedGibbs, KernelKind::WalkerSlice] {
+        let kernel = kind.kernel();
+        for &clusters in &[8usize, 48] {
+            for &density in &[0.05f64, 0.5] {
+                let data = density_data(bn, bd, clusters, density, 0xd5eed);
+                for (mode_name, mode, eager) in modes.iter() {
+                    let mut sh = planted_shard(&data, clusters, *mode, *eager);
+                    let r = bench(
+                        &format!(
+                            "sweep {} J={clusters} p={density:.2} {mode_name}",
+                            kernel.name()
+                        ),
+                        warmup,
+                        iters,
+                        || {
+                            kernel.sweep(&mut sh, &data, &model_b);
+                        },
+                    );
+                    base.case(BaselineCase {
+                        kernel: kernel.name().to_string(),
+                        clusters,
+                        density,
+                        mode: mode_name.to_string(),
+                        rows_per_s: bn as f64 / r.mean_s,
+                    });
+                }
+                // headline ratios: the incremental engine vs the
+                // pre-incremental eager repack, and vs scalar
+                let key = |mode: &str| {
+                    format!("{}|J{clusters}|p{density:.2}|{mode}", kernel.name())
+                };
+                if let (Some(b), Some(e), Some(s)) = (
+                    base.rows_per_s(&key("batched")),
+                    base.rows_per_s(&key("batched-eager")),
+                    base.rows_per_s(&key("scalar")),
+                ) {
+                    base.derived(
+                        &format!("{}_J{clusters}_p{density:.2}_batched_vs_eager", kernel.name()),
+                        b / e,
+                    );
+                    base.derived(
+                        &format!("{}_J{clusters}_p{density:.2}_batched_vs_scalar", kernel.name()),
+                        b / s,
+                    );
+                }
+            }
+        }
+    }
+    base.write(Path::new("bench_results/BENCH_hotpath.json")).unwrap();
+    if update_baseline() {
+        base.write(Path::new("BENCH_hotpath.json")).unwrap();
+    }
+
     // --- batched scoring: artifact vs fallback ---
-    let (n, d, j) = (256usize, 256usize, 512usize);
+    let (n, d, j) = if smoke {
+        (64usize, 64usize, 128usize)
+    } else {
+        (256usize, 256usize, 512usize)
+    };
     let (m, w1, w0) = rand_problem(n, d, j, 1);
     let cells = (n * j) as f64;
     let mut fall = FallbackScorer::new();
-    let rf = bench("fallback loglik 256x256x512", 1, 10, || {
+    let rf = bench("fallback loglik batched shape", 1, 10, || {
         std::hint::black_box(fall.loglik_matrix(&m, &w1, &w0, d, j));
     });
     fig.row(&[
@@ -57,7 +179,7 @@ fn main() {
     ]);
     let dir = std::env::var("CC_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     if let Ok(mut pjrt) = PjrtScorer::load(Path::new(&dir)) {
-        let rp = bench("pjrt     loglik 256x256x512", 1, 10, || {
+        let rp = bench("pjrt     loglik batched shape", 1, 10, || {
             std::hint::black_box(pjrt.loglik_matrix(&m, &w1, &w0, d, j));
         });
         fig.row(&[
@@ -71,7 +193,7 @@ fn main() {
 
     // --- per-datum scoring: cached table vs uncached ---
     let ds = SyntheticConfig {
-        n: 2_000,
+        n: if smoke { 500 } else { 2_000 },
         d: 64,
         clusters: 16,
         beta: 0.1,
@@ -84,7 +206,7 @@ fn main() {
         clusters[r % 16].add(&ds.train, r);
     }
     let rows = ds.train.rows() as f64;
-    let rc = bench("scan cached  2000x16 clusters", 1, 20, || {
+    let rc = bench("scan cached   16 clusters", 1, 20, || {
         let mut acc = 0.0;
         for r in 0..ds.train.rows() {
             for c in clusters.iter_mut() {
@@ -93,7 +215,7 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
-    let ru = bench("scan uncached 2000x16 clusters", 1, 5, || {
+    let ru = bench("scan uncached 16 clusters", 1, 5, || {
         let mut acc = 0.0;
         for r in 0..ds.train.rows() {
             for c in clusters.iter() {
@@ -108,72 +230,39 @@ fn main() {
         ("cache_speedup", ru.mean_s / rc.mean_s),
     ]);
 
-    // --- full-sweep dispatch: scalar vs batched candidate scoring ---
-    let ds3 = SyntheticConfig {
-        n: 2_000,
-        d: 64,
-        clusters: 16,
-        beta: 0.1,
-        seed: 4,
-    }
-    .generate_with_test_fraction(0.0);
-    let mut model3 = BetaBernoulli::symmetric(64, 0.5);
-    model3.build_lut(ds3.train.rows() + 1);
-    let make_shard = |mode: ScoreMode| {
-        let rows: Vec<usize> = (0..ds3.train.rows()).collect();
-        let mut sh = Shard::init_from_prior(&ds3.train, rows, 8.0, Pcg64::seed_from(9));
-        sh.set_score_mode(mode);
-        sh
-    };
-    let rows3 = ds3.train.rows() as f64;
-    for kind in [KernelKind::CollapsedGibbs, KernelKind::WalkerSlice] {
-        let kernel = kind.kernel();
-        let mut scalar_sh = make_shard(ScoreMode::Scalar);
-        let r_scalar = bench(&format!("sweep scalar  2000x64 {}", kernel.name()), 2, 10, || {
-            kernel.sweep(&mut scalar_sh, &ds3.train, &model3);
+    // --- full coordinator round phase split (skipped under --smoke) ---
+    if !smoke {
+        let ds2 = SyntheticConfig {
+            n: 10_000,
+            d: 64,
+            clusters: 64,
+            beta: 0.05,
+            seed: 3,
+        }
+        .generate_with_test_fraction(0.0);
+        let cfg = CoordinatorConfig {
+            workers: 8,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(3);
+        let mut coord = Coordinator::new(&ds2.train, cfg, &mut rng);
+        let rr = bench("coordinator round 10000x64", 2, 10, || {
+            coord.step(&mut rng);
         });
-        let mut batched_sh = make_shard(ScoreMode::Batched(ScorerKind::Fallback));
-        let r_batched = bench(&format!("sweep batched 2000x64 {}", kernel.name()), 2, 10, || {
-            kernel.sweep(&mut batched_sh, &ds3.train, &model3);
-        });
+        let prof = coord.timer.render();
+        println!("{prof}");
+        let total = coord.timer.total("map")
+            + coord.timer.total("reduce")
+            + coord.timer.total("shuffle");
         fig.row(&[
-            ("sweep_scalar_rows_per_s", rows3 / r_scalar.mean_s),
-            ("sweep_batched_rows_per_s", rows3 / r_batched.mean_s),
-            ("batched_vs_scalar", r_scalar.mean_s / r_batched.mean_s),
+            ("round_mean_s", rr.mean_s),
+            ("rows_per_s", 10_000.0 / rr.mean_s),
+            (
+                "map_share",
+                coord.timer.total("map").as_secs_f64() / total.as_secs_f64().max(1e-12),
+            ),
         ]);
     }
-
-    // --- full coordinator round phase split ---
-    let ds2 = SyntheticConfig {
-        n: 10_000,
-        d: 64,
-        clusters: 64,
-        beta: 0.05,
-        seed: 3,
-    }
-    .generate_with_test_fraction(0.0);
-    let cfg = CoordinatorConfig {
-        workers: 8,
-        comm: CommModel::free(),
-        ..Default::default()
-    };
-    let mut rng = Pcg64::seed_from(3);
-    let mut coord = Coordinator::new(&ds2.train, cfg, &mut rng);
-    let rr = bench("coordinator round 10000x64", 2, 10, || {
-        coord.step(&mut rng);
-    });
-    let prof = coord.timer.render();
-    println!("{prof}");
-    let total = coord.timer.total("map")
-        + coord.timer.total("reduce")
-        + coord.timer.total("shuffle");
-    fig.row(&[
-        ("round_mean_s", rr.mean_s),
-        ("rows_per_s", 10_000.0 / rr.mean_s),
-        (
-            "map_share",
-            coord.timer.total("map").as_secs_f64() / total.as_secs_f64().max(1e-12),
-        ),
-    ]);
     fig.finish();
 }

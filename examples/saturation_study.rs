@@ -140,6 +140,7 @@ fn main() {
                     rows: s.rows,
                     clusters: s.clusters,
                     map_seconds: s.map_seconds,
+                    rows_per_s: s.rows_per_s,
                 });
             }
             if round % 2 == 0 && t_target.is_none() {

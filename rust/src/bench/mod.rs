@@ -122,6 +122,132 @@ pub fn is_full_scale() -> bool {
     std::env::args().any(|a| a == "--full")
 }
 
+/// CI helper: figures accept `--smoke` (or `CC_BENCH_SMOKE=1`) for
+/// reduced-scale runs that still exercise every measured case — what
+/// the per-push bench job runs before the regression gate.
+pub fn is_smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("CC_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Whether `--update-baseline` was passed: the hot-path harness then
+/// ALSO rewrites the committed baseline file at the repo root
+/// (`BENCH_hotpath.json`) with the fresh numbers.
+pub fn update_baseline() -> bool {
+    std::env::args().any(|a| a == "--update-baseline")
+}
+
+/// One measured case of the hot-path perf baseline matrix
+/// (kernel × cluster count × density × scoring mode).
+#[derive(Debug, Clone)]
+pub struct BaselineCase {
+    /// transition-kernel name (`collapsed-gibbs` / `walker-slice`)
+    pub kernel: String,
+    /// planted live-cluster scale of the workload
+    pub clusters: usize,
+    /// Bernoulli bit density of the synthetic rows
+    pub density: f64,
+    /// scoring mode (`scalar` | `batched` | `batched-eager`)
+    pub mode: String,
+    /// measured sweep throughput (data rows per second)
+    pub rows_per_s: f64,
+}
+
+impl BaselineCase {
+    /// The (kernel, clusters, density, mode) identity key the regression
+    /// gate matches cases on.
+    pub fn key(&self) -> String {
+        format!(
+            "{}|J{}|p{:.2}|{}",
+            self.kernel, self.clusters, self.density, self.mode
+        )
+    }
+}
+
+/// Collects the hot-path perf-baseline matrix and writes it as the
+/// `BENCH_hotpath.json` schema: `cases` keyed by
+/// (kernel, clusters, density, mode) with `rows_per_s`, plus free-form
+/// `derived` ratios (e.g. incremental-vs-eager speedups). CI re-runs
+/// the harness in `--smoke` mode on every push and fails on a > 20 %
+/// sweep-throughput regression against the committed file
+/// (`scripts/check_bench_regression.py`).
+pub struct BaselineEmitter {
+    name: String,
+    provenance: String,
+    cases: Vec<BaselineCase>,
+    derived: Vec<(String, f64)>,
+}
+
+impl BaselineEmitter {
+    /// Emitter named `name` with a provenance note (host/scale info).
+    pub fn new(name: &str, provenance: &str) -> Self {
+        BaselineEmitter {
+            name: name.to_string(),
+            provenance: provenance.to_string(),
+            cases: Vec::new(),
+            derived: Vec::new(),
+        }
+    }
+
+    /// Record (and echo) one measured case.
+    pub fn case(&mut self, c: BaselineCase) {
+        println!(
+            "  baseline {:<46} {:>12.0} rows/s",
+            c.key(),
+            c.rows_per_s
+        );
+        self.cases.push(c);
+    }
+
+    /// Record (and echo) a derived ratio (speedups etc.).
+    pub fn derived(&mut self, key: &str, v: f64) {
+        println!("  baseline derived {key} = {v:.3}");
+        self.derived.push((key.to_string(), v));
+    }
+
+    /// Throughput of a recorded case by key (for in-harness ratios).
+    pub fn rows_per_s(&self, key: &str) -> Option<f64> {
+        self.cases.iter().find(|c| c.key() == key).map(|c| c.rows_per_s)
+    }
+
+    /// Serialize to the `BENCH_hotpath.json` document.
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("figure", Json::str(&self.name));
+        doc.set("schema", Json::num(1.0));
+        doc.set("provenance", Json::str(&self.provenance));
+        let mut cases = Vec::new();
+        for c in &self.cases {
+            let mut o = Json::obj();
+            o.set("kernel", Json::str(&c.kernel));
+            o.set("clusters", Json::num(c.clusters as f64));
+            o.set("density", Json::num(c.density));
+            o.set("mode", Json::str(&c.mode));
+            o.set("rows_per_s", Json::num(c.rows_per_s));
+            cases.push(o);
+        }
+        doc.set("cases", Json::Arr(cases));
+        let mut derived = Json::obj();
+        for (k, v) in &self.derived {
+            derived.set(k, Json::num(*v));
+        }
+        doc.set("derived", derived);
+        doc
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        println!("  -> {}", path.display());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +259,38 @@ mod tests {
         });
         assert_eq!(r.iters, 10);
         assert!(r.mean_s >= 0.0 && r.p95_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn baseline_emitter_roundtrips_schema() {
+        let mut b = BaselineEmitter::new("hotpath_baseline", "unit-test");
+        b.case(BaselineCase {
+            kernel: "collapsed-gibbs".into(),
+            clusters: 16,
+            density: 0.5,
+            mode: "batched".into(),
+            rows_per_s: 1234.5,
+        });
+        b.derived("batched_vs_eager", 1.7);
+        assert_eq!(
+            b.rows_per_s("collapsed-gibbs|J16|p0.50|batched"),
+            Some(1234.5)
+        );
+        let dir = std::env::temp_dir().join("cc_bench_baseline_test");
+        let path = dir.join("BENCH_test.json");
+        b.write(&path).unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.get("figure").unwrap().as_str().unwrap(),
+            "hotpath_baseline"
+        );
+        let cases = j.get("cases").unwrap();
+        let c0 = cases.index(0).unwrap();
+        assert_eq!(c0.get("mode").unwrap().as_str().unwrap(), "batched");
+        assert!(
+            (c0.get("rows_per_s").unwrap().as_f64().unwrap() - 1234.5).abs() < 1e-9
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

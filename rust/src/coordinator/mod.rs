@@ -181,6 +181,11 @@ pub struct ShardRoundStat {
     pub clusters: u64,
     /// measured map-step compute seconds for the shard this round
     pub map_seconds: f64,
+    /// measured sweep throughput for the shard this round
+    /// (pre-shuffle resident rows × local_sweeps / map_seconds — the
+    /// rows the map step actually processed; 0 when unmeasurable) —
+    /// the per-shard observable behind the hot-path bench numbers
+    pub rows_per_s: f64,
     /// the transition kernel this shard runs
     pub kernel: KernelKind,
 }
@@ -290,10 +295,30 @@ pub struct Coordinator<'a> {
     pub rounds: u64,
     /// per-shard observability records for the most recent round
     last_shard_stats: Vec<ShardRoundStat>,
+    /// bytes the most recent round's shuffle step moved (0 when the
+    /// shuffle is disabled or K = 1)
+    last_shuffle_bytes: u64,
     /// adaptive-μ MH proposals attempted (Adaptive mode only)
     mu_proposals: u64,
     /// adaptive-μ MH proposals accepted (Adaptive mode only)
     mu_accepts: u64,
+    // persistent reduce/eval scratch (reused every round — the reduce
+    // step and trace-time evaluation allocate nothing at steady state)
+    beta_scratch: Vec<f64>,
+    pl_w1: Vec<f32>,
+    pl_w0: Vec<f32>,
+    pl_logpi: Vec<f32>,
+}
+
+impl std::fmt::Debug for Coordinator<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator")
+            .field("workers", &self.cfg.workers)
+            .field("rounds", &self.rounds)
+            .field("alpha", &self.alpha)
+            .field("clusters", &self.num_clusters())
+            .finish_non_exhaustive()
+    }
 }
 
 impl<'a> Coordinator<'a> {
@@ -372,8 +397,13 @@ impl<'a> Coordinator<'a> {
             measured_time_s: 0.0,
             rounds: 0,
             last_shard_stats: Vec::new(),
+            last_shuffle_bytes: 0,
             mu_proposals: 0,
             mu_accepts: 0,
+            beta_scratch: Vec::new(),
+            pl_w1: Vec::new(),
+            pl_w0: Vec::new(),
+            pl_logpi: Vec::new(),
         }
     }
 
@@ -401,6 +431,10 @@ impl<'a> Coordinator<'a> {
             st
         });
         self.timer.add("map", map_t0.elapsed());
+        // row counts as swept (BEFORE the shuffle moves clusters): the
+        // per-shard throughput metric must divide by what the map step
+        // actually processed
+        let rows_swept: Vec<u64> = states.iter().map(|s| s.num_rows() as u64).collect();
 
         // ---- reduce: centralized hyper updates ----
         let reduce_t0 = Instant::now();
@@ -421,17 +455,19 @@ impl<'a> Coordinator<'a> {
         if self.cfg.update_beta {
             bytes += total_j * (8 + 4 * self.model.d as u64);
             let mut stats: Vec<(u64, u32)> = Vec::new();
-            let mut new_beta = self.model.beta.clone();
-            for (d, b) in new_beta.iter_mut().enumerate() {
+            // persistent scratch instead of a per-round β clone
+            self.beta_scratch.clear();
+            self.beta_scratch.extend_from_slice(&self.model.beta);
+            for d in 0..self.model.d {
                 stats.clear();
                 for st in &states {
                     st.collect_dim_stats(d, &mut stats);
                 }
-                *b = self.beta_updater.sample(rng, &stats);
+                self.beta_scratch[d] = self.beta_updater.sample(rng, &stats);
             }
             // only touch the LUT / score caches when some β_d moved;
             // a still-symmetric refresh retargets the LUT in place
-            if self.model.update_betas(&new_beta, self.data.rows() + 1) {
+            if self.model.update_betas(&self.beta_scratch, self.data.rows() + 1) {
                 for st in &mut states {
                     st.invalidate_caches();
                 }
@@ -475,27 +511,43 @@ impl<'a> Coordinator<'a> {
 
         // ---- shuffle: Gibbs on s_j, move whole clusters ----
         let shuffle_t0 = Instant::now();
-        if self.cfg.shuffle && self.cfg.workers > 1 {
-            bytes += self.shuffle(&mut states, rng);
-        }
+        self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
+            self.shuffle(&mut states, rng)
+        } else {
+            0
+        };
+        bytes += self.last_shuffle_bytes;
         self.timer.add("shuffle", shuffle_t0.elapsed());
 
         self.states = states;
         self.rounds += 1;
 
-        // per-shard observability series (μ_k, occupancy, map time) —
-        // what makes the non-uniform μ modes inspectable
+        // per-shard observability series (μ_k, occupancy, map time,
+        // sweep throughput) — what makes the non-uniform μ modes and
+        // the hot-path perf inspectable
+        let local_sweeps = self.cfg.local_sweeps;
         self.last_shard_stats = self
             .states
             .iter()
             .enumerate()
-            .map(|(kk, st)| ShardRoundStat {
-                shard: kk,
-                mu: self.mu[kk],
-                rows: st.num_rows() as u64,
-                clusters: st.num_clusters() as u64,
-                map_seconds: map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0),
-                kernel: self.shard_kernels[kk],
+            .map(|(kk, st)| {
+                let map_seconds = map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+                // throughput from the PRE-shuffle row count the map step
+                // actually swept, not the post-shuffle occupancy
+                let swept = rows_swept.get(kk).copied().unwrap_or(0);
+                ShardRoundStat {
+                    shard: kk,
+                    mu: self.mu[kk],
+                    rows: st.num_rows() as u64,
+                    clusters: st.num_clusters() as u64,
+                    map_seconds,
+                    rows_per_s: if map_seconds > 0.0 {
+                        swept as f64 * local_sweeps as f64 / map_seconds
+                    } else {
+                        0.0
+                    },
+                    kernel: self.shard_kernels[kk],
+                }
             })
             .collect();
 
@@ -588,6 +640,13 @@ impl<'a> Coordinator<'a> {
         &self.last_shard_stats
     }
 
+    /// Bytes the most recent round's shuffle step moved between
+    /// superclusters (0 before the first round, when the shuffle is
+    /// disabled, or at K = 1) — the `--shard-trace` shuffle-bytes line.
+    pub fn last_shuffle_bytes(&self) -> u64 {
+        self.last_shuffle_bytes
+    }
+
     /// The per-supercluster shard states.
     pub fn states(&self) -> &[Shard] {
         &self.states
@@ -622,24 +681,27 @@ impl<'a> Coordinator<'a> {
     /// a [`Scorer`] (the PJRT artifact on the production path; the pure-
     /// Rust fallback in tests). The packed `[D, J]` weight matrices are
     /// exported per shard by [`crate::sampler::ClusterSet`] — the same
-    /// layout the sweep-side batched path scores through.
-    pub fn predictive_loglik(&self, test: &BinMat, scorer: &mut dyn Scorer) -> f64 {
+    /// layout the sweep-side batched path scores through — into
+    /// persistent coordinator-owned buffers, so per-round evaluation
+    /// re-allocates nothing (every `[D, J+1]` cell is rewritten each
+    /// call; stale capacity is never read).
+    pub fn predictive_loglik(&mut self, test: &BinMat, scorer: &mut dyn Scorer) -> f64 {
         let n_total = self.data.rows() as f64 + self.alpha;
         let j: usize = self.states.iter().map(|s| s.num_clusters()).sum();
         let d = self.model.d;
         // weight matrices [D, J+1]: J extant clusters + the fresh cluster
         let jj = j + 1;
-        let mut w1 = vec![0.0f32; d * jj];
-        let mut w0 = vec![0.0f32; d * jj];
-        let mut logpi = vec![0.0f32; jj];
+        self.pl_w1.resize(d * jj, 0.0);
+        self.pl_w0.resize(d * jj, 0.0);
+        self.pl_logpi.resize(jj, 0.0);
         let mut col = 0usize;
         for st in &self.states {
             col = st.cluster_set().export_weight_columns(
                 &self.model,
                 n_total,
-                &mut w1,
-                &mut w0,
-                &mut logpi,
+                &mut self.pl_w1,
+                &mut self.pl_w0,
+                &mut self.pl_logpi,
                 jj,
                 col,
             );
@@ -648,12 +710,13 @@ impl<'a> Coordinator<'a> {
         // fresh cluster: predictive coin 1/2 in every dim
         let half = 0.5f32.ln();
         for dd in 0..d {
-            w1[dd * jj + j] = half;
-            w0[dd * jj + j] = half;
+            self.pl_w1[dd * jj + j] = half;
+            self.pl_w0[dd * jj + j] = half;
         }
-        logpi[j] = ((self.alpha / n_total).ln()) as f32;
+        self.pl_logpi[j] = ((self.alpha / n_total).ln()) as f32;
 
-        let dens = scorer.predictive_density(test, &w1, &w0, &logpi, d, jj);
+        let dens =
+            scorer.predictive_density(test, &self.pl_w1, &self.pl_w0, &self.pl_logpi, d, jj);
         let total: f64 = dens.iter().map(|&x| x as f64).sum();
         total / test.rows() as f64
     }

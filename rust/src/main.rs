@@ -8,7 +8,9 @@
 //! * `help`        — this text
 
 use clustercluster::cli::Args;
-use clustercluster::coordinator::{Coordinator, CoordinatorConfig, KernelAssignment, MuMode};
+use clustercluster::coordinator::{
+    Checkpoint, Coordinator, CoordinatorConfig, KernelAssignment, MuMode,
+};
 use clustercluster::data::io::save_binmat;
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::tinyimages::{generate as gen_tiny, TinyImagesConfig};
@@ -31,6 +33,7 @@ COMMANDS
   gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
   serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--local-kernel gibbs|walker]
                [--scorer auto|fallback|pjrt] [--update-beta] [--trace out.csv]
+               [--checkpoint out.ccckpt] [--resume in.ccckpt]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
                [--local-sweeps 1] [--no-shuffle] [--eq7]
                [--local-kernel gibbs|walker|gibbs,walker,...]
@@ -61,7 +64,14 @@ loadable, pure-Rust fallback otherwise; \"fallback\" = always pure
 Rust; \"pjrt\" = artifacts required (errors when unavailable).
 
 --shard-trace writes the per-(round, shard) series (mu_k, occupancy,
-cluster count, map seconds) that make the adaptive mode observable.
+cluster count, map seconds, sweep rows/s) that make the adaptive mode
+and the hot-path throughput observable, and prints a per-round
+rows/sec + shuffle-bytes line to stdout.
+
+The serial chain checkpoints to the same CCCKPT2 format as the
+coordinator: --checkpoint saves the latent state after the last sweep,
+--resume continues a saved chain (run with the SAME --n/--d/--seed so
+the dataset matches; mismatches are rejected).
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
@@ -165,7 +175,14 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
         scoring: ScoreMode::Batched(scorer_kind),
         ..Default::default()
     };
-    let mut g = SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng);
+    let mut g = if let Some(path) = args.get("resume") {
+        let ckpt = Checkpoint::load(Path::new(path)).map_err(|e| e.to_string())?;
+        let g = SerialGibbs::resume(&ds.train, scfg, &ckpt, &mut rng)?;
+        println!("resumed {path} at sweep {}", g.sweeps_done);
+        g
+    } else {
+        SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng)
+    };
     let h = ds.true_entropy_estimate();
     println!(
         "serial baseline: N={} D={} true J={} kernel={} scorer={} (H≈{h:.3})",
@@ -176,13 +193,15 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
         scfg.scoring.name()
     );
     let mut trace = McmcTrace::new("serial");
-    let t0 = std::time::Instant::now();
     for it in 0..sweeps {
         g.sweep(&mut rng);
+        let sweep_abs = g.sweeps_done - 1; // absolute index across resumes
         let ll = g.predictive_loglik(&ds.test);
-        let el = t0.elapsed().as_secs_f64();
+        // cumulative sweep compute time, persisted through checkpoints,
+        // so a resumed run's trace keeps a monotone time axis
+        let el = g.measured_time_s;
         trace.push(TraceRow {
-            iter: it as u64,
+            iter: sweep_abs,
             modeled_time_s: el,
             measured_time_s: el,
             predictive_loglik: ll,
@@ -192,12 +211,16 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
         });
         if it % 10 == 0 || it + 1 == sweeps {
             println!(
-                "  sweep {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} (target ≈ {:.4})",
+                "  sweep {sweep_abs:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} (target ≈ {:.4})",
                 g.num_clusters(),
                 g.alpha(),
                 -h
             );
         }
+    }
+    if let Some(path) = args.get("checkpoint") {
+        g.save_checkpoint(Path::new(path)).map_err(|e| e.to_string())?;
+        println!("checkpoint -> {path} (sweep {})", g.sweeps_done);
     }
     if let Some(path) = args.get("trace") {
         trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
@@ -277,8 +300,18 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     rows: s.rows,
                     clusters: s.clusters,
                     map_seconds: s.map_seconds,
+                    rows_per_s: s.rows_per_s,
                 });
             }
+            // per-round throughput + shuffle traffic, so bench numbers
+            // are observable in real runs
+            let crit = rs.map_critical_path().as_secs_f64();
+            let swept = (ds.train.rows() * local_sweeps) as f64;
+            println!(
+                "    [shard-trace] round {it}: sweep {:.0} rows/s (map critical path {crit:.4}s), shuffle {} B",
+                if crit > 0.0 { swept / crit } else { 0.0 },
+                coord.last_shuffle_bytes(),
+            );
         }
         if it % 10 == 0 || it + 1 == rounds {
             println!(

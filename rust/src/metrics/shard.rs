@@ -22,6 +22,9 @@ pub struct ShardTraceRow {
     pub clusters: u64,
     /// measured map-step compute seconds for the shard this round
     pub map_seconds: f64,
+    /// measured sweep throughput for the shard this round
+    /// (rows × local sweeps / map seconds; 0 when unmeasurable)
+    pub rows_per_s: f64,
 }
 
 /// A full per-shard run trace (K rows appended per round).
@@ -72,7 +75,7 @@ impl ShardTrace {
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
-            &["round", "shard", "mu", "rows", "clusters", "map_seconds"],
+            &["round", "shard", "mu", "rows", "clusters", "map_seconds", "rows_per_s"],
         )?;
         for r in &self.rows {
             w.row(&[
@@ -82,6 +85,7 @@ impl ShardTrace {
                 r.rows as f64,
                 r.clusters as f64,
                 r.map_seconds,
+                r.rows_per_s,
             ])?;
         }
         Ok(())
@@ -100,6 +104,7 @@ mod tests {
             rows,
             clusters: 2,
             map_seconds: 0.01,
+            rows_per_s: 1000.0,
         }
     }
 
@@ -128,6 +133,7 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.contains("mu"));
         assert!(text.contains("map_seconds"));
+        assert!(text.contains("rows_per_s"));
         assert!(text.contains("0.75"));
     }
 }

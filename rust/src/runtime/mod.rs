@@ -20,12 +20,16 @@
 //!
 //! Besides trace-time evaluation ([`Scorer::predictive_density`] /
 //! [`Scorer::loglik_matrix`]), the trait carries the sweep-side entry
-//! point [`Scorer::score_rows_against_clusters`]: the kernel hot loop
-//! packs each shard's cached predictive tables into the `[D, J]` layout
-//! and scores a datum's whole candidate set in one batched call, so a
-//! PJRT artifact that implements the entry point accelerates the map
-//! step itself with zero kernel changes. [`ScorerKind`] is the backend
-//! selector both CLI entry points expose as `--scorer`.
+//! points [`Scorer::score_rows_against_clusters`] (row batches) and
+//! [`Scorer::score_ones_against_clusters`] (one pre-decoded datum — the
+//! kernel hot loop): the sweep packs each shard's cached predictive
+//! tables into the `[D, J]` layout and scores a datum's whole candidate
+//! set in one batched call, so a PJRT artifact that implements the
+//! entry points accelerates the map step itself with zero kernel
+//! changes. The pure-Rust evaluation runs through the SIMD-blocked
+//! [`accumulate_ones_block`] (bit-identical to the naive loop — see
+//! DESIGN.md §7). [`ScorerKind`] is the backend selector both CLI entry
+//! points expose as `--scorer`.
 
 pub mod pjrt;
 
@@ -33,6 +37,63 @@ use crate::data::BinMat;
 use crate::special::logsumexp;
 
 pub use pjrt::PjrtScorer;
+
+/// Columns per cache tile of the bit-sparse block accumulator: 128 f64
+/// columns = 1 KiB per accumulator segment, small enough that a tile of
+/// scores stays L1-resident while the set-bit `diff` rows stream
+/// through it.
+const BLOCK_TILE: usize = 128;
+
+/// Accumulate `block[s] += Σ_{d in ones} diff[d * j + s]` over the
+/// first `j` entries of `block` — the bit-sparse inner loop of the
+/// sweep-side scoring block.
+///
+/// The loop is restructured for the autovectorizer: columns are
+/// processed in L1-resident tiles of [`BLOCK_TILE`], set bits are
+/// consumed in pairs (one accumulator load/store serves two additions),
+/// and the per-tile loop is unrolled into four independent f64 lanes.
+/// Every column's additions stay in strict ascending-set-bit order —
+/// `(block + d1) + d2`, never `block + (d1 + d2)` — so the result is
+/// **bit-identical** to the naive one-bit-at-a-time loop, and therefore
+/// to the scalar per-cluster reference path that adds the same cached
+/// terms in the same order.
+///
+/// `ones` must hold ascending dim indices with `d * j + j <= diff.len()`
+/// for every entry (callers clamp padded dims first).
+pub fn accumulate_ones_block(block: &mut [f64], ones: &[u32], diff: &[f64], j: usize) {
+    let block = &mut block[..j];
+    let mut t0 = 0usize;
+    while t0 < j {
+        let t1 = (t0 + BLOCK_TILE).min(j);
+        let tile = &mut block[t0..t1];
+        let w = tile.len();
+        let mut k = 0usize;
+        while k + 1 < ones.len() {
+            let r1 = &diff[ones[k] as usize * j + t0..][..w];
+            let r2 = &diff[ones[k + 1] as usize * j + t0..][..w];
+            let mut i = 0usize;
+            while i + 4 <= w {
+                tile[i] = (tile[i] + r1[i]) + r2[i];
+                tile[i + 1] = (tile[i + 1] + r1[i + 1]) + r2[i + 1];
+                tile[i + 2] = (tile[i + 2] + r1[i + 2]) + r2[i + 2];
+                tile[i + 3] = (tile[i + 3] + r1[i + 3]) + r2[i + 3];
+                i += 4;
+            }
+            while i < w {
+                tile[i] = (tile[i] + r1[i]) + r2[i];
+                i += 1;
+            }
+            k += 2;
+        }
+        if k < ones.len() {
+            let r1 = &diff[ones[k] as usize * j + t0..][..w];
+            for (b, &x) in tile.iter_mut().zip(r1) {
+                *b += x;
+            }
+        }
+        t0 = t1;
+    }
+}
 
 /// Batched mixture scoring: everything the samplers need from the
 /// compiled artifacts.
@@ -99,8 +160,10 @@ pub trait Scorer: Send {
     /// rows (each row's block is independent).
     ///
     /// The default implementation is the pure-Rust evaluation every
-    /// scorer starts from; a PJRT-backed scorer overrides it with
-    /// artifact execution without any kernel change.
+    /// scorer starts from (SIMD-blocked through
+    /// [`accumulate_ones_block`], bit-identical to the naive loop); a
+    /// PJRT-backed scorer overrides it with artifact execution without
+    /// any kernel change.
     #[allow(clippy::too_many_arguments)] // mirrors the artifact ABI
     fn score_rows_against_clusters(
         &mut self,
@@ -116,19 +179,48 @@ pub trait Scorer: Send {
         assert_eq!(diff.len(), d * j);
         out.clear();
         out.reserve(rows.len() * j);
+        let mut ones: Vec<u32> = Vec::new();
         for &r in rows {
-            let start = out.len();
-            out.extend_from_slice(bias);
-            let block = &mut out[start..];
+            ones.clear();
             data.for_each_one(r, |dd| {
                 if dd < d {
-                    let drow = &diff[dd * j..(dd + 1) * j];
-                    for (b, &x) in block.iter_mut().zip(drow) {
-                        *b += x;
-                    }
+                    ones.push(dd as u32);
                 }
             });
+            let start = out.len();
+            out.extend_from_slice(bias);
+            accumulate_ones_block(&mut out[start..], &ones, diff, j);
         }
+    }
+
+    /// Per-datum variant of [`Self::score_rows_against_clusters`] for
+    /// the kernel hot loop: the datum arrives pre-decoded to its
+    /// ascending set-bit index list (the kernels decode each row's bits
+    /// exactly once per datum and reuse the list for every dispatch),
+    /// so no `BinMat` walk and no per-call allocation happens here.
+    /// Set bits at `d` or beyond (padded dims) are ignored. `out` is
+    /// cleared and refilled with exactly `j` entries.
+    ///
+    /// The default implementation is the same SIMD-blocked pure-Rust
+    /// evaluation as the rows entry point; a PJRT backend that
+    /// overrides the rows entry point should override this one too, or
+    /// the sweep path will keep using the pure-Rust block.
+    #[allow(clippy::too_many_arguments)] // mirrors the artifact ABI
+    fn score_ones_against_clusters(
+        &mut self,
+        ones: &[u32],
+        bias: &[f64],
+        diff: &[f64],
+        d: usize,
+        j: usize,
+        out: &mut Vec<f64>,
+    ) {
+        assert_eq!(bias.len(), j);
+        assert_eq!(diff.len(), d * j);
+        let cut = ones.partition_point(|&o| (o as usize) < d);
+        out.clear();
+        out.extend_from_slice(bias);
+        accumulate_ones_block(out, &ones[..cut], diff, j);
     }
 
     /// Implementation name for logs/benches.
@@ -471,6 +563,94 @@ mod tests {
                 got[i],
                 want[i]
             );
+        }
+    }
+
+    /// Reference accumulator: one bit at a time, one column at a time —
+    /// the exact fp order the SIMD-blocked loop must reproduce.
+    fn naive_accumulate(block: &mut [f64], ones: &[u32], diff: &[f64], j: usize) {
+        for &o in ones {
+            let row = &diff[o as usize * j..(o as usize + 1) * j];
+            for (b, &x) in block[..j].iter_mut().zip(row) {
+                *b += x;
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_accumulator_is_bit_identical_to_naive() {
+        let mut rng = Pcg64::seed_from(9);
+        // exercise odd/even bit counts, tile boundaries (j > 128), and
+        // non-multiple-of-4 tails
+        for &(d, j, nbits) in &[
+            (1usize, 1usize, 1usize),
+            (7, 3, 4),
+            (40, 130, 7),
+            (64, 300, 33),
+            (16, 127, 0),
+            (50, 129, 50),
+        ] {
+            let mut diff = vec![0.0f64; d * j];
+            for x in diff.iter_mut() {
+                *x = rng.next_f64() - 0.5;
+            }
+            let mut ones: Vec<u32> = (0..d as u32).collect();
+            rng.shuffle(&mut ones);
+            ones.truncate(nbits.min(d));
+            ones.sort_unstable();
+            let mut bias = vec![0.0f64; j];
+            for x in bias.iter_mut() {
+                *x = rng.next_f64();
+            }
+            let mut want = bias.clone();
+            naive_accumulate(&mut want, &ones, &diff, j);
+            let mut got = bias.clone();
+            accumulate_ones_block(&mut got, &ones, &diff, j);
+            for i in 0..j {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "(d={d}, j={j}, bits={nbits}) col {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_ones_matches_rows_entry_point_and_clips_padded_dims() {
+        let (m, w1, w0, _) = rand_problem(5, 30, 9, 6);
+        let (d, j) = (30usize, 9usize);
+        let mut bias = vec![0.0f64; j];
+        let mut diff = vec![0.0f64; d * j];
+        for dd in 0..d {
+            for jj in 0..j {
+                bias[jj] += w0[dd * j + jj] as f64;
+                diff[dd * j + jj] = w1[dd * j + jj] as f64 - w0[dd * j + jj] as f64;
+            }
+        }
+        let mut s = FallbackScorer::new();
+        let rows: Vec<usize> = (0..m.rows()).collect();
+        let mut via_rows = Vec::new();
+        s.score_rows_against_clusters(&m, &rows, &bias, &diff, d, j, &mut via_rows);
+        for r in 0..m.rows() {
+            let mut ones: Vec<u32> = Vec::new();
+            m.for_each_one(r, |dd| ones.push(dd as u32));
+            // trailing out-of-range bits must be ignored, matching the
+            // rows entry point's dd < d clamp
+            ones.push(d as u32);
+            ones.push(d as u32 + 3);
+            let mut out = Vec::new();
+            s.score_ones_against_clusters(&ones, &bias, &diff, d, j, &mut out);
+            assert_eq!(out.len(), j);
+            for jj in 0..j {
+                assert_eq!(
+                    out[jj].to_bits(),
+                    via_rows[r * j + jj].to_bits(),
+                    "row {r} col {jj}"
+                );
+            }
         }
     }
 

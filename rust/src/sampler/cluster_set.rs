@@ -21,12 +21,21 @@ use super::score::PackedTables;
 use crate::data::BinMat;
 use crate::model::{BetaBernoulli, ClusterStats};
 
+/// Largest number of emptied [`ClusterStats`] kept for reuse: a freshly
+/// emptied cluster's count vectors are already zeroed, so recycling them
+/// makes new-table picks allocation-free after warm-up.
+const GRAVEYARD_CAP: usize = 8;
+
 /// Slotted storage for the clusters of one shard.
 #[derive(Debug, Clone)]
 pub struct ClusterSet {
     slots: Vec<Option<ClusterStats>>,
     free: Vec<usize>,
     dims: usize,
+    /// recycle pool of emptied stats (n = 0, counts zeroed, cache
+    /// invalid) so the kernel hot loop never re-allocates the O(D)
+    /// vectors on a new-table pick
+    graveyard: Vec<ClusterStats>,
 }
 
 impl ClusterSet {
@@ -36,6 +45,7 @@ impl ClusterSet {
             slots: Vec::new(),
             free: Vec::new(),
             dims,
+            graveyard: Vec::new(),
         }
     }
 
@@ -46,7 +56,21 @@ impl ClusterSet {
             .enumerate()
             .filter_map(|(s, c)| c.is_none().then_some(s))
             .collect();
-        ClusterSet { slots, free, dims }
+        ClusterSet {
+            slots,
+            free,
+            dims,
+            graveyard: Vec::new(),
+        }
+    }
+
+    /// Park an emptied cluster's stats for reuse (counts are already
+    /// zeroed — the datum removals that emptied it did the zeroing).
+    fn recycle(&mut self, stats: ClusterStats) {
+        debug_assert!(stats.is_empty());
+        if self.graveyard.len() < GRAVEYARD_CAP {
+            self.graveyard.push(stats);
+        }
     }
 
     /// Binary data dimensionality every cluster's stats are sized for.
@@ -79,9 +103,14 @@ impl ClusterSet {
         self.get(slot).map(|c| c.n()).unwrap_or(0)
     }
 
-    /// Materialize a fresh empty cluster, reusing a freed slot if any.
+    /// Materialize a fresh empty cluster, reusing a freed slot (and a
+    /// recycled stats allocation) if any.
     pub fn alloc_empty(&mut self) -> usize {
-        self.insert(ClusterStats::empty(self.dims))
+        let stats = self
+            .graveyard
+            .pop()
+            .unwrap_or_else(|| ClusterStats::empty(self.dims));
+        self.insert(stats)
     }
 
     /// Insert fully-formed stats (shuffle moves, single-cluster init).
@@ -106,14 +135,16 @@ impl ClusterSet {
             .add(data, r);
     }
 
-    /// Remove datum from its cluster, freeing the slot if it empties.
+    /// Remove datum from its cluster, freeing the slot if it empties
+    /// (the emptied stats are recycled for later `alloc_empty` calls).
     pub fn remove_row(&mut self, slot: usize, data: &BinMat, r: usize) {
         let c = self.slots[slot]
             .as_mut()
             .expect("remove_row from dead slot");
         c.remove(data, r);
         if c.is_empty() {
-            self.slots[slot] = None;
+            let stats = self.slots[slot].take().expect("slot just emptied");
+            self.recycle(stats);
             self.free.push(slot);
         }
     }
@@ -133,7 +164,8 @@ impl ClusterSet {
         for s in 0..self.slots.len() {
             let empty = matches!(&self.slots[s], Some(c) if c.is_empty());
             if empty {
-                self.slots[s] = None;
+                let stats = self.slots[s].take().expect("slot checked live");
+                self.recycle(stats);
                 self.free.push(s);
             }
         }
@@ -177,25 +209,50 @@ impl ClusterSet {
 
     /// Refresh the stale columns of the packed `[D, J]` predictive
     /// tables from each live cluster's cached table — the export the
-    /// batched sweep dispatch scores through. Only columns whose dirty
-    /// flag is set are re-packed, so the per-datum cost is O(D) per
-    /// changed cluster, not O(D·J).
-    pub(crate) fn refresh_packed(&mut self, model: &BetaBernoulli, tables: &mut PackedTables) {
+    /// batched sweep dispatch scores through. The stale *queue* is
+    /// drained (dead slots are skipped: their columns are never read
+    /// until re-allocated, which re-enqueues them), so the cost is
+    /// O(D) per column that actually changed since the last dispatch —
+    /// zero for the self-move common case — with no per-datum scan over
+    /// the slot vector.
+    ///
+    /// `defer` names the held-out cluster of the datum being scored: its
+    /// stats are transiently decremented, so re-packing it NOW would
+    /// bake the held-out table into the column (and a subsequent
+    /// self-move would leave it stale). A deferred slot stays on the
+    /// queue untouched — its (unused) column is refreshed on the next
+    /// dispatch, when the stats are settled again.
+    pub(crate) fn refresh_packed(
+        &mut self,
+        model: &BetaBernoulli,
+        tables: &mut PackedTables,
+        defer: Option<usize>,
+    ) {
         tables.ensure_stride(self.slots.len());
         let stride = tables.stride;
-        for (slot, c) in self.slots.iter_mut().enumerate() {
-            let c = match c {
-                Some(c) if tables.dirty[slot] => c,
-                _ => continue,
+        let mut deferred: Option<u32> = None;
+        while let Some(slot) = tables.stale.pop() {
+            let s = slot as usize;
+            if Some(s) == defer {
+                // at most one queue entry per slot: stash and re-queue
+                deferred = Some(slot);
+                continue;
+            }
+            tables.queued[s] = false;
+            let c = match self.slots.get_mut(s) {
+                Some(Some(c)) => c,
+                _ => continue, // dead slot: never read until reused
             };
             let ln_n = c.log_n();
             let (bias, dtab) = c.cached_table(model);
-            tables.bias[slot] = bias;
-            tables.logn[slot] = ln_n;
+            tables.bias[s] = bias;
+            tables.logn[s] = ln_n;
             for (dd, &v) in dtab.iter().enumerate() {
-                tables.diff[dd * stride + slot] = v;
+                tables.diff[dd * stride + s] = v;
             }
-            tables.dirty[slot] = false;
+        }
+        if let Some(slot) = deferred {
+            tables.stale.push(slot); // queued flag is still set
         }
     }
 
@@ -347,6 +404,25 @@ mod tests {
         let slots: Vec<usize> = cs.iter().map(|(s, _)| s).collect();
         assert_eq!(slots, vec![0, 2]);
         assert_eq!(cs.occupied_slots(), vec![0, 2]);
+    }
+
+    #[test]
+    fn recycled_stats_come_back_clean() {
+        let data = rand_data(4, 8, 5);
+        let mut cs = ClusterSet::new(8);
+        let a = cs.alloc_empty();
+        cs.add_row(a, &data, 0);
+        cs.remove_row(a, &data, 0); // empties → stats parked for reuse
+        let b = cs.alloc_empty(); // must come back as a clean empty
+        assert_eq!(b, a, "freed slot reused");
+        assert_eq!(cs.n_of(b), 0);
+        cs.add_row(b, &data, 1);
+        let mut fresh = crate::model::ClusterStats::empty(8);
+        fresh.add(&data, 1);
+        let got = cs.get(b).unwrap();
+        assert_eq!(got.n(), fresh.n());
+        assert_eq!(got.ones(), fresh.ones());
+        cs.check_slot_invariants().unwrap();
     }
 
     #[test]

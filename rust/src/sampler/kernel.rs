@@ -35,10 +35,15 @@
 //!
 //! Both kernels score a datum's candidate clusters through the shard's
 //! [`crate::sampler::ScoreMode`] dispatch: the scalar per-cluster
-//! reference path, or one
-//! batched [`crate::runtime::Scorer::score_rows_against_clusters`] call
-//! over the shard's packed predictive tables (bit-identical by
-//! construction — see `rust/src/sampler/score.rs`).
+//! reference path, or one batched
+//! [`crate::runtime::Scorer::score_ones_against_clusters`] call over the
+//! shard's packed predictive tables (bit-identical by construction —
+//! see `rust/src/sampler/score.rs` and DESIGN.md §7). Table maintenance
+//! is *move-only*: the kernels invalidate a packed column only when a
+//! datum actually changes cluster (plus the one held-out correction per
+//! datum), so the self-move common case does zero table work. Neither
+//! kernel allocates after warm-up: Gibbs runs on the shard's scratch
+//! buffers, Walker on the persistent [`WalkerScratch`].
 //!
 //! Exactness of both kernels — through both entry points — is certified
 //! by the posterior-enumeration gate in `rust/tests/posterior_exactness.rs`.
@@ -73,33 +78,79 @@ impl TransitionKernel for CollapsedGibbs {
         let log_theta = shard.theta.max(1e-300).ln();
         let empty_ll = model.empty_cluster_loglik();
         shard.scoring_begin_sweep();
+        let eager = shard.scoring_eager();
         for i in 0..shard.rows.len() {
             let r = shard.rows[i];
             let old = shard.assign[i] as usize;
             shard.clusters.remove_row(old, data, r);
-            shard.scoring_mark_dirty(old);
+            // the cluster the datum left (if it survived): scored from
+            // its decremented cache, while its packed column keeps the
+            // full-membership table in case the datum moves back
+            let held = if shard.clusters.get(old).is_some() {
+                Some(old)
+            } else {
+                None
+            };
             // score the whole candidate set through the shard's scoring
             // dispatch (scalar reference, or one batched Scorer call)
-            shard.score_crp_candidates(data, r, model);
+            shard.score_crp_candidates(data, r, model, held);
             shard.scratch_ids.push(u32::MAX);
             shard.scratch_logw.push(log_theta + empty_ll);
             let pick = categorical_log_inplace(&mut shard.rng, &mut shard.scratch_logw);
-            let slot = shard.place_pick(pick, data, r);
-            shard.scoring_mark_dirty(slot as usize);
-            shard.assign[i] = slot;
+            let slot = shard.place_pick(pick, data, r) as usize;
+            // self-move (the stationary common case): stats are restored
+            // exactly, the packed tables need zero work. Only a real
+            // move — or a re-allocated slot after the old cluster died —
+            // stales the two touched columns.
+            if slot != old || held.is_none() || eager {
+                shard.scoring_invalidate(old);
+                shard.scoring_invalidate(slot);
+            }
+            shard.assign[i] = slot as u32;
         }
     }
 }
 
-/// One stick of the truncated representation: its weight and, once
-/// materialized, the cluster slot it points at (`None` = still empty).
-#[derive(Debug, Clone, Copy)]
-struct Stick {
-    pi: f64,
-    slot: Option<usize>,
+/// Persistent per-sweep state of the Walker kernel, owned by the shard
+/// (`Shard::walker`) so repeated sweeps are allocation-free after
+/// warm-up: stick weights/slots, the slice variables, per-datum
+/// candidate buffers, and the appearance-order scratch.
+#[derive(Debug, Default)]
+pub(crate) struct WalkerScratch {
+    /// stick weights π, occupied (appearance order) then empty
+    pub(crate) stick_pi: Vec<f64>,
+    /// cluster slot per stick (`usize::MAX` = still unmaterialized)
+    pub(crate) stick_slot: Vec<usize>,
+    /// slot → stick index (`usize::MAX` = no stick)
+    pub(crate) slot_to_stick: Vec<usize>,
+    /// per-datum slice variables u_i
+    pub(crate) u: Vec<f64>,
+    /// eligible stick indices of the current datum
+    pub(crate) cand: Vec<usize>,
+    /// eligible cluster slots (`u32::MAX` = unmaterialized stick)
+    pub(crate) cand_slots: Vec<u32>,
+    /// candidate log-weights of the current datum
+    pub(crate) logw: Vec<f64>,
+    /// occupied-stick member counts (appearance order)
+    pub(crate) counts: Vec<u64>,
+    /// suffix sums Σ_{l>j} n_l over `counts`
+    pub(crate) tail: Vec<u64>,
+    /// occupied slots in appearance order
+    pub(crate) appear: Vec<usize>,
+    /// appearance-order dedup scratch
+    pub(crate) seen: Vec<bool>,
 }
 
 /// Walker (2007) slice sampling (slice-efficient, collapsed coins).
+///
+/// The stick-extension loop (step 3) runs under an explicit θ-scaled
+/// budget of `10_000 + 700·θ` empty sticks (capped at 1e6): the
+/// leftover mass decays like `exp(−sticks/θ)` (each `v ~ Beta(1, θ)`
+/// removes a `1/θ` fraction in expectation, so large θ shrinks it
+/// *slowly*), and `700·θ` covers every representable slice
+/// (`ln 1e-300 ≈ −690`). Exhausting the budget is an explicit error
+/// path — logged and counted on the shard
+/// (`Shard::stick_overflow_events`), never a silent truncation.
 pub struct WalkerSlice;
 
 impl TransitionKernel for WalkerSlice {
@@ -112,6 +163,10 @@ impl TransitionKernel for WalkerSlice {
         if shard.rows.is_empty() {
             return;
         }
+        // the scratch moves out for the sweep so the shard's scoring
+        // methods can be called while it is borrowed; it returns (with
+        // its capacities) at the end
+        let mut scratch = std::mem::take(&mut shard.walker);
 
         // ---- 1. sticks for occupied clusters in APPEARANCE order ----
         // Given the partition of an exchangeable DP sample, the posterior
@@ -119,53 +174,68 @@ impl TransitionKernel for WalkerSlice {
         // v_j ~ Beta(n_j, θ + Σ_{l>j} n_l) independently (Pitman's
         // size-biased representation). An arbitrary fixed order is NOT a
         // draw from p(labels | z) and biases the chain.
-        let slots: Vec<usize> = shard.slots_by_appearance();
-        let counts: Vec<u64> = slots.iter().map(|&s| shard.clusters.n_of(s)).collect();
-        let mut tail: Vec<u64> = vec![0; counts.len()];
-        let mut acc = 0u64;
-        for i in (0..counts.len()).rev() {
-            tail[i] = acc;
-            acc += counts[i];
+        shard.slots_by_appearance_into(&mut scratch.seen, &mut scratch.appear);
+        scratch.counts.clear();
+        for &s in &scratch.appear {
+            scratch.counts.push(shard.clusters.n_of(s));
         }
-        let mut sticks: Vec<Stick> = Vec::with_capacity(slots.len() + 8);
+        let nst = scratch.appear.len();
+        scratch.tail.clear();
+        scratch.tail.resize(nst, 0);
+        let mut acc = 0u64;
+        for i in (0..nst).rev() {
+            scratch.tail[i] = acc;
+            acc += scratch.counts[i];
+        }
+        scratch.stick_pi.clear();
+        scratch.stick_slot.clear();
         let mut remaining = 1.0f64;
-        for i in 0..slots.len() {
-            let v = beta_draw(&mut shard.rng, counts[i] as f64, theta + tail[i] as f64);
-            sticks.push(Stick {
-                pi: remaining * v,
-                slot: Some(slots[i]),
-            });
+        for i in 0..nst {
+            let v = beta_draw(
+                &mut shard.rng,
+                scratch.counts[i] as f64,
+                theta + scratch.tail[i] as f64,
+            );
+            scratch.stick_pi.push(remaining * v);
+            scratch.stick_slot.push(scratch.appear[i]);
             remaining *= 1.0 - v;
         }
 
         // ---- 2. slice per datum: u_i ~ U(0, π_{z_i}) ----
         let n = shard.rows.len();
-        let mut slot_to_stick = vec![usize::MAX; shard.clusters.num_slots()];
-        for (idx, st) in sticks.iter().enumerate() {
-            slot_to_stick[st.slot.unwrap()] = idx;
+        scratch.slot_to_stick.clear();
+        scratch.slot_to_stick.resize(shard.clusters.num_slots(), usize::MAX);
+        for (idx, &s) in scratch.stick_slot.iter().enumerate() {
+            scratch.slot_to_stick[s] = idx;
         }
-        let mut u = vec![0.0f64; n];
+        scratch.u.clear();
+        scratch.u.reserve(n);
         let mut u_min = f64::INFINITY;
         for i in 0..n {
             let zi = shard.assign[i] as usize;
-            let pz = sticks[slot_to_stick[zi]].pi.max(1e-300);
-            u[i] = shard.rng.next_f64_open() * pz;
-            if u[i] < u_min {
-                u_min = u[i];
+            let pz = scratch.stick_pi[scratch.slot_to_stick[zi]].max(1e-300);
+            let ui = shard.rng.next_f64_open() * pz;
+            scratch.u.push(ui);
+            if ui < u_min {
+                u_min = ui;
             }
         }
 
         // ---- 3. extend with empty sticks v ~ Beta(1, θ) until the
-        //         leftover mass cannot contain any slice ----
-        let mut guard = 0;
-        while remaining > u_min && guard < 10_000 {
+        //         leftover mass cannot contain any slice, under the
+        //         θ-scaled budget (see the type-level docs) ----
+        let max_sticks = (10_000.0 + 700.0 * theta).min(1_000_000.0) as usize;
+        let mut extended = 0usize;
+        while remaining > u_min {
+            if extended >= max_sticks {
+                shard.note_stick_overflow(theta, remaining, u_min, extended);
+                break;
+            }
             let v = beta_draw(&mut shard.rng, 1.0, theta);
-            sticks.push(Stick {
-                pi: remaining * v,
-                slot: None,
-            });
+            scratch.stick_pi.push(remaining * v);
+            scratch.stick_slot.push(usize::MAX);
             remaining *= 1.0 - v;
-            guard += 1;
+            extended += 1;
         }
 
         // ---- 4. Gibbs each datum over its eligible sticks ----
@@ -174,59 +244,87 @@ impl TransitionKernel for WalkerSlice {
         // empty tables; picking an unmaterialized stick creates its
         // cluster, which later data in the same sweep can then join.
         let empty_loglik = model.empty_cluster_loglik();
-        let mut cand: Vec<usize> = Vec::new();
-        let mut cand_slots: Vec<u32> = Vec::new();
-        let mut logw: Vec<f64> = Vec::new();
         shard.scoring_begin_sweep();
+        let eager = shard.scoring_eager();
         for i in 0..n {
             let r = shard.rows[i];
             let old_slot = shard.assign[i] as usize;
-            let old_stick = slot_to_stick[old_slot];
+            let old_stick = scratch.slot_to_stick[old_slot];
             shard.clusters.remove_row_keep_slot(old_slot, data, r);
-            shard.scoring_mark_dirty(old_slot);
 
             // collect the eligible sticks, then score them through the
-            // shard's dispatch (one batched block per datum)
-            cand.clear();
-            cand_slots.clear();
-            for (idx, st) in sticks.iter().enumerate() {
-                if st.pi > u[i] {
-                    cand.push(idx);
-                    cand_slots.push(match st.slot {
-                        Some(s) => s as u32,
-                        None => u32::MAX,
+            // shard's dispatch (one batched block per datum); the old
+            // cluster keeps its slot, so it is always the held-out one
+            scratch.cand.clear();
+            scratch.cand_slots.clear();
+            for idx in 0..scratch.stick_pi.len() {
+                if scratch.stick_pi[idx] > scratch.u[i] {
+                    scratch.cand.push(idx);
+                    scratch.cand_slots.push(match scratch.stick_slot[idx] {
+                        usize::MAX => u32::MAX,
+                        s => s as u32,
                     });
                 }
             }
-            logw.clear();
-            shard.score_slots_for_row(data, r, model, &cand_slots, empty_loglik, &mut logw);
+            scratch.logw.clear();
+            shard.score_slots_for_row(
+                data,
+                r,
+                model,
+                &scratch.cand_slots,
+                empty_loglik,
+                Some(old_slot),
+                &mut scratch.logw,
+            );
             // float-tail guard: the datum's own stick is eligible by
             // construction, but keep a fallback anyway
-            if cand.is_empty() {
-                cand.push(old_stick);
-                logw.push(0.0);
+            if scratch.cand.is_empty() {
+                scratch.cand.push(old_stick);
+                scratch.logw.push(0.0);
             }
-            let pick = cand[categorical_log_inplace(&mut shard.rng, &mut logw)];
-            match sticks[pick].slot {
-                Some(s) => {
-                    shard.clusters.add_row(s, data, r);
-                    shard.scoring_mark_dirty(s);
-                    shard.assign[i] = s as u32;
-                }
-                None => {
+            let ci = categorical_log_inplace(&mut shard.rng, &mut scratch.logw);
+            let pick = scratch.cand[ci];
+            match scratch.stick_slot[pick] {
+                usize::MAX => {
                     let s = shard.clusters.alloc_empty();
                     shard.clusters.add_row(s, data, r);
-                    shard.scoring_mark_dirty(s);
+                    shard.scoring_invalidate(old_slot);
+                    shard.scoring_invalidate(s);
                     shard.assign[i] = s as u32;
-                    sticks[pick].slot = Some(s);
-                    if slot_to_stick.len() <= s {
-                        slot_to_stick.resize(s + 1, usize::MAX);
+                    scratch.stick_slot[pick] = s;
+                    if scratch.slot_to_stick.len() <= s {
+                        scratch.slot_to_stick.resize(s + 1, usize::MAX);
                     }
-                    slot_to_stick[s] = pick;
+                    scratch.slot_to_stick[s] = pick;
+                }
+                s => {
+                    shard.clusters.add_row(s, data, r);
+                    // move-only maintenance: a self-move restores the
+                    // stats exactly and needs no table work
+                    if s != old_slot || eager {
+                        shard.scoring_invalidate(old_slot);
+                        shard.scoring_invalidate(s);
+                    }
+                    shard.assign[i] = s as u32;
                 }
             }
         }
         shard.clusters.compact_free_slots();
+        // a pathological sweep (huge θ) can grow the stick buffers — and
+        // the per-datum candidate buffers, whose eligible sets span the
+        // same stick range — into the hundreds of thousands; don't pin
+        // that memory forever
+        const SCRATCH_CAP: usize = 1 << 17;
+        if scratch.stick_pi.capacity() > SCRATCH_CAP {
+            scratch.stick_pi.shrink_to(SCRATCH_CAP);
+            scratch.stick_slot.shrink_to(SCRATCH_CAP);
+        }
+        if scratch.cand.capacity() > SCRATCH_CAP {
+            scratch.cand.shrink_to(SCRATCH_CAP);
+            scratch.cand_slots.shrink_to(SCRATCH_CAP);
+            scratch.logw.shrink_to(SCRATCH_CAP);
+        }
+        shard.walker = scratch;
     }
 }
 
@@ -480,6 +578,70 @@ mod tests {
         }
         let j = st.num_clusters();
         assert!((2..=16).contains(&j), "Walker found {j} clusters, expected ~4");
+    }
+
+    /// Regression for the old silent `guard < 10_000` cutoff: at large θ
+    /// the leftover stick mass shrinks *slowly* (each empty stick
+    /// removes only a ~1/θ fraction in expectation), so covering the
+    /// smallest slice needs ≈ θ·ln(1/u_min) sticks — far past the old
+    /// cutoff, which silently truncated the eligible sets. The θ-scaled
+    /// budget must complete the extension without an overflow event.
+    #[test]
+    fn walker_slow_shrink_regime_completes_without_overflow() {
+        let ds = SyntheticConfig {
+            n: 40,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 11,
+        }
+        .generate_with_test_fraction(0.0);
+        let mut model = BetaBernoulli::symmetric(8, 0.5);
+        model.build_lut(ds.train.rows() + 1);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(12));
+        st.set_theta(20_000.0);
+        WalkerSlice.sweep(&mut st, &ds.train, &model);
+        assert_eq!(
+            st.stick_overflow_events(),
+            0,
+            "θ-scaled budget must cover the slow-shrink regime"
+        );
+        // the sweep really needed more sticks than the old silent cutoff
+        assert!(
+            st.walker.stick_pi.len() > 10_000,
+            "expected > 10k sticks at θ=2e4, got {} (regime not exercised)",
+            st.walker.stick_pi.len()
+        );
+        st.check_invariants(&ds.train).unwrap();
+    }
+
+    /// At absurd θ even the capped budget cannot drain the leftover
+    /// mass: the sweep must hit the explicit error path (logged +
+    /// counted), not loop forever or truncate silently, and the chain
+    /// state must remain valid.
+    #[test]
+    fn walker_stick_budget_exhaustion_is_counted() {
+        let ds = SyntheticConfig {
+            n: 6,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 13,
+        }
+        .generate_with_test_fraction(0.0);
+        let mut model = BetaBernoulli::symmetric(8, 0.5);
+        model.build_lut(ds.train.rows() + 1);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(14));
+        st.set_theta(1.0e12);
+        WalkerSlice.sweep(&mut st, &ds.train, &model);
+        assert!(
+            st.stick_overflow_events() > 0,
+            "budget exhaustion must be recorded, not silent"
+        );
+        st.check_invariants(&ds.train).unwrap();
+        assert_eq!(st.num_rows(), 6);
     }
 
     #[test]

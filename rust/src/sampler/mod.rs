@@ -28,7 +28,8 @@
 //! Candidate-cluster scoring inside a sweep goes through a per-shard
 //! [`ScoreMode`] dispatch (see [`score`]): either the scalar reference
 //! path or the packed batched path through
-//! [`crate::runtime::Scorer::score_rows_against_clusters`] — selected
+//! [`crate::runtime::Scorer::score_ones_against_clusters`], with
+//! move-only incremental table maintenance (DESIGN.md §7) — selected
 //! from both entry points as `--scorer auto|fallback|pjrt` and proven
 //! bit-identical in `rust/tests/scorer_equivalence.rs`.
 //!

@@ -4,13 +4,16 @@
 //! Every kernel scores each datum against its candidate clusters. The
 //! **scalar** dispatch walks the live clusters one by one through each
 //! cluster's cached predictive table — the pre-batching hot loop, kept
-//! as the bit-exact reference. The **batched** dispatch maintains the
-//! same cached tables packed column-wise into the `[D, J]` weight layout
-//! of the Scorer contract (`bias[s]`, `diff[d·stride + s]`, `logn[s]`,
-//! one column per `ClusterSet` slot) and scores a datum's whole
-//! candidate set in one [`Scorer::score_rows_against_clusters`] call.
+//! as the pinned bit-exact reference. The **batched** dispatch maintains
+//! the same cached tables packed column-wise into the `[D, J]` weight
+//! layout of the Scorer contract (`bias[s]`, `diff[d·stride + s]`,
+//! `logn[s]`, one column per `ClusterSet` slot) and scores a datum's
+//! whole candidate set in one
+//! [`Scorer::score_ones_against_clusters`] call over its pre-decoded
+//! set-bit list.
 //!
-//! Two properties make the batched path a drop-in:
+//! Three properties make the batched path a drop-in (see DESIGN.md §7
+//! for the full cost model):
 //!
 //! * **Bit-identity.** Columns are copied from the very `ClusterStats`
 //!   cache the scalar path reads, in f64, and the default scorer adds
@@ -18,10 +21,21 @@
 //!   set bit ascending, then `ln n_j`) — so weights, categorical picks,
 //!   and the RNG stream are *bit-identical* to the scalar path
 //!   (asserted in `rust/tests/scorer_equivalence.rs`).
-//! * **Incremental updates.** Per datum at most two clusters change (the
-//!   one the datum left, the one it joined), so only those columns are
-//!   re-packed (`O(D)` each) and the per-datum table maintenance stays
-//!   `O(J + D)`, not `O(D·J)`. A full re-pack happens once per sweep.
+//! * **Move-only maintenance.** A column is a deterministic function of
+//!   its cluster's sufficient statistics, so it only goes stale when a
+//!   datum *actually changes cluster*. Per datum, every column is
+//!   scored at full membership and the one cluster the datum just left
+//!   gets a scalar **held-out correction**; when the datum re-picks its
+//!   own cluster (the overwhelmingly common outcome at stationarity)
+//!   the stats return to their prior values and the packed tables need
+//!   **zero work**. Only a real move stales the two touched columns
+//!   (each re-packed `O(D)` on the next dispatch, via an O(1) stale
+//!   queue — no per-datum column scan).
+//! * **Eager reference mode.** [`PackedTables::eager`] re-packs the
+//!   held-out column every datum — the pre-incremental engine, kept as
+//!   a bench comparator and as the chain-level drift oracle (eager and
+//!   incremental chains must be bit-identical; asserted in
+//!   `rust/tests/scorer_equivalence.rs`).
 
 use crate::runtime::{Scorer, ScorerKind};
 
@@ -33,7 +47,7 @@ pub enum ScoreMode {
     /// pre-batching reference path the equivalence suite pins.
     Scalar,
     /// Packed-table scoring through
-    /// [`Scorer::score_rows_against_clusters`], with the named backend.
+    /// [`Scorer::score_ones_against_clusters`], with the named backend.
     Batched(ScorerKind),
 }
 
@@ -94,24 +108,37 @@ impl ScoreDispatch {
 }
 
 /// The packed `[D, J]` predictive tables of one shard: one column per
-/// `ClusterSet` slot (`stride` columns allocated, grown geometrically),
-/// refreshed lazily from the per-cluster caches via the dirty flags.
-/// Dead slots keep stale columns — they are never read.
+/// `ClusterSet` slot (`stride` columns allocated, grown geometrically).
+///
+/// Staleness is tracked by an O(1) queue: [`Self::invalidate`] enqueues
+/// a slot (at most once, via `queued`), and
+/// `ClusterSet::refresh_packed` drains the queue — so refresh cost is
+/// proportional to the number of columns that actually changed, never
+/// to the slot count. Dead slots keep stale columns — they are never
+/// read until re-allocated, at which point the kernel re-enqueues them.
 pub(crate) struct PackedTables {
     pub(crate) dims: usize,
     /// column capacity; always ≥ the cluster store's slot count
     pub(crate) stride: usize,
-    /// `bias[s]` = Σ_d ln p̂(x_d = 0 | slot s)
+    /// `bias[s]` = Σ_d ln p̂(x_d = 0 | slot s) — the n_s-dependent
+    /// normalizer `−D·ln(n_s + 2β)` enters this scalar once per column,
+    /// not per dim (see `ClusterStats::rebuild_cache`)
     pub(crate) bias: Vec<f64>,
     /// `logn[s]` = ln n_s (the CRP prior factor, added *after* the
     /// likelihood block to match scalar addition order)
     pub(crate) logn: Vec<f64>,
     /// `diff[d·stride + s]` = ln p̂(x_d=1|s) − ln p̂(x_d=0|s)
     pub(crate) diff: Vec<f64>,
-    /// column needs a re-pack before the next batched score
-    pub(crate) dirty: Vec<bool>,
+    /// slots whose packed column is stale (each queued at most once)
+    pub(crate) stale: Vec<u32>,
+    /// per-column "currently on the `stale` queue" flag
+    pub(crate) queued: Vec<bool>,
     /// scratch output of the last batched block (one row × stride)
     pub(crate) scores: Vec<f64>,
+    /// reference/bench knob: re-pack the held-out column every datum
+    /// (the pre-incremental engine) instead of move-only maintenance;
+    /// bit-identical chains either way
+    pub(crate) eager: bool,
 }
 
 impl PackedTables {
@@ -122,24 +149,32 @@ impl PackedTables {
             bias: Vec::new(),
             logn: Vec::new(),
             diff: Vec::new(),
-            dirty: Vec::new(),
+            stale: Vec::new(),
+            queued: Vec::new(),
             scores: Vec::new(),
+            eager: false,
         }
     }
 
-    /// Begin-of-sweep hook: size for `nslots` columns and mark every
-    /// column stale (cluster membership may have changed arbitrarily
-    /// between sweeps — shuffle moves, hyper updates, checkpoint resume).
+    /// Begin-of-sweep hook: size for `nslots` columns and enqueue every
+    /// column for refresh (cluster membership and hyperparameters may
+    /// have changed arbitrarily between sweeps — shuffle moves, β
+    /// updates, checkpoint resume).
     pub(crate) fn begin_sweep(&mut self, nslots: usize) {
         self.ensure_stride(nslots);
-        for f in self.dirty.iter_mut() {
-            *f = true;
+        self.stale.clear();
+        for f in self.queued.iter_mut() {
+            *f = false;
+        }
+        for s in 0..nslots {
+            self.stale.push(s as u32);
+            self.queued[s] = true;
         }
     }
 
     /// Grow the column capacity to cover `nslots`, at least doubling so
     /// mid-sweep slot growth is amortized O(1). Existing columns are
-    /// re-laid out; new columns start dirty.
+    /// re-laid out; queue flags are preserved.
     pub(crate) fn ensure_stride(&mut self, nslots: usize) {
         if nslots <= self.stride {
             return;
@@ -155,38 +190,203 @@ impl PackedTables {
         self.diff = diff;
         self.bias.resize(new_stride, 0.0);
         self.logn.resize(new_stride, f64::NEG_INFINITY);
-        self.dirty.resize(new_stride, true);
+        if self.queued.len() < new_stride {
+            self.queued.resize(new_stride, false);
+        }
         self.stride = new_stride;
     }
 
-    /// Membership of `slot` changed: stale its column. Slots beyond the
-    /// current capacity are covered by [`Self::ensure_stride`], which
-    /// marks every new column dirty.
+    /// Membership of `slot` changed: enqueue its column for refresh
+    /// before the next batched score. Idempotent (a queued slot is not
+    /// re-queued); column storage for slots beyond the current capacity
+    /// is grown by [`Self::ensure_stride`] at the next refresh.
     #[inline]
-    pub(crate) fn mark_dirty(&mut self, slot: usize) {
-        if slot < self.stride {
-            self.dirty[slot] = true;
+    pub(crate) fn invalidate(&mut self, slot: usize) {
+        if slot >= self.queued.len() {
+            self.queued.resize(slot + 1, false);
+        }
+        if !self.queued[slot] {
+            self.queued[slot] = true;
+            self.stale.push(slot as u32);
         }
     }
 
-    /// Batched log-likelihood block of data row `r` against every
-    /// column; the result lands in `self.scores[0..stride]`. Columns of
-    /// dead slots hold stale values — callers gather live slots only.
-    pub(crate) fn score_row(
-        &mut self,
-        scorer: &mut dyn Scorer,
-        data: &crate::data::BinMat,
-        r: usize,
-    ) {
-        let rows = [r];
-        scorer.score_rows_against_clusters(
-            data,
-            &rows,
+    /// Resolve the held-out policy for one datum's dispatch — the ONE
+    /// place the refresh-policy invariant lives ("transiently
+    /// decremented stats must never be baked into a column"). In eager
+    /// reference mode the held-out column is enqueued for an immediate
+    /// re-pack with its decremented stats (and scored from the table);
+    /// in incremental mode the slot is returned so the caller passes it
+    /// to `ClusterSet::refresh_packed` as the deferred column and
+    /// corrects its weight from the cluster cache instead.
+    pub(crate) fn resolve_held_out(&mut self, held_out: Option<usize>) -> Option<usize> {
+        if self.eager {
+            if let Some(s) = held_out {
+                self.invalidate(s);
+            }
+            None
+        } else {
+            held_out
+        }
+    }
+
+    /// Batched log-likelihood block of a pre-decoded datum (ascending
+    /// set-bit list) against every column; the result lands in
+    /// `self.scores[0..stride]`. Columns of dead slots hold stale
+    /// values — callers gather live slots only.
+    pub(crate) fn score_row_ones(&mut self, scorer: &mut dyn Scorer, ones: &[u32]) {
+        let (dims, stride) = (self.dims, self.stride);
+        scorer.score_ones_against_clusters(
+            ones,
             &self.bias,
             &self.diff,
-            self.dims,
-            self.stride,
+            dims,
+            stride,
             &mut self.scores,
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cluster_set::ClusterSet;
+    use super::*;
+    use crate::data::BinMat;
+    use crate::model::BetaBernoulli;
+    use crate::rng::Pcg64;
+
+    fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = BinMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                if rng.next_f64() < 0.45 {
+                    m.set(r, c, true);
+                }
+            }
+        }
+        m
+    }
+
+    /// From-scratch reference: a fresh table with every column enqueued
+    /// and refreshed — what the incremental tables must equal.
+    fn scratch_repack(cs: &mut ClusterSet, model: &BetaBernoulli, dims: usize) -> PackedTables {
+        let mut t = PackedTables::new(dims);
+        t.begin_sweep(cs.num_slots());
+        cs.refresh_packed(model, &mut t, None);
+        t
+    }
+
+    fn assert_tables_bit_equal(
+        cs: &ClusterSet,
+        inc: &PackedTables,
+        refr: &PackedTables,
+        dims: usize,
+        ctx: &str,
+    ) {
+        for slot in cs.occupied_slots() {
+            assert_eq!(
+                inc.bias[slot].to_bits(),
+                refr.bias[slot].to_bits(),
+                "{ctx}: bias drift at slot {slot}"
+            );
+            assert_eq!(
+                inc.logn[slot].to_bits(),
+                refr.logn[slot].to_bits(),
+                "{ctx}: logn drift at slot {slot}"
+            );
+            for d in 0..dims {
+                assert_eq!(
+                    inc.diff[d * inc.stride + slot].to_bits(),
+                    refr.diff[d * refr.stride + slot].to_bits(),
+                    "{ctx}: diff drift at (dim {d}, slot {slot})"
+                );
+            }
+        }
+    }
+
+    /// The drift gate for incremental maintenance: a randomized sequence
+    /// of join/leave/alloc/free operations, with exactly the
+    /// invalidations the kernels issue, leaves the incrementally
+    /// maintained tables *bit-equal* to a from-scratch repack (stronger
+    /// than the 1-ulp requirement: columns are copied from the
+    /// deterministic per-cluster caches, never accumulated in place).
+    #[test]
+    fn incremental_refresh_matches_scratch_repack_bitwise() {
+        let (n, d) = (60usize, 24usize);
+        let data = rand_data(n, d, 31);
+        let mut model = BetaBernoulli::symmetric(d, 0.4);
+        model.build_lut(n + 1);
+        let mut rng = Pcg64::seed_from(32);
+        let mut cs = ClusterSet::new(d);
+        let mut inc = PackedTables::new(d);
+        inc.begin_sweep(cs.num_slots());
+        let mut member: Vec<Option<usize>> = vec![None; n];
+        for step in 0..500 {
+            let r = rng.next_below(n as u64) as usize;
+            match member[r] {
+                Some(slot) => {
+                    // leave (the slot frees itself when it empties)
+                    cs.remove_row(slot, &data, r);
+                    member[r] = None;
+                    inc.invalidate(slot);
+                }
+                None => {
+                    let occ = cs.occupied_slots();
+                    let slot = if occ.is_empty() || rng.next_f64() < 0.3 {
+                        cs.alloc_empty()
+                    } else {
+                        occ[rng.next_below(occ.len() as u64) as usize]
+                    };
+                    cs.add_row(slot, &data, r);
+                    member[r] = Some(slot);
+                    inc.invalidate(slot);
+                }
+            }
+            if step % 7 == 0 {
+                cs.refresh_packed(&model, &mut inc, None);
+                let refr = scratch_repack(&mut cs, &model, d);
+                assert_tables_bit_equal(&cs, &inc, &refr, d, &format!("step {step}"));
+            }
+        }
+    }
+
+    /// A self-move (remove a datum, then re-add it to the same cluster)
+    /// restores the sufficient statistics exactly, so the packed column
+    /// needs no invalidation — the core of the move-only maintenance.
+    #[test]
+    fn self_move_needs_no_invalidation() {
+        let (n, d) = (10usize, 16usize);
+        let data = rand_data(n, d, 33);
+        let mut model = BetaBernoulli::symmetric(d, 0.5);
+        model.build_lut(n + 1);
+        let mut cs = ClusterSet::new(d);
+        let slot = cs.alloc_empty();
+        for r in 0..5 {
+            cs.add_row(slot, &data, r);
+        }
+        let mut inc = PackedTables::new(d);
+        inc.begin_sweep(cs.num_slots());
+        cs.refresh_packed(&model, &mut inc, None);
+        // self-move, deliberately without invalidate()
+        cs.remove_row(slot, &data, 2);
+        cs.add_row(slot, &data, 2);
+        cs.refresh_packed(&model, &mut inc, None); // queue is empty: no work
+        let refr = scratch_repack(&mut cs, &model, d);
+        assert_tables_bit_equal(&cs, &inc, &refr, d, "self-move");
+    }
+
+    #[test]
+    fn invalidate_is_idempotent_and_covers_unallocated_slots() {
+        let mut t = PackedTables::new(4);
+        t.invalidate(9); // beyond any allocated column
+        t.invalidate(9);
+        t.invalidate(2);
+        assert_eq!(t.stale.len(), 2);
+        assert!(t.queued[9] && t.queued[2]);
+        // growth preserves the queue flags
+        t.ensure_stride(12);
+        assert!(t.queued[9] && t.queued[2]);
+        assert_eq!(t.stale.len(), 2);
     }
 }

@@ -13,6 +13,7 @@
 //! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 use super::cluster_set::ClusterSet;
+use super::kernel::WalkerScratch;
 use super::score::{ScoreDispatch, ScoreMode};
 use crate::data::BinMat;
 use crate::model::{BetaBernoulli, ClusterStats};
@@ -38,6 +39,13 @@ pub struct Shard {
     pub(crate) scratch_ids: Vec<u32>,
     pub(crate) scratch_logw: Vec<f64>,
     pub(crate) scratch_ones: Vec<u32>,
+    /// persistent per-sweep state of the Walker kernel (sticks, slices,
+    /// candidate buffers) — lives on the shard so Walker sweeps are
+    /// allocation-free after warm-up
+    pub(crate) walker: WalkerScratch,
+    /// times a Walker sweep exhausted its stick-extension budget (see
+    /// [`Self::stick_overflow_events`])
+    pub(crate) stick_overflows: u64,
 }
 
 impl Shard {
@@ -57,6 +65,8 @@ impl Shard {
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
+            walker: WalkerScratch::default(),
+            stick_overflows: 0,
         };
         // sequential CRP: P(new) ∝ θ, P(j) ∝ n_j (prior draw — the data
         // likelihood enters only through subsequent kernel sweeps)
@@ -99,6 +109,8 @@ impl Shard {
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
+            walker: WalkerScratch::default(),
+            stick_overflows: 0,
         }
     }
 
@@ -133,6 +145,8 @@ impl Shard {
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
+            walker: WalkerScratch::default(),
+            stick_overflows: 0,
         })
     }
 
@@ -165,19 +179,75 @@ impl Shard {
         self.scoring.name()
     }
 
+    /// Select the packed-table refresh policy of the batched dispatch:
+    /// `true` re-packs the held-out column every datum (the
+    /// pre-incremental engine, kept as a bench comparator and drift
+    /// oracle), `false` (default) refreshes a column only when a datum
+    /// actually moves cluster. Both policies produce bit-identical
+    /// chains (asserted in `rust/tests/scorer_equivalence.rs`); no-op
+    /// under the scalar dispatch. Survives until the next
+    /// [`Self::set_score_mode`] call.
+    pub fn set_eager_repack(&mut self, eager: bool) {
+        if let ScoreDispatch::Batched { tables, .. } = &mut self.scoring {
+            tables.eager = eager;
+        }
+    }
+
+    /// Whether the batched dispatch is in the eager per-datum repack
+    /// reference mode (see [`Self::set_eager_repack`]).
+    #[inline]
+    pub(crate) fn scoring_eager(&self) -> bool {
+        matches!(&self.scoring, ScoreDispatch::Batched { tables, .. } if tables.eager)
+    }
+
+    /// Times a Walker sweep on this shard hit its stick-extension budget
+    /// before the leftover stick mass fell below the smallest slice (the
+    /// eligible candidate sets of that sweep may have been truncated).
+    /// Always 0 for healthy θ; see the budget note on
+    /// [`crate::sampler::WalkerSlice`].
+    pub fn stick_overflow_events(&self) -> u64 {
+        self.stick_overflows
+    }
+
+    /// Record (and, on first occurrence, log) a Walker stick-budget
+    /// exhaustion — the explicit error path replacing the old silent
+    /// fixed-iteration cutoff.
+    pub(crate) fn note_stick_overflow(
+        &mut self,
+        theta: f64,
+        remaining: f64,
+        u_min: f64,
+        sticks: usize,
+    ) {
+        self.stick_overflows += 1;
+        if self.stick_overflows == 1 {
+            eprintln!(
+                "[walker] stick-extension budget exhausted after {sticks} empty sticks at \
+                 θ={theta:.3e}: leftover mass {remaining:.3e} still above the smallest slice \
+                 {u_min:.3e}; eligible candidate sets may be truncated this sweep (further \
+                 occurrences on this shard are counted silently — see \
+                 Shard::stick_overflow_events)"
+            );
+        }
+    }
+
     /// Begin-of-sweep hook for the scoring dispatch: (re)size the packed
-    /// tables and mark every column stale.
+    /// tables and enqueue every column for refresh.
     pub(crate) fn scoring_begin_sweep(&mut self) {
         if let ScoreDispatch::Batched { tables, .. } = &mut self.scoring {
             tables.begin_sweep(self.clusters.num_slots());
         }
     }
 
-    /// Membership of `slot` changed: stale its packed column.
+    /// Membership of `slot` changed under a real move: enqueue its
+    /// packed column for refresh. Kernels call this only when a datum
+    /// actually changed cluster (or a slot was re-allocated) — the
+    /// self-move common case restores the sufficient statistics exactly
+    /// and therefore needs no table work at all.
     #[inline]
-    pub(crate) fn scoring_mark_dirty(&mut self, slot: usize) {
+    pub(crate) fn scoring_invalidate(&mut self, slot: usize) {
         if let ScoreDispatch::Batched { tables, .. } = &mut self.scoring {
-            tables.mark_dirty(slot);
+            tables.invalidate(slot);
         }
     }
 
@@ -185,15 +255,28 @@ impl Shard {
     /// cluster))` for every live cluster in slot order, through the
     /// configured dispatch. Both scratch vectors are cleared first; the
     /// kernel appends its own new-table candidate afterwards.
-    pub(crate) fn score_crp_candidates(&mut self, data: &BinMat, r: usize, model: &BetaBernoulli) {
+    ///
+    /// `held_out` names the cluster datum `r` was just removed from (if
+    /// it survived the removal): its packed column still holds the
+    /// full-membership table, so under the incremental batched dispatch
+    /// its weight is computed from the decremented `ClusterStats` cache
+    /// instead — the exact scalar-path value. Every other column is
+    /// untouched by the removal and is scored straight from the block.
+    pub(crate) fn score_crp_candidates(
+        &mut self,
+        data: &BinMat,
+        r: usize,
+        model: &BetaBernoulli,
+        held_out: Option<usize>,
+    ) {
         self.scratch_ids.clear();
         self.scratch_logw.clear();
+        // decode the datum's set bits ONCE; every dispatch scores all
+        // local clusters from the same index list
+        self.scratch_ones.clear();
+        data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
         match &mut self.scoring {
             ScoreDispatch::Scalar => {
-                // decode the datum's set bits ONCE, score every local
-                // cluster from the same index list
-                self.scratch_ones.clear();
-                data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
                 for (slot, c) in self.clusters.iter_mut() {
                     self.scratch_ids.push(slot as u32);
                     self.scratch_logw
@@ -210,8 +293,6 @@ impl Shard {
                 // floor keeps small workloads, and every test regime,
                 // on the block path).
                 if tables.stride > 32 && self.clusters.num_active() * 4 < tables.stride {
-                    self.scratch_ones.clear();
-                    data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
                     for (slot, c) in self.clusters.iter_mut() {
                         self.scratch_ids.push(slot as u32);
                         self.scratch_logw
@@ -219,12 +300,19 @@ impl Shard {
                     }
                     return;
                 }
-                self.clusters.refresh_packed(model, tables);
-                tables.score_row(scorer.as_mut(), data, r);
-                for (slot, _) in self.clusters.iter() {
+                let table_skip = tables.resolve_held_out(held_out);
+                self.clusters.refresh_packed(model, tables, table_skip);
+                tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
+                for (slot, c) in self.clusters.iter_mut() {
                     self.scratch_ids.push(slot as u32);
-                    self.scratch_logw
-                        .push(tables.logn[slot] + tables.scores[slot]);
+                    let w = if Some(slot) == table_skip {
+                        // held-out correction: same code path (and bits)
+                        // as the scalar reference for this one cluster
+                        c.log_n() + c.score_ones(model, &self.scratch_ones)
+                    } else {
+                        tables.logn[slot] + tables.scores[slot]
+                    };
+                    self.scratch_logw.push(w);
                 }
             }
         }
@@ -233,7 +321,11 @@ impl Shard {
     /// Append the log-likelihood of row `r` under each requested slot to
     /// `out` (`u32::MAX` = an unmaterialized table, scored as
     /// `empty_loglik`), through the configured dispatch — under the
-    /// batched dispatch this is one block evaluation per call.
+    /// batched dispatch this is one block evaluation per call, with the
+    /// `held_out` cluster (the one datum `r` just left) corrected from
+    /// its decremented `ClusterStats` cache exactly as in
+    /// [`Self::score_crp_candidates`].
+    #[allow(clippy::too_many_arguments)] // the per-datum sweep contract
     pub(crate) fn score_slots_for_row(
         &mut self,
         data: &BinMat,
@@ -241,6 +333,7 @@ impl Shard {
         model: &BetaBernoulli,
         slots: &[u32],
         empty_loglik: f64,
+        held_out: Option<usize>,
         out: &mut Vec<f64>,
     ) {
         match &mut self.scoring {
@@ -273,11 +366,16 @@ impl Shard {
                     }
                     return;
                 }
-                self.clusters.refresh_packed(model, tables);
-                tables.score_row(scorer.as_mut(), data, r);
+                let table_skip = tables.resolve_held_out(held_out);
+                self.clusters.refresh_packed(model, tables, table_skip);
+                self.scratch_ones.clear();
+                data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
+                tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
                 for &s in slots {
                     out.push(if s == u32::MAX {
                         empty_loglik
+                    } else if Some(s as usize) == table_skip {
+                        self.clusters.score_slot(s as usize, model, data, r)
                     } else {
                         tables.scores[s as usize]
                     });
@@ -401,9 +499,12 @@ impl Shard {
     /// Occupied cluster slots in order of first appearance along the
     /// shard's datum sequence (the labeling under which Pitman's
     /// size-biased stick posterior applies — see the Walker kernel).
-    pub(crate) fn slots_by_appearance(&self) -> Vec<usize> {
-        let mut seen = vec![false; self.clusters.num_slots()];
-        let mut out = Vec::new();
+    /// Fills caller-owned buffers so the Walker sweep stays
+    /// allocation-free after warm-up.
+    pub(crate) fn slots_by_appearance_into(&self, seen: &mut Vec<bool>, out: &mut Vec<usize>) {
+        out.clear();
+        seen.clear();
+        seen.resize(self.clusters.num_slots(), false);
         for &slot in &self.assign {
             let s = slot as usize;
             if !seen[s] {
@@ -411,7 +512,6 @@ impl Shard {
                 out.push(s);
             }
         }
-        out
     }
 
     /// Integrity check: stats match the member rows exactly, the slot

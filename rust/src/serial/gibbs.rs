@@ -13,6 +13,7 @@
 //!
 //! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
+use crate::coordinator::{Checkpoint, MuMode};
 use crate::data::BinMat;
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
@@ -21,6 +22,7 @@ use crate::rng::Pcg64;
 use crate::sampler::{KernelKind, ScoreMode, Shard};
 use crate::special::{lgamma, logsumexp};
 use crate::util::timer::PhaseTimer;
+use std::path::Path;
 
 /// Configuration for the serial sampler.
 #[derive(Debug, Clone, Copy)]
@@ -100,6 +102,24 @@ pub struct SerialGibbs<'a> {
     beta_updater: BetaUpdater,
     /// per-phase wall-clock accounting
     pub timer: PhaseTimer,
+    /// completed kernel sweeps (persisted by [`Self::save_checkpoint`],
+    /// restored by [`Self::resume`])
+    pub sweeps_done: u64,
+    /// cumulative measured sweep compute seconds (persisted/restored by
+    /// the checkpoint, so trace time axes stay monotone across resumes)
+    pub measured_time_s: f64,
+    /// persistent β-update scratch (no per-sweep hyper-vector clone)
+    beta_scratch: Vec<f64>,
+}
+
+impl std::fmt::Debug for SerialGibbs<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SerialGibbs")
+            .field("sweeps_done", &self.sweeps_done)
+            .field("alpha", &self.alpha)
+            .field("clusters", &self.num_clusters())
+            .finish_non_exhaustive()
+    }
 }
 
 impl<'a> SerialGibbs<'a> {
@@ -125,6 +145,9 @@ impl<'a> SerialGibbs<'a> {
             shard,
             beta_updater: BetaUpdater::new(cfg.beta_grid),
             timer: PhaseTimer::new(),
+            sweeps_done: 0,
+            measured_time_s: 0.0,
+            beta_scratch: Vec::new(),
         }
     }
 
@@ -149,6 +172,9 @@ impl<'a> SerialGibbs<'a> {
             shard,
             beta_updater: BetaUpdater::new(cfg.beta_grid),
             timer: PhaseTimer::new(),
+            sweeps_done: 0,
+            measured_time_s: 0.0,
+            beta_scratch: Vec::new(),
         }
     }
 
@@ -159,13 +185,16 @@ impl<'a> SerialGibbs<'a> {
         self.shard.set_theta(self.alpha);
         let t0 = std::time::Instant::now();
         self.cfg.kernel.kernel().sweep(&mut self.shard, self.data, &self.model);
-        self.timer.add("sweep", t0.elapsed());
+        let dt = t0.elapsed();
+        self.timer.add("sweep", dt);
+        self.measured_time_s += dt.as_secs_f64();
         if self.cfg.update_alpha {
             self.update_alpha(rng);
         }
         if self.cfg.update_beta {
             self.update_beta(rng);
         }
+        self.sweeps_done += 1;
     }
 
     /// Eq. 6 slice update for α.
@@ -182,17 +211,116 @@ impl<'a> SerialGibbs<'a> {
 
     /// Griddy-Gibbs update of every β_d from cluster sufficient stats.
     /// Score caches are only invalidated when some β_d actually moved.
+    /// Runs on persistent scratch — no per-sweep hyper-vector clone.
     pub fn update_beta(&mut self, rng: &mut Pcg64) {
         let mut stats: Vec<(u64, u32)> = Vec::new();
-        let mut new_beta = self.model.beta.clone();
-        for (d, b) in new_beta.iter_mut().enumerate() {
+        self.beta_scratch.clear();
+        self.beta_scratch.extend_from_slice(&self.model.beta);
+        for d in 0..self.model.d {
             stats.clear();
             self.shard.collect_dim_stats(d, &mut stats);
-            *b = self.beta_updater.sample(rng, &stats);
+            self.beta_scratch[d] = self.beta_updater.sample(rng, &stats);
         }
-        if self.model.update_betas(&new_beta, self.data.rows() + 1) {
+        if self.model.update_betas(&self.beta_scratch, self.data.rows() + 1) {
             self.shard.invalidate_caches();
         }
+    }
+
+    /// Snapshot the serial chain's latent state as a single-shard
+    /// `CCCKPT2` [`Checkpoint`] — the same versioned, checksummed format
+    /// (and reader/writer) the coordinator uses, with `μ = [1]`,
+    /// `MuMode::Uniform`, and the configured kernel as the one shard's
+    /// kernel tag.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            alpha: self.alpha,
+            beta: self.model.beta.clone(),
+            rounds: self.sweeps_done,
+            modeled_time_s: self.measured_time_s, // serial: modeled ≡ measured
+            measured_time_s: self.measured_time_s,
+            mu_mode: MuMode::Uniform,
+            mu: vec![1.0],
+            kernels: vec![self.cfg.kernel],
+            shards: vec![(
+                self.shard.rows().iter().map(|&r| r as u64).collect(),
+                self.shard.assignments_local().to_vec(),
+            )],
+        }
+    }
+
+    /// Persist the latent state to `path` (`CCCKPT2`).
+    pub fn save_checkpoint(&self, path: &Path) -> std::io::Result<()> {
+        self.to_checkpoint().save(path)
+    }
+
+    /// Rebuild a serial chain from a single-shard checkpoint against the
+    /// SAME dataset: sufficient statistics are recomputed from the saved
+    /// assignments and integrity-checked before the chain may continue.
+    /// The kernel tag must match `cfg.kernel`, and the checkpoint must
+    /// own every data row — a mismatch is an error, never a silent
+    /// reconfiguration. As with the coordinator, the RNG stream is split
+    /// fresh from `rng` (the stream position itself is not serialized).
+    pub fn resume(
+        data: &'a BinMat,
+        cfg: SerialConfig,
+        ckpt: &Checkpoint,
+        rng: &mut Pcg64,
+    ) -> Result<SerialGibbs<'a>, String> {
+        if ckpt.shards.len() != 1 {
+            return Err(format!(
+                "serial resume needs a 1-shard checkpoint, got {} shards",
+                ckpt.shards.len()
+            ));
+        }
+        if ckpt.beta.len() != data.dims() {
+            return Err(format!(
+                "checkpoint β has {} dims, data has {}",
+                ckpt.beta.len(),
+                data.dims()
+            ));
+        }
+        if ckpt.kernels != [cfg.kernel] {
+            return Err(format!(
+                "checkpoint kernel {:?} does not match configured {:?}",
+                ckpt.kernels, cfg.kernel
+            ));
+        }
+        let (rows, assign) = &ckpt.shards[0];
+        if rows.len() != data.rows() {
+            return Err(format!(
+                "checkpoint owns {} rows, data has {}",
+                rows.len(),
+                data.rows()
+            ));
+        }
+        let rows: Vec<usize> = rows.iter().map(|&r| r as usize).collect();
+        let mut shard = Shard::from_parts(data, rows, assign.clone(), rng.split(0))?;
+        shard.check_invariants(data)?;
+        shard.set_score_mode(cfg.scoring);
+        shard.set_theta(ckpt.alpha);
+        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
+        model.beta.copy_from_slice(&ckpt.beta);
+        // build_lut handles the asymmetric-β case itself (clears the LUT)
+        model.build_lut(data.rows() + 1);
+        Ok(SerialGibbs {
+            data,
+            model,
+            alpha: ckpt.alpha,
+            cfg,
+            shard,
+            beta_updater: BetaUpdater::new(cfg.beta_grid),
+            timer: PhaseTimer::new(),
+            sweeps_done: ckpt.rounds,
+            measured_time_s: ckpt.measured_time_s,
+            beta_scratch: Vec::new(),
+        })
+    }
+
+    /// Forward of [`Shard::set_eager_repack`] for the serial chain's one
+    /// shard (bench/reference use; see the packed-table refresh policy
+    /// docs there).
+    pub fn set_eager_repack(&mut self, eager: bool) {
+        self.shard.set_eager_repack(eager);
     }
 
     /// Number of live clusters.
@@ -397,6 +525,75 @@ mod tests {
         }
         // β moved off its init and stays on the grid
         assert!(g.model.beta.iter().all(|&b| b >= 1e-2 && b <= 10.0));
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_serial_chain() {
+        let ds = small_dataset(11);
+        let mut rng = Pcg64::seed_from(11);
+        let cfg = SerialConfig::default();
+        let mut g = SerialGibbs::init_from_prior(&ds.train, cfg, &mut rng);
+        for _ in 0..5 {
+            g.sweep(&mut rng);
+        }
+        assert_eq!(g.sweeps_done, 5);
+        let dir = std::env::temp_dir().join("cc_serial_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serial.ccckpt");
+        g.save_checkpoint(&path).unwrap();
+        let ckpt = Checkpoint::load(&path).unwrap();
+        assert_eq!(ckpt, g.to_checkpoint());
+        assert_eq!(ckpt.rounds, 5);
+        assert_eq!(ckpt.mu, vec![1.0]);
+
+        let mut rng2 = Pcg64::seed_from(99);
+        let mut r = SerialGibbs::resume(&ds.train, cfg, &ckpt, &mut rng2).unwrap();
+        assert_eq!(r.sweeps_done, 5);
+        assert_eq!(
+            r.measured_time_s.to_bits(),
+            g.measured_time_s.to_bits(),
+            "cumulative sweep time must resume (monotone trace time axis)"
+        );
+        assert!(r.measured_time_s > 0.0);
+        assert_eq!(r.alpha().to_bits(), g.alpha().to_bits());
+        assert_eq!(r.assignments(), g.assignments());
+        assert_eq!(r.num_clusters(), g.num_clusters());
+        for (a, b) in r.model.beta.iter().zip(&g.model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "β must resume bit-exactly");
+        }
+        r.check_invariants().unwrap();
+        // and the resumed chain keeps running
+        r.sweep(&mut rng2);
+        r.check_invariants().unwrap();
+        assert_eq!(r.sweeps_done, 6);
+        assert!(r.predictive_loglik(&ds.test).is_finite());
+    }
+
+    #[test]
+    fn serial_resume_rejects_mismatches() {
+        let ds = small_dataset(12);
+        let mut rng = Pcg64::seed_from(13);
+        let cfg = SerialConfig::default();
+        let g = SerialGibbs::init_from_prior(&ds.train, cfg, &mut rng);
+        let ckpt = g.to_checkpoint();
+        // kernel mismatch
+        let cfg_w = SerialConfig {
+            kernel: crate::sampler::KernelKind::WalkerSlice,
+            ..cfg
+        };
+        let e = SerialGibbs::resume(&ds.train, cfg_w, &ckpt, &mut rng).unwrap_err();
+        assert!(e.contains("kernel"), "{e}");
+        // multi-shard (coordinator) checkpoints are not serial-resumable
+        let mut multi = ckpt.clone();
+        multi.shards.push((Vec::new(), Vec::new()));
+        let e = SerialGibbs::resume(&ds.train, cfg, &multi, &mut rng).unwrap_err();
+        assert!(e.contains("1-shard"), "{e}");
+        // partial row ownership is rejected
+        let mut partial = ckpt.clone();
+        partial.shards[0].0.pop();
+        partial.shards[0].1.pop();
+        let e = SerialGibbs::resume(&ds.train, cfg, &partial, &mut rng).unwrap_err();
+        assert!(e.contains("rows"), "{e}");
     }
 
     #[test]

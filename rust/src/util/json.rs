@@ -63,6 +63,14 @@ impl Json {
         }
     }
 
+    /// Array element lookup (`None` for non-arrays / out-of-range).
+    pub fn index(&self, i: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(xs) => xs.get(i),
+            _ => None,
+        }
+    }
+
     /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {

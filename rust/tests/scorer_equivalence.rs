@@ -1,6 +1,6 @@
 //! The scorer-equivalence gate for the batched sweep path.
 //!
-//! Two suites:
+//! Three suites:
 //!
 //! 1. **Bit-identity.** A sweep whose candidate scoring runs through the
 //!    batched `Scorer::score_rows_against_clusters` dispatch must be
@@ -12,7 +12,14 @@
 //!    scorer adds the same f64 terms in the same order, so any
 //!    divergence is a real dispatch bug, not float noise.
 //!
-//! 2. **Padding contract.** Property tests (previously asserted only in
+//! 2. **Incremental-maintenance drift.** The move-only packed-table
+//!    engine (DESIGN.md §7) must be bit-identical over full chains to
+//!    the eager per-datum repack reference (`Shard::set_eager_repack`);
+//!    the table-level counterpart (randomized join/leave/alloc/free vs
+//!    from-scratch repack, bit-equal) lives in
+//!    `rust/src/sampler/score.rs` unit tests.
+//!
+//! 3. **Padding contract.** Property tests (previously asserted only in
 //!    the Python L1/L2 suites) for the `Scorer` padding rules against
 //!    `FallbackScorer`: padded dims with `W1 = W0 = 0` are an exact
 //!    no-op, padded clusters at `logpi = -1e30` never win the logsumexp,
@@ -153,6 +160,58 @@ fn coordinator_k3_collapsed_gibbs_batched_is_bit_identical() {
 #[test]
 fn coordinator_k3_walker_slice_batched_is_bit_identical() {
     assert_coordinator_bit_identical(KernelKind::WalkerSlice);
+}
+
+/// Chain-level drift gate for the incremental packed-table engine: the
+/// move-only maintenance (zero table work on self-moves, held-out
+/// correction from the cluster cache) must be *bit-identical* over full
+/// chains to the eager per-datum repack reference — same raw slot
+/// assignments, same α/β bits, never-diverging RNG streams. Any packed
+/// column left stale by the move-only bookkeeping would flip a
+/// categorical pick within a few sweeps here.
+fn assert_incremental_matches_eager(kernel: KernelKind) {
+    let ds = equivalence_dataset(23);
+    let mk = || SerialConfig {
+        update_alpha: true,
+        update_beta: true,
+        kernel,
+        scoring: ScoreMode::Batched(ScorerKind::Fallback),
+        ..Default::default()
+    };
+    let mut rng_i = Pcg64::seed_from(55);
+    let mut incremental = SerialGibbs::init_from_prior(&ds.train, mk(), &mut rng_i);
+    let mut rng_e = Pcg64::seed_from(55);
+    let mut eager = SerialGibbs::init_from_prior(&ds.train, mk(), &mut rng_e);
+    eager.set_eager_repack(true);
+    for it in 0..40 {
+        incremental.sweep(&mut rng_i);
+        eager.sweep(&mut rng_e);
+        assert_eq!(
+            incremental.assignments(),
+            eager.assignments(),
+            "incremental vs eager diverged at sweep {it} ({kernel:?})"
+        );
+        assert_eq!(
+            incremental.alpha().to_bits(),
+            eager.alpha().to_bits(),
+            "α diverged at sweep {it} ({kernel:?})"
+        );
+        for (a, b) in incremental.model.beta.iter().zip(&eager.model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits(), "β diverged at sweep {it} ({kernel:?})");
+        }
+    }
+    incremental.check_invariants().unwrap();
+    eager.check_invariants().unwrap();
+}
+
+#[test]
+fn incremental_tables_match_eager_repack_collapsed_gibbs() {
+    assert_incremental_matches_eager(KernelKind::CollapsedGibbs);
+}
+
+#[test]
+fn incremental_tables_match_eager_repack_walker_slice() {
+    assert_incremental_matches_eager(KernelKind::WalkerSlice);
 }
 
 // ---------------------------------------------------------------------

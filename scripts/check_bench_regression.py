@@ -1,0 +1,112 @@
+#!/usr/bin/env python3
+"""Hot-path bench regression gate.
+
+Compares a freshly measured BENCH_hotpath.json (written by
+`cargo bench --bench hotpath -- --smoke`) against the committed
+baseline at the repo root.
+
+The HARD gate runs on the `derived` machine-relative ratios
+(batched-vs-eager / batched-vs-scalar speedups measured within one run
+on one machine): a matched ratio dropping by more than --threshold
+(default 20%) FAILS the job. Ratios are comparable across unlike
+hardware, so a baseline minted on a developer machine stays meaningful
+on shared CI runners.
+
+Absolute per-case rows_per_s numbers are compared too, but only as a
+WARNING (shared-runner hardware and noise make absolute throughput
+non-portable); they exist to make cross-push trends visible in the
+uploaded artifacts.
+
+A baseline whose provenance starts with "bootstrap" (or that has no
+derived ratios) only records: the gate prints how to mint a real
+baseline and exits 0. Keys present on only one side are reported but
+never fail the gate (the matrix may grow across PRs).
+
+Usage:
+  python3 scripts/check_bench_regression.py \
+      --baseline BENCH_hotpath.json \
+      --fresh bench_results/BENCH_hotpath.json \
+      --threshold 0.20
+"""
+
+import argparse
+import json
+import sys
+
+
+def case_key(c):
+    return "{}|J{}|p{:.2f}|{}".format(
+        c["kernel"], int(c["clusters"]), float(c["density"]), c["mode"]
+    )
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    cases = {case_key(c): float(c["rows_per_s"]) for c in doc.get("cases", [])}
+    derived = {k: float(v) for k, v in doc.get("derived", {}).items()}
+    return doc, cases, derived
+
+
+def compare(kind, base, fresh, threshold, hard):
+    failures = []
+    for key, old in sorted(base.items()):
+        new = fresh.get(key)
+        if new is None:
+            print("  [skip] %-52s missing from fresh run" % key)
+            continue
+        ratio = new / old if old > 0 else float("inf")
+        flag = "ok "
+        if ratio < 1.0 - threshold:
+            flag = "FAIL" if hard else "warn"
+            failures.append((key, old, new, ratio))
+        print("  [%s] %s %-52s %10.3f -> %10.3f  (%.2fx)" % (flag, kind, key, old, new, ratio))
+    for key in sorted(set(fresh) - set(base)):
+        print("  [new ] %s %-52s %10.3f (not in baseline)" % (kind, key, fresh[key]))
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_hotpath.json")
+    ap.add_argument("--fresh", default="bench_results/BENCH_hotpath.json")
+    ap.add_argument("--threshold", type=float, default=0.20)
+    args = ap.parse_args()
+
+    base_doc, base_cases, base_derived = load(args.baseline)
+    _, fresh_cases, fresh_derived = load(args.fresh)
+
+    provenance = str(base_doc.get("provenance", ""))
+    if provenance.startswith("bootstrap") or not base_derived:
+        print(
+            "baseline %r is a bootstrap (provenance=%r, %d derived ratios): gate disabled.\n"
+            "Mint a measured baseline with:\n"
+            "  cargo bench --bench hotpath -- --smoke --update-baseline\n"
+            "and commit the rewritten BENCH_hotpath.json."
+            % (args.baseline, provenance, len(base_derived))
+        )
+        return 0
+
+    print("machine-relative speedup ratios (HARD gate):")
+    hard_failures = compare("ratio", base_derived, fresh_derived, args.threshold, hard=True)
+    print("absolute sweep throughput (informational — hardware-dependent):")
+    soft = compare("abs  ", base_cases, fresh_cases, args.threshold, hard=False)
+    if soft:
+        print(
+            "note: %d absolute-throughput drop(s) beyond %.0f%% (warning only; "
+            "runner hardware differs from the baseline machine)."
+            % (len(soft), 100 * args.threshold)
+        )
+
+    if hard_failures:
+        print(
+            "\n%d speedup ratio(s) regressed more than %.0f%% — failing the gate."
+            % (len(hard_failures), 100 * args.threshold)
+        )
+        return 1
+    print("no machine-relative speedup regression beyond %.0f%%." % (100 * args.threshold))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
