@@ -1,7 +1,8 @@
 //! Hot-path microbenchmarks (supporting the §Perf pass):
 //!
 //! * **perf-baseline matrix** — sweep throughput (rows/s) per
-//!   kernel × cluster count × bit density × scoring mode
+//!   kernel (collapsed Gibbs | Walker | the split–merge:gibbs
+//!   composite) × cluster count × bit density × scoring mode
 //!   (scalar reference | batched incremental | batched eager ≙ the
 //!   pre-incremental engine), written to
 //!   `bench_results/BENCH_hotpath.json` (and, with `--update-baseline`,
@@ -11,7 +12,7 @@
 //! * batched scoring throughput — PJRT artifact vs pure-Rust fallback on
 //!   the compiled (256, 256, 512) shape;
 //! * per-datum Gibbs scan throughput (rows/s), with the cached-table vs
-//!   uncached-scoring ablation (DESIGN.md §8);
+//!   uncached-scoring ablation (DESIGN.md §9);
 //! * coordinator phase split (map / reduce / shuffle shares).
 
 use clustercluster::bench::{
@@ -108,7 +109,14 @@ fn main() {
         // the pre-incremental engine: held-out column re-packed per datum
         ("batched-eager", ScoreMode::Batched(ScorerKind::Fallback), true),
     ];
-    for kind in [KernelKind::CollapsedGibbs, KernelKind::WalkerSlice] {
+    // the split–merge composite rides in the same matrix: its restricted
+    // scans share the packed-table scoring path, so the baseline (and
+    // the CI regression gate) covers the global-move layer too
+    for kind in [
+        KernelKind::CollapsedGibbs,
+        KernelKind::WalkerSlice,
+        KernelKind::SplitMergeGibbs,
+    ] {
         let kernel = kind.kernel();
         for &clusters in &[8usize, 48] {
             for &density in &[0.05f64, 0.5] {

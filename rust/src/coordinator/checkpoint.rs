@@ -47,6 +47,8 @@ fn kernel_to_tag(k: KernelKind) -> u64 {
     match k {
         KernelKind::CollapsedGibbs => 0,
         KernelKind::WalkerSlice => 1,
+        KernelKind::SplitMergeGibbs => 2,
+        KernelKind::SplitMergeWalker => 3,
     }
 }
 
@@ -54,6 +56,8 @@ fn kernel_from_tag(tag: u64) -> Result<KernelKind, String> {
     match tag {
         0 => Ok(KernelKind::CollapsedGibbs),
         1 => Ok(KernelKind::WalkerSlice),
+        2 => Ok(KernelKind::SplitMergeGibbs),
+        3 => Ok(KernelKind::SplitMergeWalker),
         other => Err(format!("unknown kernel tag {other}")),
     }
 }
@@ -335,15 +339,16 @@ mod tests {
             seed: 1,
         }
         .generate();
-        // non-uniform μ mode + mixed kernels: the roundtrip must carry
-        // the full granularity state, not just the partition
+        // non-uniform μ mode + mixed kernels (including a split–merge
+        // composite, so the v2 kernel tags roundtrip): the file must
+        // carry the full granularity state, not just the partition
         let cfg = CoordinatorConfig {
             workers: 3,
             comm: CommModel::free(),
             mu_mode: MuMode::SizeProportional,
             kernel_assignment: crate::sampler::KernelAssignment::RoundRobin(vec![
                 KernelKind::CollapsedGibbs,
-                KernelKind::WalkerSlice,
+                KernelKind::SplitMergeWalker,
             ]),
             ..Default::default()
         };
@@ -361,7 +366,7 @@ mod tests {
             ckpt.kernels,
             vec![
                 KernelKind::CollapsedGibbs,
-                KernelKind::WalkerSlice,
+                KernelKind::SplitMergeWalker,
                 KernelKind::CollapsedGibbs,
             ]
         );

@@ -7,9 +7,12 @@
 //!   `R` local sweeps of its assigned [`TransitionKernel`] (kernels may
 //!   differ across shards — [`KernelAssignment`]) over its own data
 //!   with concentration `αμ_k`, using standard DPM operators
-//!   *without modification* (Neal Alg. 3 or Walker slice — see
-//!   [`crate::sampler`]); data may instantiate new clusters locally but
-//!   cannot cross nodes.
+//!   *without modification* (Neal Alg. 3, Walker slice, or the Jain–Neal
+//!   split–merge composites — see [`crate::sampler`] and the selection
+//!   guide in DESIGN.md §7); data may instantiate new clusters locally
+//!   but cannot cross nodes. Global split–merge moves run *inside* each
+//!   shard against its conditional `DP(αμ_k, H)`, so even
+//!   cluster-creating/dissolving moves parallelize.
 //! * **reduce** — centralized, lightweight: sample `α` from Eq. 6 given
 //!   `Σ_k J_k` (each worker ships one integer), the base-measure
 //!   hyperparameters `β_d` by griddy Gibbs from pooled sufficient
@@ -237,7 +240,8 @@ pub struct CoordinatorConfig {
     pub mu_mode: MuMode,
     /// per-supercluster transition operators (paper §4: any standard DPM
     /// kernel applies unmodified per supercluster, and different shards
-    /// may run different kernels — `--local-kernel gibbs,walker,…`)
+    /// may run different kernels —
+    /// `--local-kernel gibbs,split_merge:walker,…`)
     pub kernel_assignment: KernelAssignment,
     /// candidate-cluster scoring dispatch inside the map-step sweeps
     /// (`--scorer auto|fallback|pjrt`; one scorer instance per shard)

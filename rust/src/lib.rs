@@ -37,7 +37,10 @@
 //! ([`coordinator::MuMode`]: uniform, size-proportional, adaptive —
 //! every mode exactness-preserving, DESIGN.md §6), and different shards
 //! may run different transition kernels within one exact chain
-//! ([`sampler::KernelAssignment`], CLI `--local-kernel gibbs,walker`).
+//! ([`sampler::KernelAssignment`], CLI
+//! `--local-kernel gibbs,split_merge:walker`). Three kernel families
+//! ship: collapsed Gibbs, Walker slice, and the Jain–Neal split–merge
+//! composites ([`sampler::SplitMerge`]; selection guide in DESIGN.md §7).
 //!
 //! ## Quickstart
 //!
@@ -88,7 +91,8 @@ pub mod prelude {
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{FallbackScorer, Scorer, ScorerKind};
     pub use crate::sampler::{
-        ClusterSet, KernelAssignment, KernelKind, ScoreMode, Shard, TransitionKernel,
+        ClusterSet, KernelAssignment, KernelKind, ScoreMode, Shard, SplitMerge,
+        TransitionKernel,
     };
     pub use crate::serial::SerialGibbs;
 }

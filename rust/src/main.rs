@@ -31,12 +31,14 @@ USAGE: repro <command> [--flag value]...
 
 COMMANDS
   gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
-  serial       --n 5000 --d 64 --clusters 32 --sweeps 50 [--local-kernel gibbs|walker]
+  serial       --n 5000 --d 64 --clusters 32 --sweeps 50
+               [--local-kernel gibbs|walker|split_merge:gibbs|split_merge:walker]
                [--scorer auto|fallback|pjrt] [--update-beta] [--trace out.csv]
                [--checkpoint out.ccckpt] [--resume in.ccckpt]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
                [--local-sweeps 1] [--no-shuffle] [--eq7]
-               [--local-kernel gibbs|walker|gibbs,walker,...]
+               [--local-kernel gibbs|walker|split_merge:gibbs|split_merge:walker
+                |gibbs,split_merge:walker,...]
                [--mu-mode uniform|size-proportional|adaptive[:target]]
                [--scorer auto|fallback|pjrt] [--update-beta] [--latency 2.0]
                [--bandwidth 1e8] [--trace out.csv] [--shard-trace shards.csv]
@@ -46,9 +48,14 @@ COMMANDS
 
 Both samplers run the same pluggable per-shard transition kernels
 (--local-kernel): \"gibbs\" = Neal (2000) Alg. 3 collapsed Gibbs,
-\"walker\" = Walker (2007) slice sampling. A comma-separated list
-(e.g. \"gibbs,walker\") cycles the kernels over the superclusters —
-different shards run different operators within one exact chain.
+\"walker\" = Walker (2007) slice sampling, and the composite specs
+\"split_merge:gibbs\" / \"split_merge:walker\" = Jain & Neal (2004)
+restricted-Gibbs split-merge MH moves interleaved with the named
+per-datum sweep (global cluster creation/dissolution in one step —
+see the kernel selection guide, DESIGN.md section 7). A
+comma-separated list (e.g. \"gibbs,split_merge:walker\") cycles the
+kernels over the superclusters — different shards run different
+operators within one exact chain.
 (--walker is accepted as a legacy spelling of --local-kernel walker.)
 
 --mu-mode sets the supercluster granularity (all modes are

@@ -230,6 +230,25 @@ impl ClusterStats {
         self.cache_valid = false;
     }
 
+    /// Overwrite this cluster's statistics with a copy of `other`'s,
+    /// reusing the existing allocations (unlike `clone`, which allocates
+    /// fresh count vectors). The split–merge kernel scores each merge
+    /// proposal's union marginal on a persistent scratch through this,
+    /// keeping the move layer allocation-free after warm-up. The cached
+    /// scoring table is NOT copied — it invalidates, to be rebuilt
+    /// lazily on first score.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the two stats have different dimensionality.
+    pub fn copy_from(&mut self, other: &ClusterStats) {
+        assert_eq!(self.ones.len(), other.ones.len(), "dims mismatch");
+        self.n = other.n;
+        self.log_n = other.log_n;
+        self.ones.copy_from_slice(&other.ones);
+        self.cache_valid = false;
+    }
+
     /// Merge another cluster's statistics into this one (shuffle moves).
     pub fn absorb(&mut self, other: &ClusterStats) {
         assert_eq!(self.ones.len(), other.ones.len());
@@ -464,6 +483,31 @@ mod tests {
             (chain - marginal).abs() < 1e-8,
             "chain {chain} vs marginal {marginal}"
         );
+    }
+
+    #[test]
+    fn copy_from_duplicates_stats_and_invalidates_cache() {
+        let data = rand_data(12, 15, 9);
+        let model = BetaBernoulli::symmetric(15, 0.5);
+        let mut src = ClusterStats::empty(15);
+        for r in 0..7 {
+            src.add(&data, r);
+        }
+        let mut dst = ClusterStats::empty(15);
+        for r in 7..12 {
+            dst.add(&data, r);
+        }
+        let _ = dst.score(&model, &data, 0); // warm dst's cache with stale stats
+        dst.copy_from(&src);
+        assert_eq!(dst.n(), src.n());
+        assert_eq!(dst.ones(), src.ones());
+        assert_eq!(dst.log_n().to_bits(), src.log_n().to_bits());
+        // the cache was invalidated: scores come from the copied stats
+        for r in 0..12 {
+            let got = dst.score(&model, &data, r);
+            let want = src.score_uncached(&model, &data, r);
+            assert!((got - want).abs() < 1e-10, "row {r}: {got} vs {want}");
+        }
     }
 
     #[test]

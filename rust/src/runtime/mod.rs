@@ -28,7 +28,7 @@
 //! entry points accelerates the map step itself with zero kernel
 //! changes. The pure-Rust evaluation runs through the SIMD-blocked
 //! [`accumulate_ones_block`] (bit-identical to the naive loop — see
-//! DESIGN.md §7). [`ScorerKind`] is the backend selector both CLI entry
+//! DESIGN.md §8). [`ScorerKind`] is the backend selector both CLI entry
 //! points expose as `--scorer`.
 
 pub mod pjrt;

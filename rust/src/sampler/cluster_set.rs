@@ -159,6 +159,59 @@ impl ClusterSet {
             .remove(data, r);
     }
 
+    /// Move one datum between two distinct slots: remove it from `from`
+    /// (freeing and recycling the slot if it empties, exactly like
+    /// [`Self::remove_row`]) and add it to the live slot `to`. This is
+    /// the split-side primitive of the split–merge kernel: launch-state
+    /// construction, restricted Gibbs scans, and the rejection rollback
+    /// are all sequences of `move_row` calls, and because the sufficient
+    /// statistics are integer counts a move followed by the reverse move
+    /// restores them *bit-exactly* (property-tested in
+    /// `rust/tests/property_invariants.rs`).
+    ///
+    /// ```
+    /// use clustercluster::data::BinMat;
+    /// use clustercluster::sampler::ClusterSet;
+    ///
+    /// let data = BinMat::from_dense(2, 3, &[1, 0, 1, 0, 1, 0]);
+    /// let mut cs = ClusterSet::new(3);
+    /// let a = cs.alloc_empty();
+    /// cs.add_row(a, &data, 0);
+    /// cs.add_row(a, &data, 1);
+    /// let b = cs.alloc_empty();
+    /// cs.add_row(b, &data, 0); // anchor so `b` stays live
+    /// cs.move_row(a, b, &data, 1);
+    /// assert_eq!(cs.n_of(a), 1);
+    /// assert_eq!(cs.n_of(b), 2);
+    /// cs.check_slot_invariants().unwrap();
+    /// ```
+    pub fn move_row(&mut self, from: usize, to: usize, data: &BinMat, r: usize) {
+        debug_assert_ne!(from, to, "move_row between distinct slots");
+        self.remove_row(from, data, r);
+        self.add_row(to, data, r);
+    }
+
+    /// Merge the cluster in `from` wholesale into `into`: absorb its
+    /// sufficient statistics (integer adds — bit-identical to re-adding
+    /// the member rows one by one) and return `from`'s slot to the free
+    /// list. The merge-side primitive of the split–merge kernel; callers
+    /// retarget the member rows' assignment entries themselves, and —
+    /// under the batched scoring dispatch — enqueue both touched packed
+    /// columns for refresh.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `from == into` or either slot is dead.
+    pub fn merge_slots(&mut self, from: usize, into: usize) {
+        assert_ne!(from, into, "merge_slots between distinct slots");
+        let stats = self.slots[from].take().expect("merge from dead slot");
+        self.free.push(from);
+        self.slots[into]
+            .as_mut()
+            .expect("merge into dead slot")
+            .absorb(&stats);
+    }
+
     /// Free every empty-but-alive slot (end of a Walker sweep).
     pub fn compact_free_slots(&mut self) {
         for s in 0..self.slots.len() {
@@ -422,6 +475,64 @@ mod tests {
         let got = cs.get(b).unwrap();
         assert_eq!(got.n(), fresh.n());
         assert_eq!(got.ones(), fresh.ones());
+        cs.check_slot_invariants().unwrap();
+    }
+
+    #[test]
+    fn move_row_roundtrip_is_bit_exact_and_frees_emptied_source() {
+        let data = rand_data(6, 8, 6);
+        let mut cs = ClusterSet::new(8);
+        let a = cs.alloc_empty();
+        for r in 0..4 {
+            cs.add_row(a, &data, r);
+        }
+        let b = cs.alloc_empty();
+        cs.add_row(b, &data, 4);
+        let snap_n = cs.get(a).unwrap().n();
+        let snap_ones = cs.get(a).unwrap().ones().to_vec();
+        // move out and back: integer stats restore exactly
+        cs.move_row(a, b, &data, 2);
+        assert_eq!(cs.n_of(a), 3);
+        assert_eq!(cs.n_of(b), 2);
+        cs.move_row(b, a, &data, 2);
+        assert_eq!(cs.get(a).unwrap().n(), snap_n);
+        assert_eq!(cs.get(a).unwrap().ones(), &snap_ones[..]);
+        cs.check_slot_invariants().unwrap();
+        // draining a slot through move_row frees it like remove_row does
+        cs.move_row(b, a, &data, 4);
+        assert!(cs.get(b).is_none());
+        assert_eq!(cs.num_free(), 1);
+        cs.check_slot_invariants().unwrap();
+    }
+
+    #[test]
+    fn merge_slots_equals_adding_all_rows_and_frees_source() {
+        let data = rand_data(7, 8, 7);
+        let mut cs = ClusterSet::new(8);
+        let a = cs.alloc_empty();
+        for r in 0..3 {
+            cs.add_row(a, &data, r);
+        }
+        let b = cs.alloc_empty();
+        for r in 3..7 {
+            cs.add_row(b, &data, r);
+        }
+        cs.merge_slots(a, b);
+        assert!(cs.get(a).is_none());
+        assert_eq!(cs.num_active(), 1);
+        assert_eq!(cs.num_free(), 1);
+        cs.check_slot_invariants().unwrap();
+        let mut all = crate::model::ClusterStats::empty(8);
+        for r in 0..7 {
+            all.add(&data, r);
+        }
+        let got = cs.get(b).unwrap();
+        assert_eq!(got.n(), all.n());
+        assert_eq!(got.ones(), all.ones());
+        // the freed slot is reused before the store grows
+        let c = cs.alloc_empty();
+        assert_eq!(c, a);
+        cs.add_row(c, &data, 0);
         cs.check_slot_invariants().unwrap();
     }
 

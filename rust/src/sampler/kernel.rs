@@ -11,7 +11,14 @@
 //! coordinator (one shard per supercluster, θ = αμ_k) both dispatch
 //! through it, so a kernel written once runs from both entry points.
 //!
-//! Implementations:
+//! Implementations, each mapped to its source algorithm:
+//!
+//! | kernel | CLI spec | paper algorithm |
+//! |---|---|---|
+//! | [`CollapsedGibbs`] | `gibbs` | Neal (2000) Algorithm 3: per-datum collapsed Gibbs |
+//! | [`WalkerSlice`] | `walker` | Walker (2007) slice sampling, slice-efficient variant |
+//! | [`SplitMerge`] (Gibbs base) | `split_merge:gibbs` | Jain & Neal (2004) restricted-Gibbs split–merge MH + Neal Alg. 3 sweep |
+//! | [`SplitMerge`] (Walker base) | `split_merge:walker` | Jain & Neal (2004) restricted-Gibbs split–merge MH + Walker sweep |
 //!
 //! * [`CollapsedGibbs`] — Neal (2000) Algorithm 3. Per datum: remove
 //!   from its cluster, score every extant cluster (`n_j · p(x|stats_j)`
@@ -32,26 +39,39 @@
 //!      collapsed predictive weights (likelihood only — π enters through
 //!      eligibility, not the weights). Sticks/slices are discarded after
 //!      the sweep (auxiliary variables).
+//! * [`SplitMerge`] — the Jain & Neal (2004) restricted-Gibbs
+//!   split–merge Metropolis–Hastings moves, composed with one of the
+//!   per-datum kernels above so the composite remains irreducible. Each
+//!   move picks two anchor data, builds a launch state by `t` restricted
+//!   Gibbs scans over the anchors' member set, and accepts the proposed
+//!   split (or merge) under the exact collapsed acceptance ratio
+//!   `θ · Γ(n₁)Γ(n₂)/Γ(n₁+n₂) · m(x₁)m(x₂)/m(x₁₂)` — creating and
+//!   dissolving whole clusters in one step, which the incremental
+//!   kernels can only do datum by datum (the slow-mixing mode the
+//!   composite exists to fix; see DESIGN.md §7 for the selection guide).
 //!
-//! Both kernels score a datum's candidate clusters through the shard's
+//! Every kernel — the split–merge restricted scans included — scores a
+//! datum's candidate clusters through the shard's
 //! [`crate::sampler::ScoreMode`] dispatch: the scalar per-cluster
 //! reference path, or one batched
 //! [`crate::runtime::Scorer::score_ones_against_clusters`] call over the
 //! shard's packed predictive tables (bit-identical by construction —
-//! see `rust/src/sampler/score.rs` and DESIGN.md §7). Table maintenance
+//! see `rust/src/sampler/score.rs` and DESIGN.md §8). Table maintenance
 //! is *move-only*: the kernels invalidate a packed column only when a
 //! datum actually changes cluster (plus the one held-out correction per
-//! datum), so the self-move common case does zero table work. Neither
+//! datum), so the self-move common case does zero table work. No
 //! kernel allocates after warm-up: Gibbs runs on the shard's scratch
-//! buffers, Walker on the persistent [`WalkerScratch`].
+//! buffers, Walker on the persistent [`WalkerScratch`], the split–merge
+//! layer on the persistent [`SplitMergeScratch`].
 //!
-//! Exactness of both kernels — through both entry points — is certified
+//! Exactness of every kernel — through both entry points — is certified
 //! by the posterior-enumeration gate in `rust/tests/posterior_exactness.rs`.
 
 use super::shard::Shard;
 use crate::data::BinMat;
 use crate::model::BetaBernoulli;
 use crate::rng::{beta as beta_draw, categorical_log_inplace};
+use crate::special::{lgamma, logsumexp};
 
 /// A per-shard DPM transition operator: one sweep must leave the shard's
 /// local `DP(θ, H)` mixture posterior invariant. Kernels are stateless
@@ -328,6 +348,429 @@ impl TransitionKernel for WalkerSlice {
     }
 }
 
+/// Persistent state of the split–merge move layer, owned by the shard
+/// (`Shard::sm`): the member-index/side buffers (reused across moves so
+/// the layer is allocation-free after warm-up) and the
+/// proposal/acceptance counters behind `Shard::split_merge_stats`.
+#[derive(Debug, Default)]
+pub(crate) struct SplitMergeScratch {
+    /// shard-local indices of the movable (non-anchor) members
+    pub(crate) members: Vec<usize>,
+    /// original side per member (`true` = anchor i's cluster) — the
+    /// target configuration of a merge move's ghost pass
+    pub(crate) sides: Vec<bool>,
+    /// two-candidate log-likelihood buffer for the restricted scans
+    pub(crate) logw: Vec<f64>,
+    /// persistent union-stats scratch for scoring a merge proposal's
+    /// merged marginal (populated on first merge proposal, then reused
+    /// via `ClusterStats::copy_from` — no steady-state allocation)
+    pub(crate) merged: Option<crate::model::ClusterStats>,
+    /// split–merge MH proposals attempted on this shard
+    pub(crate) proposals: u64,
+    /// accepted split proposals
+    pub(crate) split_accepts: u64,
+    /// accepted merge proposals
+    pub(crate) merge_accepts: u64,
+}
+
+/// Default split–merge MH proposals per composite sweep.
+const SM_MOVES_PER_SWEEP: usize = 4;
+/// Default number of intermediate restricted Gibbs scans `t` used to
+/// build the launch state (Jain & Neal 2004 §4.2; more scans buy higher
+/// acceptance at linear cost in the anchors' member count).
+const SM_RESTRICTED_SCANS: usize = 2;
+
+/// Jain & Neal (2004) restricted-Gibbs split–merge moves composed with a
+/// per-datum base kernel — the third [`TransitionKernel`].
+///
+/// Incremental single-datum kernels mix slowly when a whole cluster must
+/// be created or dissolved: moving `m` data through the intermediate
+/// states costs `O(exp(−Δ))`-improbable steps. A split–merge move jumps
+/// there directly: pick two anchor data `(i, j)` uniformly; if they
+/// share a cluster, propose splitting it (anchor `i` seeds a fresh
+/// cluster), else propose merging their two clusters. The proposal is
+/// shaped by a *launch state* — the non-anchor members coin-flipped
+/// between the two sides, then refined by `t` restricted Gibbs scans —
+/// and a final restricted scan whose sequential conditionals give the
+/// proposal density `q`. With the Beta–Bernoulli base measure collapsed,
+/// the MH ratio is exact:
+///
+/// ```text
+///   P(split) / P(merged) = θ · Γ(n₁)Γ(n₂)/Γ(n₁+n₂) · m(x₁)m(x₂)/m(x₁₂)
+/// ```
+///
+/// (`m(·)` = collapsed cluster marginals via `ClusterStats::log_marginal`;
+/// θ = the shard's local concentration, so inside a supercluster the
+/// move targets the shard's conditional `DP(αμ_k, H)` posterior exactly
+/// as the paper's §4 argument requires — global moves parallelize across
+/// shards like any other standard DPM operator, the architectural point
+/// of Dinari et al. (2022)'s distributed split–merge sampler).
+///
+/// The restricted scans score their two candidate sides through the
+/// shard's [`crate::sampler::ScoreMode`] dispatch — the same packed-table
+/// SIMD path (and the same scalar held-out correction for the side a
+/// datum just left) the per-datum sweeps use, with move-only
+/// invalidation of the two touched columns. Rejected proposals roll the
+/// integer sufficient statistics back bit-exactly, so a rejected move
+/// leaves chain state (stats, assignments, packed tables) untouched.
+///
+/// One `sweep()` = one sweep of the base kernel followed by
+/// `SM_MOVES_PER_SWEEP` MH moves; both components leave the shard's
+/// `DP(θ, H)` posterior invariant, hence so does the composition
+/// (certified by the 203-partition gate in
+/// `rust/tests/posterior_exactness.rs`, serial and K=3 — including
+/// mixed per-shard assignments). Acceptance counters are exposed via
+/// `Shard::split_merge_stats`.
+pub struct SplitMerge {
+    base: &'static dyn TransitionKernel,
+    name: &'static str,
+    moves: usize,
+    scans: usize,
+}
+
+impl SplitMerge {
+    /// A custom composite over `base`: `moves` MH proposals per sweep,
+    /// each building its launch state with `scans` intermediate
+    /// restricted Gibbs scans — the tuning knobs of the selection guide
+    /// (DESIGN.md §7: low acceptance on a workload usually means `scans`
+    /// is too small for the launch state to decorrelate from its
+    /// coin-flip initialization). The CLI specs resolve to the shared
+    /// [`SPLIT_MERGE_GIBBS`]/[`SPLIT_MERGE_WALKER`] defaults; custom
+    /// composites run through the same [`TransitionKernel`] seam.
+    ///
+    /// ```
+    /// use clustercluster::sampler::{CollapsedGibbs, SplitMerge, TransitionKernel};
+    ///
+    /// // a more aggressive composite: 8 proposals/sweep, 4 launch scans
+    /// let aggressive = SplitMerge::new(&CollapsedGibbs, "split-merge:gibbs:x8", 8, 4);
+    /// assert_eq!(aggressive.name(), "split-merge:gibbs:x8");
+    /// ```
+    pub const fn new(
+        base: &'static dyn TransitionKernel,
+        name: &'static str,
+        moves: usize,
+        scans: usize,
+    ) -> SplitMerge {
+        SplitMerge {
+            base,
+            name,
+            moves,
+            scans,
+        }
+    }
+}
+
+/// The shared `split_merge:gibbs` composite: split–merge MH moves + one
+/// [`CollapsedGibbs`] sweep.
+pub static SPLIT_MERGE_GIBBS: SplitMerge = SplitMerge {
+    base: &CollapsedGibbs,
+    name: "split-merge:gibbs",
+    moves: SM_MOVES_PER_SWEEP,
+    scans: SM_RESTRICTED_SCANS,
+};
+
+/// The shared `split_merge:walker` composite: split–merge MH moves + one
+/// [`WalkerSlice`] sweep.
+pub static SPLIT_MERGE_WALKER: SplitMerge = SplitMerge {
+    base: &WalkerSlice,
+    name: "split-merge:walker",
+    moves: SM_MOVES_PER_SWEEP,
+    scans: SM_RESTRICTED_SCANS,
+};
+
+impl TransitionKernel for SplitMerge {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli) {
+        // base sweep first: ITS begin-of-sweep hook re-enqueues every
+        // packed column (cluster membership may have changed arbitrarily
+        // since the last sweep — shuffle moves, resume), so the move
+        // layer afterwards runs on live tables and maintains them
+        // incrementally — one full repack per composite sweep, not two
+        self.base.sweep(shard, data, model);
+        split_merge_moves(shard, data, model, self.moves, self.scans);
+    }
+}
+
+/// Run `moves` split–merge MH proposals on the shard (the move layer of
+/// [`SplitMerge`], callable without the base sweep for tests). Assumes
+/// `Shard::scoring_begin_sweep` has run since the last external state
+/// change.
+pub(crate) fn split_merge_moves(
+    shard: &mut Shard,
+    data: &BinMat,
+    model: &BetaBernoulli,
+    moves: usize,
+    scans: usize,
+) {
+    if shard.rows.len() < 2 {
+        return;
+    }
+    for _ in 0..moves {
+        shard.sm.proposals += 1;
+        let n = shard.rows.len();
+        // two distinct anchor data, uniform over ordered pairs — the
+        // selection probability is state-independent, so it cancels in
+        // the MH ratio
+        let i = shard.rng.next_below(n as u64) as usize;
+        let mut j = shard.rng.next_below(n as u64 - 1) as usize;
+        if j >= i {
+            j += 1;
+        }
+        let zi = shard.assign[i] as usize;
+        let zj = shard.assign[j] as usize;
+        if zi == zj {
+            propose_split(shard, data, model, scans, (i, j), zi);
+        } else {
+            propose_merge(shard, data, model, scans, (i, j), (zi, zj));
+        }
+    }
+}
+
+/// One restricted Gibbs pass over `members` between the two live sides
+/// `(side_i, side_j)`: each member is removed from its current side,
+/// both sides are scored `n_side · p(x | side)` through the shard's
+/// scoring dispatch (the side the datum just left gets the scalar
+/// held-out correction), and the datum is placed — sampled from the
+/// two-way conditional, or, when `forced` is given, deterministically on
+/// its recorded original side (`true` = `side_i`). Returns the summed
+/// log-probability of the realized choices under the conditionals: the
+/// proposal density of a sampled final scan, or the reverse-proposal
+/// density `q(original split | launch)` of a merge move's ghost pass.
+/// Anchors never move, so neither side can empty mid-scan.
+fn restricted_scan(
+    shard: &mut Shard,
+    data: &BinMat,
+    model: &BetaBernoulli,
+    members: &[usize],
+    side_i: usize,
+    side_j: usize,
+    forced: Option<&[bool]>,
+) -> f64 {
+    let empty_ll = model.empty_cluster_loglik(); // sentinel; both slots are live
+    let eager = shard.scoring_eager();
+    let mut logw = std::mem::take(&mut shard.sm.logw);
+    let mut log_q = 0.0;
+    for (k, &midx) in members.iter().enumerate() {
+        let r = shard.rows[midx];
+        let cur = shard.assign[midx] as usize;
+        shard.clusters.remove_row(cur, data, r);
+        logw.clear();
+        shard.score_slots_for_row(
+            data,
+            r,
+            model,
+            &[side_i as u32, side_j as u32],
+            empty_ll,
+            Some(cur),
+            &mut logw,
+        );
+        let wi = (shard.clusters.n_of(side_i) as f64).ln() + logw[0];
+        let wj = (shard.clusters.n_of(side_j) as f64).ln() + logw[1];
+        let lse = logsumexp(&[wi, wj]);
+        let to_i = match forced {
+            Some(sides) => sides[k],
+            None => shard.rng.next_f64() < (wi - lse).exp(),
+        };
+        log_q += if to_i { wi - lse } else { wj - lse };
+        let dst = if to_i { side_i } else { side_j };
+        shard.clusters.add_row(dst, data, r);
+        // move-only table maintenance, exactly as in the per-datum
+        // kernels: a self-move restores the stats and needs no work
+        // (except under the eager reference policy, whose held-out
+        // column was just re-packed with decremented stats)
+        if dst != cur || eager {
+            shard.scoring_invalidate(cur);
+            shard.scoring_invalidate(dst);
+            shard.assign[midx] = dst as u32;
+        }
+    }
+    shard.sm.logw = logw;
+    log_q
+}
+
+/// Propose splitting cluster `c` (holding both anchors) around the
+/// anchor pair: anchor `i` seeds a fresh cluster, the launch state is
+/// built by coin flips + `scans` restricted passes, the final sampled
+/// pass is the proposal. On rejection every move is rolled back
+/// bit-exactly (the emptied fresh slot returns to the free list).
+fn propose_split(
+    shard: &mut Shard,
+    data: &BinMat,
+    model: &BetaBernoulli,
+    scans: usize,
+    (i, j): (usize, usize),
+    c: usize,
+) {
+    let theta = shard.theta.max(1e-300);
+    let (n_merged, lm_merged) = {
+        let st = shard.clusters.get(c).expect("anchor cluster live");
+        (st.n(), st.log_marginal(model))
+    };
+    let mut members = std::mem::take(&mut shard.sm.members);
+    members.clear();
+    for (idx, &a) in shard.assign.iter().enumerate() {
+        if a as usize == c && idx != i && idx != j {
+            members.push(idx);
+        }
+    }
+    // launch: anchor i opens a fresh cluster, members coin-flip sides
+    let c_new = shard.clusters.alloc_empty();
+    shard.clusters.move_row(c, c_new, data, shard.rows[i]);
+    shard.assign[i] = c_new as u32;
+    for &midx in &members {
+        if shard.rng.next_f64() < 0.5 {
+            shard.clusters.move_row(c, c_new, data, shard.rows[midx]);
+            shard.assign[midx] = c_new as u32;
+        }
+    }
+    shard.scoring_invalidate(c);
+    shard.scoring_invalidate(c_new);
+    for _ in 0..scans {
+        restricted_scan(shard, data, model, &members, c_new, c, None);
+    }
+    // final scan = the proposal; its conditionals are the density q
+    let log_q = restricted_scan(shard, data, model, &members, c_new, c, None);
+
+    let (n1, lm1) = {
+        let st = shard.clusters.get(c_new).expect("split side live");
+        (st.n(), st.log_marginal(model))
+    };
+    let (n2, lm2) = {
+        let st = shard.clusters.get(c).expect("split side live");
+        (st.n(), st.log_marginal(model))
+    };
+    // P(split)/P(merged) = θ·Γ(n1)Γ(n2)/Γ(n_m) · m1·m2/m12; the reverse
+    // (merge) proposal is deterministic, so q appears only forward
+    let log_ratio = theta.ln() + lgamma(n1 as f64) + lgamma(n2 as f64)
+        - lgamma(n_merged as f64)
+        + lm1
+        + lm2
+        - lm_merged;
+    let log_acc = log_ratio - log_q;
+    if shard.rng.next_f64_open().ln() < log_acc {
+        shard.sm.split_accepts += 1;
+    } else {
+        // rollback: every row returns to c; the last removal empties
+        // c_new, freeing and recycling its slot
+        for &midx in &members {
+            if shard.assign[midx] as usize == c_new {
+                shard.clusters.move_row(c_new, c, data, shard.rows[midx]);
+                shard.assign[midx] = c as u32;
+            }
+        }
+        shard.clusters.move_row(c_new, c, data, shard.rows[i]);
+        shard.assign[i] = c as u32;
+        shard.scoring_invalidate(c_new);
+        shard.scoring_invalidate(c);
+    }
+    shard.sm.members = members;
+}
+
+/// Propose merging anchor `i`'s cluster `a` into anchor `j`'s cluster
+/// `b`. The reverse-split proposal density is scored by building the
+/// same launch state over the union and walking a ghost restricted pass
+/// that forces each member to its original side — which also restores
+/// the pre-move state bit-exactly, so rejection needs no further work.
+fn propose_merge(
+    shard: &mut Shard,
+    data: &BinMat,
+    model: &BetaBernoulli,
+    scans: usize,
+    (i, j): (usize, usize),
+    (a, b): (usize, usize),
+) {
+    let theta = shard.theta.max(1e-300);
+    let (n_a, lm_a) = {
+        let st = shard.clusters.get(a).expect("anchor cluster live");
+        (st.n(), st.log_marginal(model))
+    };
+    let (n_b, lm_b) = {
+        let st = shard.clusters.get(b).expect("anchor cluster live");
+        (st.n(), st.log_marginal(model))
+    };
+    let lm_merged = {
+        let a_stats = shard.clusters.get(a).expect("anchor cluster live");
+        let b_stats = shard.clusters.get(b).expect("anchor cluster live");
+        // union stats on the persistent scratch (allocates once, on the
+        // shard's first merge proposal)
+        match &mut shard.sm.merged {
+            Some(m) => {
+                m.copy_from(a_stats);
+                m.absorb(b_stats);
+                m.log_marginal(model)
+            }
+            slot @ None => {
+                let mut m = a_stats.clone();
+                m.absorb(b_stats);
+                let lm = m.log_marginal(model);
+                *slot = Some(m);
+                lm
+            }
+        }
+    };
+    let mut members = std::mem::take(&mut shard.sm.members);
+    let mut sides = std::mem::take(&mut shard.sm.sides);
+    members.clear();
+    sides.clear();
+    for (idx, &z) in shard.assign.iter().enumerate() {
+        let s = z as usize;
+        if (s == a || s == b) && idx != i && idx != j {
+            members.push(idx);
+            sides.push(s == a);
+        }
+    }
+    // launch over the union: coin-flip each member between the sides,
+    // then refine with the restricted scans — the same construction the
+    // forward split uses, so the launch distribution cancels in the
+    // MH ratio
+    for &midx in &members {
+        let cur = shard.assign[midx] as usize;
+        let dst = if shard.rng.next_f64() < 0.5 { a } else { b };
+        if dst != cur {
+            shard.clusters.move_row(cur, dst, data, shard.rows[midx]);
+            shard.assign[midx] = dst as u32;
+        }
+    }
+    shard.scoring_invalidate(a);
+    shard.scoring_invalidate(b);
+    for _ in 0..scans {
+        restricted_scan(shard, data, model, &members, a, b, None);
+    }
+    // ghost pass: force the original configuration, accumulating the
+    // reverse-proposal density q(original split | launch); afterwards
+    // the chain state equals the pre-move state exactly
+    let log_q_rev = restricted_scan(shard, data, model, &members, a, b, Some(&sides));
+
+    let log_ratio_split = theta.ln() + lgamma(n_a as f64) + lgamma(n_b as f64)
+        - lgamma((n_a + n_b) as f64)
+        + lm_a
+        + lm_b
+        - lm_merged;
+    // P(merged)/P(split) is the inverse ratio; the merge proposal itself
+    // is deterministic, so only the reverse q enters
+    let log_acc = log_q_rev - log_ratio_split;
+    if shard.rng.next_f64_open().ln() < log_acc {
+        shard.sm.merge_accepts += 1;
+        // retarget exactly the dissolved cluster's rows — after the
+        // ghost-pass restore those are anchor i plus the members
+        // recorded on side a — rather than scanning the whole shard
+        shard.assign[i] = b as u32;
+        for (k, &midx) in members.iter().enumerate() {
+            if sides[k] {
+                shard.assign[midx] = b as u32;
+            }
+        }
+        shard.clusters.merge_slots(a, b);
+        shard.scoring_invalidate(a);
+        shard.scoring_invalidate(b);
+    }
+    shard.sm.members = members;
+    shard.sm.sides = sides;
+}
+
 /// CLI/config-level kernel selector, resolvable to the shared static
 /// kernel instances. This is what `--local-kernel` parses into from both
 /// the serial and the parallel entry points.
@@ -338,6 +781,12 @@ pub enum KernelKind {
     CollapsedGibbs,
     /// Walker (2007) slice sampling (slice-efficient, collapsed coins).
     WalkerSlice,
+    /// Jain & Neal (2004) split–merge MH moves + a collapsed-Gibbs sweep
+    /// (the `split_merge:gibbs` composite).
+    SplitMergeGibbs,
+    /// Jain & Neal (2004) split–merge MH moves + a Walker slice sweep
+    /// (the `split_merge:walker` composite).
+    SplitMergeWalker,
 }
 
 impl KernelKind {
@@ -346,6 +795,8 @@ impl KernelKind {
         match self {
             KernelKind::CollapsedGibbs => &CollapsedGibbs,
             KernelKind::WalkerSlice => &WalkerSlice,
+            KernelKind::SplitMergeGibbs => &SPLIT_MERGE_GIBBS,
+            KernelKind::SplitMergeWalker => &SPLIT_MERGE_WALKER,
         }
     }
 
@@ -354,13 +805,37 @@ impl KernelKind {
         self.kernel().name()
     }
 
-    /// Parse a `--local-kernel` value.
+    /// Parse a `--local-kernel` value. Composite split–merge specs name
+    /// their base sweep after a colon (`split_merge:gibbs`,
+    /// `split_merge:walker`); a bare `split_merge` defaults the base to
+    /// collapsed Gibbs, and `-`/`_` are interchangeable throughout.
+    ///
+    /// ```
+    /// use clustercluster::sampler::KernelKind;
+    ///
+    /// assert_eq!(KernelKind::parse("gibbs").unwrap(), KernelKind::CollapsedGibbs);
+    /// assert_eq!(
+    ///     KernelKind::parse("split_merge:walker").unwrap(),
+    ///     KernelKind::SplitMergeWalker,
+    /// );
+    /// assert_eq!(
+    ///     KernelKind::parse("split-merge").unwrap(),
+    ///     KernelKind::SplitMergeGibbs,
+    /// );
+    /// assert!(KernelKind::parse("split_merge:metropolis").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<KernelKind, String> {
-        match s.to_ascii_lowercase().as_str() {
+        let norm = s.to_ascii_lowercase().replace('_', "-");
+        match norm.as_str() {
             "gibbs" | "collapsed" | "collapsed-gibbs" | "neal" => Ok(KernelKind::CollapsedGibbs),
             "walker" | "slice" | "walker-slice" => Ok(KernelKind::WalkerSlice),
+            "split-merge" | "sm" | "jain-neal" | "split-merge:gibbs" | "sm:gibbs" => {
+                Ok(KernelKind::SplitMergeGibbs)
+            }
+            "split-merge:walker" | "sm:walker" => Ok(KernelKind::SplitMergeWalker),
             other => Err(format!(
-                "unknown kernel {other:?} (expected \"gibbs\" or \"walker\")"
+                "unknown kernel {other:?} (expected \"gibbs\", \"walker\", \
+                 \"split_merge:gibbs\", or \"split_merge:walker\")"
             )),
         }
     }
@@ -535,6 +1010,46 @@ mod tests {
         assert!(KernelKind::parse("metropolis").is_err());
         assert_eq!(KernelKind::CollapsedGibbs.name(), "collapsed-gibbs");
         assert_eq!(KernelKind::WalkerSlice.name(), "walker-slice");
+        assert_eq!(KernelKind::SplitMergeGibbs.name(), "split-merge:gibbs");
+        assert_eq!(KernelKind::SplitMergeWalker.name(), "split-merge:walker");
+    }
+
+    #[test]
+    fn composite_specs_parse_with_either_separator() {
+        for spec in ["split_merge:gibbs", "split-merge:gibbs", "sm:gibbs", "split_merge", "sm"] {
+            assert_eq!(
+                KernelKind::parse(spec).unwrap(),
+                KernelKind::SplitMergeGibbs,
+                "{spec}"
+            );
+        }
+        for spec in ["split_merge:walker", "split-merge:walker", "SM:Walker"] {
+            assert_eq!(
+                KernelKind::parse(spec).unwrap(),
+                KernelKind::SplitMergeWalker,
+                "{spec}"
+            );
+        }
+        assert!(KernelKind::parse("split_merge:metropolis").is_err());
+        // comma lists mix composites with plain kernels (the colon is
+        // part of the token, not a list separator)
+        let mixed = KernelAssignment::parse("gibbs,split_merge:walker").unwrap();
+        assert_eq!(
+            mixed,
+            KernelAssignment::RoundRobin(vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::SplitMergeWalker,
+            ])
+        );
+        assert_eq!(
+            mixed.resolve(3).unwrap(),
+            vec![
+                KernelKind::CollapsedGibbs,
+                KernelKind::SplitMergeWalker,
+                KernelKind::CollapsedGibbs,
+            ]
+        );
+        assert_eq!(mixed.describe(), "round-robin[collapsed-gibbs,split-merge:walker]");
     }
 
     #[test]
@@ -658,11 +1173,13 @@ mod tests {
         let mut st = Shard::init_from_prior(&ds.train, Vec::new(), 0.5, Pcg64::seed_from(7));
         WalkerSlice.sweep(&mut st, &ds.train, &model);
         CollapsedGibbs.sweep(&mut st, &ds.train, &model);
+        SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
+        SPLIT_MERGE_WALKER.sweep(&mut st, &ds.train, &model);
         assert_eq!(st.num_rows(), 0);
     }
 
     #[test]
-    fn both_kernels_run_through_the_trait_object() {
+    fn all_kernels_run_through_the_trait_object() {
         let ds = SyntheticConfig {
             n: 120,
             d: 8,
@@ -673,7 +1190,12 @@ mod tests {
         .generate_with_test_fraction(0.0);
         let mut model = BetaBernoulli::symmetric(8, 0.5);
         model.build_lut(ds.train.rows() + 1);
-        for kind in [KernelKind::CollapsedGibbs, KernelKind::WalkerSlice] {
+        for kind in [
+            KernelKind::CollapsedGibbs,
+            KernelKind::WalkerSlice,
+            KernelKind::SplitMergeGibbs,
+            KernelKind::SplitMergeWalker,
+        ] {
             let rows: Vec<usize> = (0..ds.train.rows()).collect();
             let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(9));
             let kernel = kind.kernel();
@@ -683,5 +1205,156 @@ mod tests {
             }
             assert_eq!(st.num_rows(), ds.train.rows());
         }
+    }
+
+    /// Hand-computable acceptance check: with two data the partition
+    /// space is {together, apart}, and the exact posterior odds are
+    /// `P(apart)/P(together) = θ · m(x₁)m(x₂)/m(x₁₂)` (Γ factors are all
+    /// Γ(1) = Γ(2)/1 = 1). A chain of split–merge moves ALONE must
+    /// reproduce those odds — any error in the MH acceptance ratio shows
+    /// up directly.
+    #[test]
+    fn split_merge_acceptance_matches_hand_computed_two_point_odds() {
+        use crate::model::ClusterStats;
+        let data = BinMat::from_dense(2, 3, &[1, 1, 0, 0, 0, 1]);
+        let mut model = BetaBernoulli::symmetric(3, 0.7);
+        model.build_lut(3);
+        let theta = 0.8f64;
+        // exact odds from the collapsed marginals
+        let (m1, m2, m12) = {
+            let mut a = ClusterStats::empty(3);
+            a.add(&data, 0);
+            let mut b = ClusterStats::empty(3);
+            b.add(&data, 1);
+            let mut ab = ClusterStats::empty(3);
+            ab.add(&data, 0);
+            ab.add(&data, 1);
+            (
+                a.log_marginal(&model),
+                b.log_marginal(&model),
+                ab.log_marginal(&model),
+            )
+        };
+        let odds = (theta.ln() + m1 + m2 - m12).exp();
+        let want_p_apart = odds / (1.0 + odds);
+
+        let mut sh = Shard::init_from_prior(
+            &data,
+            vec![0, 1],
+            theta,
+            Pcg64::seed_from(31),
+        );
+        let samples = 60_000u64;
+        let mut apart = 0u64;
+        for _ in 0..samples {
+            sh.scoring_begin_sweep();
+            split_merge_moves(&mut sh, &data, &model, 1, 2);
+            if sh.num_clusters() == 2 {
+                apart += 1;
+            }
+        }
+        sh.check_invariants(&data).unwrap();
+        let got = apart as f64 / samples as f64;
+        assert!(
+            (got - want_p_apart).abs() < 0.02,
+            "P(apart): chain {got:.4} vs exact {want_p_apart:.4}"
+        );
+        let (proposals, splits, merges) = sh.split_merge_stats();
+        assert_eq!(proposals, samples);
+        assert!(splits > 0 && merges > 0, "both move types must fire");
+    }
+
+    /// The move layer alone is irreducible on ≥3 data (split the pair,
+    /// merge any two singletons, …), so a moves-only chain must converge
+    /// to the exactly enumerated 3-point posterior (Bell(3) = 5
+    /// partitions) — the acceptance-ratio gate on a state space with
+    /// non-trivial launch states and restricted scans.
+    #[test]
+    fn split_merge_moves_alone_match_the_exact_three_point_posterior() {
+        use crate::testing::{canonical_partition, enumerate_posterior, partition_tv_distance};
+        use std::collections::HashMap;
+        let data = BinMat::from_dense(3, 4, &[1, 1, 0, 0, 1, 0, 0, 1, 0, 0, 1, 1]);
+        let mut model = BetaBernoulli::symmetric(4, 0.6);
+        model.build_lut(4);
+        let alpha = 1.1;
+        let truth = enumerate_posterior(&data, &model, alpha);
+        assert_eq!(truth.len(), 5); // Bell(3)
+
+        let mut sh = Shard::init_from_prior(&data, vec![0, 1, 2], alpha, Pcg64::seed_from(33));
+        let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
+        let burn = 2_000u64;
+        let samples = 60_000u64;
+        for it in 0..(burn + samples) {
+            sh.scoring_begin_sweep();
+            split_merge_moves(&mut sh, &data, &model, 2, 2);
+            if it >= burn {
+                *counts
+                    .entry(canonical_partition(sh.assignments_local()))
+                    .or_default() += 1;
+            }
+        }
+        sh.check_invariants(&data).unwrap();
+        let tv = partition_tv_distance(&truth, &counts, samples);
+        assert!(tv < 0.05, "moves-only TV distance {tv} too large");
+    }
+
+    /// Split–merge sweeps on realistic data: invariants hold, rows are
+    /// conserved, rejected proposals leave no residue, and structure is
+    /// still found (the composite must not hurt the base kernel).
+    #[test]
+    fn split_merge_composite_preserves_invariants_and_finds_structure() {
+        let ds = SyntheticConfig {
+            n: 400,
+            d: 32,
+            clusters: 4,
+            beta: 0.05,
+            seed: 14,
+        }
+        .generate_with_test_fraction(0.0);
+        let mut model = BetaBernoulli::symmetric(32, 0.5);
+        model.build_lut(ds.train.rows() + 1);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let mut st = Shard::init_from_prior(&ds.train, rows, 4.0, Pcg64::seed_from(15));
+        for _ in 0..30 {
+            SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
+            st.check_invariants(&ds.train).unwrap();
+        }
+        assert_eq!(st.num_rows(), 400);
+        let j = st.num_clusters();
+        assert!((2..=16).contains(&j), "composite found {j} clusters, expected ~4");
+        let (proposals, _, _) = st.split_merge_stats();
+        assert_eq!(proposals, 30 * SM_MOVES_PER_SWEEP as u64);
+    }
+
+    /// Worst-case start for incremental kernels: every datum in ONE
+    /// cluster. Split moves must break it apart far faster than
+    /// single-datum escapes would — the mixing rationale for the
+    /// composite (a handful of sweeps suffice where plain Gibbs needs
+    /// the slow datum-by-datum nucleation path).
+    #[test]
+    fn split_moves_escape_the_single_cluster_trap() {
+        let ds = SyntheticConfig {
+            n: 300,
+            d: 32,
+            clusters: 4,
+            beta: 0.05,
+            seed: 16,
+        }
+        .generate_with_test_fraction(0.0);
+        let mut model = BetaBernoulli::symmetric(32, 0.5);
+        model.build_lut(ds.train.rows() + 1);
+        let rows: Vec<usize> = (0..ds.train.rows()).collect();
+        let mut st = Shard::init_single_cluster(&ds.train, rows, 1.0, Pcg64::seed_from(17));
+        assert_eq!(st.num_clusters(), 1);
+        for _ in 0..15 {
+            SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
+        }
+        st.check_invariants(&ds.train).unwrap();
+        let (_, splits, _) = st.split_merge_stats();
+        assert!(splits > 0, "no split was ever accepted from the merged start");
+        assert!(
+            st.num_clusters() >= 2,
+            "composite failed to leave the single-cluster mode"
+        );
     }
 }

@@ -4,8 +4,8 @@
 //! Layering (see `DESIGN.md` §"Sampler core"):
 //!
 //! ```text
-//!   TransitionKernel  (CollapsedGibbs | WalkerSlice)   — the operator
-//!        │  sweeps
+//!   TransitionKernel  (CollapsedGibbs | WalkerSlice    — the operator
+//!        │  sweeps      | SplitMerge composites)
 //!        ▼
 //!   Shard  (rows + assignments + private RNG + θ)      — the unit of work
 //!        │  owns
@@ -29,7 +29,7 @@
 //! [`ScoreMode`] dispatch (see [`score`]): either the scalar reference
 //! path or the packed batched path through
 //! [`crate::runtime::Scorer::score_ones_against_clusters`], with
-//! move-only incremental table maintenance (DESIGN.md §7) — selected
+//! move-only incremental table maintenance (DESIGN.md §8) — selected
 //! from both entry points as `--scorer auto|fallback|pjrt` and proven
 //! bit-identical in `rust/tests/scorer_equivalence.rs`.
 //!
@@ -60,6 +60,9 @@ pub mod score;
 pub mod shard;
 
 pub use cluster_set::ClusterSet;
-pub use kernel::{CollapsedGibbs, KernelAssignment, KernelKind, TransitionKernel, WalkerSlice};
+pub use kernel::{
+    CollapsedGibbs, KernelAssignment, KernelKind, SplitMerge, TransitionKernel, WalkerSlice,
+    SPLIT_MERGE_GIBBS, SPLIT_MERGE_WALKER,
+};
 pub use score::ScoreMode;
 pub use shard::Shard;

@@ -12,7 +12,7 @@
 //! [`Scorer::score_ones_against_clusters`] call over its pre-decoded
 //! set-bit list.
 //!
-//! Three properties make the batched path a drop-in (see DESIGN.md §7
+//! Three properties make the batched path a drop-in (see DESIGN.md §8
 //! for the full cost model):
 //!
 //! * **Bit-identity.** Columns are copied from the very `ClusterStats`
@@ -374,6 +374,95 @@ mod tests {
         cs.refresh_packed(&model, &mut inc, None); // queue is empty: no work
         let refr = scratch_repack(&mut cs, &model, d);
         assert_tables_bit_equal(&cs, &inc, &refr, d, "self-move");
+    }
+
+    /// The split–merge move layer's table contract: randomized sequences
+    /// of its bulk operations — `move_row` between live slots, wholesale
+    /// `merge_slots`, and split-style subset moves into a fresh slot —
+    /// with exactly the two-column invalidations the kernel issues leave
+    /// the incrementally maintained tables bit-equal to a from-scratch
+    /// repack (the same gate the per-datum ops pass above).
+    #[test]
+    fn split_merge_bulk_ops_keep_tables_bit_exact() {
+        let (n, d) = (48usize, 16usize);
+        let data = rand_data(n, d, 41);
+        let mut model = BetaBernoulli::symmetric(d, 0.5);
+        model.build_lut(n + 1);
+        let mut rng = Pcg64::seed_from(42);
+        let mut cs = ClusterSet::new(d);
+        let mut inc = PackedTables::new(d);
+        inc.begin_sweep(cs.num_slots());
+        // membership model: row -> slot
+        let mut slot_of: Vec<usize> = Vec::with_capacity(n);
+        for r in 0..n {
+            let occ = cs.occupied_slots();
+            let slot = if occ.len() < 3 {
+                let s = cs.alloc_empty();
+                inc.invalidate(s);
+                s
+            } else {
+                occ[rng.next_below(occ.len() as u64) as usize]
+            };
+            cs.add_row(slot, &data, r);
+            inc.invalidate(slot);
+            slot_of.push(slot);
+        }
+        for step in 0..240 {
+            let occ = cs.occupied_slots();
+            match rng.next_below(3) {
+                // move one row between two live slots (restricted scan)
+                0 if occ.len() >= 2 => {
+                    let r = rng.next_below(n as u64) as usize;
+                    let from = slot_of[r];
+                    let mut to = occ[rng.next_below(occ.len() as u64) as usize];
+                    if to == from {
+                        to = *occ.iter().find(|&&s| s != from).unwrap();
+                    }
+                    cs.move_row(from, to, &data, r);
+                    slot_of[r] = to;
+                    inc.invalidate(from);
+                    inc.invalidate(to);
+                }
+                // wholesale merge of two live slots (accepted merge)
+                1 if occ.len() >= 3 => {
+                    let from = occ[rng.next_below(occ.len() as u64) as usize];
+                    let mut into = occ[rng.next_below(occ.len() as u64) as usize];
+                    if into == from {
+                        into = *occ.iter().find(|&&s| s != from).unwrap();
+                    }
+                    cs.merge_slots(from, into);
+                    for s in slot_of.iter_mut() {
+                        if *s == from {
+                            *s = into;
+                        }
+                    }
+                    inc.invalidate(from);
+                    inc.invalidate(into);
+                }
+                // split: move half a slot's rows into a fresh slot
+                _ => {
+                    let src = occ[rng.next_below(occ.len() as u64) as usize];
+                    let members: Vec<usize> =
+                        (0..n).filter(|&r| slot_of[r] == src).collect();
+                    if members.len() < 2 {
+                        continue;
+                    }
+                    let dst = cs.alloc_empty();
+                    for &r in members.iter().take(members.len() / 2) {
+                        cs.move_row(src, dst, &data, r);
+                        slot_of[r] = dst;
+                    }
+                    inc.invalidate(src);
+                    inc.invalidate(dst);
+                }
+            }
+            if step % 6 == 0 {
+                cs.refresh_packed(&model, &mut inc, None);
+                let refr = scratch_repack(&mut cs, &model, d);
+                assert_tables_bit_equal(&cs, &inc, &refr, d, &format!("bulk step {step}"));
+            }
+        }
+        cs.check_slot_invariants().unwrap();
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 use super::cluster_set::ClusterSet;
-use super::kernel::WalkerScratch;
+use super::kernel::{SplitMergeScratch, WalkerScratch};
 use super::score::{ScoreDispatch, ScoreMode};
 use crate::data::BinMat;
 use crate::model::{BetaBernoulli, ClusterStats};
@@ -43,6 +43,11 @@ pub struct Shard {
     /// candidate buffers) — lives on the shard so Walker sweeps are
     /// allocation-free after warm-up
     pub(crate) walker: WalkerScratch,
+    /// persistent state of the split–merge move layer: member/side
+    /// buffers (so repeated moves are allocation-free after warm-up)
+    /// plus the proposal/acceptance counters behind
+    /// [`Self::split_merge_stats`]
+    pub(crate) sm: SplitMergeScratch,
     /// times a Walker sweep exhausted its stick-extension budget (see
     /// [`Self::stick_overflow_events`])
     pub(crate) stick_overflows: u64,
@@ -66,6 +71,7 @@ impl Shard {
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
             walker: WalkerScratch::default(),
+            sm: SplitMergeScratch::default(),
             stick_overflows: 0,
         };
         // sequential CRP: P(new) ∝ θ, P(j) ∝ n_j (prior draw — the data
@@ -110,6 +116,7 @@ impl Shard {
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
             walker: WalkerScratch::default(),
+            sm: SplitMergeScratch::default(),
             stick_overflows: 0,
         }
     }
@@ -146,6 +153,7 @@ impl Shard {
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
             walker: WalkerScratch::default(),
+            sm: SplitMergeScratch::default(),
             stick_overflows: 0,
         })
     }
@@ -198,6 +206,17 @@ impl Shard {
     #[inline]
     pub(crate) fn scoring_eager(&self) -> bool {
         matches!(&self.scoring, ScoreDispatch::Batched { tables, .. } if tables.eager)
+    }
+
+    /// Split–merge move-layer counters for this shard:
+    /// `(proposals, accepted splits, accepted merges)`. All zero unless
+    /// the shard runs one of the [`crate::sampler::SplitMerge`]
+    /// composites (`split_merge:gibbs` / `split_merge:walker`). The MH
+    /// acceptance rate of the global moves is
+    /// `(splits + merges) / proposals` — the observable for tuning the
+    /// composite on a workload.
+    pub fn split_merge_stats(&self) -> (u64, u64, u64) {
+        (self.sm.proposals, self.sm.split_accepts, self.sm.merge_accepts)
     }
 
     /// Times a Walker sweep on this shard hit its stick-extension budget

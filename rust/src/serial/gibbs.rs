@@ -1,6 +1,7 @@
 //! The serial DPM sampler: one [`Shard`] over the whole dataset, swept
 //! by a pluggable [`TransitionKernel`] (Neal Alg. 3 collapsed Gibbs by
-//! default, Walker slice via [`SerialConfig::kernel`]).
+//! default; Walker slice or a Jain–Neal split–merge composite via
+//! [`SerialConfig::kernel`]).
 //!
 //! Hyperparameters (α via Eq. 6 slice sampling, β_d via griddy Gibbs)
 //! are updated once per sweep from the *caller's* RNG — the same
@@ -441,6 +442,48 @@ mod tests {
         }
         let j = g.num_clusters();
         assert!((2..=16).contains(&j), "Walker-serial found {j} clusters");
+    }
+
+    #[test]
+    fn split_merge_composite_runs_in_the_serial_chain() {
+        let ds = small_dataset(2);
+        let mut rng = Pcg64::seed_from(23);
+        let cfg = SerialConfig {
+            kernel: KernelKind::SplitMergeGibbs,
+            ..Default::default()
+        };
+        let mut g = SerialGibbs::init_from_prior(&ds.train, cfg, &mut rng);
+        for _ in 0..20 {
+            g.sweep(&mut rng);
+            g.check_invariants().unwrap();
+        }
+        let j = g.num_clusters();
+        assert!((2..=16).contains(&j), "split-merge serial found {j} clusters");
+    }
+
+    #[test]
+    fn serial_resume_rejects_split_merge_kernel_mismatch() {
+        // a checkpoint written under the split–merge composite must not
+        // resume under the plain base kernel (and vice versa) — the v2
+        // kernel tag round-trips and is validated
+        let ds = small_dataset(13);
+        let mut rng = Pcg64::seed_from(29);
+        let cfg_sm = SerialConfig {
+            kernel: KernelKind::SplitMergeWalker,
+            ..Default::default()
+        };
+        let g = SerialGibbs::init_from_prior(&ds.train, cfg_sm, &mut rng);
+        let ckpt = g.to_checkpoint();
+        assert_eq!(ckpt.kernels, vec![KernelKind::SplitMergeWalker]);
+        let cfg_walker = SerialConfig {
+            kernel: KernelKind::WalkerSlice,
+            ..cfg_sm
+        };
+        let e = SerialGibbs::resume(&ds.train, cfg_walker, &ckpt, &mut rng).unwrap_err();
+        assert!(e.contains("kernel"), "{e}");
+        // the matching composite config resumes fine
+        let ok = SerialGibbs::resume(&ds.train, cfg_sm, &ckpt, &mut rng).unwrap();
+        ok.check_invariants().unwrap();
     }
 
     #[test]

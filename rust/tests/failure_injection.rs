@@ -12,6 +12,7 @@ use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::PjrtScorer;
+use clustercluster::sampler::{KernelAssignment, KernelKind};
 use std::path::{Path, PathBuf};
 
 fn tmpdir(name: &str) -> PathBuf {
@@ -216,6 +217,61 @@ fn mu_mode_mismatch_on_resume_is_an_error() {
         ok.mu().iter().map(|m| m.to_bits()).collect::<Vec<_>>(),
         ckpt.mu.iter().map(|m| m.to_bits()).collect::<Vec<_>>()
     );
+}
+
+#[test]
+fn split_merge_kernel_tag_mismatch_on_resume_is_an_error() {
+    // the failure being injected: resuming a split–merge-composite run
+    // under a different kernel config. The new CCCKPT2 kernel tags must
+    // survive the save/load roundtrip and mismatches must be loud —
+    // silently continuing with a different transition operator would be
+    // a different chain.
+    let ds = SyntheticConfig {
+        n: 150,
+        d: 8,
+        clusters: 2,
+        beta: 0.3,
+        seed: 48,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg_sm = CoordinatorConfig {
+        workers: 2,
+        kernel_assignment: KernelAssignment::AllSame(KernelKind::SplitMergeGibbs),
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(49);
+    let mut coord = Coordinator::new(&ds.train, cfg_sm.clone(), &mut rng);
+    coord.step(&mut rng);
+    let d = tmpdir("sm_kernel_tag");
+    let p = d.join("state.ccckpt");
+    coord.save_checkpoint(&p).unwrap();
+    let ckpt = Checkpoint::load(&p).unwrap();
+    assert_eq!(ckpt.kernels, vec![KernelKind::SplitMergeGibbs; 2]);
+
+    // plain gibbs may not consume a split–merge checkpoint…
+    let cfg_gibbs = CoordinatorConfig {
+        kernel_assignment: KernelAssignment::AllSame(KernelKind::CollapsedGibbs),
+        ..cfg_sm.clone()
+    };
+    let e = Coordinator::resume(&ds.train, cfg_gibbs, &ckpt, &mut rng).unwrap_err();
+    assert!(e.contains("kernel assignment"), "{e}");
+    // …nor may the other composite (the base sweep is part of the tag)
+    let cfg_smw = CoordinatorConfig {
+        kernel_assignment: KernelAssignment::AllSame(KernelKind::SplitMergeWalker),
+        ..cfg_sm.clone()
+    };
+    let e = Coordinator::resume(&ds.train, cfg_smw, &ckpt, &mut rng).unwrap_err();
+    assert!(e.contains("kernel assignment"), "{e}");
+    // the matching config resumes and keeps running (positive control)
+    let mut ok = Coordinator::resume(&ds.train, cfg_sm, &ckpt, &mut rng).unwrap();
+    assert_eq!(
+        ok.shard_kernels().to_vec(),
+        vec![KernelKind::SplitMergeGibbs; 2]
+    );
+    ok.step(&mut rng);
+    ok.check_invariants().unwrap();
 }
 
 #[test]

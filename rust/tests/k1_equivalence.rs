@@ -112,6 +112,18 @@ fn k1_chain_identical_walker_slice() {
 }
 
 #[test]
+fn k1_chain_identical_split_merge_gibbs() {
+    // the composite's MH moves draw from the shard's private stream like
+    // any other kernel, so K=1 ≡ serial stays chain-exact
+    assert_chains_identical(KernelKind::SplitMergeGibbs);
+}
+
+#[test]
+fn k1_chain_identical_split_merge_walker() {
+    assert_chains_identical(KernelKind::SplitMergeWalker);
+}
+
+#[test]
 fn k1_chain_identical_size_proportional_mu() {
     // K=1 SizeProportional must be bit-identical to the serial chain:
     // the degenerate μ=[1] Gibbs update is skipped, so the master stream

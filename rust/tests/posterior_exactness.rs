@@ -6,7 +6,9 @@
 //!
 //! This validates the paper's central claim end-to-end: the auxiliary
 //! supercluster representation leaves the TRUE DPM posterior invariant —
-//! including the `αμ_k` scaling of local CRPs and the cluster shuffle.
+//! including the `αμ_k` scaling of local CRPs, the cluster shuffle, and
+//! per-shard global moves (the Jain–Neal split–merge composites, alone
+//! and mixed with plain Gibbs across shards).
 //!
 //! The serial chains run under BOTH sweep-scoring dispatches: the scalar
 //! reference path and the batched `Scorer` path (which is also what the
@@ -120,11 +122,42 @@ fn serial_walker_batched_dispatch_matches_enumerated_posterior() {
     assert!(tv < 0.05, "serial Walker batched TV distance {tv} too large");
 }
 
-fn coordinator_tv_kernel(
+#[test]
+fn serial_split_merge_matches_enumerated_posterior() {
+    // the Jain–Neal split–merge composite over the scalar reference
+    // dispatch: the MH move layer + collapsed-Gibbs sweep must leave the
+    // exact posterior invariant
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::SplitMergeGibbs,
+        clustercluster::sampler::ScoreMode::Scalar,
+        15,
+    );
+    assert!(tv < 0.05, "serial split-merge TV distance {tv} too large");
+}
+
+#[test]
+fn serial_split_merge_walker_batched_matches_enumerated_posterior() {
+    // the Walker-based composite through the batched Scorer dispatch —
+    // the restricted scans share the packed-table path, so this gates
+    // the move layer's table maintenance statistically too
+    let tv = serial_tv(
+        clustercluster::sampler::KernelKind::SplitMergeWalker,
+        clustercluster::sampler::ScoreMode::Batched(
+            clustercluster::runtime::ScorerKind::Fallback,
+        ),
+        16,
+    );
+    assert!(
+        tv < 0.05,
+        "serial split-merge:walker batched TV distance {tv} too large"
+    );
+}
+
+fn coordinator_tv_assignment(
     workers: usize,
     seed: u64,
     rounds: u64,
-    kernel: clustercluster::coordinator::LocalKernel,
+    kernel_assignment: clustercluster::sampler::KernelAssignment,
 ) -> f64 {
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
@@ -138,7 +171,7 @@ fn coordinator_tv_kernel(
         update_alpha: false,
         update_beta: false,
         shuffle: true,
-        kernel_assignment: clustercluster::sampler::KernelAssignment::AllSame(kernel),
+        kernel_assignment,
         comm: CommModel::free(),
         parallelism: 1,
         ..Default::default()
@@ -157,6 +190,20 @@ fn coordinator_tv_kernel(
     tv_distance(&truth, &counts, rounds)
 }
 
+fn coordinator_tv_kernel(
+    workers: usize,
+    seed: u64,
+    rounds: u64,
+    kernel: clustercluster::coordinator::LocalKernel,
+) -> f64 {
+    coordinator_tv_assignment(
+        workers,
+        seed,
+        rounds,
+        clustercluster::sampler::KernelAssignment::AllSame(kernel),
+    )
+}
+
 #[test]
 fn walker_slice_kernel_matches_enumerated_posterior() {
     // the Walker (2007) per-supercluster kernel must hit the same exact
@@ -169,6 +216,39 @@ fn walker_slice_kernel_matches_enumerated_posterior() {
         clustercluster::coordinator::LocalKernel::WalkerSlice,
     );
     assert!(tv < 0.05, "Walker K=2 TV distance {tv} too large");
+}
+
+#[test]
+fn split_merge_kernel_k3_matches_enumerated_posterior() {
+    // split–merge moves inside every supercluster, composed with the
+    // cluster shuffle: the paper's argument covers global moves too —
+    // each shard's conditional is a DP(αμ_k, H) mixture, so the Jain–
+    // Neal operator applies per shard without modification
+    let tv = coordinator_tv_kernel(
+        3,
+        32,
+        60_000,
+        clustercluster::coordinator::LocalKernel::SplitMergeGibbs,
+    );
+    assert!(tv < 0.05, "split-merge K=3 TV distance {tv} too large");
+}
+
+#[test]
+fn mixed_gibbs_and_split_merge_walker_k3_matches_enumerated_posterior() {
+    // mixed per-shard assignment `--local-kernel gibbs,split_merge:walker`
+    // at K=3: shards 0/2 run plain Gibbs, shard 1 the Walker-based
+    // split–merge composite — one exact chain across heterogeneous
+    // operators including the global-move layer
+    let tv = coordinator_tv_assignment(
+        3,
+        34,
+        60_000,
+        clustercluster::sampler::KernelAssignment::parse("gibbs,split_merge:walker").unwrap(),
+    );
+    assert!(
+        tv < 0.05,
+        "mixed gibbs/split-merge:walker K=3 TV distance {tv} too large"
+    );
 }
 
 fn coordinator_tv(workers: usize, seed: u64, rounds: u64) -> f64 {
@@ -217,7 +297,7 @@ fn coordinator_k3_matches_enumerated_posterior() {
 #[test]
 fn no_shuffle_ablation_is_biased() {
     // without the shuffle step data can never merge across superclusters:
-    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §7.
+    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §9.
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);

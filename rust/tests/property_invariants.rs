@@ -439,6 +439,144 @@ fn prop_cluster_set_keep_slot_then_compact() {
 }
 
 #[test]
+fn prop_split_then_merge_restores_stats_bit_exactly() {
+    // the split–merge kernel's state contract: splitting a cluster (a
+    // sequence of move_row calls into a fresh slot) and then merging it
+    // back (merge_slots) restores the sufficient statistics BIT-exactly
+    // — integer counts make the roundtrip an exact inverse — and the
+    // slot/free-list machinery ends where it started
+    check(
+        "split/merge roundtrip",
+        25,
+        13,
+        |rng| {
+            let d = 1 + rng.next_below(40) as usize;
+            let n = 3 + rng.next_below(40) as usize;
+            let mut m = BinMat::zeros(n, d);
+            for r in 0..n {
+                for c in 0..d {
+                    if rng.next_f64() < 0.45 {
+                        m.set(r, c, true);
+                    }
+                }
+            }
+            (m, rng.next_u64())
+        },
+        |(m, seed)| {
+            let mut rng = Pcg64::seed_from(*seed);
+            let n = m.rows();
+            let mut cs = ClusterSet::new(m.dims());
+            let src = cs.alloc_empty();
+            for r in 0..n {
+                cs.add_row(src, m, r);
+            }
+            let snap_n = cs.get(src).unwrap().n();
+            let snap_ones = cs.get(src).unwrap().ones().to_vec();
+            let slots_before = cs.num_slots();
+            let free_before = cs.num_free();
+            // split: a random proper subset moves to a fresh slot
+            let dst = cs.alloc_empty();
+            let mut moved = 0usize;
+            for r in 0..n - 1 {
+                if rng.next_f64() < 0.5 {
+                    cs.move_row(src, dst, m, r);
+                    moved += 1;
+                }
+            }
+            if moved == 0 {
+                cs.move_row(src, dst, m, 0);
+                moved = 1;
+            }
+            cs.check_slot_invariants()?;
+            if cs.num_active() != 2 {
+                return Err(format!("expected 2 live clusters, got {}", cs.num_active()));
+            }
+            let split_total = cs.get(src).unwrap().n() + cs.get(dst).unwrap().n();
+            if split_total != snap_n {
+                return Err(format!("split lost mass: {split_total} vs {snap_n}"));
+            }
+            // merge back: stats must be bit-identical to the snapshot
+            cs.merge_slots(dst, src);
+            cs.check_slot_invariants()?;
+            let got = cs.get(src).ok_or("src died in the merge")?;
+            if got.n() != snap_n {
+                return Err(format!("n drifted: {} vs {snap_n}", got.n()));
+            }
+            if got.ones() != &snap_ones[..] {
+                return Err("one-counts drifted across the split/merge roundtrip".into());
+            }
+            if cs.num_slots() != slots_before + 1 {
+                return Err(format!(
+                    "slot vector should hold exactly the split slot extra: {} vs {}",
+                    cs.num_slots(),
+                    slots_before + 1
+                ));
+            }
+            if cs.num_free() != free_before + 1 {
+                return Err(format!(
+                    "free list should gain exactly the merged-away slot: {} vs {}",
+                    cs.num_free(),
+                    free_before + 1
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_split_merge_composite_sweeps_preserve_shard_invariants() {
+    // arbitrary interleavings of ALL four kernels — including the
+    // split–merge composites' accept/reject/rollback paths — keep the
+    // full data/stats/slot invariants on one shard
+    check(
+        "split-merge composite interleaving",
+        6,
+        14,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let ds = SyntheticConfig {
+                n: 70 + (seed % 50) as usize,
+                d: 12,
+                clusters: 3,
+                beta: 0.2,
+                seed,
+            }
+            .generate_with_test_fraction(0.0);
+            let mut model = clustercluster::model::BetaBernoulli::symmetric(12, 0.5);
+            model.build_lut(ds.train.rows() + 1);
+            let rows: Vec<usize> = (0..ds.train.rows()).collect();
+            let mut sh = Shard::init_from_prior(&ds.train, rows, 1.2, Pcg64::seed_from(seed));
+            let mut pick = Pcg64::seed_from(seed ^ 0xbeef);
+            let kinds = [
+                KernelKind::CollapsedGibbs,
+                KernelKind::WalkerSlice,
+                KernelKind::SplitMergeGibbs,
+                KernelKind::SplitMergeWalker,
+            ];
+            for step in 0..8 {
+                let kind = kinds[pick.next_below(kinds.len() as u64) as usize];
+                kind.kernel().sweep(&mut sh, &ds.train, &model);
+                sh.check_invariants(&ds.train)
+                    .map_err(|e| format!("step {step} ({kind:?}): {e}"))?;
+                if sh.num_rows() != ds.train.rows() {
+                    return Err(format!("step {step}: rows not conserved"));
+                }
+            }
+            // deterministically exercise the move layer at least once
+            KernelKind::SplitMergeGibbs.kernel().sweep(&mut sh, &ds.train, &model);
+            sh.check_invariants(&ds.train)
+                .map_err(|e| format!("final split-merge sweep: {e}"))?;
+            let (proposals, _, _) = sh.split_merge_stats();
+            if proposals == 0 {
+                return Err("no split-merge proposal ever ran".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_shard_kernel_interleaving_preserves_invariants() {
     // arbitrary interleavings of the two kernels on one shard keep the
     // full data/stats/slot invariants — the kernels share one state

@@ -6,14 +6,16 @@
 //!    batched `Scorer::score_rows_against_clusters` dispatch must be
 //!    *bit-identical* — same RNG stream, same assignments, same α bits —
 //!    to the pre-refactor scalar per-cluster path, on fixed seeds, for
-//!    both kernels, from both entry points (serial and the K=3
-//!    coordinator with shuffling). The packed tables are copied from the
+//!    every kernel (including the split–merge composites, whose
+//!    restricted scans share the dispatch), from both entry points
+//!    (serial and the K=3 coordinator with shuffling). The packed
+//!    tables are copied from the
 //!    same `ClusterStats` caches the scalar path reads and the default
 //!    scorer adds the same f64 terms in the same order, so any
 //!    divergence is a real dispatch bug, not float noise.
 //!
 //! 2. **Incremental-maintenance drift.** The move-only packed-table
-//!    engine (DESIGN.md §7) must be bit-identical over full chains to
+//!    engine (DESIGN.md §8) must be bit-identical over full chains to
 //!    the eager per-datum repack reference (`Shard::set_eager_repack`);
 //!    the table-level counterpart (randomized join/leave/alloc/free vs
 //!    from-scratch repack, bit-equal) lives in
@@ -110,6 +112,15 @@ fn serial_walker_slice_batched_is_bit_identical_to_scalar() {
     assert_serial_bit_identical(KernelKind::WalkerSlice);
 }
 
+#[test]
+fn serial_split_merge_batched_is_bit_identical_to_scalar() {
+    // the split–merge composite's restricted scans score through the
+    // same dispatch as the per-datum sweeps, so the whole composite
+    // chain — launch coin flips, scan picks, MH accepts — must be
+    // bit-identical across dispatches too
+    assert_serial_bit_identical(KernelKind::SplitMergeGibbs);
+}
+
 /// K=3 coordinator with shuffling: the batched dispatch inside the map
 /// step must leave the whole distributed chain bit-identical.
 fn assert_coordinator_bit_identical(kernel: KernelKind) {
@@ -162,6 +173,11 @@ fn coordinator_k3_walker_slice_batched_is_bit_identical() {
     assert_coordinator_bit_identical(KernelKind::WalkerSlice);
 }
 
+#[test]
+fn coordinator_k3_split_merge_walker_batched_is_bit_identical() {
+    assert_coordinator_bit_identical(KernelKind::SplitMergeWalker);
+}
+
 /// Chain-level drift gate for the incremental packed-table engine: the
 /// move-only maintenance (zero table work on self-moves, held-out
 /// correction from the cluster cache) must be *bit-identical* over full
@@ -212,6 +228,14 @@ fn incremental_tables_match_eager_repack_collapsed_gibbs() {
 #[test]
 fn incremental_tables_match_eager_repack_walker_slice() {
     assert_incremental_matches_eager(KernelKind::WalkerSlice);
+}
+
+#[test]
+fn incremental_tables_match_eager_repack_split_merge() {
+    // the move layer's two-column invalidations (and its rollbacks) must
+    // keep the move-only tables bit-identical to the eager reference
+    // over full composite chains
+    assert_incremental_matches_eager(KernelKind::SplitMergeGibbs);
 }
 
 // ---------------------------------------------------------------------
