@@ -8,7 +8,7 @@
 //! nodes then saturation; cluster-count convergence much slower than
 //! predictive convergence.
 //!
-//! Ablation (DESIGN.md §9): pass `--no-shuffle` to watch the isolated-
+//! Ablation (DESIGN.md §10): pass `--no-shuffle` to watch the isolated-
 //! islands chain plateau above the true likelihood.
 
 use clustercluster::bench::{is_full_scale, FigureEmitter};

@@ -141,6 +141,9 @@ fn main() {
                     clusters: s.clusters,
                     map_seconds: s.map_seconds,
                     rows_per_s: s.rows_per_s,
+                    idle_s: s.idle_s,
+                    barrier_wait_s: s.barrier_wait_s,
+                    bonus_sweeps: s.bonus_sweeps,
                 });
             }
             if round % 2 == 0 && t_target.is_none() {

@@ -90,6 +90,21 @@ impl Args {
             .cloned()
             .unwrap_or_else(|| default.to_string())
     }
+
+    /// `--key on|off` as bool, or `default` when absent — the shape of
+    /// mode toggles like `--overlap on` whose off state must stay
+    /// spellable explicitly (a bare presence flag can't be turned back
+    /// off in a wrapper script).
+    pub fn get_on_off(&self, key: &str, default: bool) -> Result<bool, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => match v.to_ascii_lowercase().as_str() {
+                "on" => Ok(true),
+                "off" => Ok(false),
+                _ => Err(format!("--{key} expects \"on\" or \"off\", got {v:?}")),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -122,6 +137,18 @@ mod tests {
         assert!(Args::parse(vec!["run".into(), "workers".into()]).is_err());
         let a = parse(&["run", "--workers", "eight"]);
         assert!(a.get_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn on_off_toggles_parse_strictly() {
+        let a = parse(&["run", "--overlap", "on"]);
+        assert!(a.get_on_off("overlap", false).unwrap());
+        let b = parse(&["run", "--overlap=off"]);
+        assert!(!b.get_on_off("overlap", true).unwrap());
+        let c = parse(&["run"]);
+        assert!(!c.get_on_off("overlap", false).unwrap());
+        let d = parse(&["run", "--overlap", "maybe"]);
+        assert!(d.get_on_off("overlap", false).is_err());
     }
 
     #[test]

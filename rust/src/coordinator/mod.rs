@@ -25,6 +25,12 @@
 //! The representation keeps the *true* DPM posterior invariant — the DP
 //! "learns how to parallelize itself".
 //!
+//! Rounds run bulk-synchronously by default; `--overlap on`
+//! ([`CoordinatorConfig::overlap`]) switches to the barrier-free
+//! schedule — staged shuffle, post-shuffle global updates,
+//! work-stealing bonus sweeps, and `max(map, carry)` wall-clock
+//! modeling (DESIGN.md § Barrier-free rounds).
+//!
 //! ```
 //! use clustercluster::coordinator::{Coordinator, CoordinatorConfig, MuMode};
 //! use clustercluster::data::synthetic::SyntheticConfig;
@@ -51,7 +57,9 @@
 pub mod checkpoint;
 
 use crate::data::BinMat;
-use crate::mapreduce::{finish_round, CommModel, MapReduce, RoundStats};
+use crate::mapreduce::{
+    finish_round, finish_round_overlapped, CommModel, MapReduce, RoundStats,
+};
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::BetaBernoulli;
@@ -62,7 +70,7 @@ use crate::supercluster::{
     adaptive_mu_step, sample_mu_given_occupancy, sample_shuffle, ShuffleKernel,
 };
 use crate::util::timer::PhaseTimer;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use checkpoint::Checkpoint;
 pub use crate::sampler::KernelAssignment;
@@ -185,10 +193,24 @@ pub struct ShardRoundStat {
     /// measured map-step compute seconds for the shard this round
     pub map_seconds: f64,
     /// measured sweep throughput for the shard this round
-    /// (pre-shuffle resident rows × local_sweeps / map_seconds — the
-    /// rows the map step actually processed; 0 when unmeasurable) —
-    /// the per-shard observable behind the hot-path bench numbers
+    /// (pre-shuffle resident rows × sweeps run (base + bonus) /
+    /// map_seconds — the rows the map step actually processed; 0 when
+    /// unmeasurable) — the per-shard observable behind the hot-path
+    /// bench numbers
     pub rows_per_s: f64,
+    /// residual idle seconds this round: the gap between this shard's
+    /// map time (base + bonus sweeps) and the round's map critical path
+    /// — time the shard spent waiting even after any work stealing
+    pub idle_s: f64,
+    /// what the shard's wait would have been with NO bonus sweeps: the
+    /// gap between its *base* map time and the critical path — the
+    /// bulk-synchronous barrier tax, recorded in both modes so
+    /// `--overlap on|off` traces are comparable (equal to `idle_s` with
+    /// overlap off)
+    pub barrier_wait_s: f64,
+    /// work-stealing bonus sweeps granted to this shard this round
+    /// (always 0 with `--overlap off`)
+    pub bonus_sweeps: u64,
     /// the transition kernel this shard runs
     pub kernel: KernelKind,
 }
@@ -250,6 +272,19 @@ pub struct CoordinatorConfig {
     pub comm: CommModel,
     /// host threads for the map step (0 = one per available core)
     pub parallelism: usize,
+    /// barrier-free rounds (`--overlap on`): stage shuffle moves into a
+    /// swap buffer, run the global hyper updates on the post-shuffle
+    /// reduced statistics, grant lightly-loaded shards bonus sweeps,
+    /// and model the round wall-clock as `max(map, carry_prev)` instead
+    /// of the serialized sum (DESIGN.md § Barrier-free rounds). Off by
+    /// default: the bulk-synchronous schedule stays the pinned
+    /// reference (K=1 bit-equivalence, enumeration gates)
+    pub overlap: bool,
+    /// cap on work-stealing bonus sweeps per shard per round under
+    /// `overlap` (0 disables stealing; ignored with overlap off). The
+    /// grant is a deterministic function of pre-round resident row
+    /// counts, so the kernel composition stays reproducible and valid
+    pub max_bonus_sweeps: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -270,9 +305,44 @@ impl Default for CoordinatorConfig {
             scoring: ScoreMode::default(),
             comm: CommModel::default(),
             parallelism: 1,
+            overlap: false,
+            max_bonus_sweeps: 2,
         }
     }
 }
+
+/// Plan this round's work-stealing bonus sweeps from pre-round resident
+/// row counts: shard k gets `min(max_bonus_sweeps, ⌊(rows_max − rows_k)
+/// / rows_k⌋)` extra local sweeps — roughly as many as fit inside the
+/// time the heaviest shard needs for its base sweep, assuming per-row
+/// cost. Row counts are **sweep-invariant** (map sweeps never move data
+/// across shards), so the grant is a deterministic function of a
+/// statistic the local kernels cannot change: running `base + b_k`
+/// sweeps of an invariant kernel is itself an invariant kernel on every
+/// slice of the state space, which is what keeps the overlapped
+/// composition exact (DESIGN.md § Barrier-free rounds). Empty shards
+/// and the heaviest shard get 0; at K=1 or under balanced loads every
+/// grant is 0, so `--overlap on` degrades gracefully to the base
+/// schedule.
+pub fn plan_bonus_sweeps(row_counts: &[u64], max_bonus_sweeps: usize) -> Vec<usize> {
+    let rows_max = row_counts.iter().copied().max().unwrap_or(0);
+    row_counts
+        .iter()
+        .map(|&r| {
+            if r == 0 || r >= rows_max {
+                0
+            } else {
+                (((rows_max - r) / r) as usize).min(max_bonus_sweeps)
+            }
+        })
+        .collect()
+}
+
+/// One staged shuffle move: a drained cluster's sufficient statistics,
+/// its member rows, and the supercluster it was (re)assigned to — the
+/// swap-buffer entry [`Coordinator`] stages decisions into before
+/// applying them.
+type StagedMove = (crate::model::ClusterStats, Vec<usize>, usize);
 
 /// The distributed sampler state: K supercluster shards + global hypers.
 pub struct Coordinator<'a> {
@@ -306,6 +376,11 @@ pub struct Coordinator<'a> {
     mu_proposals: u64,
     /// adaptive-μ MH proposals accepted (Adaptive mode only)
     mu_accepts: u64,
+    /// the previous overlapped round's hidden tail (its shuffle
+    /// transfer time + global-update compute), which the NEXT round
+    /// pays only to the extent it exceeds the map critical path
+    /// (`--overlap on` modeling; always 0 in bulk mode)
+    prev_carry_s: f64,
     // persistent reduce/eval scratch (reused every round — the reduce
     // step and trace-time evaluation allocate nothing at steady state)
     beta_scratch: Vec<f64>,
@@ -404,6 +479,7 @@ impl<'a> Coordinator<'a> {
             last_shuffle_bytes: 0,
             mu_proposals: 0,
             mu_accepts: 0,
+            prev_carry_s: 0.0,
             beta_scratch: Vec::new(),
             pl_w1: Vec::new(),
             pl_w0: Vec::new(),
@@ -411,10 +487,31 @@ impl<'a> Coordinator<'a> {
         }
     }
 
-    /// One global round: map (R local sweeps per node, each shard on its
-    /// assigned kernel) → reduce (α, β, μ granularity update) → shuffle
-    /// (cluster moves + broadcast). Returns the round's stats.
+    /// One global round, under the configured schedule
+    /// ([`CoordinatorConfig::overlap`]). Returns the round's stats.
+    ///
+    /// * **bulk-synchronous** (default): map (R local sweeps per node,
+    ///   each shard on its assigned kernel) → reduce (α, β, μ
+    ///   granularity update) → shuffle (cluster moves + broadcast) —
+    ///   the pinned reference schedule.
+    /// * **overlapped**: bonus-sweep planning → map (base + bonus
+    ///   sweeps) → shuffle staged against the α, μ the sweeps ran under
+    ///   → reduce on the post-shuffle statistics, with this round's
+    ///   shuffle transfer and global updates modeled as hidden behind
+    ///   the next round's map (DESIGN.md § Barrier-free rounds).
     pub fn step(&mut self, rng: &mut Pcg64) -> RoundStats {
+        if self.cfg.overlap {
+            self.step_overlapped(rng)
+        } else {
+            self.step_bulk(rng)
+        }
+    }
+
+    /// The bulk-synchronous round: every stage waits for the previous
+    /// one. Kept sample-for-sample equivalent to the pre-overlap
+    /// coordinator (same RNG consumption, same cluster-insertion order),
+    /// so K=1 serial bit-equivalence and the seeded suites pin it.
+    fn step_bulk(&mut self, rng: &mut Pcg64) -> RoundStats {
         let round_t0 = Instant::now();
         let data = self.data;
         let model = &self.model;
@@ -442,6 +539,155 @@ impl<'a> Coordinator<'a> {
 
         // ---- reduce: centralized hyper updates ----
         let reduce_t0 = Instant::now();
+        let mut bytes = self.reduce_hypers(&mut states, rng);
+        let reduce_dur = reduce_t0.elapsed();
+        self.timer.add("reduce", reduce_dur);
+
+        // ---- shuffle: Gibbs on s_j, move whole clusters ----
+        let shuffle_t0 = Instant::now();
+        self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
+            self.shuffle(&mut states, rng)
+        } else {
+            0
+        };
+        bytes += self.last_shuffle_bytes;
+        self.timer.add("shuffle", shuffle_t0.elapsed());
+
+        self.states = states;
+        self.rounds += 1;
+        self.record_shard_stats(&map_durs, None, None, &rows_swept);
+
+        let rs = finish_round(
+            &self.cfg.comm,
+            map_durs,
+            reduce_dur + shuffle_t0.elapsed(),
+            bytes,
+            round_t0.elapsed(),
+        );
+        self.modeled_time_s += rs.modeled_wall_s;
+        self.measured_time_s += rs.measured_wall_s;
+        rs
+    }
+
+    /// The overlapped round (DESIGN.md § Barrier-free rounds). The
+    /// stage order is itself a valid composition of invariant kernels:
+    ///
+    /// 1. **plan** — bonus sweeps from pre-round resident row counts
+    ///    ([`plan_bonus_sweeps`]; deterministic in a sweep-invariant
+    ///    statistic, so granting them preserves exactness);
+    /// 2. **map** — each shard runs `local_sweeps + bonus_k` sweeps,
+    ///    completions draining through the pool's channel rather than a
+    ///    barrier-join;
+    /// 3. **shuffle** — `s_j` decisions sampled against the α, μ the
+    ///    sweeps ran under, staged into a swap buffer, then applied;
+    /// 4. **reduce** — α, β, μ from the POST-shuffle reduced statistics
+    ///    (the only ordering under which the global updates may overlap
+    ///    the next map — a μ update racing in-flight shuffle decisions
+    ///    is one of the forbidden interleavings).
+    ///
+    /// On the modeled timeline, this round's shuffle transfer and
+    /// global-update compute ride behind the NEXT round's map
+    /// (`prev_carry_s`), so the modeled wall is
+    /// `latency + stats_upload + max(map, carry_prev)` instead of the
+    /// serialized sum. The host still applies moves and updates hypers
+    /// in-line (they depend on nothing produced by the next map), which
+    /// is what keeps the chain a deterministic, replayable sequence.
+    fn step_overlapped(&mut self, rng: &mut Pcg64) -> RoundStats {
+        let round_t0 = Instant::now();
+        let data = self.data;
+        let model = &self.model;
+        let alpha = self.alpha;
+        let mu = &self.mu;
+        let sweeps = self.cfg.local_sweeps;
+        let kernels = &self.shard_kernels;
+
+        // ---- plan: work-stealing grants from pre-round row counts ----
+        let rows_swept: Vec<u64> = self.states.iter().map(|s| s.num_rows() as u64).collect();
+        let bonus_plan = plan_bonus_sweeps(&rows_swept, self.cfg.max_bonus_sweeps);
+        let bonus = &bonus_plan;
+
+        // ---- map: base + bonus sweeps per shard ----
+        let states = std::mem::take(&mut self.states);
+        let map_t0 = Instant::now();
+        let (pairs, map_durs) = self.mr.map_collect(
+            states,
+            |kk, mut st: Shard| {
+                st.set_theta(alpha * mu[kk]);
+                let kernel = kernels[kk].kernel();
+                for _ in 0..sweeps {
+                    kernel.sweep(&mut st, data, model);
+                }
+                // lightly-loaded shards work instead of idling at the
+                // (now absent) barrier; bonus time is metered apart so
+                // the trace can show the barrier tax it absorbed
+                let b = bonus[kk];
+                let bonus_t0 = Instant::now();
+                for _ in 0..b {
+                    kernel.sweep(&mut st, data, model);
+                }
+                st.note_bonus_sweeps(b as u64);
+                (st, bonus_t0.elapsed())
+            },
+            |_rank, _kk| {},
+        );
+        self.timer.add("map", map_t0.elapsed());
+        let mut states = Vec::with_capacity(pairs.len());
+        let mut bonus_durs = Vec::with_capacity(pairs.len());
+        for (st, bd) in pairs {
+            states.push(st);
+            bonus_durs.push(bd);
+        }
+
+        // ---- shuffle: decide into the swap buffer, then apply ----
+        let shuffle_t0 = Instant::now();
+        self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
+            let (staged, b) = self.shuffle_decide(&mut states, rng);
+            Self::apply_moves(&mut states, staged);
+            b
+        } else {
+            0
+        };
+        let shuffle_dur = shuffle_t0.elapsed();
+        self.timer.add("shuffle", shuffle_dur);
+
+        // ---- reduce: hypers from the post-shuffle reduced stats ----
+        let reduce_t0 = Instant::now();
+        let stats_bytes = self.reduce_hypers(&mut states, rng);
+        let reduce_dur = reduce_t0.elapsed();
+        self.timer.add("reduce", reduce_dur);
+        let bytes = stats_bytes + self.last_shuffle_bytes;
+
+        self.states = states;
+        self.rounds += 1;
+        self.record_shard_stats(&map_durs, Some(&bonus_durs), Some(&bonus_plan), &rows_swept);
+
+        let rs = finish_round_overlapped(
+            &self.cfg.comm,
+            map_durs,
+            reduce_dur + shuffle_dur,
+            bytes,
+            stats_bytes,
+            self.prev_carry_s,
+            round_t0.elapsed(),
+        );
+        // the tail this round hides behind the NEXT round's map: its
+        // shuffle transfer plus its global-update compute
+        self.prev_carry_s = self.last_shuffle_bytes as f64
+            / self.cfg.comm.bandwidth_bytes_per_s
+            + (reduce_dur + shuffle_dur).as_secs_f64();
+        self.modeled_time_s += rs.modeled_wall_s;
+        self.measured_time_s += rs.measured_wall_s;
+        rs
+    }
+
+    /// Centralized hyper updates on the CURRENT `states`: α from Eq. 6
+    /// given `Σ_k J_k`, β_d by griddy Gibbs from pooled sufficient
+    /// statistics, and μ per the configured [`MuMode`]. Returns the
+    /// modeled bytes of the reduced-statistics upload + broadcasts.
+    /// Bulk rounds call this before the shuffle (μ conditions on
+    /// pre-shuffle occupancies), overlapped rounds after it — each is a
+    /// valid Gibbs conditional on the state at call time.
+    fn reduce_hypers(&mut self, states: &mut [Shard], rng: &mut Pcg64) -> u64 {
         let mut bytes: u64 = 0;
         // each worker ships J_k (8 bytes) and, if β updates are on, its
         // cluster sufficient statistics (n + per-dim one-counts)
@@ -451,7 +697,7 @@ impl<'a> Coordinator<'a> {
             self.alpha = sample_alpha(
                 rng,
                 self.alpha,
-                data.rows() as u64,
+                self.data.rows() as u64,
                 total_j,
                 &self.cfg.alpha_prior,
             );
@@ -464,7 +710,7 @@ impl<'a> Coordinator<'a> {
             self.beta_scratch.extend_from_slice(&self.model.beta);
             for d in 0..self.model.d {
                 stats.clear();
-                for st in &states {
+                for st in states.iter() {
                     st.collect_dim_stats(d, &mut stats);
                 }
                 self.beta_scratch[d] = self.beta_updater.sample(rng, &stats);
@@ -472,7 +718,7 @@ impl<'a> Coordinator<'a> {
             // only touch the LUT / score caches when some β_d moved;
             // a still-symmetric refresh retargets the LUT in place
             if self.model.update_betas(&self.beta_scratch, self.data.rows() + 1) {
-                for st in &mut states {
+                for st in states.iter_mut() {
                     st.invalidate_caches();
                 }
             }
@@ -510,35 +756,44 @@ impl<'a> Coordinator<'a> {
                 }
             }
         }
-        let reduce_dur = reduce_t0.elapsed();
-        self.timer.add("reduce", reduce_dur);
+        bytes
+    }
 
-        // ---- shuffle: Gibbs on s_j, move whole clusters ----
-        let shuffle_t0 = Instant::now();
-        self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
-            self.shuffle(&mut states, rng)
-        } else {
-            0
-        };
-        bytes += self.last_shuffle_bytes;
-        self.timer.add("shuffle", shuffle_t0.elapsed());
-
-        self.states = states;
-        self.rounds += 1;
-
-        // per-shard observability series (μ_k, occupancy, map time,
-        // sweep throughput) — what makes the non-uniform μ modes and
-        // the hot-path perf inspectable
+    /// Rebuild the per-shard observability series (μ_k, occupancy, map
+    /// time, throughput, idle/barrier-wait/bonus) for the round just
+    /// finished. `bonus_durs`/`bonus_plan` are `None` for bulk rounds
+    /// (no stealing: bonus columns are 0 and `barrier_wait_s ==
+    /// idle_s`).
+    fn record_shard_stats(
+        &mut self,
+        map_durs: &[Duration],
+        bonus_durs: Option<&[Duration]>,
+        bonus_plan: Option<&[usize]>,
+        rows_swept: &[u64],
+    ) {
         let local_sweeps = self.cfg.local_sweeps;
+        // the round's map critical path (incl. bonus work) — the wait
+        // baseline every shard is measured against
+        let crit = map_durs
+            .iter()
+            .map(Duration::as_secs_f64)
+            .fold(0.0, f64::max);
         self.last_shard_stats = self
             .states
             .iter()
             .enumerate()
             .map(|(kk, st)| {
                 let map_seconds = map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+                let bonus_s = bonus_durs
+                    .and_then(|b| b.get(kk))
+                    .map(|d| d.as_secs_f64())
+                    .unwrap_or(0.0);
+                let bonus_sweeps =
+                    bonus_plan.and_then(|b| b.get(kk)).copied().unwrap_or(0) as u64;
                 // throughput from the PRE-shuffle row count the map step
                 // actually swept, not the post-shuffle occupancy
                 let swept = rows_swept.get(kk).copied().unwrap_or(0);
+                let sweeps_run = local_sweeps as u64 + bonus_sweeps;
                 ShardRoundStat {
                     shard: kk,
                     mu: self.mu[kk],
@@ -546,33 +801,46 @@ impl<'a> Coordinator<'a> {
                     clusters: st.num_clusters() as u64,
                     map_seconds,
                     rows_per_s: if map_seconds > 0.0 {
-                        swept as f64 * local_sweeps as f64 / map_seconds
+                        swept as f64 * sweeps_run as f64 / map_seconds
                     } else {
                         0.0
                     },
+                    idle_s: (crit - map_seconds).max(0.0),
+                    barrier_wait_s: (crit - (map_seconds - bonus_s)).max(0.0),
+                    bonus_sweeps,
                     kernel: self.shard_kernels[kk],
                 }
             })
             .collect();
-
-        let rs = finish_round(
-            &self.cfg.comm,
-            map_durs,
-            reduce_dur + shuffle_t0.elapsed(),
-            bytes,
-            round_t0.elapsed(),
-        );
-        self.modeled_time_s += rs.modeled_wall_s;
-        self.measured_time_s += rs.measured_wall_s;
-        rs
     }
 
     /// Gibbs-resample every cluster's supercluster assignment and move
-    /// the clusters. Returns the bytes the moves would transfer.
+    /// the clusters, decide + apply back-to-back (the bulk-synchronous
+    /// form). Returns the bytes the moves would transfer.
     fn shuffle(&mut self, states: &mut [Shard], rng: &mut Pcg64) -> u64 {
+        let (staged, bytes) = self.shuffle_decide(states, rng);
+        Self::apply_moves(states, staged);
+        bytes
+    }
+
+    /// The decide half of the shuffle: drain every cluster, Gibbs-sample
+    /// its new supercluster `s_j` under the current α, μ, and stage the
+    /// (stats, rows, destination) moves into a swap buffer WITHOUT
+    /// rebuilding the shards — the double-buffering that separates
+    /// decisions from state mutation in an overlapped round. Sampling
+    /// reads only the running J_k counts, never shard internals, so
+    /// deferring the inserts is sample-for-sample identical to the old
+    /// in-place form. Returns the staged moves (in drain order, which
+    /// [`Self::apply_moves`] must preserve) and the modeled transfer
+    /// bytes of the movers.
+    fn shuffle_decide(
+        &mut self,
+        states: &mut [Shard],
+        rng: &mut Pcg64,
+    ) -> (Vec<StagedMove>, u64) {
         let k = states.len();
         // extract all clusters: (stats, member rows, current supercluster)
-        let mut all: Vec<(crate::model::ClusterStats, Vec<usize>, usize)> = Vec::new();
+        let mut all: Vec<StagedMove> = Vec::new();
         for (kk, st) in states.iter_mut().enumerate() {
             for (stats, rows) in st.drain_clusters() {
                 all.push((stats, rows, kk));
@@ -583,6 +851,7 @@ impl<'a> Coordinator<'a> {
         for &(_, _, kk) in &all {
             j_counts[kk] += 1;
         }
+        let mut staged: Vec<StagedMove> = Vec::with_capacity(all.len());
         let mut bytes = 0u64;
         for (stats, rows, kk_old) in all {
             let mut j_minus = j_counts.clone();
@@ -597,9 +866,19 @@ impl<'a> Coordinator<'a> {
                 // indices and one set of component parameters")
                 bytes += 8 + 4 * self.model.d as u64 + 8 * rows.len() as u64;
             }
+            staged.push((stats, rows, kk_new));
+        }
+        (staged, bytes)
+    }
+
+    /// The apply half: reinsert every staged cluster at its destination,
+    /// in the staged (drain) order — cluster-slot assignment is
+    /// order-sensitive, and preserving it keeps bulk rounds bit-equal
+    /// to the historical in-place shuffle.
+    fn apply_moves(states: &mut [Shard], staged: Vec<StagedMove>) {
+        for (stats, rows, kk_new) in staged {
             states[kk_new].insert_cluster(stats, rows);
         }
-        bytes
     }
 
     /// Total live clusters across all superclusters.

@@ -43,6 +43,7 @@ COMMANDS
                [--scorer auto|fallback|pjrt] [--update-beta] [--latency 2.0]
                [--bandwidth 1e8] [--trace out.csv] [--shard-trace shards.csv]
                [--threads 1] [--checkpoint state.ccckpt]
+               [--overlap on|off] [--max-bonus-sweeps 2]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
 
@@ -70,10 +71,25 @@ trace-time evaluation) run through: \"auto\" = PJRT artifacts when
 loadable, pure-Rust fallback otherwise; \"fallback\" = always pure
 Rust; \"pjrt\" = artifacts required (errors when unavailable).
 
+--overlap on switches the coordinator to barrier-free rounds (see
+DESIGN.md section 9): shuffle decisions are staged into a swap buffer,
+the alpha/beta/mu updates run on the post-shuffle reduced statistics,
+lightly-loaded shards run up to --max-bonus-sweeps extra local sweeps
+instead of idling, and the modeled round wall-clock becomes
+latency + stats upload + max(map, previous round's hidden tail)
+instead of the serialized sum. Off (the default) keeps the pinned
+bulk-synchronous reference schedule. Both schedules target the exact
+DPM posterior.
+
 --shard-trace writes the per-(round, shard) series (mu_k, occupancy,
-cluster count, map seconds, sweep rows/s) that make the adaptive mode
-and the hot-path throughput observable, and prints a per-round
-rows/sec + shuffle-bytes line to stdout.
+cluster count, map seconds, sweep rows/s, idle_s, barrier_wait_s,
+bonus_sweeps) that make the adaptive mode, the hot-path throughput,
+and the barrier tax observable, and prints a per-round rows/sec +
+shuffle-bytes line to stdout. idle_s is the shard's residual wait
+against the round's map critical path after any bonus work;
+barrier_wait_s is what that wait would have been with no bonus sweeps
+(the two columns are equal with --overlap off); bonus_sweeps counts
+the round's work-stealing grant (always 0 with --overlap off).
 
 The serial chain checkpoints to the same CCCKPT2 format as the
 coordinator: --checkpoint saves the latent state after the last sweep,
@@ -256,6 +272,8 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
             bandwidth_bytes_per_s: args.get_f64("bandwidth", 100e6)?,
         },
         parallelism: args.get_usize("threads", 1)?,
+        overlap: args.get_on_off("overlap", false)?,
+        max_bonus_sweeps: args.get_usize("max-bonus-sweeps", 2)?,
         ..Default::default()
     })
 }
@@ -268,6 +286,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let local_sweeps = ccfg.local_sweeps;
     let kernel_desc = ccfg.kernel_assignment.describe();
     let mu_desc = ccfg.mu_mode.describe();
+    let sched_desc = if ccfg.overlap {
+        format!("overlapped(max-bonus={})", ccfg.max_bonus_sweeps)
+    } else {
+        "bulk-synchronous".to_string()
+    };
     let ds = cfg.generate();
     let h = ds.true_entropy_estimate();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
@@ -276,7 +299,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     // selection as the sweep path
     let mut scorer = scorer_arg(args)?.try_build()?;
     println!(
-        "parallel sampler: N={} D={} true J={} | K={workers} workers, {local_sweeps} local sweeps/round, kernel={kernel_desc}, mu-mode={mu_desc}, scorer={} (H≈{h:.3})",
+        "parallel sampler: N={} D={} true J={} | K={workers} workers, {local_sweeps} local sweeps/round, kernel={kernel_desc}, mu-mode={mu_desc}, rounds={sched_desc}, scorer={} (H≈{h:.3})",
         cfg.n,
         cfg.d,
         cfg.clusters,
@@ -308,6 +331,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     clusters: s.clusters,
                     map_seconds: s.map_seconds,
                     rows_per_s: s.rows_per_s,
+                    idle_s: s.idle_s,
+                    barrier_wait_s: s.barrier_wait_s,
+                    bonus_sweeps: s.bonus_sweeps,
                 });
             }
             // per-round throughput + shuffle traffic, so bench numbers

@@ -8,10 +8,20 @@
 //! container. The communication cost model is parameterized on per-round
 //! latency (Hadoop job overhead) and bandwidth, and drives the Fig. 8
 //! saturation behaviour.
+//!
+//! Two round schedules are modeled (DESIGN.md § Barrier-free rounds):
+//! the **bulk-synchronous** schedule serializes map → reduce → comm, and
+//! the **overlapped** schedule hides the previous round's shuffle
+//! transfer and global updates behind the current map, so the modeled
+//! wall is `latency + stats_upload + max(map_crit, carry_prev)` instead
+//! of the sum. Completion delivery is a channel, not a barrier: the
+//! caller drains completions as tasks finish ([`MapReduce::map_collect`]),
+//! which is what lets a coordinator react to fast shards while slow ones
+//! are still sweeping.
 
 use std::any::Any;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Communication/overhead model for one map-reduce round.
@@ -54,6 +64,25 @@ impl CommModel {
             + self.per_worker_latency_s * workers as f64
             + bytes as f64 / self.bandwidth_bytes_per_s
     }
+
+    /// Modeled wall-clock of one **overlapped** round. Only the small
+    /// reduced-statistics upload (`stats_bytes`: J_k counts, pooled dim
+    /// stats) sits on the critical path; the bulky shuffle transfer and
+    /// the global-update compute of the *previous* round (`carry_s`)
+    /// ride behind the current map, so the round pays
+    /// `max(map_crit_s, carry_s)` instead of their sum.
+    pub fn overlapped_round_time(
+        &self,
+        workers: usize,
+        stats_bytes: u64,
+        map_crit_s: f64,
+        carry_s: f64,
+    ) -> f64 {
+        self.round_latency_s
+            + self.per_worker_latency_s * workers as f64
+            + stats_bytes as f64 / self.bandwidth_bytes_per_s
+            + map_crit_s.max(carry_s)
+    }
 }
 
 /// Timing/traffic record of one map-reduce round.
@@ -65,8 +94,20 @@ pub struct RoundStats {
     pub reduce_duration: Duration,
     /// bytes the round moved (stats up + state down)
     pub bytes_transferred: u64,
-    /// modeled distributed wall-clock for the round (seconds)
+    /// modeled distributed wall-clock for the round (seconds) under the
+    /// schedule the round actually ran: equals [`Self::modeled_bulk_s`]
+    /// for bulk-synchronous rounds and [`Self::modeled_overlapped_s`]
+    /// for overlapped rounds
     pub modeled_wall_s: f64,
+    /// modeled wall under the bulk-synchronous schedule
+    /// (`max_k(map_k) + reduce + comm`), always populated so the two
+    /// schedules stay comparable round-by-round
+    pub modeled_bulk_s: f64,
+    /// modeled wall under the overlapped schedule
+    /// (`latency + stats_upload + max(map_crit, carry_prev)`); for a
+    /// bulk round this is reported equal to the bulk figure (no carry
+    /// was tracked, so no overlap is claimed)
+    pub modeled_overlapped_s: f64,
     /// actually measured wall-clock on this host (seconds)
     pub measured_wall_s: f64,
 }
@@ -189,6 +230,37 @@ impl MapReduce {
         R: Send,
         F: Fn(usize, T) -> R + Sync,
     {
+        self.map_collect(tasks, f, |_, _| {})
+    }
+
+    /// Like [`Self::map`], but the caller observes completions as they
+    /// happen: `on_done(rank, index)` runs on the **caller** thread when
+    /// the `rank`-th task to finish (0-based completion order) turns out
+    /// to be input `index`. This is the submit/poll surface the
+    /// barrier-free coordinator builds on — instead of blocking on a
+    /// latch, the caller drains a completion channel and can react to
+    /// fast shards while slow ones are still sweeping. Results are still
+    /// returned in **input order**: every completion message carries its
+    /// task index, so out-of-order execution cannot scramble the output
+    /// vector or the per-task duration vector.
+    ///
+    /// If a task panics, the first payload is re-raised on the caller
+    /// thread — but only after all `n` completions (success or panic)
+    /// have been drained, so a panicking task can never wedge the pool
+    /// or leave a borrow live. `on_done` is not invoked for the
+    /// panicking task(s).
+    pub fn map_collect<T, R, F, C>(
+        &self,
+        tasks: Vec<T>,
+        f: F,
+        mut on_done: C,
+    ) -> (Vec<R>, Vec<Duration>)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+        C: FnMut(usize, usize),
+    {
         let n = tasks.len();
         if n == 0 {
             return (Vec::new(), Vec::new());
@@ -202,33 +274,32 @@ impl MapReduce {
                     let t0 = Instant::now();
                     out.push(f(i, t));
                     durs.push(t0.elapsed());
+                    on_done(i, i);
                 }
                 return (out, durs);
             }
         };
 
         // Hand each task to the pool as a type-erased job. The jobs
-        // borrow this stack frame (`inputs`, `slots`, `f`), so their
-        // lifetime is transmuted up to 'static.
+        // borrow this stack frame (`inputs`, `f`), so their lifetime is
+        // transmuted up to 'static.
         //
         // SAFETY: every borrow the jobs capture outlives the jobs
         // themselves because this function blocks on the completion
-        // latch below until ALL n jobs have run (panicking jobs are
-        // caught and still count), and the pool can only execute a job
-        // once. Nothing below the latch-wait can observe a live job.
+        // drain below until ALL n jobs have sent their message
+        // (panicking jobs are caught and still send one), and the pool
+        // can only execute a job once. Nothing below the drain loop can
+        // observe a live job. There is deliberately NO public handle
+        // type that would let a caller forget a pending job — the drain
+        // is unconditional.
         let inputs: Vec<Mutex<Option<T>>> =
             tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-        let slots: Vec<Mutex<Option<(R, Duration)>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
-        // first caught panic payload, re-raised on the caller thread so
-        // the original message survives (as std::thread::scope would)
-        let panic_payload: Arc<Mutex<Option<Box<dyn Any + Send>>>> = Arc::new(Mutex::new(None));
+        let (done_tx, done_rx) =
+            channel::<(usize, Result<(R, Duration), Box<dyn Any + Send>>)>();
         for i in 0..n {
             let inputs = &inputs;
-            let slots = &slots;
             let f = &f;
-            let latch = Arc::clone(&latch);
-            let panic_payload = Arc::clone(&panic_payload);
+            let done_tx = done_tx.clone();
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let t = inputs[i].lock().unwrap().take().expect("task taken once");
@@ -236,39 +307,44 @@ impl MapReduce {
                     let r = f(i, t);
                     (r, t0.elapsed())
                 }));
-                match ran {
-                    Ok(rd) => *slots[i].lock().unwrap() = Some(rd),
-                    Err(p) => {
-                        let mut slot = panic_payload.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(p);
-                        }
-                    }
-                }
-                let (count, cv) = &*latch;
-                *count.lock().unwrap() += 1;
-                cv.notify_one();
+                // only fails if the receiver is gone, which the
+                // unconditional drain below rules out
+                let _ = done_tx.send((i, ran));
             });
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
             };
             pool.submit(job);
         }
-        // completion latch: block until every job has reported in
-        let (count, cv) = &*latch;
-        let mut done = count.lock().unwrap();
-        while *done < n {
-            done = cv.wait(done).unwrap();
+        drop(done_tx);
+        // drain exactly n completions — the poll loop. Every job sends
+        // one message whether it returned or panicked, so a panicking
+        // task cannot deadlock the round; the first payload is re-raised
+        // once everything is accounted for (as std::thread::scope would).
+        let mut slots: Vec<Option<(R, Duration)>> = (0..n).map(|_| None).collect();
+        let mut panic_payload: Option<Box<dyn Any + Send>> = None;
+        for rank in 0..n {
+            let (i, ran) = done_rx.recv().expect("every job sends a completion");
+            match ran {
+                Ok(rd) => {
+                    slots[i] = Some(rd);
+                    on_done(rank, i);
+                }
+                Err(p) => {
+                    if panic_payload.is_none() {
+                        panic_payload = Some(p);
+                    }
+                }
+            }
         }
-        drop(done);
-        if let Some(p) = panic_payload.lock().unwrap().take() {
+        if let Some(p) = panic_payload {
             std::panic::resume_unwind(p);
         }
 
         let mut out = Vec::with_capacity(n);
         let mut durs = Vec::with_capacity(n);
         for s in slots {
-            let (r, d) = s.into_inner().unwrap().expect("task not executed");
+            let (r, d) = s.expect("task not executed");
             out.push(r);
             durs.push(d);
         }
@@ -276,7 +352,10 @@ impl MapReduce {
     }
 }
 
-/// Assemble a [`RoundStats`] from measured pieces + the comm model.
+/// Assemble a [`RoundStats`] from measured pieces + the comm model,
+/// under the **bulk-synchronous** schedule (`max_k(map_k) + reduce +
+/// comm`). Both modeled fields are set to the bulk figure: a bulk round
+/// tracked no carry, so no overlap is claimed for it.
 pub fn finish_round(
     comm: &CommModel,
     map_durations: Vec<Duration>,
@@ -291,14 +370,54 @@ pub fn finish_round(
         .max()
         .unwrap_or_default()
         .as_secs_f64();
-    let modeled = crit
+    let bulk = crit
         + reduce_duration.as_secs_f64()
         + comm.round_time(workers, bytes_transferred);
     RoundStats {
         map_durations,
         reduce_duration,
         bytes_transferred,
-        modeled_wall_s: modeled,
+        modeled_wall_s: bulk,
+        modeled_bulk_s: bulk,
+        modeled_overlapped_s: bulk,
+        measured_wall_s: measured_wall.as_secs_f64(),
+    }
+}
+
+/// Assemble a [`RoundStats`] for an **overlapped** round. `stats_bytes`
+/// is the small reduced-statistics upload that stays on the critical
+/// path; `carry_s` is the previous round's hidden tail (its shuffle
+/// transfer time plus its global-update compute), which this round pays
+/// only to the extent it exceeds the map critical path. The bulk figure
+/// is computed from the same measurements so `--overlap on` runs can
+/// report both schedules side by side.
+pub fn finish_round_overlapped(
+    comm: &CommModel,
+    map_durations: Vec<Duration>,
+    reduce_duration: Duration,
+    bytes_transferred: u64,
+    stats_bytes: u64,
+    carry_s: f64,
+    measured_wall: Duration,
+) -> RoundStats {
+    let workers = map_durations.len();
+    let crit = map_durations
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or_default()
+        .as_secs_f64();
+    let bulk = crit
+        + reduce_duration.as_secs_f64()
+        + comm.round_time(workers, bytes_transferred);
+    let overlapped = comm.overlapped_round_time(workers, stats_bytes, crit, carry_s);
+    RoundStats {
+        map_durations,
+        reduce_duration,
+        bytes_transferred,
+        modeled_wall_s: overlapped,
+        modeled_bulk_s: bulk,
+        modeled_overlapped_s: overlapped,
         measured_wall_s: measured_wall.as_secs_f64(),
     }
 }
@@ -406,6 +525,81 @@ mod tests {
         assert_eq!(rs.map_critical_path(), Duration::from_millis(20));
         assert_eq!(rs.map_total(), Duration::from_millis(35));
         assert!((rs.modeled_wall_s - 0.022).abs() < 1e-9);
+        // a bulk round claims no overlap: both schedule fields pin to
+        // the serialized figure
+        assert_eq!(rs.modeled_bulk_s, rs.modeled_wall_s);
+        assert_eq!(rs.modeled_overlapped_s, rs.modeled_wall_s);
+    }
+
+    #[test]
+    fn overlapped_round_time_takes_max_of_map_and_carry() {
+        let c = CommModel {
+            round_latency_s: 1.0,
+            per_worker_latency_s: 0.1,
+            bandwidth_bytes_per_s: 1000.0,
+        };
+        // fixed part: 1.0 + 2*0.1 + 500/1000 = 1.7
+        let slow_map = c.overlapped_round_time(2, 500, 5.0, 3.0);
+        assert!((slow_map - (1.7 + 5.0)).abs() < 1e-12);
+        let slow_carry = c.overlapped_round_time(2, 500, 2.0, 3.0);
+        assert!((slow_carry - (1.7 + 3.0)).abs() < 1e-12);
+        // no carry, free comm: overlapped == pure map critical path
+        assert_eq!(CommModel::free().overlapped_round_time(8, 1 << 20, 0.25, 0.0), 0.25);
+    }
+
+    #[test]
+    fn finish_round_overlapped_pins_both_schedule_formulas() {
+        // the Fig. 8 contract: the SAME measurements yield the
+        // serialized figure (map crit 20ms + reduce 2ms = 22ms) AND the
+        // overlapped figure (max(map crit 20ms, carry 50ms) = 50ms)
+        let durs = vec![
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            Duration::from_millis(10),
+        ];
+        let rs = finish_round_overlapped(
+            &CommModel::free(),
+            durs,
+            Duration::from_millis(2),
+            4096,
+            64,
+            0.050,
+            Duration::from_millis(40),
+        );
+        assert!((rs.modeled_bulk_s - 0.022).abs() < 1e-9);
+        assert!((rs.modeled_overlapped_s - 0.050).abs() < 1e-9);
+        assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
+        // with the carry hidden under the map, the overlapped schedule
+        // must beat bulk whenever carry < map_crit + reduce + comm
+        let rs2 = finish_round_overlapped(
+            &CommModel::free(),
+            vec![Duration::from_millis(20)],
+            Duration::from_millis(2),
+            4096,
+            64,
+            0.010,
+            Duration::from_millis(40),
+        );
+        assert!(rs2.modeled_overlapped_s < rs2.modeled_bulk_s);
+    }
+
+    #[test]
+    fn map_collect_reports_each_completion_once_in_rank_order() {
+        let mr = MapReduce::new(4);
+        let tasks: Vec<u64> = (0..24).collect();
+        let mut seen: Vec<(usize, usize)> = Vec::new();
+        let (out, durs) = mr.map_collect(tasks, |_, x| x * 3, |rank, idx| seen.push((rank, idx)));
+        // results in input order regardless of completion order
+        assert_eq!(out, (0..24).map(|x| x * 3).collect::<Vec<_>>());
+        assert_eq!(durs.len(), 24);
+        // ranks arrive 0..n in order; indices are a permutation of 0..n
+        assert_eq!(
+            seen.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
+            (0..24).collect::<Vec<_>>()
+        );
+        let mut idxs: Vec<usize> = seen.iter().map(|&(_, i)| i).collect();
+        idxs.sort_unstable();
+        assert_eq!(idxs, (0..24).collect::<Vec<_>>());
     }
 
     #[test]

@@ -23,8 +23,18 @@ pub struct ShardTraceRow {
     /// measured map-step compute seconds for the shard this round
     pub map_seconds: f64,
     /// measured sweep throughput for the shard this round
-    /// (rows × local sweeps / map seconds; 0 when unmeasurable)
+    /// (rows × sweeps run (base + bonus) / map seconds; 0 when
+    /// unmeasurable)
     pub rows_per_s: f64,
+    /// residual idle seconds against the round's map critical path
+    /// (after any work-stealing bonus sweeps)
+    pub idle_s: f64,
+    /// the wait the shard would have had with no bonus sweeps — the
+    /// bulk-synchronous barrier tax (equals `idle_s` with overlap off)
+    pub barrier_wait_s: f64,
+    /// work-stealing bonus sweeps granted this round (0 with
+    /// `--overlap off`)
+    pub bonus_sweeps: u64,
 }
 
 /// A full per-shard run trace (K rows appended per round).
@@ -75,7 +85,18 @@ impl ShardTrace {
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         let mut w = CsvWriter::create(
             path,
-            &["round", "shard", "mu", "rows", "clusters", "map_seconds", "rows_per_s"],
+            &[
+                "round",
+                "shard",
+                "mu",
+                "rows",
+                "clusters",
+                "map_seconds",
+                "rows_per_s",
+                "idle_s",
+                "barrier_wait_s",
+                "bonus_sweeps",
+            ],
         )?;
         for r in &self.rows {
             w.row(&[
@@ -86,6 +107,9 @@ impl ShardTrace {
                 r.clusters as f64,
                 r.map_seconds,
                 r.rows_per_s,
+                r.idle_s,
+                r.barrier_wait_s,
+                r.bonus_sweeps as f64,
             ])?;
         }
         Ok(())
@@ -105,6 +129,9 @@ mod tests {
             clusters: 2,
             map_seconds: 0.01,
             rows_per_s: 1000.0,
+            idle_s: 0.002,
+            barrier_wait_s: 0.003,
+            bonus_sweeps: 1,
         }
     }
 
@@ -134,6 +161,9 @@ mod tests {
         assert!(text.contains("mu"));
         assert!(text.contains("map_seconds"));
         assert!(text.contains("rows_per_s"));
+        assert!(text.contains("idle_s"));
+        assert!(text.contains("barrier_wait_s"));
+        assert!(text.contains("bonus_sweeps"));
         assert!(text.contains("0.75"));
     }
 }

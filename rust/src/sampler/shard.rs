@@ -51,6 +51,10 @@ pub struct Shard {
     /// times a Walker sweep exhausted its stick-extension budget (see
     /// [`Self::stick_overflow_events`])
     pub(crate) stick_overflows: u64,
+    /// cumulative work-stealing bonus sweeps this shard has run under
+    /// `--overlap on` (observability, like `stick_overflows`; not
+    /// checkpointed) — see [`Self::bonus_sweeps`]
+    pub(crate) bonus_sweeps: u64,
 }
 
 impl Shard {
@@ -73,6 +77,7 @@ impl Shard {
             walker: WalkerScratch::default(),
             sm: SplitMergeScratch::default(),
             stick_overflows: 0,
+            bonus_sweeps: 0,
         };
         // sequential CRP: P(new) ∝ θ, P(j) ∝ n_j (prior draw — the data
         // likelihood enters only through subsequent kernel sweeps)
@@ -118,6 +123,7 @@ impl Shard {
             walker: WalkerScratch::default(),
             sm: SplitMergeScratch::default(),
             stick_overflows: 0,
+            bonus_sweeps: 0,
         }
     }
 
@@ -155,6 +161,7 @@ impl Shard {
             walker: WalkerScratch::default(),
             sm: SplitMergeScratch::default(),
             stick_overflows: 0,
+            bonus_sweeps: 0,
         })
     }
 
@@ -226,6 +233,20 @@ impl Shard {
     /// [`crate::sampler::WalkerSlice`].
     pub fn stick_overflow_events(&self) -> u64 {
         self.stick_overflows
+    }
+
+    /// Cumulative work-stealing bonus sweeps this shard has run under
+    /// `--overlap on`: extra local kernel sweeps granted to lightly
+    /// loaded shards so they work instead of idling at the barrier.
+    /// Always 0 with overlap off. Observability only — the counter is
+    /// not part of checkpoint state.
+    pub fn bonus_sweeps(&self) -> u64 {
+        self.bonus_sweeps
+    }
+
+    /// Record `n` bonus sweeps granted to this shard this round.
+    pub(crate) fn note_bonus_sweeps(&mut self, n: u64) {
+        self.bonus_sweeps += n;
     }
 
     /// Record (and, on first occurrence, log) a Walker stick-budget

@@ -308,3 +308,81 @@ fn truncated_v2_checkpoint_is_rejected() {
     std::fs::write(&p, &bytes[..bytes.len() - 24]).unwrap();
     assert!(Checkpoint::load(&p).is_err());
 }
+
+// ---------------------------------------------------------------------
+// Worker-pool failure paths (the submit/poll completion channel): a
+// panicking map task must propagate to the caller without wedging the
+// round, and out-of-order completion must never scramble the
+// input-order indexing of results or `map_durations`.
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_survives_a_panicking_round_and_stays_usable() {
+    use clustercluster::mapreduce::MapReduce;
+    let mr = MapReduce::new(3);
+    // round 1: one task panics mid-fleet. The completion drain must
+    // still account for every job (no deadlock waiting on a completion
+    // that never comes) and re-raise the original payload.
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = mr.map((0..12u64).collect(), |_, x| {
+            if x == 7 {
+                panic!("injected shard failure");
+            }
+            x * 2
+        });
+    }));
+    let payload = caught.expect_err("panic must propagate to the caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .map(str::to_string)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("injected shard failure"), "payload lost: {msg:?}");
+    // round 2: the SAME pool must still run clean rounds afterwards —
+    // the panic consumed one job, not a worker thread or the channel.
+    let (out, durs) = mr.map((0..12u64).collect(), |_, x| x + 1);
+    assert_eq!(out, (1..=12).collect::<Vec<u64>>());
+    assert_eq!(durs.len(), 12);
+}
+
+#[test]
+fn out_of_order_completion_keeps_result_and_duration_indexing() {
+    use clustercluster::mapreduce::MapReduce;
+    use std::time::Duration;
+    // tasks finish in roughly REVERSE submission order (earlier index =
+    // longer sleep), so completion rank disagrees with input index; the
+    // result vector and map_durations must still line up by input index.
+    let mr = MapReduce::new(4);
+    let n = 8usize;
+    let mut completions: Vec<(usize, usize)> = Vec::new();
+    let (out, durs) = mr.map_collect(
+        (0..n).collect(),
+        |i, x: usize| {
+            assert_eq!(i, x, "task handed the wrong input");
+            std::thread::sleep(Duration::from_millis(((n - 1 - i) * 12) as u64));
+            i * 100
+        },
+        |rank, idx| completions.push((rank, idx)),
+    );
+    assert_eq!(out, (0..n).map(|i| i * 100).collect::<Vec<_>>());
+    assert_eq!(durs.len(), n);
+    // durations must belong to their input index: task i slept
+    // ~(n-1-i)*12ms, so early indices must show the longer measured
+    // compute (generous slack for scheduler noise)
+    assert!(
+        durs[0] > durs[n - 1],
+        "duration indexing scrambled: durs[0]={:?} durs[{}]={:?}",
+        durs[0],
+        n - 1,
+        durs[n - 1]
+    );
+    // the completion callback saw every task exactly once, ranks in order
+    assert_eq!(
+        completions.iter().map(|&(r, _)| r).collect::<Vec<_>>(),
+        (0..n).collect::<Vec<_>>()
+    );
+    let mut idxs: Vec<usize> = completions.iter().map(|&(_, i)| i).collect();
+    idxs.sort_unstable();
+    assert_eq!(idxs, (0..n).collect::<Vec<_>>());
+}

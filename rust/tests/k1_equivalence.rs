@@ -42,10 +42,14 @@ fn dataset() -> clustercluster::data::Dataset {
 /// must consume no master-stream randomness at all (otherwise α would
 /// desynchronize from the serial chain).
 fn assert_chains_identical(kernel: KernelKind) {
-    assert_chains_identical_mu(kernel, MuMode::Uniform);
+    assert_chains_identical_cfg(kernel, MuMode::Uniform, false);
 }
 
 fn assert_chains_identical_mu(kernel: KernelKind, mu_mode: MuMode) {
+    assert_chains_identical_cfg(kernel, mu_mode, false);
+}
+
+fn assert_chains_identical_cfg(kernel: KernelKind, mu_mode: MuMode, overlap: bool) {
     let ds = dataset();
     let seed = 2024;
 
@@ -71,6 +75,10 @@ fn assert_chains_identical_mu(kernel: KernelKind, mu_mode: MuMode) {
         kernel_assignment: clustercluster::sampler::KernelAssignment::AllSame(kernel),
         comm: CommModel::free(),
         parallelism: 1,
+        overlap,
+        // a nonzero cap must still grant 0 bonus sweeps at K=1 (the
+        // single shard IS the critical path), keeping bit-equivalence
+        max_bonus_sweeps: 3,
         ..Default::default()
     };
     let mut crng = Pcg64::seed_from(seed);
@@ -121,6 +129,16 @@ fn k1_chain_identical_split_merge_gibbs() {
 #[test]
 fn k1_chain_identical_split_merge_walker() {
     assert_chains_identical(KernelKind::SplitMergeWalker);
+}
+
+#[test]
+fn k1_chain_identical_with_overlap_on() {
+    // at K=1 the overlapped schedule degenerates to the serial chain
+    // exactly: no shuffle, no μ update, zero bonus-sweep grants
+    // (plan_bonus_sweeps gives the heaviest shard 0), so the master
+    // stream is consumed identically and the chains stay bit-equal
+    assert_chains_identical_cfg(KernelKind::CollapsedGibbs, MuMode::Uniform, true);
+    assert_chains_identical_cfg(KernelKind::WalkerSlice, MuMode::Uniform, true);
 }
 
 #[test]

@@ -1,0 +1,152 @@
+//! The barrier-free round schedule (`--overlap on`): work-stealing
+//! grant planning, per-shard idle/barrier-wait/bonus observability, the
+//! dual modeled-wall bookkeeping, and state integrity across overlapped
+//! rounds. The statistical exactness of the schedule is gated separately
+//! by the 203-partition suites in `rust/tests/posterior_exactness.rs`
+//! (overlap-on variants) and the K=1 bit-equivalence in
+//! `rust/tests/k1_equivalence.rs`.
+
+use clustercluster::coordinator::{
+    plan_bonus_sweeps, Coordinator, CoordinatorConfig,
+};
+use clustercluster::mapreduce::CommModel;
+use clustercluster::rng::Pcg64;
+use clustercluster::testing::enumeration_fixture;
+
+fn overlap_cfg(workers: usize, max_bonus_sweeps: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers,
+        update_alpha: false,
+        update_beta: false,
+        comm: CommModel::free(),
+        parallelism: 1,
+        overlap: true,
+        max_bonus_sweeps,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn bonus_plan_is_deterministic_bounded_and_balanced_aware() {
+    // grant ≈ how many extra sweeps fit while the heaviest shard runs,
+    // capped; heaviest and empty shards always 0
+    assert_eq!(plan_bonus_sweeps(&[100, 50, 20], 8), vec![0, 1, 4]);
+    // the cap binds
+    assert_eq!(plan_bonus_sweeps(&[100, 50, 20], 2), vec![0, 1, 2]);
+    // balanced loads ⇒ no stealing anywhere
+    assert_eq!(plan_bonus_sweeps(&[40, 40, 40], 5), vec![0, 0, 0]);
+    // K=1 degenerates to the base schedule
+    assert_eq!(plan_bonus_sweeps(&[120], 5), vec![0]);
+    // empty shards get nothing (no data to sweep), ties with the max
+    // get nothing, and sub-1 gaps round down to nothing
+    assert_eq!(plan_bonus_sweeps(&[10, 10, 0, 7], 5), vec![0, 0, 0, 0]);
+    // zero cap disables stealing outright
+    assert_eq!(plan_bonus_sweeps(&[100, 1], 0), vec![0, 0]);
+    assert_eq!(plan_bonus_sweeps(&[], 3), Vec::<usize>::new());
+}
+
+#[test]
+fn overlapped_rounds_keep_state_integrity_and_grant_bonus_sweeps() {
+    // the 6-row enumeration fixture shards unevenly almost every round
+    // at K=3, so over 200 rounds the work-stealing path fires for sure
+    let data = enumeration_fixture();
+    let mut rng = Pcg64::seed_from(91);
+    let mut coord = Coordinator::new(&data, overlap_cfg(3, 2), &mut rng);
+    for _ in 0..200 {
+        let rs = coord.step(&mut rng);
+        // the overlapped schedule is the one reported as the round wall
+        assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
+        assert!(rs.modeled_bulk_s.is_finite() && rs.modeled_bulk_s >= 0.0);
+        coord.check_invariants().unwrap();
+    }
+    let granted: u64 = coord.states().iter().map(|s| s.bonus_sweeps()).sum();
+    assert!(
+        granted > 0,
+        "200 overlapped rounds on an unevenly sharded fixture granted no bonus sweeps"
+    );
+    // per-shard observability columns are populated and consistent
+    for s in coord.shard_stats() {
+        assert!(s.idle_s >= 0.0);
+        // the barrier tax includes the idle the bonus work absorbed
+        assert!(s.barrier_wait_s >= s.idle_s - 1e-12);
+        assert!(s.bonus_sweeps <= 2, "cap violated: {}", s.bonus_sweeps);
+    }
+}
+
+#[test]
+fn bulk_rounds_report_zero_bonus_and_equal_waits() {
+    let data = enumeration_fixture();
+    let cfg = CoordinatorConfig {
+        overlap: false,
+        ..overlap_cfg(3, 2)
+    };
+    let mut rng = Pcg64::seed_from(92);
+    let mut coord = Coordinator::new(&data, cfg, &mut rng);
+    for _ in 0..20 {
+        let rs = coord.step(&mut rng);
+        // a bulk round claims no overlap: both modeled fields pin to
+        // the serialized figure
+        assert_eq!(rs.modeled_wall_s, rs.modeled_bulk_s);
+        assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
+    }
+    for s in coord.shard_stats() {
+        assert_eq!(s.bonus_sweeps, 0);
+        assert!((s.idle_s - s.barrier_wait_s).abs() < 1e-15);
+    }
+    let granted: u64 = coord.states().iter().map(|st| st.bonus_sweeps()).sum();
+    assert_eq!(granted, 0, "bulk rounds must never steal work");
+}
+
+#[test]
+fn k1_overlap_round_ships_only_the_cluster_count() {
+    // same contract as the bulk K=1 round: no shuffle, no μ broadcast —
+    // only the J_k integer crosses the (modeled) wire
+    let data = enumeration_fixture();
+    let mut rng = Pcg64::seed_from(93);
+    let mut coord = Coordinator::new(&data, overlap_cfg(1, 3), &mut rng);
+    let rs = coord.step(&mut rng);
+    assert_eq!(rs.bytes_transferred, 8, "bytes = {}", rs.bytes_transferred);
+    assert_eq!(coord.states()[0].bonus_sweeps(), 0);
+}
+
+#[test]
+fn overlapped_modeled_wall_excludes_shuffle_bytes_from_the_round() {
+    // first overlapped round, carry = 0: the modeled wall must be
+    // exactly latency + per-worker setup + stats_upload/bw + map_crit —
+    // the shuffle movers' bytes ride behind the NEXT round's map and
+    // must NOT appear in this round's critical path (they DO appear in
+    // the bulk figure computed from the same measurements)
+    let data = enumeration_fixture();
+    let comm = CommModel {
+        round_latency_s: 0.5,
+        per_worker_latency_s: 0.01,
+        bandwidth_bytes_per_s: 1e6,
+    };
+    let cfg = CoordinatorConfig {
+        comm,
+        ..overlap_cfg(3, 2)
+    };
+    let mut rng = Pcg64::seed_from(94);
+    let mut coord = Coordinator::new(&data, cfg, &mut rng);
+    let rs = coord.step(&mut rng);
+    let stats_bytes = rs.bytes_transferred - coord.last_shuffle_bytes();
+    let map_crit = rs.map_critical_path().as_secs_f64();
+    let want_overlapped = comm.overlapped_round_time(3, stats_bytes, map_crit, 0.0);
+    assert!(
+        (rs.modeled_overlapped_s - want_overlapped).abs() < 1e-12,
+        "got {}, want {}",
+        rs.modeled_overlapped_s,
+        want_overlapped
+    );
+    // and the bulk figure from the same round serializes everything,
+    // shuffle bytes and global-update compute included
+    let want_bulk = map_crit
+        + rs.reduce_duration.as_secs_f64()
+        + comm.round_time(3, rs.bytes_transferred);
+    assert!(
+        (rs.modeled_bulk_s - want_bulk).abs() < 1e-12,
+        "got {}, want {}",
+        rs.modeled_bulk_s,
+        want_bulk
+    );
+}

@@ -159,6 +159,16 @@ fn coordinator_tv_assignment(
     rounds: u64,
     kernel_assignment: clustercluster::sampler::KernelAssignment,
 ) -> f64 {
+    coordinator_tv_assignment_sched(workers, seed, rounds, kernel_assignment, false)
+}
+
+fn coordinator_tv_assignment_sched(
+    workers: usize,
+    seed: u64,
+    rounds: u64,
+    kernel_assignment: clustercluster::sampler::KernelAssignment,
+    overlap: bool,
+) -> f64 {
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);
@@ -174,6 +184,12 @@ fn coordinator_tv_assignment(
         kernel_assignment,
         comm: CommModel::free(),
         parallelism: 1,
+        overlap,
+        // the 6-row fixture shards unevenly most rounds, so the
+        // overlapped schedule's work-stealing grants fire constantly —
+        // the gate certifies bonus sweeps statistically, not just the
+        // stage reordering
+        max_bonus_sweeps: 2,
         ..Default::default()
     };
     let mut rng = Pcg64::seed_from(seed);
@@ -251,6 +267,41 @@ fn mixed_gibbs_and_split_merge_walker_k3_matches_enumerated_posterior() {
     );
 }
 
+#[test]
+fn coordinator_k3_overlap_matches_enumerated_posterior() {
+    // the barrier-free schedule (`--overlap on`): staged shuffle
+    // decided against the pre-update α/μ, hyper/μ updates on the
+    // post-shuffle reduced stats, and work-stealing bonus sweeps —
+    // still a composition of invariant kernels, so the 203-partition
+    // gate must hold exactly as for the bulk-synchronous reference
+    let tv = coordinator_tv_assignment_sched(
+        3,
+        42,
+        60_000,
+        clustercluster::sampler::KernelAssignment::default(),
+        true,
+    );
+    assert!(tv < 0.05, "K=3 overlapped TV distance {tv} too large");
+}
+
+#[test]
+fn mixed_kernels_k3_overlap_matches_enumerated_posterior() {
+    // overlap × heterogeneous kernels: bonus sweeps replay each shard's
+    // OWN kernel (Gibbs on shards 0/2, the Walker split–merge composite
+    // on shard 1), so the grant must stay exact across mixed operators
+    let tv = coordinator_tv_assignment_sched(
+        3,
+        44,
+        60_000,
+        clustercluster::sampler::KernelAssignment::parse("gibbs,split_merge:walker").unwrap(),
+        true,
+    );
+    assert!(
+        tv < 0.05,
+        "mixed-kernel K=3 overlapped TV distance {tv} too large"
+    );
+}
+
 fn coordinator_tv(workers: usize, seed: u64, rounds: u64) -> f64 {
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
@@ -297,7 +348,7 @@ fn coordinator_k3_matches_enumerated_posterior() {
 #[test]
 fn no_shuffle_ablation_is_biased() {
     // without the shuffle step data can never merge across superclusters:
-    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §9.
+    // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §10.
     let data = tiny_data();
     let model = BetaBernoulli::symmetric(D, BETA);
     let truth = exact_posterior(&data, &model);
