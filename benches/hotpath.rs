@@ -23,10 +23,12 @@ use clustercluster::bench::{
     bench, is_smoke, update_baseline, BaselineCase, BaselineEmitter, FigureEmitter,
 };
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
-use clustercluster::data::synthetic::SyntheticConfig;
-use clustercluster::data::BinMat;
+use clustercluster::data::synthetic::{
+    SyntheticCategoricalConfig, SyntheticConfig, SyntheticGaussianConfig,
+};
+use clustercluster::data::{BinMat, DataRef};
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::model::{ClusterStats, Model, ModelSpec};
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::{FallbackScorer, PjrtScorer, Scorer, ScorerKind};
 use clustercluster::sampler::{KernelKind, ScoreMode, Shard};
@@ -81,7 +83,7 @@ fn density_data(n: usize, d: usize, clusters: usize, density: f64, seed: u64) ->
 
 /// A shard planted at exactly `clusters` clusters (round-robin), so the
 /// measured sweeps run at a controlled J.
-fn planted_shard(data: &BinMat, clusters: usize, mode: ScoreMode, eager: bool) -> Shard {
+fn planted_shard(data: DataRef<'_>, clusters: usize, mode: ScoreMode, eager: bool) -> Shard {
     let rows: Vec<usize> = (0..data.rows()).collect();
     let assign: Vec<u32> = (0..data.rows()).map(|r| (r % clusters) as u32).collect();
     let mut sh = Shard::from_parts(data, rows, assign, Pcg64::seed_from(0xbead)).unwrap();
@@ -105,7 +107,7 @@ fn main() {
     let mut base = BaselineEmitter::new("hotpath_baseline", &provenance);
     let (bn, bd) = if smoke { (600usize, 64usize) } else { (2_000usize, 128usize) };
     let (warmup, iters) = if smoke { (1, 3) } else { (2, 8) };
-    let mut model_b = BetaBernoulli::symmetric(bd, 0.5);
+    let mut model_b = Model::bernoulli(bd, 0.5);
     model_b.build_lut(bn + 1);
     let modes: [(&str, ScoreMode, bool); 3] = [
         ("scalar", ScoreMode::Scalar, false),
@@ -126,7 +128,7 @@ fn main() {
             for &density in &[0.05f64, 0.5] {
                 let data = density_data(bn, bd, clusters, density, 0xd5eed);
                 for (mode_name, mode, eager) in modes.iter() {
-                    let mut sh = planted_shard(&data, clusters, *mode, *eager);
+                    let mut sh = planted_shard((&data).into(), clusters, *mode, *eager);
                     let r = bench(
                         &format!(
                             "sweep {} J={clusters} p={density:.2} {mode_name}",
@@ -135,7 +137,7 @@ fn main() {
                         warmup,
                         iters,
                         || {
-                            kernel.sweep(&mut sh, &data, &model_b);
+                            kernel.sweep(&mut sh, (&data).into(), &model_b);
                         },
                     );
                     base.case(BaselineCase {
@@ -168,6 +170,65 @@ fn main() {
             }
         }
     }
+    // --- likelihood model axis: sweep throughput per ComponentModel ---
+    //
+    // Collapsed-Gibbs sweeps at a planted J under each likelihood, scalar
+    // vs batched. Figure rows only — the committed baseline's regression
+    // keys stay the Bernoulli matrix above.
+    {
+        let (mn, md, mj) = if smoke {
+            (600usize, 32usize, 16usize)
+        } else {
+            (2_000usize, 64usize, 16usize)
+        };
+        let gauss = SyntheticGaussianConfig {
+            n: mn,
+            d: md,
+            clusters: mj,
+            spread: 3.0,
+            seed: 0x9a55,
+        }
+        .generate()
+        .0;
+        let cat = SyntheticCategoricalConfig {
+            n: mn,
+            d: md,
+            card: 6,
+            clusters: mj,
+            gamma: 0.5,
+            seed: 0xca7e,
+        }
+        .generate()
+        .0;
+        let axis: [(&str, DataRef<'_>, ModelSpec); 2] = [
+            ("gaussian", (&gauss).into(), ModelSpec::DEFAULT_GAUSSIAN),
+            ("categorical", (&cat).into(), ModelSpec::DEFAULT_CATEGORICAL),
+        ];
+        let kernel = KernelKind::CollapsedGibbs.kernel();
+        for (model_name, mdata, spec) in axis {
+            let mut model = spec.build(mdata, 0.5).unwrap();
+            model.build_lut(mn + 1);
+            for (mode_name, mode) in [
+                ("scalar", ScoreMode::Scalar),
+                ("batched", ScoreMode::Batched(ScorerKind::Fallback)),
+            ] {
+                let mut sh = planted_shard(mdata, mj, mode, false);
+                let r = bench(
+                    &format!("sweep gibbs {model_name} J={mj} {mode_name}"),
+                    warmup,
+                    iters,
+                    || {
+                        kernel.sweep(&mut sh, mdata, &model);
+                    },
+                );
+                fig.row(&[(
+                    format!("{model_name}_sweep_{mode_name}_rows_per_s").as_str(),
+                    mn as f64 / r.mean_s,
+                )]);
+            }
+        }
+    }
+
     // --- batched scoring: artifact vs fallback ---
     let (n, d, j) = if smoke {
         (64usize, 64usize, 128usize)
@@ -207,7 +268,7 @@ fn main() {
         seed: 2,
     }
     .generate_with_test_fraction(0.0);
-    let model = BetaBernoulli::symmetric(64, 0.5);
+    let model = Model::bernoulli(64, 0.5);
     let mut clusters: Vec<ClusterStats> = (0..16).map(|_| ClusterStats::empty(64)).collect();
     for r in 0..ds.train.rows() {
         clusters[r % 16].add(&ds.train, r);

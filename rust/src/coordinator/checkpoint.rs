@@ -1,9 +1,10 @@
 //! Checkpoint / resume for the coordinator: serialize the full latent
-//! state (per-supercluster row ownership + assignments, α, β, the μ
-//! granularity state, per-shard kernel assignment, round and time
-//! counters) to a versioned, checksummed binary file, and rebuild a
-//! running coordinator from it. Long VQ runs (the paper's Fig. 9 is a
-//! 32-CPU-day job) need this to survive restarts.
+//! state (per-supercluster row ownership + assignments, α, the model
+//! tag + sampled hyperparameters, the μ granularity state, per-shard
+//! kernel assignment, round and time counters) to a versioned,
+//! checksummed binary file, and rebuild a running coordinator from it.
+//! Long VQ runs (the paper's Fig. 9 is a 32-CPU-day job) need this to
+//! survive restarts.
 //!
 //! Cluster sufficient statistics are NOT stored — they are a pure
 //! function of (data, assignments) and are rebuilt on load, which keeps
@@ -13,15 +14,25 @@
 //! state, and a resume that silently reinitialized it uniform would
 //! *not* continue the same chain (`rust/tests/failure_injection.rs`
 //! pins this).
+//!
+//! The current format is `CCCKPT3`, which records which component
+//! likelihood the chain ran ([`crate::model::ModelSpec::tag`]) and its
+//! hyperparameter vector ([`crate::model::ComponentModel::hyper_vec`]).
+//! `CCCKPT2` files (written before the likelihood became selectable)
+//! are still read — they always meant Beta–Bernoulli, and their β
+//! vector IS the hyper vector — but saves always write v3. Resuming
+//! under a different `--model` than the checkpoint was written with is
+//! rejected, never silently reinterpreted.
 
 use super::{Coordinator, CoordinatorConfig, MuMode};
-use crate::data::BinMat;
+use crate::data::DataRef;
 use crate::rng::Pcg64;
 use crate::sampler::{KernelKind, Shard};
 use std::io::{Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 8] = b"CCCKPT2\n";
+const MAGIC: &[u8; 8] = b"CCCKPT3\n";
+const MAGIC_V2: &[u8; 8] = b"CCCKPT2\n";
 const MAGIC_V1: &[u8; 8] = b"CCCKPT1\n";
 
 fn mu_mode_to_tag(m: MuMode) -> (u64, f64) {
@@ -67,8 +78,14 @@ fn kernel_from_tag(tag: u64) -> Result<KernelKind, String> {
 pub struct Checkpoint {
     /// concentration α at capture time
     pub alpha: f64,
-    /// per-dimension base-measure hyperparameters β_d
-    pub beta: Vec<f64>,
+    /// which component likelihood the chain ran
+    /// ([`crate::model::ModelSpec::tag`]; resume must match)
+    pub model_tag: u64,
+    /// the model's hyperparameter vector at capture time
+    /// ([`crate::model::ComponentModel::hyper_vec`]): β_d for
+    /// Beta–Bernoulli (sampled state, bit-exact), the fixed NIG /
+    /// Dirichlet hypers otherwise (validated bit-equal on resume)
+    pub hyper: Vec<f64>,
     /// completed global rounds
     pub rounds: u64,
     /// cumulative modeled distributed wall-clock (s)
@@ -90,7 +107,8 @@ impl Checkpoint {
     pub fn capture(coord: &Coordinator<'_>) -> Checkpoint {
         Checkpoint {
             alpha: coord.alpha,
-            beta: coord.model.beta.clone(),
+            model_tag: coord.cfg.model.tag(),
+            hyper: coord.model.hyper_vec(),
             rounds: coord.rounds,
             modeled_time_s: coord.modeled_time_s,
             measured_time_s: coord.measured_time_s,
@@ -110,7 +128,7 @@ impl Checkpoint {
         }
     }
 
-    /// Persist to `path` in the checksummed `CCCKPT2` binary format.
+    /// Persist to `path` in the checksummed `CCCKPT3` binary format.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         let mut f = std::fs::File::create(path)?;
         let mut sum: u64 = 0;
@@ -120,8 +138,9 @@ impl Checkpoint {
         };
         f.write_all(MAGIC)?;
         w64(&mut f, self.alpha.to_bits(), &mut sum)?;
-        w64(&mut f, self.beta.len() as u64, &mut sum)?;
-        for &b in &self.beta {
+        w64(&mut f, self.model_tag, &mut sum)?;
+        w64(&mut f, self.hyper.len() as u64, &mut sum)?;
+        for &b in &self.hyper {
             w64(&mut f, b.to_bits(), &mut sum)?;
         }
         w64(&mut f, self.rounds, &mut sum)?;
@@ -148,8 +167,10 @@ impl Checkpoint {
         Ok(())
     }
 
-    /// Load and verify a `CCCKPT2` checkpoint (magic, structure,
-    /// checksum). Older `CCCKPT1` files (which carried no μ state) are
+    /// Load and verify a `CCCKPT3` checkpoint (magic, structure,
+    /// checksum). `CCCKPT2` files are read too — a v2 file always meant
+    /// Beta–Bernoulli (model tag 0), and its β vector is the hyper
+    /// vector. Older `CCCKPT1` files (which carried no μ state) are
     /// rejected explicitly rather than silently resumed with uniform μ.
     pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
         let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
@@ -162,8 +183,9 @@ impl Checkpoint {
                  re-run from scratch (resuming it would silently reset μ)",
             ));
         }
-        if &magic != MAGIC {
-            return Err(err("not a CCCKPT2 checkpoint"));
+        let v2 = &magic == MAGIC_V2;
+        if !v2 && &magic != MAGIC {
+            return Err(err("not a CCCKPT3 (or CCCKPT2) checkpoint"));
         }
         let mut sum: u64 = 0;
         let mut buf = [0u8; 8];
@@ -174,10 +196,14 @@ impl Checkpoint {
             Ok(x)
         };
         let alpha = f64::from_bits(r64(&mut f, &mut sum)?);
-        let nbeta = r64(&mut f, &mut sum)? as usize;
-        let mut beta = Vec::with_capacity(nbeta);
-        for _ in 0..nbeta {
-            beta.push(f64::from_bits(r64(&mut f, &mut sum)?));
+        // v3 inserts the model tag between α and the hyper vector; a v2
+        // file has no tag (implicitly Beta–Bernoulli) and its next field
+        // is the β length
+        let model_tag = if v2 { 0 } else { r64(&mut f, &mut sum)? };
+        let nhyper = r64(&mut f, &mut sum)? as usize;
+        let mut hyper = Vec::with_capacity(nhyper);
+        for _ in 0..nhyper {
+            hyper.push(f64::from_bits(r64(&mut f, &mut sum)?));
         }
         let rounds = r64(&mut f, &mut sum)?;
         let modeled_time_s = f64::from_bits(r64(&mut f, &mut sum)?);
@@ -211,7 +237,8 @@ impl Checkpoint {
         }
         Ok(Checkpoint {
             alpha,
-            beta,
+            model_tag,
+            hyper,
             rounds,
             modeled_time_s,
             measured_time_s,
@@ -232,15 +259,16 @@ impl<'a> Coordinator<'a> {
     /// Rebuild a coordinator from a checkpoint against the SAME dataset
     /// (sufficient statistics are recomputed from assignments; every
     /// shard is integrity-checked before the chain may continue). The
-    /// saved μ vector, granularity mode, and per-shard kernel assignment
-    /// must all be consistent with `cfg` — a mismatch is an error, never
-    /// a silent reconfiguration.
+    /// saved model tag, μ vector, granularity mode, and per-shard kernel
+    /// assignment must all be consistent with `cfg` — a mismatch is an
+    /// error, never a silent reconfiguration.
     pub fn resume(
-        data: &'a BinMat,
+        data: impl Into<DataRef<'a>>,
         cfg: CoordinatorConfig,
         ckpt: &Checkpoint,
         rng: &mut Pcg64,
     ) -> Result<Coordinator<'a>, String> {
+        let data = data.into();
         if ckpt.shards.len() != cfg.workers {
             return Err(format!(
                 "checkpoint has {} shards, config wants {} workers",
@@ -248,11 +276,12 @@ impl<'a> Coordinator<'a> {
                 cfg.workers
             ));
         }
-        if ckpt.beta.len() != data.dims() {
+        if ckpt.model_tag != cfg.model.tag() {
             return Err(format!(
-                "checkpoint β has {} dims, data has {}",
-                ckpt.beta.len(),
-                data.dims()
+                "checkpoint model tag {} does not match configured model {:?} (tag {})",
+                ckpt.model_tag,
+                cfg.model.name(),
+                cfg.model.tag()
             ));
         }
         if ckpt.mu_mode != cfg.mu_mode {
@@ -282,14 +311,18 @@ impl<'a> Coordinator<'a> {
                 ckpt.kernels, want_kernels
             ));
         }
+        // kind-check the model/data pairing up front: `Coordinator::new`
+        // panics on it, and resume must return Err instead
+        cfg.model.build(data, cfg.init_beta)?;
         let mut coord = Coordinator::new(data, cfg, rng);
         // restore the granularity state: a resumed SizeProportional or
         // Adaptive run must continue from the saved μ, not restart uniform
         coord.mu = ckpt.mu.clone();
         coord.alpha = ckpt.alpha;
-        coord.model.beta = ckpt.beta.clone();
-        // build_lut handles the asymmetric-β case itself (clears the LUT)
-        coord.model.build_lut(data.rows() + 1);
+        // restore the sampled hypers (Bernoulli β; fixed-hyper models
+        // validate bit-equality) — the LUT rebuild runs inside, handling
+        // the asymmetric-β case itself (clears the LUT)
+        coord.model.restore_hyper(&ckpt.hyper, data.rows() + 1)?;
         coord.rounds = ckpt.rounds;
         coord.modeled_time_s = ckpt.modeled_time_s;
         coord.measured_time_s = ckpt.measured_time_s;

@@ -56,14 +56,15 @@
 
 pub mod checkpoint;
 
-use crate::data::BinMat;
+use crate::data::DataRef;
 use crate::mapreduce::{
     finish_round, finish_round_overlapped, CommModel, MapReduce, RoundStats,
 };
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
-use crate::model::BetaBernoulli;
+use crate::model::{Model, ModelSpec};
 use crate::rng::Pcg64;
+use crate::special::logsumexp;
 use crate::runtime::Scorer;
 use crate::sampler::{KernelKind, ScoreMode, Shard};
 use crate::supercluster::{
@@ -285,6 +286,9 @@ pub struct CoordinatorConfig {
     /// grant is a deterministic function of pre-round resident row
     /// counts, so the kernel composition stays reproducible and valid
     pub max_bonus_sweeps: usize,
+    /// component likelihood (`--model`); must match the data kind
+    /// handed to [`Coordinator::new`] (see [`ModelSpec::build`])
+    pub model: ModelSpec,
 }
 
 impl Default for CoordinatorConfig {
@@ -307,6 +311,7 @@ impl Default for CoordinatorConfig {
             parallelism: 1,
             overlap: false,
             max_bonus_sweeps: 2,
+            model: ModelSpec::Bernoulli,
         }
     }
 }
@@ -346,9 +351,10 @@ type StagedMove = (crate::model::ClusterStats, Vec<usize>, usize);
 
 /// The distributed sampler state: K supercluster shards + global hypers.
 pub struct Coordinator<'a> {
-    data: &'a BinMat,
-    /// collapsed Beta–Bernoulli base measure (shared read-only by shards)
-    pub model: BetaBernoulli,
+    data: DataRef<'a>,
+    /// collapsed component likelihood (Beta–Bernoulli by default — see
+    /// [`CoordinatorConfig::model`]; shared read-only by shards)
+    pub model: Model,
     /// current concentration α
     pub alpha: f64,
     mu: Vec<f64>,
@@ -411,14 +417,20 @@ impl<'a> Coordinator<'a> {
     /// # Panics
     ///
     /// Panics on an invalid configuration: `workers == 0`,
-    /// `local_sweeps == 0`, or a [`KernelAssignment`] that does not
+    /// `local_sweeps == 0`, a [`KernelAssignment`] that does not
     /// resolve to `workers` kernels (e.g. a `PerShard` list of the
-    /// wrong length). Validate with
-    /// [`KernelAssignment::resolve`] first for a recoverable error —
-    /// [`Coordinator::resume`] does exactly that and returns `Err`
-    /// instead.
-    pub fn new(data: &'a BinMat, cfg: CoordinatorConfig, rng: &mut Pcg64) -> Self {
+    /// wrong length), or a [`CoordinatorConfig::model`] that does not
+    /// match the data kind. Validate with
+    /// [`KernelAssignment::resolve`] / [`ModelSpec::build`] first for a
+    /// recoverable error — [`Coordinator::resume`] does exactly that
+    /// and returns `Err` instead.
+    pub fn new(
+        data: impl Into<DataRef<'a>>,
+        cfg: CoordinatorConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
         assert!(cfg.workers >= 1 && cfg.local_sweeps >= 1);
+        let data = data.into();
         let k = cfg.workers;
         // every mode starts uniform: SizeProportional/Adaptive evolve μ
         // from there via their (exactness-preserving) per-round updates
@@ -427,8 +439,12 @@ impl<'a> Coordinator<'a> {
             .kernel_assignment
             .resolve(k)
             .unwrap_or_else(|e| panic!("kernel assignment invalid: {e}"));
-        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
-        // symmetric-beta fast-rebuild LUT for the kernel hot loop (perf)
+        let mut model = cfg
+            .model
+            .build(data, cfg.init_beta)
+            .unwrap_or_else(|e| panic!("Coordinator: {e}"));
+        // symmetric-beta fast-rebuild LUT for the kernel hot loop (perf;
+        // no-op for the non-Bernoulli likelihoods)
         model.build_lut(data.rows() + 1);
 
         // uniform random data → supercluster assignment
@@ -702,13 +718,16 @@ impl<'a> Coordinator<'a> {
                 &self.cfg.alpha_prior,
             );
         }
-        if self.cfg.update_beta {
-            bytes += total_j * (8 + 4 * self.model.d as u64);
+        // griddy-Gibbs β is a Beta–Bernoulli move: a silent no-op for
+        // the fixed-hyper likelihoods (mirrors SerialGibbs::update_beta)
+        if self.cfg.update_beta && matches!(self.model, Model::Bernoulli(_)) {
+            let d_total = self.model.as_bernoulli().d;
+            bytes += total_j * (8 + 4 * d_total as u64);
             let mut stats: Vec<(u64, u32)> = Vec::new();
             // persistent scratch instead of a per-round β clone
             self.beta_scratch.clear();
-            self.beta_scratch.extend_from_slice(&self.model.beta);
-            for d in 0..self.model.d {
+            self.beta_scratch.extend_from_slice(&self.model.as_bernoulli().beta);
+            for d in 0..d_total {
                 stats.clear();
                 for st in states.iter() {
                     st.collect_dim_stats(d, &mut stats);
@@ -717,12 +736,13 @@ impl<'a> Coordinator<'a> {
             }
             // only touch the LUT / score caches when some β_d moved;
             // a still-symmetric refresh retargets the LUT in place
-            if self.model.update_betas(&self.beta_scratch, self.data.rows() + 1) {
+            let n_max = self.data.rows() + 1;
+            if self.model.as_bernoulli_mut().update_betas(&self.beta_scratch, n_max) {
                 for st in states.iter_mut() {
                     st.invalidate_caches();
                 }
             }
-            bytes += 8 * self.model.d as u64; // broadcast β
+            bytes += 8 * d_total as u64; // broadcast β
         }
         // μ granularity update (DESIGN.md §6). Skipped at K=1, where μ is
         // degenerate at [1]: this also keeps the master stream consumption
@@ -864,7 +884,7 @@ impl<'a> Coordinator<'a> {
                 // moving a cluster ships its parameters/stats and the
                 // member row ids (the paper: "communicating a set of data
                 // indices and one set of component parameters")
-                bytes += 8 + 4 * self.model.d as u64 + 8 * rows.len() as u64;
+                bytes += 8 + 4 * self.model.stat_dims() as u64 + 8 * rows.len() as u64;
             }
             staged.push((stats, rows, kk_new));
         }
@@ -960,18 +980,42 @@ impl<'a> Coordinator<'a> {
         self.states.iter().flat_map(|s| s.clusters()).collect()
     }
 
-    /// Mean test-set predictive log-likelihood per datum, computed through
-    /// a [`Scorer`] (the PJRT artifact on the production path; the pure-
-    /// Rust fallback in tests). The packed `[D, J]` weight matrices are
+    /// Mean test-set predictive log-likelihood per datum.
+    ///
+    /// Under the Beta–Bernoulli likelihood this goes through a
+    /// [`Scorer`] (the PJRT artifact on the production path; the pure-
+    /// Rust fallback in tests): the packed `[D, J]` weight matrices are
     /// exported per shard by [`crate::sampler::ClusterSet`] — the same
     /// layout the sweep-side batched path scores through — into
     /// persistent coordinator-owned buffers, so per-round evaluation
     /// re-allocates nothing (every `[D, J+1]` cell is rewritten each
-    /// call; stale capacity is never read).
-    pub fn predictive_loglik(&mut self, test: &BinMat, scorer: &mut dyn Scorer) -> f64 {
+    /// call; stale capacity is never read). The other likelihoods take
+    /// the scalar f64 log-sum-exp path through
+    /// [`Shard::score_against_all`] (the f32 weight-matrix export is
+    /// Bernoulli-specific).
+    pub fn predictive_loglik<'b>(
+        &mut self,
+        test: impl Into<DataRef<'b>>,
+        scorer: &mut dyn Scorer,
+    ) -> f64 {
+        let test = test.into();
         let n_total = self.data.rows() as f64 + self.alpha;
+        if !matches!(self.model, Model::Bernoulli(_)) {
+            let mut acc = 0.0;
+            let mut terms: Vec<f64> = Vec::new();
+            for r in 0..test.rows() {
+                terms.clear();
+                for st in &mut self.states {
+                    st.score_against_all(&self.model, test, r, n_total, &mut terms);
+                }
+                terms.push((self.alpha / n_total).ln() + self.model.log_pred_empty(test, r));
+                acc += logsumexp(&terms);
+            }
+            return acc / test.rows() as f64;
+        }
+        let test = test.bits().expect("bernoulli model requires binary data");
         let j: usize = self.states.iter().map(|s| s.num_clusters()).sum();
-        let d = self.model.d;
+        let d = self.model.as_bernoulli().d;
         // weight matrices [D, J+1]: J extant clusters + the fresh cluster
         let jj = j + 1;
         self.pl_w1.resize(d * jj, 0.0);
@@ -980,7 +1024,7 @@ impl<'a> Coordinator<'a> {
         let mut col = 0usize;
         for st in &self.states {
             col = st.cluster_set().export_weight_columns(
-                &self.model,
+                self.model.as_bernoulli(),
                 n_total,
                 &mut self.pl_w1,
                 &mut self.pl_w0,

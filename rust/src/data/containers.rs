@@ -1,0 +1,327 @@
+//! Non-binary data containers and the [`DataRef`] view that makes the
+//! sampler stack likelihood-generic.
+//!
+//! * [`RealMat`] — dense row-major `f64` matrix for the collapsed
+//!   Gaussian (diagonal Normal–Inverse-Gamma) likelihood.
+//! * [`CatMat`] — categorical codes with per-dim cardinalities, stored
+//!   as a one-hot [`BinMat`] so categorical sufficient statistics and
+//!   packed-table scoring ride the existing bit-sparse fast path
+//!   unchanged (one set bit per dim per row).
+//! * [`DataRef`] — a `Copy` borrowed view over any of the three
+//!   containers. Kernels, shards and cluster stores take `DataRef` (or
+//!   `impl Into<DataRef>`), so the Bernoulli call sites that pass
+//!   `&BinMat` compile unchanged while the same code path serves
+//!   Gaussian and categorical data.
+
+use super::binmat::BinMat;
+
+/// Dense row-major real-valued matrix (N rows × D dims).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealMat {
+    n: usize,
+    d: usize,
+    vals: Vec<f64>,
+}
+
+impl RealMat {
+    /// All-zeros matrix of `n` rows × `d` real dims.
+    pub fn zeros(n: usize, d: usize) -> RealMat {
+        RealMat {
+            n,
+            d,
+            vals: vec![0.0; n * d],
+        }
+    }
+
+    /// Build from a dense row-major value buffer.
+    pub fn from_dense(n: usize, d: usize, vals: Vec<f64>) -> RealMat {
+        assert_eq!(vals.len(), n * d, "dense buffer must be n*d");
+        RealMat { n, d, vals }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Number of real dimensions.
+    pub fn dims(&self) -> usize {
+        self.d
+    }
+
+    /// Value at (row, dim).
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.n && c < self.d);
+        self.vals[r * self.d + c]
+    }
+
+    /// Set the value at (row, dim).
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.n && c < self.d);
+        self.vals[r * self.d + c] = v;
+    }
+
+    /// Row `r` as a contiguous slice (the per-datum hot-path view).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.vals[r * self.d..(r + 1) * self.d]
+    }
+
+    /// Raw values (for IO).
+    pub fn values(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Copy a subset of rows into a new matrix (supercluster shards).
+    pub fn select_rows(&self, rows: &[usize]) -> RealMat {
+        let mut out = RealMat::zeros(rows.len(), self.d);
+        for (i, &r) in rows.iter().enumerate() {
+            out.vals[i * self.d..(i + 1) * self.d].copy_from_slice(self.row(r));
+        }
+        out
+    }
+}
+
+/// Categorical data: N rows × D dims, dim `d` taking values in
+/// `0..cards[d]`. Stored one-hot: column block `offsets[d]..offsets[d+1]`
+/// of the inner [`BinMat`] holds the indicator of dim `d`, so every row
+/// has exactly D set bits and the bit-sparse scoring path applies as-is.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CatMat {
+    cards: Vec<u32>,
+    /// prefix sums of `cards`; `offsets[d]` is the first one-hot column
+    /// of dim `d`, `offsets[D]` the total one-hot width W = Σ V_d
+    offsets: Vec<u32>,
+    onehot: BinMat,
+}
+
+impl CatMat {
+    /// Build from per-row category codes (row-major, `codes[r*D + d] <
+    /// cards[d]`).
+    pub fn from_codes(n: usize, cards: &[u32], codes: &[u32]) -> CatMat {
+        let d = cards.len();
+        assert!(d >= 1, "need at least one categorical dim");
+        assert!(cards.iter().all(|&v| v >= 2), "cardinalities must be >= 2");
+        assert_eq!(codes.len(), n * d, "codes must be n*D");
+        let mut offsets = Vec::with_capacity(d + 1);
+        let mut acc = 0u32;
+        for &v in cards {
+            offsets.push(acc);
+            acc += v;
+        }
+        offsets.push(acc);
+        let mut onehot = BinMat::zeros(n, acc as usize);
+        for r in 0..n {
+            for (dim, &v) in cards.iter().enumerate() {
+                let code = codes[r * d + dim];
+                assert!(code < v, "code {code} out of range for dim {dim} (V={v})");
+                onehot.set(r, (offsets[dim] + code) as usize, true);
+            }
+        }
+        CatMat {
+            cards: cards.to_vec(),
+            offsets,
+            onehot,
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.onehot.rows()
+    }
+
+    /// Number of categorical dimensions D (not the one-hot width).
+    pub fn dims(&self) -> usize {
+        self.cards.len()
+    }
+
+    /// Per-dim cardinalities V_d.
+    pub fn cards(&self) -> &[u32] {
+        &self.cards
+    }
+
+    /// One-hot column offsets (len D+1; `offsets[D]` = width).
+    pub fn offsets(&self) -> &[u32] {
+        &self.offsets
+    }
+
+    /// Total one-hot width W = Σ V_d — the sufficient-statistic width.
+    pub fn width(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    /// Category code of (row, dim).
+    pub fn get(&self, r: usize, dim: usize) -> u32 {
+        let lo = self.offsets[dim];
+        let hi = self.offsets[dim + 1];
+        for c in lo..hi {
+            if self.onehot.get(r, c as usize) {
+                return c - lo;
+            }
+        }
+        unreachable!("CatMat row {r} has no set bit in dim {dim}");
+    }
+
+    /// The one-hot view (what sufficient stats and packed tables see).
+    pub fn onehot(&self) -> &BinMat {
+        &self.onehot
+    }
+
+    /// Copy a subset of rows into a new matrix (supercluster shards).
+    pub fn select_rows(&self, rows: &[usize]) -> CatMat {
+        CatMat {
+            cards: self.cards.clone(),
+            offsets: self.offsets.clone(),
+            onehot: self.onehot.select_rows(rows),
+        }
+    }
+}
+
+/// Borrowed view over any supported data container. `Copy`, so it is
+/// passed by value through the kernel and scoring layers.
+///
+/// The three accessor groups encode what each likelihood needs:
+/// [`DataRef::bits`] yields the bit matrix for the sparse scoring path
+/// (native bits for Bernoulli, one-hot bits for categorical),
+/// [`DataRef::real`] the dense rows for the Gaussian path.
+#[derive(Debug, Clone, Copy)]
+pub enum DataRef<'a> {
+    /// Binary data (Beta–Bernoulli likelihood).
+    Binary(&'a BinMat),
+    /// Categorical data (Dirichlet–multinomial likelihood).
+    Categorical(&'a CatMat),
+    /// Real-valued data (collapsed diagonal Gaussian likelihood).
+    Real(&'a RealMat),
+}
+
+impl<'a> DataRef<'a> {
+    /// Number of rows.
+    pub fn rows(self) -> usize {
+        match self {
+            DataRef::Binary(m) => m.rows(),
+            DataRef::Categorical(m) => m.rows(),
+            DataRef::Real(m) => m.rows(),
+        }
+    }
+
+    /// Sufficient-statistic width: the length of the per-cluster count /
+    /// moment vectors (`D` binary, one-hot `W = Σ V_d` categorical, `D`
+    /// real).
+    pub fn dims(self) -> usize {
+        match self {
+            DataRef::Binary(m) => m.dims(),
+            DataRef::Categorical(m) => m.width(),
+            DataRef::Real(m) => m.dims(),
+        }
+    }
+
+    /// Packed-table rows per cluster column: `D` binary, `W` categorical,
+    /// `2D` real (a location plane and a scale plane — see
+    /// `model::DiagGaussian`). Keyed on the data kind alone so shard
+    /// construction needs no model handle.
+    pub fn table_rows(self) -> usize {
+        match self {
+            DataRef::Binary(m) => m.dims(),
+            DataRef::Categorical(m) => m.width(),
+            DataRef::Real(m) => 2 * m.dims(),
+        }
+    }
+
+    /// The bit matrix backing the sparse scoring path, if this data kind
+    /// has one (binary: the matrix itself; categorical: the one-hot
+    /// expansion; real: `None`).
+    pub fn bits(self) -> Option<&'a BinMat> {
+        match self {
+            DataRef::Binary(m) => Some(m),
+            DataRef::Categorical(m) => Some(m.onehot()),
+            DataRef::Real(_) => None,
+        }
+    }
+
+    /// The dense real matrix, if this is real-valued data.
+    pub fn real(self) -> Option<&'a RealMat> {
+        match self {
+            DataRef::Real(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Short human-readable kind name (error messages, CLI banners).
+    pub fn kind_name(self) -> &'static str {
+        match self {
+            DataRef::Binary(_) => "binary",
+            DataRef::Categorical(_) => "categorical",
+            DataRef::Real(_) => "real",
+        }
+    }
+}
+
+impl<'a> From<&'a BinMat> for DataRef<'a> {
+    fn from(m: &'a BinMat) -> Self {
+        DataRef::Binary(m)
+    }
+}
+
+impl<'a> From<&'a CatMat> for DataRef<'a> {
+    fn from(m: &'a CatMat) -> Self {
+        DataRef::Categorical(m)
+    }
+}
+
+impl<'a> From<&'a RealMat> for DataRef<'a> {
+    fn from(m: &'a RealMat) -> Self {
+        DataRef::Real(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn realmat_rows_and_select() {
+        let m = RealMat::from_dense(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.get(2, 1), 6.0);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.row(0), &[5.0, 6.0]);
+        assert_eq!(s.row(1), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn catmat_onehot_layout_and_roundtrip() {
+        // D=2 dims with cards [3, 2]; W = 5
+        let codes = [2u32, 0, 1, 1, 0, 1];
+        let m = CatMat::from_codes(3, &[3, 2], &codes);
+        assert_eq!(m.width(), 5);
+        assert_eq!(m.offsets(), &[0, 3, 5]);
+        for r in 0..3 {
+            for d in 0..2 {
+                assert_eq!(m.get(r, d), codes[r * 2 + d], "({r},{d})");
+            }
+            // exactly one bit per dim
+            assert_eq!(m.onehot().row_popcount(r), 2);
+        }
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.get(0, 0), 1);
+        assert_eq!(s.get(0, 1), 1);
+    }
+
+    #[test]
+    fn dataref_widths_per_kind() {
+        let b = BinMat::zeros(4, 7);
+        let c = CatMat::from_codes(2, &[3, 2], &[0, 0, 1, 1]);
+        let r = RealMat::zeros(5, 3);
+        let db: DataRef = (&b).into();
+        let dc: DataRef = (&c).into();
+        let dr: DataRef = (&r).into();
+        assert_eq!((db.rows(), db.dims(), db.table_rows()), (4, 7, 7));
+        assert_eq!((dc.rows(), dc.dims(), dc.table_rows()), (2, 5, 5));
+        assert_eq!((dr.rows(), dr.dims(), dr.table_rows()), (5, 3, 6));
+        assert!(db.bits().is_some() && dc.bits().is_some() && dr.bits().is_none());
+        assert!(dr.real().is_some() && db.real().is_none());
+        assert_eq!(dc.bits().unwrap().dims(), 5);
+    }
+}

@@ -3,10 +3,13 @@
 //! serde in the offline universe); format is versioned and checksummed.
 
 use super::binmat::BinMat;
+use super::containers::{CatMat, RealMat};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CCBIN01\n";
+const MAGIC_REAL: &[u8; 8] = b"CCREAL1\n";
+const MAGIC_CAT: &[u8; 8] = b"CCCAT01\n";
 
 /// Write a BinMat (+ optional labels) to `path`.
 pub fn save_binmat(path: &Path, m: &BinMat, labels: Option<&[u32]>) -> std::io::Result<()> {
@@ -83,6 +86,127 @@ pub fn load_binmat(path: &Path) -> std::io::Result<(BinMat, Option<Vec<u32>>)> {
     Ok((BinMat::from_words(n, d, words), labels))
 }
 
+/// Write a [`RealMat`] to `path` (CCREAL1: dims + f64 bit-patterns +
+/// wrapping checksum, mirroring the CCBIN01 layout).
+pub fn save_realmat(path: &Path, m: &RealMat) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC_REAL)?;
+    f.write_all(&(m.rows() as u64).to_le_bytes())?;
+    f.write_all(&(m.dims() as u64).to_le_bytes())?;
+    let mut sum: u64 = 0;
+    for &v in m.values() {
+        sum = sum.wrapping_add(v.to_bits());
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.write_all(&sum.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a [`RealMat`] previously written by [`save_realmat`].
+pub fn load_realmat(path: &Path) -> std::io::Result<RealMat> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC_REAL {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic: not a CCREAL1 file",
+        ));
+    }
+    let mut buf = [0u8; 8];
+    f.read_exact(&mut buf)?;
+    let n = u64::from_le_bytes(buf) as usize;
+    f.read_exact(&mut buf)?;
+    let d = u64::from_le_bytes(buf) as usize;
+    let mut vals = Vec::with_capacity(n * d);
+    let mut sum: u64 = 0;
+    for _ in 0..n * d {
+        f.read_exact(&mut buf)?;
+        let v = f64::from_le_bytes(buf);
+        sum = sum.wrapping_add(v.to_bits());
+        vals.push(v);
+    }
+    f.read_exact(&mut buf)?;
+    if u64::from_le_bytes(buf) != sum {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "checksum mismatch: corrupt real dataset file",
+        ));
+    }
+    Ok(RealMat::from_dense(n, d, vals))
+}
+
+/// Write a [`CatMat`] to `path` (CCCAT01: cardinalities + row-major
+/// category codes + wrapping checksum).
+pub fn save_catmat(path: &Path, m: &CatMat) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(MAGIC_CAT)?;
+    f.write_all(&(m.rows() as u64).to_le_bytes())?;
+    f.write_all(&(m.dims() as u64).to_le_bytes())?;
+    let mut sum: u64 = 0;
+    for &v in m.cards() {
+        sum = sum.wrapping_add(v as u64);
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for r in 0..m.rows() {
+        for dim in 0..m.dims() {
+            let code = m.get(r, dim);
+            sum = sum.wrapping_add(code as u64);
+            f.write_all(&code.to_le_bytes())?;
+        }
+    }
+    f.write_all(&sum.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a [`CatMat`] previously written by [`save_catmat`].
+pub fn load_catmat(path: &Path) -> std::io::Result<CatMat> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC_CAT {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic: not a CCCAT01 file",
+        ));
+    }
+    let mut buf = [0u8; 8];
+    f.read_exact(&mut buf)?;
+    let n = u64::from_le_bytes(buf) as usize;
+    f.read_exact(&mut buf)?;
+    let d = u64::from_le_bytes(buf) as usize;
+    let mut b4 = [0u8; 4];
+    let mut sum: u64 = 0;
+    let mut cards = Vec::with_capacity(d);
+    for _ in 0..d {
+        f.read_exact(&mut b4)?;
+        let v = u32::from_le_bytes(b4);
+        sum = sum.wrapping_add(v as u64);
+        cards.push(v);
+    }
+    let mut codes = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        f.read_exact(&mut b4)?;
+        let v = u32::from_le_bytes(b4);
+        sum = sum.wrapping_add(v as u64);
+        codes.push(v);
+    }
+    f.read_exact(&mut buf)?;
+    if u64::from_le_bytes(buf) != sum {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "checksum mismatch: corrupt categorical dataset file",
+        ));
+    }
+    if cards.iter().any(|&v| v < 2) || codes.iter().enumerate().any(|(i, &c)| c >= cards[i % d]) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "invalid categorical file: code out of range",
+        ));
+    }
+    Ok(CatMat::from_codes(n, &cards, &codes))
+}
+
 /// Append-style CSV writer for metric traces.
 pub struct CsvWriter {
     file: std::fs::File,
@@ -155,6 +279,38 @@ mod tests {
         let path = dir.join("bad_magic.ccbin");
         std::fs::write(&path, b"NOTMAGIC plus some garbage").unwrap();
         assert!(load_binmat(&path).is_err());
+    }
+
+    #[test]
+    fn realmat_roundtrip_and_corruption() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ccreal");
+        let mut rng = Pcg64::seed_from(2);
+        let vals: Vec<f64> = (0..5 * 3).map(|_| rng.next_f64() * 10.0 - 5.0).collect();
+        let m = crate::data::RealMat::from_dense(5, 3, vals);
+        save_realmat(&path, &m).unwrap();
+        assert_eq!(load_realmat(&path).unwrap(), m);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_realmat(&path).is_err());
+    }
+
+    #[test]
+    fn catmat_roundtrip_and_wrong_magic() {
+        let dir = std::env::temp_dir().join("cc_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.cccat");
+        let m = crate::data::CatMat::from_codes(3, &[3, 2], &[2, 0, 1, 1, 0, 1]);
+        save_catmat(&path, &m).unwrap();
+        assert_eq!(load_catmat(&path).unwrap(), m);
+        // a binary file must be rejected by magic, and vice versa
+        let bpath = dir.join("as_bin.ccbin");
+        save_binmat(&bpath, &BinMat::zeros(2, 4), None).unwrap();
+        assert!(load_catmat(&bpath).is_err());
+        assert!(load_realmat(&path).is_err());
     }
 
     #[test]

@@ -1,13 +1,19 @@
 //! Data substrate: the bit-packed binary matrix the samplers operate on,
-//! the paper's synthetic balanced Beta–Bernoulli mixture generator (§6),
-//! the Tiny-Images substitute pipeline (synthetic corpus → randomized PCA
-//! → per-component median binarization, §6), and dataset (de)serialization.
+//! real-valued and categorical containers behind the likelihood-generic
+//! [`DataRef`] view, the paper's synthetic balanced Beta–Bernoulli
+//! mixture generator (§6) plus Gaussian/categorical counterparts, the
+//! Tiny-Images substitute pipeline (synthetic corpus → randomized PCA →
+//! per-component median binarization, §6), and dataset (de)serialization.
 
 pub mod binmat;
+pub mod containers;
 pub mod io;
 pub mod rpca;
 pub mod synthetic;
 pub mod tinyimages;
 
 pub use binmat::BinMat;
-pub use synthetic::{Dataset, SyntheticConfig};
+pub use containers::{CatMat, DataRef, RealMat};
+pub use synthetic::{
+    Dataset, SyntheticCategoricalConfig, SyntheticConfig, SyntheticGaussianConfig,
+};

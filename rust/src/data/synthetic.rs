@@ -8,7 +8,8 @@
 //! in the benches, full-scale behind flags).
 
 use super::binmat::BinMat;
-use crate::rng::{beta, Pcg64};
+use super::containers::{CatMat, RealMat};
+use crate::rng::{beta, categorical, dirichlet, normal, Pcg64};
 
 /// Configuration for a balanced synthetic mixture.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -149,6 +150,87 @@ impl Dataset {
     }
 }
 
+/// Balanced Gaussian mixture generator for the real-valued workload:
+/// component means drawn `N(0, spread²)` per dim, unit observation
+/// noise. The density-estimation analogue of [`SyntheticConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyntheticGaussianConfig {
+    /// total number of rows (split evenly over clusters)
+    pub n: usize,
+    /// real dimensionality
+    pub d: usize,
+    /// number of true mixture components
+    pub clusters: usize,
+    /// std-dev of the component means (large ⇒ well-separated clusters)
+    pub spread: f64,
+    /// master RNG seed
+    pub seed: u64,
+}
+
+impl SyntheticGaussianConfig {
+    /// Generate the data matrix and ground-truth assignments.
+    pub fn generate(&self) -> (RealMat, Vec<u32>) {
+        assert!(self.clusters >= 1 && self.d >= 1 && self.n >= self.clusters);
+        let mut rng = Pcg64::new(self.seed, 0x6a55);
+        let means: Vec<Vec<f64>> = (0..self.clusters)
+            .map(|_| (0..self.d).map(|_| self.spread * normal(&mut rng)).collect())
+            .collect();
+        let mut z: Vec<u32> = (0..self.n).map(|i| (i % self.clusters) as u32).collect();
+        rng.shuffle(&mut z);
+        let mut m = RealMat::zeros(self.n, self.d);
+        for (r, &k) in z.iter().enumerate() {
+            for (dim, &mu) in means[k as usize].iter().enumerate() {
+                m.set(r, dim, mu + normal(&mut rng));
+            }
+        }
+        (m, z)
+    }
+}
+
+/// Balanced categorical mixture generator: per-component category
+/// distributions drawn `Dirichlet(γ·1)` per dim. The NLP-flavored
+/// analogue of [`SyntheticConfig`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyntheticCategoricalConfig {
+    /// total number of rows (split evenly over clusters)
+    pub n: usize,
+    /// number of categorical dims
+    pub d: usize,
+    /// cardinality shared by every dim
+    pub card: u32,
+    /// number of true mixture components
+    pub clusters: usize,
+    /// symmetric Dirichlet concentration for the per-component category
+    /// distributions (small γ ⇒ peaked ⇒ well-separated clusters)
+    pub gamma: f64,
+    /// master RNG seed
+    pub seed: u64,
+}
+
+impl SyntheticCategoricalConfig {
+    /// Generate the data matrix and ground-truth assignments.
+    pub fn generate(&self) -> (CatMat, Vec<u32>) {
+        assert!(self.clusters >= 1 && self.d >= 1 && self.card >= 2);
+        assert!(self.n >= self.clusters);
+        let mut rng = Pcg64::new(self.seed, 0xca7);
+        let alphas = vec![self.gamma; self.card as usize];
+        let dists: Vec<Vec<Vec<f64>>> = (0..self.clusters)
+            .map(|_| (0..self.d).map(|_| dirichlet(&mut rng, &alphas)).collect())
+            .collect();
+        let mut z: Vec<u32> = (0..self.n).map(|i| (i % self.clusters) as u32).collect();
+        rng.shuffle(&mut z);
+        let cards = vec![self.card; self.d];
+        let mut codes = vec![0u32; self.n * self.d];
+        for (r, &k) in z.iter().enumerate() {
+            for dim in 0..self.d {
+                codes[r * self.d + dim] =
+                    categorical(&mut rng, &dists[k as usize][dim]) as u32;
+            }
+        }
+        (CatMat::from_codes(self.n, &cards, &codes), z)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +297,49 @@ mod tests {
         let same = (1..200).find(|&i| z[i] == z[0]).unwrap();
         let diff = (1..200).find(|&i| z[i] != z[0]).unwrap();
         assert!(ham(0, same) + 5 < ham(0, diff), "{} vs {}", ham(0, same), ham(0, diff));
+    }
+
+    #[test]
+    fn gaussian_generator_shapes_and_separation() {
+        let cfg = SyntheticGaussianConfig {
+            n: 120,
+            d: 4,
+            clusters: 3,
+            spread: 10.0,
+            seed: 5,
+        };
+        let (m, z) = cfg.generate();
+        assert_eq!(m.rows(), 120);
+        assert_eq!(m.dims(), 4);
+        assert_eq!(z.len(), 120);
+        // well-separated means: same-cluster rows are closer than
+        // different-cluster rows
+        let dist = |a: usize, b: usize| -> f64 {
+            (0..4).map(|d| (m.get(a, d) - m.get(b, d)).powi(2)).sum()
+        };
+        let same = (1..120).find(|&i| z[i] == z[0]).unwrap();
+        let diff = (1..120).find(|&i| z[i] != z[0]).unwrap();
+        assert!(dist(0, same) < dist(0, diff), "{} vs {}", dist(0, same), dist(0, diff));
+    }
+
+    #[test]
+    fn categorical_generator_shapes_and_determinism() {
+        let cfg = SyntheticCategoricalConfig {
+            n: 60,
+            d: 5,
+            card: 4,
+            clusters: 3,
+            gamma: 0.2,
+            seed: 9,
+        };
+        let (m, z) = cfg.generate();
+        assert_eq!(m.rows(), 60);
+        assert_eq!(m.dims(), 5);
+        assert_eq!(m.width(), 20);
+        assert_eq!(z.len(), 60);
+        let (m2, z2) = cfg.generate();
+        assert_eq!(m, m2);
+        assert_eq!(z, z2);
     }
 
     #[test]

@@ -42,6 +42,17 @@
 //! ship: collapsed Gibbs, Walker slice, and the Jain–Neal split–merge
 //! composites ([`sampler::SplitMerge`]; selection guide in DESIGN.md §7).
 //!
+//! ## Component likelihoods
+//!
+//! The sampler core is likelihood-generic over [`model::ComponentModel`]
+//! (DESIGN.md §11): collapsed Beta–Bernoulli on bit-packed binary data,
+//! collapsed diagonal Gaussian (Normal–Inverse-Gamma) on real data, and
+//! Dirichlet–multinomial on categorical data, selected at the CLI with
+//! `--model bernoulli|gaussian|categorical` ([`model::ModelSpec`]). Both
+//! entry points and every kernel run against [`model::Model`] through
+//! one [`data::DataRef`] view; the 203-partition enumeration gates hold
+//! for all three likelihoods.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -87,7 +98,7 @@ pub mod prelude {
     pub use crate::coordinator::{Coordinator, CoordinatorConfig, MuMode, ShardRoundStat};
     pub use crate::data::synthetic::{Dataset, SyntheticConfig};
     pub use crate::metrics::{ShardTrace, ShardTraceRow};
-    pub use crate::model::{BetaBernoulli, ClusterStats};
+    pub use crate::model::{BetaBernoulli, ClusterStats, ComponentModel, Model, ModelSpec};
     pub use crate::rng::Pcg64;
     pub use crate::runtime::{FallbackScorer, Scorer, ScorerKind};
     pub use crate::sampler::{

@@ -12,9 +12,13 @@ use clustercluster::coordinator::{
     Checkpoint, Coordinator, CoordinatorConfig, KernelAssignment, MuMode,
 };
 use clustercluster::data::io::save_binmat;
-use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::synthetic::{
+    Dataset, SyntheticCategoricalConfig, SyntheticConfig, SyntheticGaussianConfig,
+};
 use clustercluster::data::tinyimages::{generate as gen_tiny, TinyImagesConfig};
+use clustercluster::data::{CatMat, DataRef, RealMat};
 use clustercluster::mapreduce::CommModel;
+use clustercluster::model::ModelSpec;
 use clustercluster::metrics::shard::{ShardTrace, ShardTraceRow};
 use clustercluster::metrics::trace::{McmcTrace, TraceRow};
 use clustercluster::rng::Pcg64;
@@ -32,10 +36,12 @@ USAGE: repro <command> [--flag value]...
 COMMANDS
   gen-data     --n 10000 --d 256 --clusters 128 --beta 0.1 --seed 0 --out data.ccbin
   serial       --n 5000 --d 64 --clusters 32 --sweeps 50
+               [--model bernoulli|gaussian[:k0,m0,a0,b0]|categorical[:gamma]]
                [--local-kernel gibbs|walker|split_merge:gibbs|split_merge:walker]
                [--scorer auto|fallback|pjrt] [--update-beta] [--trace out.csv]
                [--checkpoint out.ccckpt] [--resume in.ccckpt]
   run          --n 5000 --d 64 --clusters 32 --workers 8 --rounds 50
+               [--model bernoulli|gaussian[:k0,m0,a0,b0]|categorical[:gamma]]
                [--local-sweeps 1] [--no-shuffle] [--eq7]
                [--local-kernel gibbs|walker|split_merge:gibbs|split_merge:walker
                 |gibbs,split_merge:walker,...]
@@ -58,6 +64,16 @@ comma-separated list (e.g. \"gibbs,split_merge:walker\") cycles the
 kernels over the superclusters — different shards run different
 operators within one exact chain.
 (--walker is accepted as a legacy spelling of --local-kernel walker.)
+
+--model picks the collapsed component likelihood (both samplers,
+every kernel and mu-mode; see DESIGN.md section ComponentModel):
+\"bernoulli\" = Beta-Bernoulli over binary data (the paper; beta comes
+from --beta and may be resampled with --update-beta);
+\"gaussian[:k0,m0,a0,b0]\" = Normal-Inverse-Gamma diagonal Gaussian
+over real data (defaults 1,0,1,1; synthetic data takes --spread);
+\"categorical[:gamma]\" = Dirichlet-multinomial over categorical data
+(default gamma 0.5; synthetic data takes --card). The synthetic
+dataset generator follows the model kind automatically.
 
 --mu-mode sets the supercluster granularity (all modes are
 exactness-preserving; see DESIGN.md §6): \"uniform\" = fixed 1/K (the
@@ -91,10 +107,11 @@ barrier_wait_s is what that wait would have been with no bonus sweeps
 (the two columns are equal with --overlap off); bonus_sweeps counts
 the round's work-stealing grant (always 0 with --overlap off).
 
-The serial chain checkpoints to the same CCCKPT2 format as the
+The serial chain checkpoints to the same CCCKPT3 format as the
 coordinator: --checkpoint saves the latent state after the last sweep,
---resume continues a saved chain (run with the SAME --n/--d/--seed so
-the dataset matches; mismatches are rejected).
+--resume continues a saved chain (run with the SAME
+--n/--d/--seed/--model so the dataset and likelihood match; mismatches
+are rejected, and older CCCKPT2 files load as Beta-Bernoulli).
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
@@ -129,6 +146,93 @@ fn scorer_arg(args: &Args) -> Result<ScorerKind, String> {
     let kind = ScorerKind::parse(&args.get_str("scorer", "auto"))?;
     kind.try_build().map_err(|e| format!("--scorer {}: {e}", kind.name()))?;
     Ok(kind)
+}
+
+/// Shared `--model` parsing for both samplers: which collapsed
+/// component likelihood the chain runs (see DESIGN.md § ComponentModel).
+fn model_arg(args: &Args) -> Result<ModelSpec, String> {
+    ModelSpec::parse(&args.get_str("model", "bernoulli"))
+}
+
+/// Model-matched synthetic data for both samplers. The Bernoulli path
+/// keeps the paper's balanced coin-mixture generator (and its
+/// ground-truth entropy target); the Gaussian / categorical paths use
+/// the balanced synthetic analogues with a 10% held-out split.
+enum SynthData {
+    Bin(Box<Dataset>),
+    Real { train: RealMat, test: RealMat },
+    Cat { train: CatMat, test: CatMat },
+}
+
+impl SynthData {
+    fn train(&self) -> DataRef<'_> {
+        match self {
+            SynthData::Bin(ds) => (&ds.train).into(),
+            SynthData::Real { train, .. } => train.into(),
+            SynthData::Cat { train, .. } => train.into(),
+        }
+    }
+
+    fn test(&self) -> DataRef<'_> {
+        match self {
+            SynthData::Bin(ds) => (&ds.test).into(),
+            SynthData::Real { test, .. } => test.into(),
+            SynthData::Cat { test, .. } => test.into(),
+        }
+    }
+
+    /// Ground-truth entropy estimate (only the Bernoulli generator
+    /// reports one — it is the paper's test-loglik target line).
+    fn entropy_target(&self) -> Option<f64> {
+        match self {
+            SynthData::Bin(ds) => Some(ds.true_entropy_estimate()),
+            _ => None,
+        }
+    }
+}
+
+fn gen_model_data(args: &Args, spec: ModelSpec) -> Result<SynthData, String> {
+    let n = args.get_usize("n", 5_000)?;
+    let d = args.get_usize("d", 64)?;
+    let clusters = args.get_usize("clusters", 32)?;
+    let seed = args.get_u64("seed", 0)?;
+    // the generators shuffle ground truth over rows, so a tail split is
+    // an unbiased held-out set
+    let n_test = (n / 10).max(1);
+    let head: Vec<usize> = (0..n).collect();
+    let tail: Vec<usize> = (n..n + n_test).collect();
+    Ok(match spec {
+        ModelSpec::Bernoulli => SynthData::Bin(Box::new(synth_cfg(args)?.generate())),
+        ModelSpec::Gaussian { .. } => {
+            let (all, _z) = SyntheticGaussianConfig {
+                n: n + n_test,
+                d,
+                clusters,
+                spread: args.get_f64("spread", 3.0)?,
+                seed,
+            }
+            .generate();
+            SynthData::Real {
+                train: all.select_rows(&head),
+                test: all.select_rows(&tail),
+            }
+        }
+        ModelSpec::Categorical { gamma } => {
+            let (all, _z) = SyntheticCategoricalConfig {
+                n: n + n_test,
+                d,
+                card: args.get_usize("card", 6)? as u32,
+                clusters,
+                gamma,
+                seed,
+            }
+            .generate();
+            SynthData::Cat {
+                train: all.select_rows(&head),
+                test: all.select_rows(&tail),
+            }
+        }
+    })
 }
 
 fn main() {
@@ -189,37 +293,41 @@ fn cmd_gen_data(args: &Args) -> Result<(), String> {
 fn cmd_serial(args: &Args) -> Result<(), String> {
     let cfg = synth_cfg(args)?;
     let sweeps = args.get_usize("sweeps", 50)?;
-    let ds = cfg.generate();
+    let spec = model_arg(args)?;
+    let data = gen_model_data(args, spec)?;
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xc0ffee);
     let scorer_kind = scorer_arg(args)?;
     let scfg = SerialConfig {
         update_beta: args.has("update-beta"),
         kernel: serial_kernel_arg(args)?,
         scoring: ScoreMode::Batched(scorer_kind),
+        model: spec,
         ..Default::default()
     };
     let mut g = if let Some(path) = args.get("resume") {
         let ckpt = Checkpoint::load(Path::new(path)).map_err(|e| e.to_string())?;
-        let g = SerialGibbs::resume(&ds.train, scfg, &ckpt, &mut rng)?;
+        let g = SerialGibbs::resume(data.train(), scfg, &ckpt, &mut rng)?;
         println!("resumed {path} at sweep {}", g.sweeps_done);
         g
     } else {
-        SerialGibbs::init_from_prior(&ds.train, scfg, &mut rng)
+        SerialGibbs::init_from_prior(data.train(), scfg, &mut rng)
     };
-    let h = ds.true_entropy_estimate();
+    let h = data.entropy_target();
     println!(
-        "serial baseline: N={} D={} true J={} kernel={} scorer={} (H≈{h:.3})",
+        "serial baseline: N={} D={} true J={} model={} kernel={} scorer={}{}",
         cfg.n,
         cfg.d,
         cfg.clusters,
+        spec.name(),
         scfg.kernel.name(),
-        scfg.scoring.name()
+        scfg.scoring.name(),
+        h.map(|h| format!(" (H≈{h:.3})")).unwrap_or_default()
     );
     let mut trace = McmcTrace::new("serial");
     for it in 0..sweeps {
         g.sweep(&mut rng);
         let sweep_abs = g.sweeps_done - 1; // absolute index across resumes
-        let ll = g.predictive_loglik(&ds.test);
+        let ll = g.predictive_loglik(data.test());
         // cumulative sweep compute time, persisted through checkpoints,
         // so a resumed run's trace keeps a monotone time axis
         let el = g.measured_time_s;
@@ -234,10 +342,10 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
         });
         if it % 10 == 0 || it + 1 == sweeps {
             println!(
-                "  sweep {sweep_abs:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} (target ≈ {:.4})",
+                "  sweep {sweep_abs:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4}{}",
                 g.num_clusters(),
                 g.alpha(),
-                -h
+                h.map(|h| format!(" (target ≈ {:.4})", -h)).unwrap_or_default()
             );
         }
     }
@@ -274,6 +382,7 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
         parallelism: args.get_usize("threads", 1)?,
         overlap: args.get_on_off("overlap", false)?,
         max_bonus_sweeps: args.get_usize("max-bonus-sweeps", 2)?,
+        model: model_arg(args)?,
         ..Default::default()
     })
 }
@@ -284,6 +393,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let rounds = args.get_usize("rounds", 50)?;
     let workers = ccfg.workers;
     let local_sweeps = ccfg.local_sweeps;
+    let spec = ccfg.model;
     let kernel_desc = ccfg.kernel_assignment.describe();
     let mu_desc = ccfg.mu_mode.describe();
     let sched_desc = if ccfg.overlap {
@@ -291,19 +401,22 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     } else {
         "bulk-synchronous".to_string()
     };
-    let ds = cfg.generate();
-    let h = ds.true_entropy_estimate();
+    let data = gen_model_data(args, spec)?;
+    let h = data.entropy_target();
+    let n_train = data.train().rows();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
-    let mut coord = Coordinator::new(&ds.train, ccfg, &mut rng);
+    let mut coord = Coordinator::new(data.train(), ccfg, &mut rng);
     // trace-time predictive evaluation runs through the same backend
     // selection as the sweep path
     let mut scorer = scorer_arg(args)?.try_build()?;
     println!(
-        "parallel sampler: N={} D={} true J={} | K={workers} workers, {local_sweeps} local sweeps/round, kernel={kernel_desc}, mu-mode={mu_desc}, rounds={sched_desc}, scorer={} (H≈{h:.3})",
+        "parallel sampler: N={} D={} true J={} model={} | K={workers} workers, {local_sweeps} local sweeps/round, kernel={kernel_desc}, mu-mode={mu_desc}, rounds={sched_desc}, scorer={}{}",
         cfg.n,
         cfg.d,
         cfg.clusters,
-        scorer.name()
+        spec.name(),
+        scorer.name(),
+        h.map(|h| format!(" (H≈{h:.3})")).unwrap_or_default()
     );
     let mut trace = McmcTrace::new(&format!("run_k{workers}"));
     let mut shard_trace = args
@@ -311,7 +424,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         .map(|_| ShardTrace::new(&format!("run_k{workers}")));
     for it in 0..rounds {
         let rs = coord.step(&mut rng);
-        let ll = coord.predictive_loglik(&ds.test, scorer.as_mut());
+        let ll = coord.predictive_loglik(data.test(), scorer.as_mut());
         trace.push(TraceRow {
             iter: it as u64,
             modeled_time_s: coord.modeled_time_s,
@@ -339,7 +452,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
             // per-round throughput + shuffle traffic, so bench numbers
             // are observable in real runs
             let crit = rs.map_critical_path().as_secs_f64();
-            let swept = (ds.train.rows() * local_sweeps) as f64;
+            let swept = (n_train * local_sweeps) as f64;
             println!(
                 "    [shard-trace] round {it}: sweep {:.0} rows/s (map critical path {crit:.4}s), shuffle {} B",
                 if crit > 0.0 { swept / crit } else { 0.0 },
@@ -348,11 +461,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         }
         if it % 10 == 0 || it + 1 == rounds {
             println!(
-                "  round {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} modeled_t {:.2}s (target ≈ {:.4})",
+                "  round {it:>4}: J={:<5} α={:<8.3} test-loglik {ll:.4} modeled_t {:.2}s{}",
                 coord.num_clusters(),
                 coord.alpha(),
                 coord.modeled_time_s,
-                -h
+                h.map(|h| format!(" (target ≈ {:.4})", -h)).unwrap_or_default()
             );
         }
     }

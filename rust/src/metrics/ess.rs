@@ -29,9 +29,12 @@ pub fn effective_sample_size(xs: &[f64]) -> f64 {
         return 1.0;
     }
     let mut rho_sum = 0.0;
+    // Geyer pairs (ρ_t + ρ_{t+1}) for odd t; the last admissible pair may
+    // end exactly at lag n/2, so the bound is inclusive — `<` here would
+    // silently drop the final pair whenever n/2 is even
     let max_lag = n / 2;
     let mut t = 1;
-    while t + 1 < max_lag {
+    while t + 1 <= max_lag {
         let pair = (autocov(xs, m, t) + autocov(xs, m, t + 1)) / c0;
         if pair <= 0.0 {
             break;
@@ -94,6 +97,99 @@ mod tests {
     fn short_chains_dont_panic() {
         assert_eq!(effective_sample_size(&[]), 0.0);
         assert_eq!(effective_sample_size(&[1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn ar1_ess_matches_closed_form_even_and_odd_n() {
+        // the truncation bound is parity-sensitive (the final Geyer pair
+        // lands exactly on lag n/2 only when n/2 is even), so the AR(1)
+        // closed form ESS/n = (1-φ)/(1+φ) is pinned at an even and an
+        // odd chain length
+        let phi: f64 = 0.6;
+        for n in [40_000usize, 40_001] {
+            let mut rng = Pcg64::seed_from(7 + n as u64);
+            let mut xs = Vec::with_capacity(n);
+            let mut x = 0.0;
+            for _ in 0..n {
+                x = phi * x + (1.0 - phi * phi).sqrt() * normal(&mut rng);
+                xs.push(x);
+            }
+            let want = n as f64 * (1.0 - phi) / (1.0 + phi);
+            let got = effective_sample_size(&xs);
+            assert!(
+                (got - want).abs() < 0.25 * want,
+                "AR(1) ESS {got} at n={n}, closed form {want}"
+            );
+        }
+    }
+
+    /// Independent slow reference for Geyer's initial-positive-sequence
+    /// ESS, written from the definition: sum pairs Γ_k = ρ_{2k-1} + ρ_{2k}
+    /// while positive, with the last admissible pair ending at lag
+    /// ⌊n/2⌋ inclusive. Randomized equality against the production code
+    /// pins the truncation bound (the pre-fix `<` bound diverges from
+    /// this on chains whose positive sequence reaches the boundary).
+    fn reference_ess(xs: &[f64]) -> f64 {
+        let n = xs.len();
+        if n < 4 {
+            return n as f64;
+        }
+        let m = mean(xs);
+        let c0 = autocov(xs, m, 0);
+        if c0 <= 1e-300 {
+            return 1.0;
+        }
+        let mut rho_sum = 0.0;
+        for t in (1..).step_by(2) {
+            if t + 1 > n / 2 {
+                break;
+            }
+            let pair = (autocov(xs, m, t) + autocov(xs, m, t + 1)) / c0;
+            if pair <= 0.0 {
+                break;
+            }
+            rho_sum += pair;
+        }
+        (n as f64 / (1.0 + 2.0 * rho_sum)).clamp(1.0, n as f64)
+    }
+
+    #[test]
+    fn ess_matches_independent_reference_on_short_chains() {
+        // short, strongly-correlated chains are exactly where the
+        // positive sequence runs into the lag-n/2 boundary, so the
+        // truncation bound is load-bearing here
+        let phi = 0.95;
+        for n in [8usize, 9, 12, 16, 17, 24, 32, 33, 64] {
+            for seed in 0..20u64 {
+                let mut rng = Pcg64::seed_from(100 + seed);
+                let mut xs = Vec::with_capacity(n);
+                let mut x = 0.0;
+                for _ in 0..n {
+                    x = phi * x + (1.0 - phi * phi).sqrt() * normal(&mut rng);
+                    xs.push(x);
+                }
+                let got = effective_sample_size(&xs);
+                let want = reference_ess(&xs);
+                assert!(
+                    (got - want).abs() < 1e-12 * want.abs().max(1.0),
+                    "ESS {got} vs reference {want} at n={n} seed={seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn autocov_at_half_length_matches_hand_computed() {
+        // biased normalization (divide by n, not n-k) at the deepest lag
+        // the Geyer loop can reach, k = n/2, for both parities of n
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let m = mean(&xs); // 2.5
+        // Σ_{i<2} (x_i-m)(x_{i+2}-m) / 4 = ((-1.5)(0.5) + (-0.5)(1.5)) / 4
+        assert!((autocov(&xs, m, 2) - (-0.375)).abs() < 1e-15);
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let my = mean(&ys); // 3.0
+        // Σ_{i<3} (y_i-m)(y_{i+2}-m) / 5 = (0 + (-1)(1) + 0) / 5
+        assert!((autocov(&ys, my, 2) - (-0.2)).abs() < 1e-15);
     }
 
     #[test]

@@ -1,20 +1,40 @@
-//! The paper's observation model (§6): product-Bernoulli components with
-//! per-dimension `Beta(β_d, β_d)` priors, coin weights collapsed out.
+//! Likelihood layer: the [`ComponentModel`] trait that makes the sampler
+//! stack generic over the observation model, its three collapsed
+//! implementations, and the per-cluster sufficient statistics.
 //!
-//! * [`BetaBernoulli`] — the model spec (dimensionality + β vector).
-//! * [`ClusterStats`] — a cluster's sufficient statistics with a cached
-//!   log-predictive table (`bias + Σ_{d: x_d=1} diff[d]`) — the Layer-3
-//!   hot path; caches invalidate on count or hyperparameter change.
+//! * [`ComponentModel`] — sufficient-stat cache rebuild, collapsed log
+//!   marginal, per-datum log predictive, and packed-table export,
+//!   abstracted over the likelihood. The kernel, shard and coordinator
+//!   layers only talk to this surface (through [`Model`]), so the μ
+//!   modes, overlap schedule and transition kernels are untouched by
+//!   construction when a new likelihood is added.
+//! * [`BetaBernoulli`] — the paper's observation model (§6):
+//!   product-Bernoulli components with per-dimension `Beta(β_d, β_d)`
+//!   priors, coin weights collapsed out.
+//! * [`DiagGaussian`] — collapsed diagonal Gaussian with a shared
+//!   Normal–Inverse-Gamma prior per dimension (Student-t predictives).
+//! * [`Categorical`] — Dirichlet–multinomial over per-dimension finite
+//!   alphabets, scored through the one-hot bit-sparse path so scalar
+//!   and batched scoring stay bit-identical by construction.
+//! * [`Model`] — enum dispatcher over the three (concrete access for
+//!   owners that need Bernoulli-specific surface: the β griddy update
+//!   and the PJRT weight export).
+//! * [`ModelSpec`] — a `Copy` model selector + hyperparameters for
+//!   configs, CLI parsing (`--model`) and checkpoint tagging.
+//! * [`ClusterStats`] — a cluster's sufficient statistics (count,
+//!   one-counts, first/second moments) with a cached log-predictive
+//!   table — the Layer-3 hot path; caches invalidate on count or
+//!   hyperparameter change.
 //! * [`alpha`] — the concentration conditional (Eq. 6) and its slice-
 //!   sampling update.
 //! * [`hyper`] — the `β_d` griddy-Gibbs update from pooled sufficient
-//!   statistics (reduce step).
+//!   statistics (reduce step; Bernoulli only).
 
 pub mod alpha;
 pub mod hyper;
 
-use crate::data::BinMat;
-use crate::special::log_beta;
+use crate::data::{BinMat, DataRef};
+use crate::special::{lgamma, lgamma_ratio, log_beta};
 
 /// Log lookup table for symmetric-β scoring-cache rebuilds: `ln(x + β)`
 /// and `ln(x + 2β)` indexed by integer count. Rebuilding a cluster's
@@ -83,8 +103,66 @@ impl LogLut {
     }
 }
 
-/// Model spec: binary dimensionality and per-dimension symmetric Beta
-/// hyperparameters.
+/// A collapsed component likelihood: everything the sampler stack needs
+/// to score data against clusters without knowing the observation model.
+///
+/// Implementations own the prior hyperparameters and the closed-form
+/// collapsed math; [`ClusterStats`] owns the per-cluster sufficient
+/// statistics and the cached table the hot paths read. The contract
+/// between them is [`ComponentModel::rebuild_cache`], which writes a
+/// `(bias, aux, diff)` triple into the stats such that
+///
+/// * **bit data** (Bernoulli native, categorical one-hot) scores as
+///   `bias + Σ_{set bits s} diff[s]`, and
+/// * **real data** scores as
+///   `bias − aux · Σ_d ln1p((x_d − diff[d])² · diff[D+d])`
+///   (a product of Student-t densities: `diff` holds a location plane
+///   then an inverse-scale plane).
+///
+/// The batched packed-table scorer copies the same triple into its
+/// `[table_rows, J]` columns, so scalar and batched scoring read the
+/// same table bits by construction.
+pub trait ComponentModel {
+    /// Short CLI / checkpoint name of the likelihood.
+    fn name(&self) -> &'static str;
+
+    /// Width of the per-cluster sufficient-statistic vectors (`D` for
+    /// Bernoulli and Gaussian, one-hot `W = Σ V_d` for categorical).
+    /// [`ClusterStats::empty`] must be built with this width.
+    fn stat_dims(&self) -> usize;
+
+    /// Rows per cluster column in the packed scoring table (`D`
+    /// Bernoulli, `W` categorical, `2D` Gaussian). Matches
+    /// [`DataRef::table_rows`] for the corresponding data kind.
+    fn table_rows(&self) -> usize;
+
+    /// Check that a dataset is the right kind and shape for this model.
+    fn validate_data(&self, data: DataRef<'_>) -> Result<(), String>;
+
+    /// Recompute the cached scoring table (`bias`, `aux`, `diff`) from
+    /// the stats' current counts/moments and the prior. O(stat_dims);
+    /// called lazily from [`ClusterStats::score`].
+    fn rebuild_cache(&self, stats: &mut ClusterStats);
+
+    /// Log predictive of a fresh (empty) cluster for row `r`: the prior
+    /// predictive density. Constant in `x` for Bernoulli (−D·ln 2) and
+    /// categorical (−Σ_d ln V_d); x-dependent for the Gaussian.
+    fn log_pred_empty(&self, data: DataRef<'_>, r: usize) -> f64;
+
+    /// Collapsed log marginal likelihood of all data in the cluster.
+    fn log_marginal(&self, stats: &ClusterStats) -> f64;
+
+    /// Cache-free reference scoring of row `r` against the cluster
+    /// (tests + failure injection; must agree with the cached path).
+    fn score_uncached(&self, stats: &ClusterStats, data: DataRef<'_>, r: usize) -> f64;
+
+    /// Flat hyperparameter vector for checkpointing (shape is
+    /// model-specific; see `Model::restore_hyper`).
+    fn hyper_vec(&self) -> Vec<f64>;
+}
+
+/// The paper's model spec: binary dimensionality and per-dimension
+/// symmetric Beta hyperparameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BetaBernoulli {
     /// data dimensionality D
@@ -157,15 +235,786 @@ impl BetaBernoulli {
     }
 }
 
-/// Sufficient statistics for one cluster: datum count `n` and per-dim
-/// one-counts, plus the cached scoring table.
+impl ComponentModel for BetaBernoulli {
+    fn name(&self) -> &'static str {
+        "bernoulli"
+    }
+
+    fn stat_dims(&self) -> usize {
+        self.d
+    }
+
+    fn table_rows(&self) -> usize {
+        self.d
+    }
+
+    fn validate_data(&self, data: DataRef<'_>) -> Result<(), String> {
+        match data {
+            DataRef::Binary(m) if m.dims() == self.d => Ok(()),
+            DataRef::Binary(m) => Err(format!(
+                "bernoulli model has D={} but binary data has D={}",
+                self.d,
+                m.dims()
+            )),
+            other => Err(format!(
+                "bernoulli model needs binary data, got {}",
+                other.kind_name()
+            )),
+        }
+    }
+
+    /// `diff[d] = ln(c_d+β) − ln(n−c_d+β)`,
+    /// `bias = Σ_d ln(n−c_d+β) − D·ln(n+2β)`; with a uniform β the `ln`
+    /// calls become LUT lookups.
+    fn rebuild_cache(&self, stats: &mut ClusterStats) {
+        if stats.cache_diff.len() != self.d {
+            stats.cache_diff.resize(self.d, 0.0);
+        }
+        if let Some(lut) = &self.lut {
+            if lut.covers(self.beta[0], stats.n) {
+                let n = stats.n as usize;
+                let ln_xb = &lut.ln_xb;
+                let mut bias = 0.0;
+                for d in 0..self.d {
+                    let c = stats.ones[d] as usize;
+                    let l1 = ln_xb[c];
+                    let l0 = ln_xb[n - c];
+                    bias += l0;
+                    stats.cache_diff[d] = l1 - l0;
+                }
+                stats.cache_bias = bias - self.d as f64 * lut.ln_n2b[n];
+                stats.cache_aux = 0.0;
+                stats.cache_valid = true;
+                return;
+            }
+        }
+        let nf = stats.n as f64;
+        let mut bias = 0.0;
+        for d in 0..self.d {
+            let b = self.beta[d];
+            let denom = nf + 2.0 * b;
+            let p1 = (stats.ones[d] as f64 + b) / denom;
+            let p0 = (nf - stats.ones[d] as f64 + b) / denom;
+            let l1 = p1.ln();
+            let l0 = p0.ln();
+            bias += l0;
+            stats.cache_diff[d] = l1 - l0;
+        }
+        stats.cache_bias = bias;
+        stats.cache_aux = 0.0;
+        stats.cache_valid = true;
+    }
+
+    fn log_pred_empty(&self, _data: DataRef<'_>, _r: usize) -> f64 {
+        self.empty_cluster_loglik()
+    }
+
+    /// `Σ_d [ln B(c_d+β_d, n−c_d+β_d) − ln B(β_d, β_d)]`.
+    fn log_marginal(&self, stats: &ClusterStats) -> f64 {
+        let nf = stats.n as f64;
+        let mut s = 0.0;
+        for d in 0..self.d {
+            let b = self.beta[d];
+            let c = stats.ones[d] as f64;
+            s += log_beta(c + b, nf - c + b) - log_beta(b, b);
+        }
+        s
+    }
+
+    fn score_uncached(&self, stats: &ClusterStats, data: DataRef<'_>, r: usize) -> f64 {
+        let m = data.bits().expect("bernoulli scoring needs bit data");
+        let nf = stats.n as f64;
+        let mut s = 0.0;
+        for d in 0..self.d {
+            let b = self.beta[d];
+            let denom = nf + 2.0 * b;
+            let p = if m.get(r, d) {
+                (stats.ones[d] as f64 + b) / denom
+            } else {
+                (nf - stats.ones[d] as f64 + b) / denom
+            };
+            s += p.ln();
+        }
+        s
+    }
+
+    fn hyper_vec(&self) -> Vec<f64> {
+        self.beta.clone()
+    }
+}
+
+/// Collapsed diagonal Gaussian: per dimension an independent
+/// Normal–Inverse-Gamma prior `μ ~ N(m0, σ²/κ0)`, `σ² ~ IG(a0, b0)`
+/// (the diagonal slice of a Normal–Inverse-Wishart), shared across
+/// dimensions. Posterior predictives are Student-t; scoring uses the
+/// cached `(bias, aux, diff)` triple with `diff` holding a location
+/// plane `m_n` then an inverse-scale plane
+/// `κ_n / (2 b_n (κ_n+1))`, and `aux = a_n + ½` (the t exponent), so
+/// `log p(x) = bias − aux · Σ_d ln1p((x_d − m_{n,d})² · inv_d)`.
+///
+/// Closed forms (Murphy 2007, "Conjugate Bayesian analysis of the
+/// Gaussian distribution", §3–4):
+/// `κ_n = κ0+n`, `a_n = a0+n/2`, `m_n = (κ0 m0 + Σx)/κ_n`,
+/// `b_n = b0 + ½Σx² + ½κ0 m0² − ½κ_n m_n²`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiagGaussian {
+    /// data dimensionality D
+    pub d: usize,
+    /// prior pseudo-count κ0 on the mean
+    pub kappa0: f64,
+    /// prior mean m0 (shared across dims)
+    pub m0: f64,
+    /// Inverse-Gamma shape a0
+    pub a0: f64,
+    /// Inverse-Gamma rate b0
+    pub b0: f64,
+    // precomputed empty-cluster (prior predictive) table pieces, so the
+    // n = 0 cache rebuild and log_pred_empty share the exact same bits
+    bias_empty: f64,
+    inv_empty: f64,
+    aux_empty: f64,
+}
+
+impl DiagGaussian {
+    /// Build the model; hyperparameters must be strictly positive
+    /// (except `m0`, which is any finite location).
+    pub fn new(d: usize, kappa0: f64, m0: f64, a0: f64, b0: f64) -> DiagGaussian {
+        assert!(kappa0 > 0.0 && a0 > 0.0 && b0 > 0.0, "NIG hypers must be > 0");
+        assert!(m0.is_finite());
+        let c0 = lgamma(a0 + 0.5)
+            - lgamma(a0)
+            - 0.5 * (2.0 * std::f64::consts::PI * b0 * (kappa0 + 1.0) / kappa0).ln();
+        DiagGaussian {
+            d,
+            kappa0,
+            m0,
+            a0,
+            b0,
+            bias_empty: d as f64 * c0,
+            inv_empty: kappa0 / (2.0 * b0 * (kappa0 + 1.0)),
+            aux_empty: a0 + 0.5,
+        }
+    }
+
+    /// Posterior `(m_n, b_n)` for one dimension from its moments.
+    #[inline]
+    fn posterior_dim(&self, kn: f64, s1: f64, s2: f64) -> (f64, f64) {
+        let mn = (self.kappa0 * self.m0 + s1) / kn;
+        let bn = self.b0 + 0.5 * (s2 + self.kappa0 * self.m0 * self.m0 - kn * mn * mn);
+        (mn, bn)
+    }
+}
+
+impl ComponentModel for DiagGaussian {
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+
+    fn stat_dims(&self) -> usize {
+        self.d
+    }
+
+    fn table_rows(&self) -> usize {
+        2 * self.d
+    }
+
+    fn validate_data(&self, data: DataRef<'_>) -> Result<(), String> {
+        match data {
+            DataRef::Real(m) if m.dims() == self.d => Ok(()),
+            DataRef::Real(m) => Err(format!(
+                "gaussian model has D={} but real data has D={}",
+                self.d,
+                m.dims()
+            )),
+            other => Err(format!(
+                "gaussian model needs real data, got {}",
+                other.kind_name()
+            )),
+        }
+    }
+
+    fn rebuild_cache(&self, stats: &mut ClusterStats) {
+        let d = self.d;
+        if stats.cache_diff.len() != 2 * d {
+            stats.cache_diff.resize(2 * d, 0.0);
+        }
+        if stats.n == 0 {
+            // prior predictive, bit-identical to log_pred_empty's pieces
+            // (the general path below would reconstruct b0 with rounding)
+            for i in 0..d {
+                stats.cache_diff[i] = self.m0;
+                stats.cache_diff[d + i] = self.inv_empty;
+            }
+            stats.cache_bias = self.bias_empty;
+            stats.cache_aux = self.aux_empty;
+            stats.cache_valid = true;
+            return;
+        }
+        let n = stats.n as f64;
+        let kn = self.kappa0 + n;
+        let an = self.a0 + 0.5 * n;
+        let lg_t = lgamma(an + 0.5) - lgamma(an);
+        let half_log_2pi_ratio = 0.5 * (2.0 * std::f64::consts::PI * (kn + 1.0) / kn).ln();
+        let mut bias = 0.0;
+        for i in 0..d {
+            let (mn, bn) = self.posterior_dim(kn, stats.sum_at(i), stats.sumsq_at(i));
+            debug_assert!(bn > 0.0, "posterior scale b_n must stay positive");
+            bias += lg_t - half_log_2pi_ratio - 0.5 * bn.ln();
+            stats.cache_diff[i] = mn;
+            stats.cache_diff[d + i] = kn / (2.0 * bn * (kn + 1.0));
+        }
+        stats.cache_bias = bias;
+        stats.cache_aux = an + 0.5;
+        stats.cache_valid = true;
+    }
+
+    fn log_pred_empty(&self, data: DataRef<'_>, r: usize) -> f64 {
+        let m = data.real().expect("gaussian scoring needs real data");
+        let row = m.row(r);
+        let mut acc = 0.0;
+        for &x in row {
+            let t = x - self.m0;
+            acc += (t * t * self.inv_empty).ln_1p();
+        }
+        self.bias_empty - self.aux_empty * acc
+    }
+
+    /// Per dimension: `−(n/2)ln 2π + ½(ln κ0 − ln κ_n) + lnΓ(a_n) −
+    /// lnΓ(a0) + a0 ln b0 − a_n ln b_{n,d}`.
+    fn log_marginal(&self, stats: &ClusterStats) -> f64 {
+        if stats.n == 0 {
+            return 0.0;
+        }
+        let n = stats.n as f64;
+        let kn = self.kappa0 + n;
+        let an = self.a0 + 0.5 * n;
+        let base = -0.5 * n * (2.0 * std::f64::consts::PI).ln()
+            + 0.5 * (self.kappa0.ln() - kn.ln())
+            + lgamma(an)
+            - lgamma(self.a0)
+            + self.a0 * self.b0.ln();
+        let mut s = 0.0;
+        for i in 0..self.d {
+            let (_, bn) = self.posterior_dim(kn, stats.sum_at(i), stats.sumsq_at(i));
+            s += base - an * bn.ln();
+        }
+        s
+    }
+
+    fn score_uncached(&self, stats: &ClusterStats, data: DataRef<'_>, r: usize) -> f64 {
+        let m = data.real().expect("gaussian scoring needs real data");
+        let row = m.row(r);
+        let n = stats.n as f64;
+        let kn = self.kappa0 + n;
+        let an = self.a0 + 0.5 * n;
+        let lg_t = lgamma(an + 0.5) - lgamma(an);
+        let mut s = 0.0;
+        for i in 0..self.d {
+            let (mn, bn) = self.posterior_dim(kn, stats.sum_at(i), stats.sumsq_at(i));
+            let c0 = lg_t - 0.5 * (2.0 * std::f64::consts::PI * bn * (kn + 1.0) / kn).ln();
+            let t = row[i] - mn;
+            let inv = kn / (2.0 * bn * (kn + 1.0));
+            s += c0 - (an + 0.5) * (t * t * inv).ln_1p();
+        }
+        s
+    }
+
+    fn hyper_vec(&self) -> Vec<f64> {
+        vec![self.kappa0, self.m0, self.a0, self.b0]
+    }
+}
+
+/// Dirichlet–multinomial categorical likelihood: dimension `d` takes a
+/// value in `0..V_d` with a symmetric `Dirichlet(γ·1)` prior on each
+/// dimension's category probabilities, collapsed out. Data arrive as a
+/// one-hot [`crate::data::CatMat`], so the sufficient statistic is the
+/// per-one-hot-column count vector (width `W = Σ V_d`) and the cached
+/// table rides the bit-sparse scoring path unchanged:
+/// `diff[(d,v)] = ln(c_{d,v}+γ)`, `bias = −Σ_d ln(n + V_d γ)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Categorical {
+    /// symmetric Dirichlet concentration γ
+    pub gamma: f64,
+    cards: Vec<u32>,
+    /// prefix sums of `cards` (len D+1)
+    offsets: Vec<u32>,
+    /// −Σ_d ln V_d: the (constant) prior predictive of any datum
+    empty_loglik: f64,
+}
+
+impl Categorical {
+    /// Build from per-dimension cardinalities and the Dirichlet γ.
+    pub fn new(cards: &[u32], gamma: f64) -> Categorical {
+        assert!(gamma > 0.0, "Dirichlet concentration must be > 0");
+        assert!(!cards.is_empty());
+        assert!(cards.iter().all(|&v| v >= 2), "cardinalities must be >= 2");
+        let mut offsets = Vec::with_capacity(cards.len() + 1);
+        let mut acc = 0u32;
+        for &v in cards {
+            offsets.push(acc);
+            acc += v;
+        }
+        offsets.push(acc);
+        let empty_loglik = -cards.iter().map(|&v| (v as f64).ln()).sum::<f64>();
+        Categorical {
+            gamma,
+            cards: cards.to_vec(),
+            offsets,
+            empty_loglik,
+        }
+    }
+
+    /// Per-dimension cardinalities V_d.
+    pub fn cards(&self) -> &[u32] {
+        &self.cards
+    }
+
+    /// Total one-hot width W = Σ V_d.
+    pub fn width(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+}
+
+impl ComponentModel for Categorical {
+    fn name(&self) -> &'static str {
+        "categorical"
+    }
+
+    fn stat_dims(&self) -> usize {
+        self.width()
+    }
+
+    fn table_rows(&self) -> usize {
+        self.width()
+    }
+
+    fn validate_data(&self, data: DataRef<'_>) -> Result<(), String> {
+        match data {
+            DataRef::Categorical(m) if m.cards() == &self.cards[..] => Ok(()),
+            DataRef::Categorical(m) => Err(format!(
+                "categorical model has cards {:?} but data has {:?}",
+                self.cards,
+                m.cards()
+            )),
+            other => Err(format!(
+                "categorical model needs categorical data, got {}",
+                other.kind_name()
+            )),
+        }
+    }
+
+    fn rebuild_cache(&self, stats: &mut ClusterStats) {
+        let w = self.width();
+        if stats.cache_diff.len() != w {
+            stats.cache_diff.resize(w, 0.0);
+        }
+        let n = stats.n as f64;
+        let mut bias = 0.0;
+        for &v in &self.cards {
+            bias -= (n + v as f64 * self.gamma).ln();
+        }
+        for (slot, &c) in stats.cache_diff.iter_mut().zip(&stats.ones) {
+            *slot = (c as f64 + self.gamma).ln();
+        }
+        stats.cache_bias = bias;
+        stats.cache_aux = 0.0;
+        stats.cache_valid = true;
+    }
+
+    fn log_pred_empty(&self, _data: DataRef<'_>, _r: usize) -> f64 {
+        self.empty_loglik
+    }
+
+    /// Per dimension: `Σ_v [lnΓ(c_v+γ) − lnΓ(γ)] − [lnΓ(n+V γ) −
+    /// lnΓ(V γ)]`, via the stable rising-factorial `lgamma_ratio`.
+    fn log_marginal(&self, stats: &ClusterStats) -> f64 {
+        let mut s = 0.0;
+        for (dim, &v) in self.cards.iter().enumerate() {
+            s -= lgamma_ratio(v as f64 * self.gamma, stats.n);
+            let lo = self.offsets[dim] as usize;
+            let hi = self.offsets[dim + 1] as usize;
+            for &c in &stats.ones[lo..hi] {
+                s += lgamma_ratio(self.gamma, u64::from(c));
+            }
+        }
+        s
+    }
+
+    fn score_uncached(&self, stats: &ClusterStats, data: DataRef<'_>, r: usize) -> f64 {
+        let m = match data {
+            DataRef::Categorical(m) => m,
+            other => panic!("categorical needs categorical data, got {}", other.kind_name()),
+        };
+        let n = stats.n as f64;
+        let mut s = 0.0;
+        for (dim, &v) in self.cards.iter().enumerate() {
+            let code = m.get(r, dim);
+            let c = stats.ones[(self.offsets[dim] + code) as usize] as f64;
+            s += (c + self.gamma).ln() - (n + v as f64 * self.gamma).ln();
+        }
+        s
+    }
+
+    fn hyper_vec(&self) -> Vec<f64> {
+        let mut h = Vec::with_capacity(1 + self.cards.len());
+        h.push(self.gamma);
+        h.extend(self.cards.iter().map(|&v| f64::from(v)));
+        h
+    }
+}
+
+/// Enum dispatcher over the three component likelihoods. The sampler,
+/// shard and coordinator layers hold a `Model` and call the
+/// [`ComponentModel`] surface through these inherent forwards (no trait
+/// import needed at call sites); owners that need Bernoulli-specific
+/// surface (β griddy update, LUT management, PJRT weight export) go
+/// through [`Model::as_bernoulli`] / [`Model::as_bernoulli_mut`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum Model {
+    /// Beta–Bernoulli (the paper's §6 binary model).
+    Bernoulli(BetaBernoulli),
+    /// Collapsed diagonal Gaussian (Normal–Inverse-Gamma per dim).
+    Gaussian(DiagGaussian),
+    /// Dirichlet–multinomial categorical.
+    Categorical(Categorical),
+}
+
+macro_rules! model_dispatch {
+    ($self:expr, $m:ident => $body:expr) => {
+        match $self {
+            Model::Bernoulli($m) => $body,
+            Model::Gaussian($m) => $body,
+            Model::Categorical($m) => $body,
+        }
+    };
+}
+
+impl Model {
+    /// Symmetric Beta–Bernoulli constructor (the overwhelmingly common
+    /// call in tests and the Bernoulli pipeline).
+    pub fn bernoulli(d: usize, beta: f64) -> Model {
+        Model::Bernoulli(BetaBernoulli::symmetric(d, beta))
+    }
+
+    /// Short likelihood name (see [`ComponentModel::name`]).
+    pub fn name(&self) -> &'static str {
+        model_dispatch!(self, m => m.name())
+    }
+
+    /// Sufficient-statistic width (see [`ComponentModel::stat_dims`]).
+    pub fn stat_dims(&self) -> usize {
+        model_dispatch!(self, m => m.stat_dims())
+    }
+
+    /// Packed-table rows per cluster (see [`ComponentModel::table_rows`]).
+    pub fn table_rows(&self) -> usize {
+        model_dispatch!(self, m => m.table_rows())
+    }
+
+    /// Data-kind/shape check (see [`ComponentModel::validate_data`]).
+    pub fn validate_data(&self, data: DataRef<'_>) -> Result<(), String> {
+        model_dispatch!(self, m => m.validate_data(data))
+    }
+
+    /// Rebuild a stats cache (see [`ComponentModel::rebuild_cache`]).
+    pub fn rebuild_cache(&self, stats: &mut ClusterStats) {
+        model_dispatch!(self, m => m.rebuild_cache(stats))
+    }
+
+    /// Fresh-cluster log predictive (see
+    /// [`ComponentModel::log_pred_empty`]).
+    #[inline]
+    pub fn log_pred_empty(&self, data: DataRef<'_>, r: usize) -> f64 {
+        model_dispatch!(self, m => m.log_pred_empty(data, r))
+    }
+
+    /// Collapsed cluster log marginal (see
+    /// [`ComponentModel::log_marginal`]).
+    pub fn log_marginal(&self, stats: &ClusterStats) -> f64 {
+        model_dispatch!(self, m => m.log_marginal(stats))
+    }
+
+    /// Cache-free reference score (see
+    /// [`ComponentModel::score_uncached`]).
+    pub fn score_uncached(&self, stats: &ClusterStats, data: DataRef<'_>, r: usize) -> f64 {
+        model_dispatch!(self, m => m.score_uncached(stats, data, r))
+    }
+
+    /// Flat hyperparameter vector (see [`ComponentModel::hyper_vec`]).
+    pub fn hyper_vec(&self) -> Vec<f64> {
+        model_dispatch!(self, m => m.hyper_vec())
+    }
+
+    /// The Bernoulli instantiation, for owners on the Bernoulli-only
+    /// paths (β griddy update, PJRT export).
+    ///
+    /// # Panics
+    ///
+    /// Panics if the model is not Bernoulli — those paths must be gated
+    /// by the caller (`if let Model::Bernoulli(..)`) or by config.
+    pub fn as_bernoulli(&self) -> &BetaBernoulli {
+        match self {
+            Model::Bernoulli(bb) => bb,
+            other => panic!("expected bernoulli model, got {}", other.name()),
+        }
+    }
+
+    /// Mutable [`Model::as_bernoulli`].
+    pub fn as_bernoulli_mut(&mut self) -> &mut BetaBernoulli {
+        match self {
+            Model::Bernoulli(bb) => bb,
+            other => panic!("expected bernoulli model, got {}", other.name()),
+        }
+    }
+
+    /// Install/refresh the symmetric-β LUT on the Bernoulli
+    /// instantiation; a no-op for the other likelihoods (their cache
+    /// rebuilds have no per-count transcendental table).
+    pub fn build_lut(&mut self, n_max: usize) {
+        if let Model::Bernoulli(bb) = self {
+            bb.build_lut(n_max);
+        }
+    }
+
+    /// Restore hyperparameters from a checkpoint's flat vector.
+    ///
+    /// * Bernoulli: `hyper` is the sampled per-dim β (length D) — it is
+    ///   installed and the LUT rebuilt to cover `n_max`.
+    /// * Gaussian: hypers are fixed, not sampled; `hyper` must be the
+    ///   bit-equal `[κ0, m0, a0, b0]` the run was configured with.
+    /// * Categorical: `hyper` must equal `[γ, V_0..V_{D-1}]`.
+    pub fn restore_hyper(&mut self, hyper: &[f64], n_max: usize) -> Result<(), String> {
+        match self {
+            Model::Bernoulli(bb) => {
+                if hyper.len() != bb.d {
+                    return Err(format!(
+                        "checkpoint β has {} dims, model has {}",
+                        hyper.len(),
+                        bb.d
+                    ));
+                }
+                if hyper.iter().any(|&b| b.is_nan() || b <= 0.0) {
+                    return Err("checkpoint β values must be > 0".into());
+                }
+                bb.beta.copy_from_slice(hyper);
+                bb.build_lut(n_max);
+                Ok(())
+            }
+            Model::Gaussian(g) => {
+                let want = [g.kappa0, g.m0, g.a0, g.b0];
+                if hyper.len() != 4 {
+                    return Err(format!(
+                        "checkpoint gaussian hypers have {} entries, want 4",
+                        hyper.len()
+                    ));
+                }
+                if hyper.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                    return Err(format!(
+                        "checkpoint gaussian hypers {hyper:?} != configured {want:?}"
+                    ));
+                }
+                Ok(())
+            }
+            Model::Categorical(c) => {
+                let want = c.hyper_vec();
+                if hyper.len() != want.len()
+                    || hyper.iter().zip(&want).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    return Err(format!(
+                        "checkpoint categorical hypers {hyper:?} != configured {want:?}"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// `Copy` model selector + hyperparameters: what configs carry and what
+/// the CLI `--model` flag parses into. Turned into a concrete [`Model`]
+/// against a dataset by [`ModelSpec::build`] (which is where data-kind
+/// mismatches are rejected).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ModelSpec {
+    /// Beta–Bernoulli on binary data; β comes from the config's
+    /// `init_beta` (it is sampled by the griddy-Gibbs update).
+    Bernoulli,
+    /// Collapsed diagonal Gaussian on real data with fixed NIG hypers.
+    Gaussian {
+        /// prior mean pseudo-count κ0
+        kappa0: f64,
+        /// prior mean m0
+        m0: f64,
+        /// Inverse-Gamma shape a0
+        a0: f64,
+        /// Inverse-Gamma rate b0
+        b0: f64,
+    },
+    /// Dirichlet–multinomial on categorical data (cards come from the
+    /// dataset) with fixed symmetric concentration γ.
+    Categorical {
+        /// symmetric Dirichlet concentration γ
+        gamma: f64,
+    },
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec::Bernoulli
+    }
+}
+
+impl ModelSpec {
+    /// Gaussian hypers used when the CLI flag gives none.
+    pub const DEFAULT_GAUSSIAN: ModelSpec = ModelSpec::Gaussian {
+        kappa0: 1.0,
+        m0: 0.0,
+        a0: 1.0,
+        b0: 1.0,
+    };
+
+    /// Categorical γ used when the CLI flag gives none.
+    pub const DEFAULT_CATEGORICAL: ModelSpec = ModelSpec::Categorical { gamma: 0.5 };
+
+    /// Short name (CLI value, log banners).
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelSpec::Bernoulli => "bernoulli",
+            ModelSpec::Gaussian { .. } => "gaussian",
+            ModelSpec::Categorical { .. } => "categorical",
+        }
+    }
+
+    /// Checkpoint model tag (CCCKPT3 wire format).
+    pub fn tag(self) -> u64 {
+        match self {
+            ModelSpec::Bernoulli => 0,
+            ModelSpec::Gaussian { .. } => 1,
+            ModelSpec::Categorical { .. } => 2,
+        }
+    }
+
+    /// Parse a CLI `--model` value: `bernoulli`,
+    /// `gaussian[:κ0,m0,a0,b0]`, or `categorical[:γ]`.
+    pub fn parse(s: &str) -> Result<ModelSpec, String> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "bernoulli" => match args {
+                None => Ok(ModelSpec::Bernoulli),
+                Some(_) => Err("bernoulli takes no :args (β comes from --beta)".into()),
+            },
+            "gaussian" => match args {
+                None => Ok(Self::DEFAULT_GAUSSIAN),
+                Some(a) => {
+                    let mut vals = Vec::new();
+                    for t in a.split(',') {
+                        let v: f64 = t
+                            .trim()
+                            .parse()
+                            .map_err(|e| format!("bad gaussian hyper {t:?}: {e}"))?;
+                        vals.push(v);
+                    }
+                    if vals.len() != 4 {
+                        return Err(format!(
+                            "gaussian wants 4 hypers κ0,m0,a0,b0 — got {}",
+                            vals.len()
+                        ));
+                    }
+                    if [vals[0], vals[2], vals[3]].iter().any(|v| !v.is_finite() || *v <= 0.0) {
+                        return Err("gaussian κ0, a0, b0 must be > 0".into());
+                    }
+                    Ok(ModelSpec::Gaussian {
+                        kappa0: vals[0],
+                        m0: vals[1],
+                        a0: vals[2],
+                        b0: vals[3],
+                    })
+                }
+            },
+            "categorical" => match args {
+                None => Ok(Self::DEFAULT_CATEGORICAL),
+                Some(a) => {
+                    let gamma: f64 = a
+                        .trim()
+                        .parse()
+                        .map_err(|e| format!("bad categorical γ {a:?}: {e}"))?;
+                    if !gamma.is_finite() || gamma <= 0.0 {
+                        return Err("categorical γ must be > 0".into());
+                    }
+                    Ok(ModelSpec::Categorical { gamma })
+                }
+            },
+            other => Err(format!(
+                "unknown model {other:?} (want bernoulli | gaussian[:κ0,m0,a0,b0] | categorical[:γ])"
+            )),
+        }
+    }
+
+    /// Instantiate against a dataset, rejecting data-kind mismatches.
+    /// `init_beta` seeds the Bernoulli β (ignored by the other models).
+    pub fn build(self, data: DataRef<'_>, init_beta: f64) -> Result<Model, String> {
+        let model = match self {
+            ModelSpec::Bernoulli => match data {
+                DataRef::Binary(m) => Model::bernoulli(m.dims(), init_beta),
+                other => {
+                    return Err(format!(
+                        "--model bernoulli needs binary data, got {}",
+                        other.kind_name()
+                    ))
+                }
+            },
+            ModelSpec::Gaussian { kappa0, m0, a0, b0 } => match data {
+                DataRef::Real(m) => {
+                    Model::Gaussian(DiagGaussian::new(m.dims(), kappa0, m0, a0, b0))
+                }
+                other => {
+                    return Err(format!(
+                        "--model gaussian needs real data, got {}",
+                        other.kind_name()
+                    ))
+                }
+            },
+            ModelSpec::Categorical { gamma } => match data {
+                DataRef::Categorical(m) => Model::Categorical(Categorical::new(m.cards(), gamma)),
+                other => {
+                    return Err(format!(
+                        "--model categorical needs categorical data, got {}",
+                        other.kind_name()
+                    ))
+                }
+            },
+        };
+        model.validate_data(data)?;
+        Ok(model)
+    }
+}
+
+/// Sufficient statistics for one cluster, plus the cached scoring table.
+///
+/// The count fields serve all likelihoods: `n` always, `ones` for the
+/// bit-backed models (Bernoulli one-counts, categorical one-hot counts),
+/// `sum`/`sumsq` first/second moments for the Gaussian. The moment
+/// vectors are sized lazily on the first real-data add (bit-only runs
+/// never allocate them) and snapped to exact zeros whenever `n` returns
+/// to 0, so floating-point removal drift cannot accumulate across an
+/// empty cluster's reuse.
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
     n: u64,
     ones: Vec<u32>,
-    /// cache: bias = Σ_d log p̂0_d ; diff[d] = log p̂1_d − log p̂0_d
+    /// per-dim Σ x_d (real data only; empty until first real add)
+    sum: Vec<f64>,
+    /// per-dim Σ x_d² (real data only; empty until first real add)
+    sumsq: Vec<f64>,
+    /// cache: bit models — bias = Σ_d log p̂0_d, diff[d] = log p̂1_d −
+    /// log p̂0_d; Gaussian — bias = Σ_d c0_d, diff = [m_n | inv] planes
     cache_bias: f64,
     cache_diff: Vec<f64>,
+    /// cache: Student-t exponent a_n + ½ (Gaussian; 0 for bit models)
+    cache_aux: f64,
     cache_valid: bool,
     /// ln(n), maintained incrementally (perf: the Gibbs hot loop reads
     /// it once per cluster per datum — see EXPERIMENTS.md §Perf)
@@ -173,13 +1022,18 @@ pub struct ClusterStats {
 }
 
 impl ClusterStats {
-    /// Stats of an empty cluster over `d` dims.
+    /// Stats of an empty cluster over `d` sufficient-statistic dims
+    /// (the model's [`ComponentModel::stat_dims`], equivalently the
+    /// data's [`DataRef::dims`]).
     pub fn empty(d: usize) -> Self {
         ClusterStats {
             n: 0,
             ones: vec![0; d],
+            sum: Vec::new(),
+            sumsq: Vec::new(),
             cache_bias: 0.0,
             cache_diff: vec![0.0; d],
+            cache_aux: 0.0,
             cache_valid: false,
             log_n: f64::NEG_INFINITY,
         }
@@ -196,9 +1050,31 @@ impl ClusterStats {
         self.log_n
     }
 
-    /// Per-dimension one-counts c_jd.
+    /// Per-dimension one-counts c_jd (bit-backed models).
     pub fn ones(&self) -> &[u32] {
         &self.ones
+    }
+
+    /// Per-dimension first moments Σ x_d (empty slice until real data
+    /// has been added).
+    pub fn sum(&self) -> &[f64] {
+        &self.sum
+    }
+
+    /// Per-dimension second moments Σ x_d² (empty slice until real data
+    /// has been added).
+    pub fn sumsq(&self) -> &[f64] {
+        &self.sumsq
+    }
+
+    #[inline]
+    fn sum_at(&self, i: usize) -> f64 {
+        self.sum.get(i).copied().unwrap_or(0.0)
+    }
+
+    #[inline]
+    fn sumsq_at(&self, i: usize) -> f64 {
+        self.sumsq.get(i).copied().unwrap_or(0.0)
     }
 
     /// Whether the cluster has no members.
@@ -207,15 +1083,30 @@ impl ClusterStats {
     }
 
     /// Add datum (row `r` of `data`) to the cluster.
-    pub fn add(&mut self, data: &BinMat, r: usize) {
+    pub fn add<'a>(&mut self, data: impl Into<DataRef<'a>>, r: usize) {
+        let data = data.into();
         self.n += 1;
         self.log_n = (self.n as f64).ln();
-        data.for_each_one(r, |d| self.ones[d] += 1);
+        match data.bits() {
+            Some(bits) => bits.for_each_one(r, |d| self.ones[d] += 1),
+            None => {
+                let row = data.real().expect("non-bit data must be real").row(r);
+                if self.sum.is_empty() {
+                    self.sum = vec![0.0; row.len()];
+                    self.sumsq = vec![0.0; row.len()];
+                }
+                for (d, &x) in row.iter().enumerate() {
+                    self.sum[d] += x;
+                    self.sumsq[d] += x * x;
+                }
+            }
+        }
         self.cache_valid = false;
     }
 
     /// Remove datum from the cluster (must have been added).
-    pub fn remove(&mut self, data: &BinMat, r: usize) {
+    pub fn remove<'a>(&mut self, data: impl Into<DataRef<'a>>, r: usize) {
+        let data = data.into();
         debug_assert!(self.n > 0, "remove from empty cluster");
         self.n -= 1;
         self.log_n = if self.n == 0 {
@@ -223,10 +1114,24 @@ impl ClusterStats {
         } else {
             (self.n as f64).ln()
         };
-        data.for_each_one(r, |d| {
-            debug_assert!(self.ones[d] > 0, "one-count underflow at dim {d}");
-            self.ones[d] -= 1;
-        });
+        match data.bits() {
+            Some(bits) => bits.for_each_one(r, |d| {
+                debug_assert!(self.ones[d] > 0, "one-count underflow at dim {d}");
+                self.ones[d] -= 1;
+            }),
+            None => {
+                let row = data.real().expect("non-bit data must be real").row(r);
+                for (d, &x) in row.iter().enumerate() {
+                    self.sum[d] -= x;
+                    self.sumsq[d] -= x * x;
+                }
+                if self.n == 0 {
+                    // snap accumulated rounding to the exact empty state
+                    self.sum.iter_mut().for_each(|v| *v = 0.0);
+                    self.sumsq.iter_mut().for_each(|v| *v = 0.0);
+                }
+            }
+        }
         self.cache_valid = false;
     }
 
@@ -246,6 +1151,15 @@ impl ClusterStats {
         self.n = other.n;
         self.log_n = other.log_n;
         self.ones.copy_from_slice(&other.ones);
+        if other.sum.is_empty() {
+            self.sum.iter_mut().for_each(|v| *v = 0.0);
+            self.sumsq.iter_mut().for_each(|v| *v = 0.0);
+        } else {
+            self.sum.resize(other.sum.len(), 0.0);
+            self.sumsq.resize(other.sumsq.len(), 0.0);
+            self.sum.copy_from_slice(&other.sum);
+            self.sumsq.copy_from_slice(&other.sumsq);
+        }
         self.cache_valid = false;
     }
 
@@ -257,46 +1171,19 @@ impl ClusterStats {
         for (a, b) in self.ones.iter_mut().zip(&other.ones) {
             *a += *b;
         }
-        self.cache_valid = false;
-    }
-
-    /// Rebuild the cached log-predictive table for the current counts and
-    /// hyperparameters. O(D); called lazily from [`Self::score`]. With a
-    /// uniform β the `ln` calls become LUT lookups:
-    /// `diff[d] = ln(c_d+β) − ln(n−c_d+β)`,
-    /// `bias = Σ_d ln(n−c_d+β) − D·ln(n+2β)`.
-    fn rebuild_cache(&mut self, model: &BetaBernoulli) {
-        if let Some(lut) = &model.lut {
-            if lut.covers(model.beta[0], self.n) {
-                let n = self.n as usize;
-                let ln_xb = &lut.ln_xb;
-                let mut bias = 0.0;
-                for d in 0..model.d {
-                    let c = self.ones[d] as usize;
-                    let l1 = ln_xb[c];
-                    let l0 = ln_xb[n - c];
-                    bias += l0;
-                    self.cache_diff[d] = l1 - l0;
-                }
-                self.cache_bias = bias - model.d as f64 * lut.ln_n2b[n];
-                self.cache_valid = true;
-                return;
+        if !other.sum.is_empty() {
+            if self.sum.is_empty() {
+                self.sum = vec![0.0; other.sum.len()];
+                self.sumsq = vec![0.0; other.sumsq.len()];
+            }
+            for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+                *a += *b;
+            }
+            for (a, b) in self.sumsq.iter_mut().zip(&other.sumsq) {
+                *a += *b;
             }
         }
-        let nf = self.n as f64;
-        let mut bias = 0.0;
-        for d in 0..model.d {
-            let b = model.beta[d];
-            let denom = nf + 2.0 * b;
-            let p1 = (self.ones[d] as f64 + b) / denom;
-            let p0 = (nf - self.ones[d] as f64 + b) / denom;
-            let l1 = p1.ln();
-            let l0 = p0.ln();
-            bias += l0;
-            self.cache_diff[d] = l1 - l0;
-        }
-        self.cache_bias = bias;
-        self.cache_valid = true;
+        self.cache_valid = false;
     }
 
     /// Explicitly invalidate the cache (hyperparameters changed).
@@ -304,37 +1191,47 @@ impl ClusterStats {
         self.cache_valid = false;
     }
 
-    /// The cached predictive table `(bias, diff)` for the current counts
-    /// and hyperparameters, rebuilding it first if stale. This is what
-    /// the batched sweep path copies into its packed `[D, J]` columns,
-    /// so batched and scalar scoring read the *same* table bits.
-    pub fn cached_table(&mut self, model: &BetaBernoulli) -> (f64, &[f64]) {
+    /// The cached predictive table `(bias, aux, diff)` for the current
+    /// counts and hyperparameters, rebuilding it first if stale. This is
+    /// what the batched sweep path copies into its packed
+    /// `[table_rows, J]` columns, so batched and scalar scoring read the
+    /// *same* table bits.
+    pub fn cached_table(&mut self, model: &Model) -> (f64, f64, &[f64]) {
         if !self.cache_valid {
-            self.rebuild_cache(model);
+            model.rebuild_cache(self);
         }
-        (self.cache_bias, &self.cache_diff)
+        (self.cache_bias, self.cache_aux, &self.cache_diff)
     }
 
     /// Log predictive likelihood of row `r` under this cluster
-    /// (collapsed): `Σ_d log p̂(x_d)`. Uses the cached table — O(#ones)
-    /// after an O(D) rebuild.
-    pub fn score(&mut self, model: &BetaBernoulli, data: &BinMat, r: usize) -> f64 {
+    /// (collapsed). Uses the cached table — for bit data O(#set bits)
+    /// after an O(D) rebuild, for real data O(D).
+    pub fn score<'a>(&mut self, model: &Model, data: impl Into<DataRef<'a>>, r: usize) -> f64 {
+        let data = data.into();
         if !self.cache_valid {
-            self.rebuild_cache(model);
+            model.rebuild_cache(self);
         }
-        let mut s = self.cache_bias;
-        let diff = &self.cache_diff;
-        data.for_each_one(r, |d| s += diff[d]);
-        s
+        match data.bits() {
+            Some(bits) => {
+                let mut s = self.cache_bias;
+                let diff = &self.cache_diff;
+                bits.for_each_one(r, |d| s += diff[d]);
+                s
+            }
+            None => {
+                let row = data.real().expect("non-bit data must be real").row(r);
+                self.score_real_cached(row)
+            }
+        }
     }
 
     /// Score from a pre-decoded ones-index list (the Gibbs hot loop
     /// decodes each datum's bits once and scores all local clusters from
-    /// the same list — see EXPERIMENTS.md §Perf).
+    /// the same list — see EXPERIMENTS.md §Perf). Bit-backed models only.
     #[inline]
-    pub fn score_ones(&mut self, model: &BetaBernoulli, ones_idx: &[u32]) -> f64 {
+    pub fn score_ones(&mut self, model: &Model, ones_idx: &[u32]) -> f64 {
         if !self.cache_valid {
-            self.rebuild_cache(model);
+            model.rebuild_cache(self);
         }
         let diff = &self.cache_diff;
         let mut s = self.cache_bias;
@@ -344,38 +1241,52 @@ impl ClusterStats {
         s
     }
 
-    /// Uncached reference scoring (tests + failure injection).
-    pub fn score_uncached(&self, model: &BetaBernoulli, data: &BinMat, r: usize) -> f64 {
-        let nf = self.n as f64;
-        let mut s = 0.0;
-        for d in 0..model.d {
-            let b = model.beta[d];
-            let denom = nf + 2.0 * b;
-            let p = if data.get(r, d) {
-                (self.ones[d] as f64 + b) / denom
-            } else {
-                (nf - self.ones[d] as f64 + b) / denom
-            };
-            s += p.ln();
+    /// Score a pre-fetched real row (the Gaussian analogue of
+    /// [`Self::score_ones`]: the hot loop fetches the row slice once and
+    /// scores all local clusters from it).
+    #[inline]
+    pub fn score_real(&mut self, model: &Model, row: &[f64]) -> f64 {
+        if !self.cache_valid {
+            model.rebuild_cache(self);
         }
-        s
+        self.score_real_cached(row)
     }
 
-    /// Collapsed log marginal likelihood of the whole cluster:
-    /// `Σ_d [ln B(c_d+β_d, n−c_d+β_d) − ln B(β_d, β_d)]`.
-    pub fn log_marginal(&self, model: &BetaBernoulli) -> f64 {
-        let nf = self.n as f64;
-        let mut s = 0.0;
-        for d in 0..model.d {
-            let b = model.beta[d];
-            let c = self.ones[d] as f64;
-            s += log_beta(c + b, nf - c + b) - log_beta(b, b);
+    /// Real-data evaluation of the (valid) cached table:
+    /// `bias − aux · Σ_d ln1p((x_d − m_{n,d})² · inv_d)`, accumulated
+    /// in d-ascending order (the batched path must match this order to
+    /// stay bit-identical).
+    #[inline]
+    fn score_real_cached(&self, row: &[f64]) -> f64 {
+        debug_assert!(self.cache_valid);
+        let d = row.len();
+        debug_assert_eq!(self.cache_diff.len(), 2 * d);
+        let (mn, inv) = self.cache_diff.split_at(d);
+        let mut acc = 0.0;
+        for i in 0..d {
+            let t = row[i] - mn[i];
+            acc += (t * t * inv[i]).ln_1p();
         }
-        s
+        self.cache_bias - self.cache_aux * acc
+    }
+
+    /// Uncached reference scoring (tests + failure injection).
+    pub fn score_uncached<'a>(
+        &self,
+        model: &Model,
+        data: impl Into<DataRef<'a>>,
+        r: usize,
+    ) -> f64 {
+        model.score_uncached(self, data.into(), r)
+    }
+
+    /// Collapsed log marginal likelihood of the whole cluster.
+    pub fn log_marginal(&self, model: &Model) -> f64 {
+        model.log_marginal(self)
     }
 
     /// Predictive Bernoulli parameters p̂_1 per dim (f32, for the PJRT
-    /// artifact weight matrices).
+    /// artifact weight matrices; Bernoulli-only export path).
     pub fn predictive_p1(&self, model: &BetaBernoulli, out: &mut [f32]) {
         assert_eq!(out.len(), model.d);
         let nf = self.n as f64;
@@ -389,6 +1300,7 @@ impl ClusterStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::{CatMat, RealMat};
     use crate::rng::Pcg64;
 
     fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {
@@ -404,10 +1316,33 @@ mod tests {
         m
     }
 
+    fn rand_real(n: usize, d: usize, seed: u64) -> RealMat {
+        let mut rng = Pcg64::seed_from(seed);
+        let mut m = RealMat::zeros(n, d);
+        for r in 0..n {
+            for c in 0..d {
+                m.set(r, c, (rng.next_f64() - 0.5) * 4.0);
+            }
+        }
+        m
+    }
+
+    fn rand_cat(n: usize, cards: &[u32], seed: u64) -> CatMat {
+        let mut rng = Pcg64::seed_from(seed);
+        let d = cards.len();
+        let mut codes = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            for &v in cards {
+                codes.push((rng.next_f64() * v as f64) as u32 % v);
+            }
+        }
+        CatMat::from_codes(n, cards, &codes)
+    }
+
     #[test]
     fn add_remove_roundtrip_restores_stats() {
         let data = rand_data(10, 33, 1);
-        let model = BetaBernoulli::symmetric(33, 0.5);
+        let model = Model::bernoulli(33, 0.5);
         let mut c = ClusterStats::empty(33);
         for r in 0..10 {
             c.add(&data, r);
@@ -425,7 +1360,7 @@ mod tests {
     #[test]
     fn cached_score_matches_uncached() {
         let data = rand_data(20, 65, 2);
-        let model = BetaBernoulli::symmetric(65, 0.3);
+        let model = Model::bernoulli(65, 0.3);
         let mut c = ClusterStats::empty(65);
         for r in 0..12 {
             c.add(&data, r);
@@ -443,24 +1378,25 @@ mod tests {
     #[test]
     fn empty_cluster_score_is_neg_d_ln2() {
         let data = rand_data(3, 17, 3);
-        let model = BetaBernoulli::symmetric(17, 0.7);
+        let model = Model::bernoulli(17, 0.7);
         let mut c = ClusterStats::empty(17);
-        let want = model.empty_cluster_loglik();
+        let want = model.as_bernoulli().empty_cluster_loglik();
         for r in 0..3 {
             assert!((c.score(&model, &data, r) - want).abs() < 1e-12);
+            assert_eq!(model.log_pred_empty((&data).into(), r), want);
         }
     }
 
     #[test]
     fn cache_invalidates_on_hyper_change() {
         let data = rand_data(8, 9, 4);
-        let mut model = BetaBernoulli::symmetric(9, 0.5);
+        let mut model = Model::bernoulli(9, 0.5);
         let mut c = ClusterStats::empty(9);
         for r in 0..8 {
             c.add(&data, r);
         }
         let s_before = c.score(&model, &data, 0);
-        model.beta = vec![2.0; 9];
+        model.as_bernoulli_mut().beta = vec![2.0; 9];
         c.invalidate_cache();
         let s_after = c.score(&model, &data, 0);
         assert!((s_after - c.score_uncached(&model, &data, 0)).abs() < 1e-10);
@@ -471,7 +1407,7 @@ mod tests {
     fn log_marginal_matches_sequential_predictives() {
         // chain rule: log m(x_1..x_n) = Σ_i log p(x_i | x_<i)
         let data = rand_data(6, 21, 5);
-        let model = BetaBernoulli::symmetric(21, 0.4);
+        let model = Model::bernoulli(21, 0.4);
         let mut c = ClusterStats::empty(21);
         let mut chain = 0.0;
         for r in 0..6 {
@@ -488,7 +1424,7 @@ mod tests {
     #[test]
     fn copy_from_duplicates_stats_and_invalidates_cache() {
         let data = rand_data(12, 15, 9);
-        let model = BetaBernoulli::symmetric(15, 0.5);
+        let model = Model::bernoulli(15, 0.5);
         let mut src = ClusterStats::empty(15);
         for r in 0..7 {
             src.add(&data, r);
@@ -553,7 +1489,7 @@ mod tests {
     #[test]
     fn lut_backed_score_correct_after_growth() {
         let data = rand_data(30, 9, 8);
-        let mut model = BetaBernoulli::symmetric(9, 0.5);
+        let mut model = Model::bernoulli(9, 0.5);
         model.build_lut(5); // deliberately too small for 30 rows
         let mut c = ClusterStats::empty(9);
         for r in 0..30 {
@@ -597,4 +1533,266 @@ mod tests {
         c.predictive_p1(&model, &mut p);
         assert!(p.iter().all(|&x| x > 0.0 && x < 1.0));
     }
+
+    // ---- collapsed diagonal Gaussian ----
+
+    #[test]
+    fn gaussian_cached_score_matches_uncached() {
+        let data = rand_real(20, 5, 11);
+        let model = Model::Gaussian(DiagGaussian::new(5, 1.5, 0.3, 2.0, 1.2));
+        let mut c = ClusterStats::empty(5);
+        for r in 0..12 {
+            c.add(&data, r);
+        }
+        for r in 0..20 {
+            let cached = c.score(&model, &data, r);
+            let plain = c.score_uncached(&model, &data, r);
+            assert!(
+                (cached - plain).abs() < 1e-9 * plain.abs().max(1.0),
+                "row {r}: {cached} vs {plain}"
+            );
+            // the pre-fetched-row path reads the same cache
+            let row_path = c.score_real(&model, data.row(r));
+            assert_eq!(row_path.to_bits(), cached.to_bits());
+        }
+    }
+
+    #[test]
+    fn gaussian_chain_rule_matches_marginal() {
+        // chain rule: log m(x_1..x_n) = Σ_i log p(x_i | x_<i), with
+        // Student-t predictives and the closed-form NIG marginal
+        let data = rand_real(8, 3, 12);
+        let model = Model::Gaussian(DiagGaussian::new(3, 0.8, -0.2, 1.5, 0.9));
+        let mut c = ClusterStats::empty(3);
+        let mut chain = 0.0;
+        for r in 0..8 {
+            chain += c.score(&model, &data, r);
+            c.add(&data, r);
+        }
+        let marginal = c.log_marginal(&model);
+        assert!(
+            (chain - marginal).abs() < 1e-8 * marginal.abs().max(1.0),
+            "chain {chain} vs marginal {marginal}"
+        );
+    }
+
+    #[test]
+    fn gaussian_empty_score_is_prior_predictive() {
+        let data = rand_real(4, 6, 13);
+        let model = Model::Gaussian(DiagGaussian::new(6, 2.0, 0.0, 3.0, 2.0));
+        let mut c = ClusterStats::empty(6);
+        for r in 0..4 {
+            // the n = 0 cache rebuild shares the precomputed prior
+            // pieces with log_pred_empty, so the two paths are
+            // bit-identical (kernels rely on this for the fresh-cluster
+            // candidate score)
+            let cached = c.score(&model, &data, r);
+            let empty = model.log_pred_empty((&data).into(), r);
+            assert_eq!(cached.to_bits(), empty.to_bits(), "row {r}");
+        }
+        assert_eq!(c.log_marginal(&model), 0.0);
+    }
+
+    #[test]
+    fn gaussian_add_remove_roundtrip_and_exact_empty() {
+        let data = rand_real(9, 4, 14);
+        let model = Model::Gaussian(DiagGaussian::new(4, 1.0, 0.5, 2.5, 1.0));
+        let mut c = ClusterStats::empty(4);
+        for r in 0..8 {
+            c.add(&data, r);
+        }
+        let before = c.score(&model, &data, 8);
+        c.add(&data, 3);
+        c.remove(&data, 3);
+        let after = c.score(&model, &data, 8);
+        assert!((before - after).abs() < 1e-9, "{before} vs {after}");
+        for r in 0..8 {
+            c.remove(&data, r);
+        }
+        assert!(c.is_empty());
+        // moments snap to exact zeros at n = 0 (no removal drift)
+        assert!(c.sum().iter().all(|&v| v == 0.0));
+        assert!(c.sumsq().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gaussian_marginal_prefers_tight_cluster() {
+        let model = Model::Gaussian(DiagGaussian::new(1, 1.0, 0.0, 1.0, 1.0));
+        let tight = RealMat::from_dense(2, 1, vec![0.4, 0.4]);
+        let far = RealMat::from_dense(2, 1, vec![-3.0, 3.0]);
+        let mut a = ClusterStats::empty(1);
+        a.add(&tight, 0);
+        a.add(&tight, 1);
+        let mut b = ClusterStats::empty(1);
+        b.add(&far, 0);
+        b.add(&far, 1);
+        assert!(a.log_marginal(&model) > b.log_marginal(&model));
+    }
+
+    #[test]
+    fn gaussian_copy_from_and_absorb_carry_moments() {
+        let data = rand_real(10, 3, 15);
+        let model = Model::Gaussian(DiagGaussian::new(3, 1.0, 0.0, 2.0, 1.0));
+        let mut a = ClusterStats::empty(3);
+        let mut b = ClusterStats::empty(3);
+        for r in 0..5 {
+            a.add(&data, r);
+        }
+        for r in 5..10 {
+            b.add(&data, r);
+        }
+        a.absorb(&b);
+        let mut all = ClusterStats::empty(3);
+        for r in 0..10 {
+            all.add(&data, r);
+        }
+        assert_eq!(a.n(), all.n());
+        for i in 0..3 {
+            assert!((a.sum()[i] - all.sum()[i]).abs() < 1e-12);
+            assert!((a.sumsq()[i] - all.sumsq()[i]).abs() < 1e-12);
+        }
+        let mut dst = ClusterStats::empty(3);
+        dst.copy_from(&all);
+        let got = dst.score(&model, &data, 2);
+        let want = all.score_uncached(&model, &data, 2);
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    // ---- Dirichlet–multinomial categorical ----
+
+    #[test]
+    fn categorical_cached_score_matches_uncached() {
+        let cards = [3u32, 2, 4];
+        let data = rand_cat(18, &cards, 21);
+        let model = Model::Categorical(Categorical::new(&cards, 0.7));
+        let mut c = ClusterStats::empty(model.stat_dims());
+        for r in 0..10 {
+            c.add(&data, r);
+        }
+        for r in 0..18 {
+            let cached = c.score(&model, &data, r);
+            let plain = c.score_uncached(&model, &data, r);
+            assert!(
+                (cached - plain).abs() < 1e-12,
+                "row {r}: {cached} vs {plain}"
+            );
+        }
+    }
+
+    #[test]
+    fn categorical_chain_rule_matches_marginal() {
+        let cards = [4u32, 3];
+        let data = rand_cat(9, &cards, 22);
+        let model = Model::Categorical(Categorical::new(&cards, 0.5));
+        let mut c = ClusterStats::empty(model.stat_dims());
+        let mut chain = 0.0;
+        for r in 0..9 {
+            chain += c.score(&model, &data, r);
+            c.add(&data, r);
+        }
+        let marginal = c.log_marginal(&model);
+        assert!(
+            (chain - marginal).abs() < 1e-9,
+            "chain {chain} vs marginal {marginal}"
+        );
+    }
+
+    #[test]
+    fn categorical_empty_score_is_neg_sum_log_cards() {
+        let cards = [3u32, 5];
+        let data = rand_cat(3, &cards, 23);
+        let model = Model::Categorical(Categorical::new(&cards, 1.3));
+        let want = -(3.0f64.ln() + 5.0f64.ln());
+        let mut c = ClusterStats::empty(model.stat_dims());
+        for r in 0..3 {
+            assert_eq!(model.log_pred_empty((&data).into(), r), want);
+            assert!((c.score(&model, &data, r) - want).abs() < 1e-12, "row {r}");
+        }
+        assert_eq!(c.log_marginal(&model), 0.0);
+    }
+
+    // ---- Model / ModelSpec plumbing ----
+
+    #[test]
+    fn model_widths_match_data_widths() {
+        let bb = Model::bernoulli(7, 0.5);
+        assert_eq!((bb.stat_dims(), bb.table_rows()), (7, 7));
+        let g = Model::Gaussian(DiagGaussian::new(3, 1.0, 0.0, 1.0, 1.0));
+        assert_eq!((g.stat_dims(), g.table_rows()), (3, 6));
+        let cat = Model::Categorical(Categorical::new(&[3, 2], 0.5));
+        assert_eq!((cat.stat_dims(), cat.table_rows()), (5, 5));
+        let r = RealMat::zeros(2, 3);
+        let dr: DataRef = (&r).into();
+        assert_eq!(dr.table_rows(), g.table_rows());
+    }
+
+    #[test]
+    fn modelspec_parse_accepts_and_rejects() {
+        assert_eq!(ModelSpec::parse("bernoulli").unwrap(), ModelSpec::Bernoulli);
+        assert_eq!(ModelSpec::parse("gaussian").unwrap(), ModelSpec::DEFAULT_GAUSSIAN);
+        assert_eq!(
+            ModelSpec::parse("gaussian:2,0.5,3,1.5").unwrap(),
+            ModelSpec::Gaussian {
+                kappa0: 2.0,
+                m0: 0.5,
+                a0: 3.0,
+                b0: 1.5
+            }
+        );
+        assert_eq!(
+            ModelSpec::parse("categorical:0.25").unwrap(),
+            ModelSpec::Categorical { gamma: 0.25 }
+        );
+        for bad in [
+            "foo",
+            "bernoulli:0.5",
+            "gaussian:1,2",
+            "gaussian:1,2,3,x",
+            "gaussian:-1,0,1,1",
+            "categorical:-0.5",
+            "categorical:zero",
+        ] {
+            assert!(ModelSpec::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn modelspec_build_rejects_kind_mismatch() {
+        let bits = BinMat::zeros(4, 6);
+        let real = RealMat::zeros(4, 3);
+        let cat = rand_cat(4, &[3, 2], 31);
+        assert!(ModelSpec::Bernoulli.build((&bits).into(), 0.5).is_ok());
+        assert!(ModelSpec::Bernoulli.build((&real).into(), 0.5).is_err());
+        assert!(ModelSpec::DEFAULT_GAUSSIAN.build((&real).into(), 0.5).is_ok());
+        assert!(ModelSpec::DEFAULT_GAUSSIAN.build((&cat).into(), 0.5).is_err());
+        let m = ModelSpec::DEFAULT_CATEGORICAL.build((&cat).into(), 0.5).unwrap();
+        assert_eq!(m.stat_dims(), 5); // cards picked up from the data
+        assert!(ModelSpec::DEFAULT_CATEGORICAL.build((&bits).into(), 0.5).is_err());
+        assert_eq!(ModelSpec::Bernoulli.tag(), 0);
+        assert_eq!(ModelSpec::DEFAULT_GAUSSIAN.tag(), 1);
+        assert_eq!(ModelSpec::DEFAULT_CATEGORICAL.tag(), 2);
+    }
+
+    #[test]
+    fn restore_hyper_restores_or_rejects() {
+        let mut bb = Model::bernoulli(3, 0.5);
+        bb.restore_hyper(&[0.2, 0.3, 0.4], 16).unwrap();
+        assert_eq!(bb.as_bernoulli().beta, vec![0.2, 0.3, 0.4]);
+        assert!(bb.restore_hyper(&[0.2, 0.3], 16).is_err());
+        assert!(bb.restore_hyper(&[0.2, -1.0, 0.4], 16).is_err());
+
+        let mut g = Model::Gaussian(DiagGaussian::new(2, 1.0, 0.0, 2.0, 1.5));
+        assert!(g.restore_hyper(&[1.0, 0.0, 2.0, 1.5], 16).is_ok());
+        assert!(g.restore_hyper(&[1.0, 0.0, 2.0, 1.6], 16).is_err());
+        assert!(g.restore_hyper(&[1.0, 0.0, 2.0], 16).is_err());
+
+        let mut cat = Model::Categorical(Categorical::new(&[3, 2], 0.5));
+        assert!(cat.restore_hyper(&[0.5, 3.0, 2.0], 16).is_ok());
+        assert!(cat.restore_hyper(&[0.7, 3.0, 2.0], 16).is_err());
+        assert!(cat.restore_hyper(&[0.5, 3.0, 4.0], 16).is_err());
+    }
 }
+
+
+
+

@@ -223,6 +223,45 @@ pub trait Scorer: Send {
         accumulate_ones_block(out, &ones[..cut], diff, j);
     }
 
+    /// Real-data variant of [`Self::score_ones_against_clusters`] for
+    /// the collapsed-Gaussian sweep path: score one dense row against
+    /// `j` packed Student-t columns. `diff` is the `[2D, J]` two-plane
+    /// layout (rows `0..D` the posterior locations `m_n`, rows `D..2D`
+    /// the inverse scales `κ_n/(2b_n(κ_n+1))`), and each column
+    /// evaluates `bias[s] − aux[s] · Σ_d ln1p((x_d − m_d)² · inv_d)`
+    /// with the per-dimension terms added in ascending-`d` order — the
+    /// exact fp order of the scalar per-cluster path, so batched and
+    /// scalar chains stay bit-identical just like the bit-sparse path.
+    /// `out` is cleared and refilled with exactly `j` entries.
+    #[allow(clippy::too_many_arguments)] // mirrors the artifact ABI
+    fn score_real_against_clusters(
+        &mut self,
+        row: &[f64],
+        bias: &[f64],
+        aux: &[f64],
+        diff: &[f64],
+        j: usize,
+        out: &mut Vec<f64>,
+    ) {
+        let d = row.len();
+        assert_eq!(bias.len(), j);
+        assert_eq!(aux.len(), j);
+        assert_eq!(diff.len(), 2 * d * j);
+        out.clear();
+        out.resize(j, 0.0);
+        for (dd, &x) in row.iter().enumerate() {
+            let mn = &diff[dd * j..(dd + 1) * j];
+            let inv = &diff[(d + dd) * j..(d + dd + 1) * j];
+            for jj in 0..j {
+                let t = x - mn[jj];
+                out[jj] += (t * t * inv[jj]).ln_1p();
+            }
+        }
+        for jj in 0..j {
+            out[jj] = bias[jj] - aux[jj] * out[jj];
+        }
+    }
+
     /// Implementation name for logs/benches.
     fn name(&self) -> &'static str;
 }
@@ -651,6 +690,36 @@ mod tests {
                     "row {r} col {jj}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn score_real_matches_scalar_order_bitwise() {
+        let mut rng = Pcg64::seed_from(14);
+        let (d, j) = (6usize, 5usize);
+        let row: Vec<f64> = (0..d).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let mut diff = vec![0.0f64; 2 * d * j];
+        for s in diff.iter_mut().take(d * j) {
+            *s = rng.next_f64() - 0.5; // location plane
+        }
+        for s in diff.iter_mut().skip(d * j) {
+            *s = rng.next_f64() + 0.1; // inverse-scale plane (> 0)
+        }
+        let bias: Vec<f64> = (0..j).map(|_| -3.0 * rng.next_f64()).collect();
+        let aux: Vec<f64> = (0..j).map(|_| 1.0 + rng.next_f64()).collect();
+        let mut s = FallbackScorer::new();
+        let mut out = Vec::new();
+        s.score_real_against_clusters(&row, &bias, &aux, &diff, j, &mut out);
+        assert_eq!(out.len(), j);
+        for jj in 0..j {
+            // scalar reference: per-dim terms added in ascending-d order
+            let mut acc = 0.0f64;
+            for dd in 0..d {
+                let t = row[dd] - diff[dd * j + jj];
+                acc += (t * t * diff[(d + dd) * j + jj]).ln_1p();
+            }
+            let want = bias[jj] - aux[jj] * acc;
+            assert_eq!(out[jj].to_bits(), want.to_bits(), "col {jj}");
         }
     }
 

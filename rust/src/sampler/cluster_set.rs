@@ -18,8 +18,8 @@
 //!   restores the invariant with [`ClusterSet::compact_free_slots`].
 
 use super::score::PackedTables;
-use crate::data::BinMat;
-use crate::model::{BetaBernoulli, ClusterStats};
+use crate::data::DataRef;
+use crate::model::{BetaBernoulli, ClusterStats, Model};
 
 /// Largest number of emptied [`ClusterStats`] kept for reuse: a freshly
 /// emptied cluster's count vectors are already zeroed, so recycling them
@@ -73,7 +73,8 @@ impl ClusterSet {
         }
     }
 
-    /// Binary data dimensionality every cluster's stats are sized for.
+    /// Sufficient-statistic width every cluster's stats are sized for
+    /// (the model's `stat_dims` / the data's [`DataRef::dims`]).
     pub fn dims(&self) -> usize {
         self.dims
     }
@@ -128,7 +129,7 @@ impl ClusterSet {
     }
 
     /// Add datum (row `r` of `data`) to the cluster in `slot`.
-    pub fn add_row(&mut self, slot: usize, data: &BinMat, r: usize) {
+    pub fn add_row<'a>(&mut self, slot: usize, data: impl Into<DataRef<'a>>, r: usize) {
         self.slots[slot]
             .as_mut()
             .expect("add_row to dead slot")
@@ -137,7 +138,7 @@ impl ClusterSet {
 
     /// Remove datum from its cluster, freeing the slot if it empties
     /// (the emptied stats are recycled for later `alloc_empty` calls).
-    pub fn remove_row(&mut self, slot: usize, data: &BinMat, r: usize) {
+    pub fn remove_row<'a>(&mut self, slot: usize, data: impl Into<DataRef<'a>>, r: usize) {
         let c = self.slots[slot]
             .as_mut()
             .expect("remove_row from dead slot");
@@ -152,7 +153,12 @@ impl ClusterSet {
     /// Remove datum WITHOUT freeing an emptied slot (Walker keeps emptied
     /// tables selectable through their stick until the end of the sweep;
     /// call [`Self::compact_free_slots`] afterwards).
-    pub fn remove_row_keep_slot(&mut self, slot: usize, data: &BinMat, r: usize) {
+    pub fn remove_row_keep_slot<'a>(
+        &mut self,
+        slot: usize,
+        data: impl Into<DataRef<'a>>,
+        r: usize,
+    ) {
         self.slots[slot]
             .as_mut()
             .expect("remove_row from dead slot")
@@ -185,8 +191,9 @@ impl ClusterSet {
     /// assert_eq!(cs.n_of(b), 2);
     /// cs.check_slot_invariants().unwrap();
     /// ```
-    pub fn move_row(&mut self, from: usize, to: usize, data: &BinMat, r: usize) {
+    pub fn move_row<'a>(&mut self, from: usize, to: usize, data: impl Into<DataRef<'a>>, r: usize) {
         debug_assert_ne!(from, to, "move_row between distinct slots");
+        let data = data.into();
         self.remove_row(from, data, r);
         self.add_row(to, data, r);
     }
@@ -247,11 +254,11 @@ impl ClusterSet {
 
     /// Collapsed predictive log-likelihood of row `r` under `slot`
     /// (empty-but-alive clusters score as fresh tables).
-    pub fn score_slot(
+    pub fn score_slot<'a>(
         &mut self,
         slot: usize,
-        model: &BetaBernoulli,
-        data: &BinMat,
+        model: &Model,
+        data: impl Into<DataRef<'a>>,
         r: usize,
     ) -> f64 {
         self.slots[slot]
@@ -277,7 +284,7 @@ impl ClusterSet {
     /// dispatch, when the stats are settled again.
     pub(crate) fn refresh_packed(
         &mut self,
-        model: &BetaBernoulli,
+        model: &Model,
         tables: &mut PackedTables,
         defer: Option<usize>,
     ) {
@@ -297,8 +304,9 @@ impl ClusterSet {
                 _ => continue, // dead slot: never read until reused
             };
             let ln_n = c.log_n();
-            let (bias, dtab) = c.cached_table(model);
+            let (bias, aux, dtab) = c.cached_table(model);
             tables.bias[s] = bias;
+            tables.aux[s] = aux;
             tables.logn[s] = ln_n;
             for (dd, &v) in dtab.iter().enumerate() {
                 tables.diff[dd * stride + s] = v;
@@ -395,6 +403,7 @@ impl ClusterSet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::BinMat;
     use crate::rng::Pcg64;
 
     fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {

@@ -68,8 +68,8 @@
 //! by the posterior-enumeration gate in `rust/tests/posterior_exactness.rs`.
 
 use super::shard::Shard;
-use crate::data::BinMat;
-use crate::model::BetaBernoulli;
+use crate::data::DataRef;
+use crate::model::Model;
 use crate::rng::{beta as beta_draw, categorical_log_inplace};
 use crate::special::{lgamma, logsumexp};
 
@@ -82,8 +82,11 @@ pub trait TransitionKernel: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// One full sweep over the shard's resident rows, driven by the
-    /// shard's private RNG stream and concentration θ.
-    fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli);
+    /// shard's private RNG stream and concentration θ. `data` is the
+    /// likelihood-agnostic [`DataRef`] view (pass `(&binmat).into()` /
+    /// `(&catmat).into()` / `(&realmat).into()`); `model` must match the
+    /// data kind (see [`crate::model::ModelSpec::build`]).
+    fn sweep(&self, shard: &mut Shard, data: DataRef<'_>, model: &Model);
 }
 
 /// Neal (2000) Algorithm 3: collapsed Gibbs.
@@ -94,9 +97,8 @@ impl TransitionKernel for CollapsedGibbs {
         "collapsed-gibbs"
     }
 
-    fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli) {
+    fn sweep(&self, shard: &mut Shard, data: DataRef<'_>, model: &Model) {
         let log_theta = shard.theta.max(1e-300).ln();
-        let empty_ll = model.empty_cluster_loglik();
         shard.scoring_begin_sweep();
         let eager = shard.scoring_eager();
         for i in 0..shard.rows.len() {
@@ -115,7 +117,7 @@ impl TransitionKernel for CollapsedGibbs {
             // dispatch (scalar reference, or one batched Scorer call)
             shard.score_crp_candidates(data, r, model, held);
             shard.scratch_ids.push(u32::MAX);
-            shard.scratch_logw.push(log_theta + empty_ll);
+            shard.scratch_logw.push(log_theta + model.log_pred_empty(data, r));
             let pick = categorical_log_inplace(&mut shard.rng, &mut shard.scratch_logw);
             let slot = shard.place_pick(pick, data, r) as usize;
             // self-move (the stationary common case): stats are restored
@@ -178,7 +180,7 @@ impl TransitionKernel for WalkerSlice {
         "walker-slice"
     }
 
-    fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli) {
+    fn sweep(&self, shard: &mut Shard, data: DataRef<'_>, model: &Model) {
         let theta = shard.theta.max(1e-12);
         if shard.rows.is_empty() {
             return;
@@ -263,7 +265,6 @@ impl TransitionKernel for WalkerSlice {
         // eligibility). Emptied clusters keep their stick and score as
         // empty tables; picking an unmaterialized stick creates its
         // cluster, which later data in the same sweep can then join.
-        let empty_loglik = model.empty_cluster_loglik();
         shard.scoring_begin_sweep();
         let eager = shard.scoring_eager();
         for i in 0..n {
@@ -292,7 +293,6 @@ impl TransitionKernel for WalkerSlice {
                 r,
                 model,
                 &scratch.cand_slots,
-                empty_loglik,
                 Some(old_slot),
                 &mut scratch.logw,
             );
@@ -392,8 +392,10 @@ const SM_RESTRICTED_SCANS: usize = 2;
 /// shaped by a *launch state* — the non-anchor members coin-flipped
 /// between the two sides, then refined by `t` restricted Gibbs scans —
 /// and a final restricted scan whose sequential conditionals give the
-/// proposal density `q`. With the Beta–Bernoulli base measure collapsed,
-/// the MH ratio is exact:
+/// proposal density `q`. With the base measure collapsed (any
+/// [`Model`] likelihood — the marginals come through
+/// [`crate::model::ComponentModel::log_marginal`]), the MH ratio is
+/// exact:
 ///
 /// ```text
 ///   P(split) / P(merged) = θ · Γ(n₁)Γ(n₂)/Γ(n₁+n₂) · m(x₁)m(x₂)/m(x₁₂)
@@ -483,7 +485,7 @@ impl TransitionKernel for SplitMerge {
         self.name
     }
 
-    fn sweep(&self, shard: &mut Shard, data: &BinMat, model: &BetaBernoulli) {
+    fn sweep(&self, shard: &mut Shard, data: DataRef<'_>, model: &Model) {
         // base sweep first: ITS begin-of-sweep hook re-enqueues every
         // packed column (cluster membership may have changed arbitrarily
         // since the last sweep — shuffle moves, resume), so the move
@@ -500,8 +502,8 @@ impl TransitionKernel for SplitMerge {
 /// change.
 pub(crate) fn split_merge_moves(
     shard: &mut Shard,
-    data: &BinMat,
-    model: &BetaBernoulli,
+    data: DataRef<'_>,
+    model: &Model,
     moves: usize,
     scans: usize,
 ) {
@@ -542,14 +544,13 @@ pub(crate) fn split_merge_moves(
 /// Anchors never move, so neither side can empty mid-scan.
 fn restricted_scan(
     shard: &mut Shard,
-    data: &BinMat,
-    model: &BetaBernoulli,
+    data: DataRef<'_>,
+    model: &Model,
     members: &[usize],
     side_i: usize,
     side_j: usize,
     forced: Option<&[bool]>,
 ) -> f64 {
-    let empty_ll = model.empty_cluster_loglik(); // sentinel; both slots are live
     let eager = shard.scoring_eager();
     let mut logw = std::mem::take(&mut shard.sm.logw);
     let mut log_q = 0.0;
@@ -563,7 +564,6 @@ fn restricted_scan(
             r,
             model,
             &[side_i as u32, side_j as u32],
-            empty_ll,
             Some(cur),
             &mut logw,
         );
@@ -598,8 +598,8 @@ fn restricted_scan(
 /// bit-exactly (the emptied fresh slot returns to the free list).
 fn propose_split(
     shard: &mut Shard,
-    data: &BinMat,
-    model: &BetaBernoulli,
+    data: DataRef<'_>,
+    model: &Model,
     scans: usize,
     (i, j): (usize, usize),
     c: usize,
@@ -676,8 +676,8 @@ fn propose_split(
 /// the pre-move state bit-exactly, so rejection needs no further work.
 fn propose_merge(
     shard: &mut Shard,
-    data: &BinMat,
-    model: &BetaBernoulli,
+    data: DataRef<'_>,
+    model: &Model,
     scans: usize,
     (i, j): (usize, usize),
     (a, b): (usize, usize),
@@ -946,6 +946,7 @@ impl KernelAssignment {
 mod tests {
     use super::*;
     use crate::data::synthetic::SyntheticConfig;
+    use crate::data::BinMat;
     use crate::rng::Pcg64;
 
     #[test]
@@ -1062,12 +1063,12 @@ mod tests {
             seed: 3,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(16, 0.5);
+        let mut model = Model::bernoulli(16, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(1));
         for _ in 0..5 {
-            WalkerSlice.sweep(&mut st, &ds.train, &model);
+            WalkerSlice.sweep(&mut st, (&ds.train).into(), &model);
             st.check_invariants(&ds.train).unwrap();
         }
         assert!(st.num_clusters() >= 1);
@@ -1084,12 +1085,12 @@ mod tests {
             seed: 4,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(32, 0.5);
+        let mut model = Model::bernoulli(32, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_from_prior(&ds.train, rows, 4.0, Pcg64::seed_from(5));
         for _ in 0..30 {
-            WalkerSlice.sweep(&mut st, &ds.train, &model);
+            WalkerSlice.sweep(&mut st, (&ds.train).into(), &model);
         }
         let j = st.num_clusters();
         assert!((2..=16).contains(&j), "Walker found {j} clusters, expected ~4");
@@ -1111,12 +1112,12 @@ mod tests {
             seed: 11,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(8, 0.5);
+        let mut model = Model::bernoulli(8, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(12));
         st.set_theta(20_000.0);
-        WalkerSlice.sweep(&mut st, &ds.train, &model);
+        WalkerSlice.sweep(&mut st, (&ds.train).into(), &model);
         assert_eq!(
             st.stick_overflow_events(),
             0,
@@ -1145,12 +1146,12 @@ mod tests {
             seed: 13,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(8, 0.5);
+        let mut model = Model::bernoulli(8, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(14));
         st.set_theta(1.0e12);
-        WalkerSlice.sweep(&mut st, &ds.train, &model);
+        WalkerSlice.sweep(&mut st, (&ds.train).into(), &model);
         assert!(
             st.stick_overflow_events() > 0,
             "budget exhaustion must be recorded, not silent"
@@ -1169,12 +1170,12 @@ mod tests {
             seed: 6,
         }
         .generate_with_test_fraction(0.0);
-        let model = BetaBernoulli::symmetric(8, 0.5);
+        let model = Model::bernoulli(8, 0.5);
         let mut st = Shard::init_from_prior(&ds.train, Vec::new(), 0.5, Pcg64::seed_from(7));
-        WalkerSlice.sweep(&mut st, &ds.train, &model);
-        CollapsedGibbs.sweep(&mut st, &ds.train, &model);
-        SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
-        SPLIT_MERGE_WALKER.sweep(&mut st, &ds.train, &model);
+        WalkerSlice.sweep(&mut st, (&ds.train).into(), &model);
+        CollapsedGibbs.sweep(&mut st, (&ds.train).into(), &model);
+        SPLIT_MERGE_GIBBS.sweep(&mut st, (&ds.train).into(), &model);
+        SPLIT_MERGE_WALKER.sweep(&mut st, (&ds.train).into(), &model);
         assert_eq!(st.num_rows(), 0);
     }
 
@@ -1188,7 +1189,7 @@ mod tests {
             seed: 8,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(8, 0.5);
+        let mut model = Model::bernoulli(8, 0.5);
         model.build_lut(ds.train.rows() + 1);
         for kind in [
             KernelKind::CollapsedGibbs,
@@ -1200,7 +1201,7 @@ mod tests {
             let mut st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(9));
             let kernel = kind.kernel();
             for _ in 0..3 {
-                kernel.sweep(&mut st, &ds.train, &model);
+                kernel.sweep(&mut st, (&ds.train).into(), &model);
                 st.check_invariants(&ds.train).unwrap();
             }
             assert_eq!(st.num_rows(), ds.train.rows());
@@ -1217,7 +1218,7 @@ mod tests {
     fn split_merge_acceptance_matches_hand_computed_two_point_odds() {
         use crate::model::ClusterStats;
         let data = BinMat::from_dense(2, 3, &[1, 1, 0, 0, 0, 1]);
-        let mut model = BetaBernoulli::symmetric(3, 0.7);
+        let mut model = Model::bernoulli(3, 0.7);
         model.build_lut(3);
         let theta = 0.8f64;
         // exact odds from the collapsed marginals
@@ -1248,7 +1249,7 @@ mod tests {
         let mut apart = 0u64;
         for _ in 0..samples {
             sh.scoring_begin_sweep();
-            split_merge_moves(&mut sh, &data, &model, 1, 2);
+            split_merge_moves(&mut sh, (&data).into(), &model, 1, 2);
             if sh.num_clusters() == 2 {
                 apart += 1;
             }
@@ -1274,7 +1275,7 @@ mod tests {
         use crate::testing::{canonical_partition, enumerate_posterior, partition_tv_distance};
         use std::collections::HashMap;
         let data = BinMat::from_dense(3, 4, &[1, 1, 0, 0, 1, 0, 0, 1, 0, 0, 1, 1]);
-        let mut model = BetaBernoulli::symmetric(4, 0.6);
+        let mut model = Model::bernoulli(4, 0.6);
         model.build_lut(4);
         let alpha = 1.1;
         let truth = enumerate_posterior(&data, &model, alpha);
@@ -1286,7 +1287,7 @@ mod tests {
         let samples = 60_000u64;
         for it in 0..(burn + samples) {
             sh.scoring_begin_sweep();
-            split_merge_moves(&mut sh, &data, &model, 2, 2);
+            split_merge_moves(&mut sh, (&data).into(), &model, 2, 2);
             if it >= burn {
                 *counts
                     .entry(canonical_partition(sh.assignments_local()))
@@ -1311,12 +1312,12 @@ mod tests {
             seed: 14,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(32, 0.5);
+        let mut model = Model::bernoulli(32, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_from_prior(&ds.train, rows, 4.0, Pcg64::seed_from(15));
         for _ in 0..30 {
-            SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
+            SPLIT_MERGE_GIBBS.sweep(&mut st, (&ds.train).into(), &model);
             st.check_invariants(&ds.train).unwrap();
         }
         assert_eq!(st.num_rows(), 400);
@@ -1341,13 +1342,13 @@ mod tests {
             seed: 16,
         }
         .generate_with_test_fraction(0.0);
-        let mut model = BetaBernoulli::symmetric(32, 0.5);
+        let mut model = Model::bernoulli(32, 0.5);
         model.build_lut(ds.train.rows() + 1);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let mut st = Shard::init_single_cluster(&ds.train, rows, 1.0, Pcg64::seed_from(17));
         assert_eq!(st.num_clusters(), 1);
         for _ in 0..15 {
-            SPLIT_MERGE_GIBBS.sweep(&mut st, &ds.train, &model);
+            SPLIT_MERGE_GIBBS.sweep(&mut st, (&ds.train).into(), &model);
         }
         st.check_invariants(&ds.train).unwrap();
         let (_, splits, _) = st.split_merge_stats();

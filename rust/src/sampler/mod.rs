@@ -37,18 +37,18 @@
 //!
 //! ```
 //! use clustercluster::data::synthetic::SyntheticConfig;
-//! use clustercluster::model::BetaBernoulli;
+//! use clustercluster::model::Model;
 //! use clustercluster::rng::Pcg64;
 //! use clustercluster::sampler::{KernelKind, Shard, TransitionKernel};
 //!
 //! let ds = SyntheticConfig { n: 120, d: 8, clusters: 3, beta: 0.2, seed: 1 }
 //!     .generate_with_test_fraction(0.0);
-//! let model = BetaBernoulli::symmetric(8, 0.5);
+//! let model = Model::bernoulli(8, 0.5);
 //! let rows: Vec<usize> = (0..ds.train.rows()).collect();
 //! let mut shard = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(7));
 //! let kernel = KernelKind::CollapsedGibbs.kernel();
 //! for _ in 0..3 {
-//!     kernel.sweep(&mut shard, &ds.train, &model);
+//!     kernel.sweep(&mut shard, (&ds.train).into(), &model);
 //! }
 //! assert_eq!(shard.num_rows(), 120);
 //! shard.check_invariants(&ds.train).unwrap();

@@ -107,8 +107,12 @@ impl ScoreDispatch {
     }
 }
 
-/// The packed `[D, J]` predictive tables of one shard: one column per
-/// `ClusterSet` slot (`stride` columns allocated, grown geometrically).
+/// The packed `[table_rows, J]` predictive tables of one shard: one
+/// column per `ClusterSet` slot (`stride` columns allocated, grown
+/// geometrically). `dims` is the model's
+/// [`crate::model::ComponentModel::table_rows`] — `D` for Bernoulli, the
+/// one-hot width `W` for categorical, and `2D` for the Gaussian (a
+/// location plane then an inverse-scale plane).
 ///
 /// Staleness is tracked by an O(1) queue: [`Self::invalidate`] enqueues
 /// a slot (at most once, via `queued`), and
@@ -124,10 +128,14 @@ pub(crate) struct PackedTables {
     /// normalizer `−D·ln(n_s + 2β)` enters this scalar once per column,
     /// not per dim (see `ClusterStats::rebuild_cache`)
     pub(crate) bias: Vec<f64>,
+    /// `aux[s]`: the per-column Student-t exponent a_n+½ for the
+    /// Gaussian model (0 for the bit-backed models, which never read it)
+    pub(crate) aux: Vec<f64>,
     /// `logn[s]` = ln n_s (the CRP prior factor, added *after* the
     /// likelihood block to match scalar addition order)
     pub(crate) logn: Vec<f64>,
-    /// `diff[d·stride + s]` = ln p̂(x_d=1|s) − ln p̂(x_d=0|s)
+    /// bit models: `diff[d·stride + s]` = ln p̂(x_d=1|s) − ln p̂(x_d=0|s);
+    /// Gaussian: rows 0..D hold m_n, rows D..2D hold κ_n/(2b_n(κ_n+1))
     pub(crate) diff: Vec<f64>,
     /// slots whose packed column is stale (each queued at most once)
     pub(crate) stale: Vec<u32>,
@@ -147,6 +155,7 @@ impl PackedTables {
             dims,
             stride: 0,
             bias: Vec::new(),
+            aux: Vec::new(),
             logn: Vec::new(),
             diff: Vec::new(),
             stale: Vec::new(),
@@ -189,6 +198,7 @@ impl PackedTables {
         }
         self.diff = diff;
         self.bias.resize(new_stride, 0.0);
+        self.aux.resize(new_stride, 0.0);
         self.logn.resize(new_stride, f64::NEG_INFINITY);
         if self.queued.len() < new_stride {
             self.queued.resize(new_stride, false);
@@ -245,6 +255,22 @@ impl PackedTables {
             &mut self.scores,
         );
     }
+
+    /// Batched log-likelihood block of one real-valued row against every
+    /// column (the Gaussian path; `self.dims` is 2·row.len()). Same
+    /// output contract as [`Self::score_row_ones`].
+    pub(crate) fn score_row_real(&mut self, scorer: &mut dyn Scorer, row: &[f64]) {
+        debug_assert_eq!(self.dims, 2 * row.len());
+        let stride = self.stride;
+        scorer.score_real_against_clusters(
+            row,
+            &self.bias,
+            &self.aux,
+            &self.diff,
+            stride,
+            &mut self.scores,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -252,7 +278,7 @@ mod tests {
     use super::super::cluster_set::ClusterSet;
     use super::*;
     use crate::data::BinMat;
-    use crate::model::BetaBernoulli;
+    use crate::model::Model;
     use crate::rng::Pcg64;
 
     fn rand_data(n: usize, d: usize, seed: u64) -> BinMat {
@@ -270,7 +296,7 @@ mod tests {
 
     /// From-scratch reference: a fresh table with every column enqueued
     /// and refreshed — what the incremental tables must equal.
-    fn scratch_repack(cs: &mut ClusterSet, model: &BetaBernoulli, dims: usize) -> PackedTables {
+    fn scratch_repack(cs: &mut ClusterSet, model: &Model, dims: usize) -> PackedTables {
         let mut t = PackedTables::new(dims);
         t.begin_sweep(cs.num_slots());
         cs.refresh_packed(model, &mut t, None);
@@ -289,6 +315,11 @@ mod tests {
                 inc.bias[slot].to_bits(),
                 refr.bias[slot].to_bits(),
                 "{ctx}: bias drift at slot {slot}"
+            );
+            assert_eq!(
+                inc.aux[slot].to_bits(),
+                refr.aux[slot].to_bits(),
+                "{ctx}: aux drift at slot {slot}"
             );
             assert_eq!(
                 inc.logn[slot].to_bits(),
@@ -315,7 +346,7 @@ mod tests {
     fn incremental_refresh_matches_scratch_repack_bitwise() {
         let (n, d) = (60usize, 24usize);
         let data = rand_data(n, d, 31);
-        let mut model = BetaBernoulli::symmetric(d, 0.4);
+        let mut model = Model::bernoulli(d, 0.4);
         model.build_lut(n + 1);
         let mut rng = Pcg64::seed_from(32);
         let mut cs = ClusterSet::new(d);
@@ -358,7 +389,7 @@ mod tests {
     fn self_move_needs_no_invalidation() {
         let (n, d) = (10usize, 16usize);
         let data = rand_data(n, d, 33);
-        let mut model = BetaBernoulli::symmetric(d, 0.5);
+        let mut model = Model::bernoulli(d, 0.5);
         model.build_lut(n + 1);
         let mut cs = ClusterSet::new(d);
         let slot = cs.alloc_empty();
@@ -386,7 +417,7 @@ mod tests {
     fn split_merge_bulk_ops_keep_tables_bit_exact() {
         let (n, d) = (48usize, 16usize);
         let data = rand_data(n, d, 41);
-        let mut model = BetaBernoulli::symmetric(d, 0.5);
+        let mut model = Model::bernoulli(d, 0.5);
         model.build_lut(n + 1);
         let mut rng = Pcg64::seed_from(42);
         let mut cs = ClusterSet::new(d);

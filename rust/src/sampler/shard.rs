@@ -15,8 +15,8 @@
 use super::cluster_set::ClusterSet;
 use super::kernel::{SplitMergeScratch, WalkerScratch};
 use super::score::{ScoreDispatch, ScoreMode};
-use crate::data::BinMat;
-use crate::model::{BetaBernoulli, ClusterStats};
+use crate::data::DataRef;
+use crate::model::{ClusterStats, Model};
 use crate::rng::{categorical_log, Pcg64};
 
 /// One shard (= the serial chain, or one supercluster / compute node).
@@ -35,6 +35,11 @@ pub struct Shard {
     /// batched tables + a Scorer backend); travels with the shard across
     /// the coordinator's map-step threads
     pub(crate) scoring: ScoreDispatch,
+    /// packed-table rows per cluster column for this shard's data kind
+    /// (stat width for the bit-backed models, 2·D real — see
+    /// [`DataRef::table_rows`]); what [`Self::set_score_mode`] sizes
+    /// fresh dispatch tables with
+    pub(crate) table_rows: usize,
     // scratch buffers (reused across sweeps; never on the alloc hot path)
     pub(crate) scratch_ids: Vec<u32>,
     pub(crate) scratch_logw: Vec<f64>,
@@ -62,7 +67,13 @@ impl Shard {
     /// paper's §5 initialization ("initialize the clustering via a draw
     /// from the prior using the local Chinese restaurant process"). The
     /// draw consumes the shard's private stream.
-    pub fn init_from_prior(data: &BinMat, rows: Vec<usize>, theta: f64, rng: Pcg64) -> Shard {
+    pub fn init_from_prior<'a>(
+        data: impl Into<DataRef<'a>>,
+        rows: Vec<usize>,
+        theta: f64,
+        rng: Pcg64,
+    ) -> Shard {
+        let data = data.into();
         let n = rows.len();
         let mut sh = Shard {
             rows,
@@ -70,7 +81,8 @@ impl Shard {
             clusters: ClusterSet::new(data.dims()),
             rng,
             theta,
-            scoring: ScoreMode::initial_dispatch(data.dims()),
+            scoring: ScoreMode::initial_dispatch(data.table_rows()),
+            table_rows: data.table_rows(),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -100,7 +112,13 @@ impl Shard {
 
     /// Initialize with every resident row in a single cluster (worst-case
     /// start, used by convergence tests).
-    pub fn init_single_cluster(data: &BinMat, rows: Vec<usize>, theta: f64, rng: Pcg64) -> Shard {
+    pub fn init_single_cluster<'a>(
+        data: impl Into<DataRef<'a>>,
+        rows: Vec<usize>,
+        theta: f64,
+        rng: Pcg64,
+    ) -> Shard {
+        let data = data.into();
         let n = rows.len();
         let mut clusters = ClusterSet::new(data.dims());
         if n > 0 {
@@ -116,7 +134,8 @@ impl Shard {
             clusters,
             rng,
             theta,
-            scoring: ScoreMode::initial_dispatch(data.dims()),
+            scoring: ScoreMode::initial_dispatch(data.table_rows()),
+            table_rows: data.table_rows(),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -130,12 +149,13 @@ impl Shard {
     /// Rebuild a shard from persisted (rows, assign) — cluster stats are
     /// recomputed from the data (checkpoint resume). `theta` is set by
     /// the owner before the next sweep.
-    pub fn from_parts(
-        data: &BinMat,
+    pub fn from_parts<'a>(
+        data: impl Into<DataRef<'a>>,
         rows: Vec<usize>,
         assign: Vec<u32>,
         rng: Pcg64,
     ) -> Result<Shard, String> {
+        let data = data.into();
         if rows.len() != assign.len() {
             return Err("rows/assign length mismatch".into());
         }
@@ -154,7 +174,8 @@ impl Shard {
             clusters: ClusterSet::from_slots(slots, data.dims()),
             rng,
             theta: 0.0,
-            scoring: ScoreMode::initial_dispatch(data.dims()),
+            scoring: ScoreMode::initial_dispatch(data.table_rows()),
+            table_rows: data.table_rows(),
             scratch_ids: Vec::new(),
             scratch_logw: Vec::new(),
             scratch_ones: Vec::new(),
@@ -167,7 +188,7 @@ impl Shard {
 
     /// Resolve a categorical pick over `scratch_ids` (sentinel `u32::MAX`
     /// = "new table") into a cluster slot and add datum `r` to it.
-    pub(crate) fn place_pick(&mut self, pick: usize, data: &BinMat, r: usize) -> u32 {
+    pub(crate) fn place_pick(&mut self, pick: usize, data: DataRef<'_>, r: usize) -> u32 {
         let slot = if self.scratch_ids[pick] == u32::MAX {
             self.clusters.alloc_empty()
         } else {
@@ -186,7 +207,7 @@ impl Shard {
     /// reference vs batched Scorer path). Consumes no randomness, so it
     /// never perturbs the chain's RNG streams.
     pub fn set_score_mode(&mut self, mode: ScoreMode) {
-        self.scoring = mode.dispatch(self.clusters.dims());
+        self.scoring = mode.dispatch(self.table_rows);
     }
 
     /// Display name of the active scoring dispatch.
@@ -304,78 +325,113 @@ impl Shard {
     /// untouched by the removal and is scored straight from the block.
     pub(crate) fn score_crp_candidates(
         &mut self,
-        data: &BinMat,
+        data: DataRef<'_>,
         r: usize,
-        model: &BetaBernoulli,
+        model: &Model,
         held_out: Option<usize>,
     ) {
         self.scratch_ids.clear();
         self.scratch_logw.clear();
-        // decode the datum's set bits ONCE; every dispatch scores all
-        // local clusters from the same index list
-        self.scratch_ones.clear();
-        data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
-        match &mut self.scoring {
-            ScoreDispatch::Scalar => {
-                for (slot, c) in self.clusters.iter_mut() {
-                    self.scratch_ids.push(slot as u32);
-                    self.scratch_logw
-                        .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
-                }
-            }
-            ScoreDispatch::Batched { scorer, tables } => {
-                // Columns are indexed by slot id and the slot vector
-                // never shrinks, so after a transient cluster peak the
-                // block would keep scoring mostly-dead columns. When
-                // live clusters are a small fraction of a LARGE column
-                // capacity, score them directly from the same caches —
-                // bit-identical values, purely a cost cutover (the size
-                // floor keeps small workloads, and every test regime,
-                // on the block path).
-                if tables.stride > 32 && self.clusters.num_active() * 4 < tables.stride {
+        if let Some(bits) = data.bits() {
+            // decode the datum's set bits ONCE; every dispatch scores all
+            // local clusters from the same index list
+            self.scratch_ones.clear();
+            bits.for_each_one(r, |d| self.scratch_ones.push(d as u32));
+            match &mut self.scoring {
+                ScoreDispatch::Scalar => {
                     for (slot, c) in self.clusters.iter_mut() {
                         self.scratch_ids.push(slot as u32);
                         self.scratch_logw
                             .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
                     }
-                    return;
                 }
-                let table_skip = tables.resolve_held_out(held_out);
-                self.clusters.refresh_packed(model, tables, table_skip);
-                tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
-                for (slot, c) in self.clusters.iter_mut() {
-                    self.scratch_ids.push(slot as u32);
-                    let w = if Some(slot) == table_skip {
-                        // held-out correction: same code path (and bits)
-                        // as the scalar reference for this one cluster
-                        c.log_n() + c.score_ones(model, &self.scratch_ones)
-                    } else {
-                        tables.logn[slot] + tables.scores[slot]
-                    };
-                    self.scratch_logw.push(w);
+                ScoreDispatch::Batched { scorer, tables } => {
+                    // Columns are indexed by slot id and the slot vector
+                    // never shrinks, so after a transient cluster peak the
+                    // block would keep scoring mostly-dead columns. When
+                    // live clusters are a small fraction of a LARGE column
+                    // capacity, score them directly from the same caches —
+                    // bit-identical values, purely a cost cutover (the size
+                    // floor keeps small workloads, and every test regime,
+                    // on the block path).
+                    if tables.stride > 32 && self.clusters.num_active() * 4 < tables.stride {
+                        for (slot, c) in self.clusters.iter_mut() {
+                            self.scratch_ids.push(slot as u32);
+                            self.scratch_logw
+                                .push(c.log_n() + c.score_ones(model, &self.scratch_ones));
+                        }
+                        return;
+                    }
+                    let table_skip = tables.resolve_held_out(held_out);
+                    self.clusters.refresh_packed(model, tables, table_skip);
+                    tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
+                    for (slot, c) in self.clusters.iter_mut() {
+                        self.scratch_ids.push(slot as u32);
+                        let w = if Some(slot) == table_skip {
+                            // held-out correction: same code path (and bits)
+                            // as the scalar reference for this one cluster
+                            c.log_n() + c.score_ones(model, &self.scratch_ones)
+                        } else {
+                            tables.logn[slot] + tables.scores[slot]
+                        };
+                        self.scratch_logw.push(w);
+                    }
+                }
+            }
+        } else {
+            // dense real row: same dispatch structure, moment-cache
+            // scalar scoring vs the two-plane packed block
+            let row = data.real().expect("bit-less data kind must be real").row(r);
+            match &mut self.scoring {
+                ScoreDispatch::Scalar => {
+                    for (slot, c) in self.clusters.iter_mut() {
+                        self.scratch_ids.push(slot as u32);
+                        self.scratch_logw.push(c.log_n() + c.score_real(model, row));
+                    }
+                }
+                ScoreDispatch::Batched { scorer, tables } => {
+                    // same live-fraction cost cutover as the bit path
+                    if tables.stride > 32 && self.clusters.num_active() * 4 < tables.stride {
+                        for (slot, c) in self.clusters.iter_mut() {
+                            self.scratch_ids.push(slot as u32);
+                            self.scratch_logw.push(c.log_n() + c.score_real(model, row));
+                        }
+                        return;
+                    }
+                    let table_skip = tables.resolve_held_out(held_out);
+                    self.clusters.refresh_packed(model, tables, table_skip);
+                    tables.score_row_real(scorer.as_mut(), row);
+                    for (slot, c) in self.clusters.iter_mut() {
+                        self.scratch_ids.push(slot as u32);
+                        let w = if Some(slot) == table_skip {
+                            c.log_n() + c.score_real(model, row)
+                        } else {
+                            tables.logn[slot] + tables.scores[slot]
+                        };
+                        self.scratch_logw.push(w);
+                    }
                 }
             }
         }
     }
 
     /// Append the log-likelihood of row `r` under each requested slot to
-    /// `out` (`u32::MAX` = an unmaterialized table, scored as
-    /// `empty_loglik`), through the configured dispatch — under the
-    /// batched dispatch this is one block evaluation per call, with the
-    /// `held_out` cluster (the one datum `r` just left) corrected from
-    /// its decremented `ClusterStats` cache exactly as in
-    /// [`Self::score_crp_candidates`].
-    #[allow(clippy::too_many_arguments)] // the per-datum sweep contract
+    /// `out` (`u32::MAX` = an unmaterialized table, scored by the
+    /// model's empty-cluster predictive), through the configured
+    /// dispatch — under the batched dispatch this is one block
+    /// evaluation per call, with the `held_out` cluster (the one datum
+    /// `r` just left) corrected from its decremented `ClusterStats`
+    /// cache exactly as in [`Self::score_crp_candidates`].
     pub(crate) fn score_slots_for_row(
         &mut self,
-        data: &BinMat,
+        data: DataRef<'_>,
         r: usize,
-        model: &BetaBernoulli,
+        model: &Model,
         slots: &[u32],
-        empty_loglik: f64,
         held_out: Option<usize>,
         out: &mut Vec<f64>,
     ) {
+        let empty_loglik = model.log_pred_empty(data, r);
         match &mut self.scoring {
             ScoreDispatch::Scalar => {
                 for &s in slots {
@@ -408,9 +464,14 @@ impl Shard {
                 }
                 let table_skip = tables.resolve_held_out(held_out);
                 self.clusters.refresh_packed(model, tables, table_skip);
-                self.scratch_ones.clear();
-                data.for_each_one(r, |d| self.scratch_ones.push(d as u32));
-                tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
+                if let Some(bits) = data.bits() {
+                    self.scratch_ones.clear();
+                    bits.for_each_one(r, |d| self.scratch_ones.push(d as u32));
+                    tables.score_row_ones(scorer.as_mut(), &self.scratch_ones);
+                } else {
+                    let row = data.real().expect("bit-less data kind must be real").row(r);
+                    tables.score_row_real(scorer.as_mut(), row);
+                }
                 for &s in slots {
                     out.push(if s == u32::MAX {
                         empty_loglik
@@ -523,14 +584,15 @@ impl Shard {
 
     /// Append `ln(n_j/(N+α)) + ln p(x_r | cluster)` for every local
     /// cluster (mutable for the score cache).
-    pub fn score_against_all(
+    pub fn score_against_all<'a>(
         &mut self,
-        model: &BetaBernoulli,
-        test: &BinMat,
+        model: &Model,
+        test: impl Into<DataRef<'a>>,
         r: usize,
         n_total: f64,
         out: &mut Vec<f64>,
     ) {
+        let test = test.into();
         for (_, c) in self.clusters.iter_mut() {
             out.push((c.n() as f64 / n_total).ln() + c.score(model, test, r));
         }
@@ -554,9 +616,12 @@ impl Shard {
         }
     }
 
-    /// Integrity check: stats match the member rows exactly, the slot
+    /// Integrity check: stats match the member rows (bit counts exactly;
+    /// real-valued moments to fp tolerance, since incremental add/remove
+    /// accumulates round-off a fresh rebuild doesn't), the slot
     /// machinery is consistent.
-    pub fn check_invariants(&self, data: &BinMat) -> Result<(), String> {
+    pub fn check_invariants<'a>(&self, data: impl Into<DataRef<'a>>) -> Result<(), String> {
+        let data = data.into();
         if self.rows.len() != self.assign.len() {
             return Err("rows/assign length mismatch".into());
         }
@@ -571,8 +636,26 @@ impl Shard {
             }
             rebuilt[slot].add(data, self.rows[i]);
         }
+        // moment vectors are sized lazily, so compare by index with an
+        // implicit 0.0 past either end
+        let moments_close = |a: &[f64], b: &[f64]| {
+            (0..a.len().max(b.len())).all(|i| {
+                let x = a.get(i).copied().unwrap_or(0.0);
+                let y = b.get(i).copied().unwrap_or(0.0);
+                (x - y).abs() <= 1e-6 * (1.0 + x.abs().max(y.abs()))
+            })
+        };
         for (slot, c) in self.clusters.iter() {
-            if c.n() != rebuilt[slot].n() || c.ones() != rebuilt[slot].ones() {
+            if c.n() != rebuilt[slot].n() {
+                return Err(format!("slot {slot} count mismatch"));
+            }
+            let ok = if data.bits().is_some() {
+                c.ones() == rebuilt[slot].ones()
+            } else {
+                moments_close(c.sum(), rebuilt[slot].sum())
+                    && moments_close(c.sumsq(), rebuilt[slot].sumsq())
+            };
+            if !ok {
                 return Err(format!("slot {slot} stats mismatch"));
             }
         }
@@ -586,7 +669,7 @@ mod tests {
     use crate::data::SyntheticConfig;
     use crate::sampler::kernel::{CollapsedGibbs, TransitionKernel};
 
-    fn make_shard(seed: u64) -> (crate::data::Dataset, Shard, BetaBernoulli) {
+    fn make_shard(seed: u64) -> (crate::data::Dataset, Shard, Model) {
         let ds = SyntheticConfig {
             n: 200,
             d: 16,
@@ -595,7 +678,7 @@ mod tests {
             seed,
         }
         .generate_with_test_fraction(0.0);
-        let model = BetaBernoulli::symmetric(16, 0.5);
+        let model = Model::bernoulli(16, 0.5);
         let rows: Vec<usize> = (0..ds.train.rows()).collect();
         let st = Shard::init_from_prior(&ds.train, rows, 1.0, Pcg64::seed_from(seed));
         (ds, st, model)
@@ -606,7 +689,7 @@ mod tests {
         let (ds, mut st, model) = make_shard(1);
         st.check_invariants(&ds.train).unwrap();
         for _ in 0..3 {
-            CollapsedGibbs.sweep(&mut st, &ds.train, &model);
+            CollapsedGibbs.sweep(&mut st, (&ds.train).into(), &model);
             st.check_invariants(&ds.train).unwrap();
         }
         assert!(st.num_clusters() >= 1);
@@ -645,8 +728,8 @@ mod tests {
         a.set_theta(0.7);
         b.set_theta(0.7);
         for _ in 0..2 {
-            CollapsedGibbs.sweep(&mut a, &ds.train, &model);
-            CollapsedGibbs.sweep(&mut b, &ds.train, &model);
+            CollapsedGibbs.sweep(&mut a, (&ds.train).into(), &model);
+            CollapsedGibbs.sweep(&mut b, (&ds.train).into(), &model);
         }
         let mut za = vec![0u32; ds.train.rows()];
         let mut zb = vec![0u32; ds.train.rows()];

@@ -15,10 +15,10 @@
 //! [`TransitionKernel`]: crate::sampler::TransitionKernel
 
 use crate::coordinator::{Checkpoint, MuMode};
-use crate::data::BinMat;
+use crate::data::{BinMat, DataRef};
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
-use crate::model::BetaBernoulli;
+use crate::model::{Model, ModelSpec};
 use crate::rng::Pcg64;
 use crate::sampler::{KernelKind, ScoreMode, Shard};
 use crate::special::{lgamma, logsumexp};
@@ -44,6 +44,8 @@ pub struct SerialConfig {
     pub kernel: KernelKind,
     /// candidate-cluster scoring dispatch inside sweeps (`--scorer`)
     pub scoring: ScoreMode,
+    /// component likelihood (`--model`); must match the data kind
+    pub model: ModelSpec,
 }
 
 impl Default for SerialConfig {
@@ -57,6 +59,7 @@ impl Default for SerialConfig {
             update_beta: false, // β updates are O(D·grid·J) — opt in
             kernel: KernelKind::CollapsedGibbs,
             scoring: ScoreMode::default(),
+            model: ModelSpec::Bernoulli,
         }
     }
 }
@@ -93,9 +96,10 @@ pub fn calibrate_alpha(data: &BinMat, fraction: f64, sweeps: usize, rng: &mut Pc
 
 /// The serial sampler state: one shard + global hyperparameters.
 pub struct SerialGibbs<'a> {
-    data: &'a BinMat,
-    /// collapsed Beta–Bernoulli base measure
-    pub model: BetaBernoulli,
+    data: DataRef<'a>,
+    /// collapsed component likelihood (Beta–Bernoulli by default; see
+    /// [`SerialConfig::model`])
+    pub model: Model,
     /// current concentration α
     pub alpha: f64,
     cfg: SerialConfig,
@@ -128,8 +132,21 @@ impl<'a> SerialGibbs<'a> {
     /// initialization). The shard's private kernel stream is
     /// `rng.split(0)` — the same derivation the coordinator uses for its
     /// worker 0, which is what makes K=1 equivalence exact.
-    pub fn init_from_prior(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
-        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
+    ///
+    /// # Panics
+    ///
+    /// Panics if `cfg.model` does not match the data kind (the CLI
+    /// validates with [`ModelSpec::build`] before constructing).
+    pub fn init_from_prior(
+        data: impl Into<DataRef<'a>>,
+        cfg: SerialConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let data = data.into();
+        let mut model = cfg
+            .model
+            .build(data, cfg.init_beta)
+            .unwrap_or_else(|e| panic!("SerialGibbs: {e}"));
         model.build_lut(data.rows() + 1); // symmetric-beta fast rebuilds
         let mut shard = Shard::init_from_prior(
             data,
@@ -155,8 +172,16 @@ impl<'a> SerialGibbs<'a> {
     /// Initialize with every datum in a single cluster (worst-case start,
     /// used in convergence tests). As in [`Self::init_from_prior`], the
     /// shard's private kernel stream is split off the caller's RNG.
-    pub fn init_single_cluster(data: &'a BinMat, cfg: SerialConfig, rng: &mut Pcg64) -> Self {
-        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
+    pub fn init_single_cluster(
+        data: impl Into<DataRef<'a>>,
+        cfg: SerialConfig,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let data = data.into();
+        let mut model = cfg
+            .model
+            .build(data, cfg.init_beta)
+            .unwrap_or_else(|e| panic!("SerialGibbs: {e}"));
         model.build_lut(data.rows() + 1);
         let mut shard = Shard::init_single_cluster(
             data,
@@ -213,29 +238,36 @@ impl<'a> SerialGibbs<'a> {
     /// Griddy-Gibbs update of every β_d from cluster sufficient stats.
     /// Score caches are only invalidated when some β_d actually moved.
     /// Runs on persistent scratch — no per-sweep hyper-vector clone.
+    /// Beta–Bernoulli-specific: a no-op under the other likelihoods
+    /// (their hyperparameters are fixed at construction).
     pub fn update_beta(&mut self, rng: &mut Pcg64) {
+        if !matches!(self.model, Model::Bernoulli(_)) {
+            return;
+        }
         let mut stats: Vec<(u64, u32)> = Vec::new();
         self.beta_scratch.clear();
-        self.beta_scratch.extend_from_slice(&self.model.beta);
-        for d in 0..self.model.d {
+        self.beta_scratch.extend_from_slice(&self.model.as_bernoulli().beta);
+        for d in 0..self.model.as_bernoulli().d {
             stats.clear();
             self.shard.collect_dim_stats(d, &mut stats);
             self.beta_scratch[d] = self.beta_updater.sample(rng, &stats);
         }
-        if self.model.update_betas(&self.beta_scratch, self.data.rows() + 1) {
+        let n_max = self.data.rows() + 1;
+        if self.model.as_bernoulli_mut().update_betas(&self.beta_scratch, n_max) {
             self.shard.invalidate_caches();
         }
     }
 
     /// Snapshot the serial chain's latent state as a single-shard
-    /// `CCCKPT2` [`Checkpoint`] — the same versioned, checksummed format
+    /// `CCCKPT3` [`Checkpoint`] — the same versioned, checksummed format
     /// (and reader/writer) the coordinator uses, with `μ = [1]`,
     /// `MuMode::Uniform`, and the configured kernel as the one shard's
     /// kernel tag.
     pub fn to_checkpoint(&self) -> Checkpoint {
         Checkpoint {
             alpha: self.alpha,
-            beta: self.model.beta.clone(),
+            model_tag: self.cfg.model.tag(),
+            hyper: self.model.hyper_vec(),
             rounds: self.sweeps_done,
             modeled_time_s: self.measured_time_s, // serial: modeled ≡ measured
             measured_time_s: self.measured_time_s,
@@ -249,7 +281,7 @@ impl<'a> SerialGibbs<'a> {
         }
     }
 
-    /// Persist the latent state to `path` (`CCCKPT2`).
+    /// Persist the latent state to `path` (`CCCKPT3`).
     pub fn save_checkpoint(&self, path: &Path) -> std::io::Result<()> {
         self.to_checkpoint().save(path)
     }
@@ -257,27 +289,30 @@ impl<'a> SerialGibbs<'a> {
     /// Rebuild a serial chain from a single-shard checkpoint against the
     /// SAME dataset: sufficient statistics are recomputed from the saved
     /// assignments and integrity-checked before the chain may continue.
-    /// The kernel tag must match `cfg.kernel`, and the checkpoint must
-    /// own every data row — a mismatch is an error, never a silent
-    /// reconfiguration. As with the coordinator, the RNG stream is split
-    /// fresh from `rng` (the stream position itself is not serialized).
+    /// The kernel tag AND the model tag must match the config, and the
+    /// checkpoint must own every data row — a mismatch is an error,
+    /// never a silent reconfiguration. As with the coordinator, the RNG
+    /// stream is split fresh from `rng` (the stream position itself is
+    /// not serialized).
     pub fn resume(
-        data: &'a BinMat,
+        data: impl Into<DataRef<'a>>,
         cfg: SerialConfig,
         ckpt: &Checkpoint,
         rng: &mut Pcg64,
     ) -> Result<SerialGibbs<'a>, String> {
+        let data = data.into();
         if ckpt.shards.len() != 1 {
             return Err(format!(
                 "serial resume needs a 1-shard checkpoint, got {} shards",
                 ckpt.shards.len()
             ));
         }
-        if ckpt.beta.len() != data.dims() {
+        if ckpt.model_tag != cfg.model.tag() {
             return Err(format!(
-                "checkpoint β has {} dims, data has {}",
-                ckpt.beta.len(),
-                data.dims()
+                "checkpoint model tag {} does not match configured model {:?} (tag {})",
+                ckpt.model_tag,
+                cfg.model.name(),
+                cfg.model.tag()
             ));
         }
         if ckpt.kernels != [cfg.kernel] {
@@ -299,10 +334,11 @@ impl<'a> SerialGibbs<'a> {
         shard.check_invariants(data)?;
         shard.set_score_mode(cfg.scoring);
         shard.set_theta(ckpt.alpha);
-        let mut model = BetaBernoulli::symmetric(data.dims(), cfg.init_beta);
-        model.beta.copy_from_slice(&ckpt.beta);
-        // build_lut handles the asymmetric-β case itself (clears the LUT)
-        model.build_lut(data.rows() + 1);
+        let mut model = cfg.model.build(data, cfg.init_beta)?;
+        // restore the sampled hypers (Bernoulli β; fixed-hyper models
+        // validate bit-equality) — build_lut runs inside, handling the
+        // asymmetric-β case itself (clears the LUT)
+        model.restore_hyper(&ckpt.hyper, data.rows() + 1)?;
         Ok(SerialGibbs {
             data,
             model,
@@ -347,7 +383,8 @@ impl<'a> SerialGibbs<'a> {
     /// Test-set predictive log-likelihood per datum:
     /// `log Σ_j (n_j/(N+α)) p(x|j) + (α/(N+α)) p(x|∅)` — the paper's
     /// convergence metric (Figs. 5–9).
-    pub fn predictive_loglik(&mut self, test: &BinMat) -> f64 {
+    pub fn predictive_loglik<'b>(&mut self, test: impl Into<DataRef<'b>>) -> f64 {
+        let test = test.into();
         let n_total = self.data.rows() as f64 + self.alpha;
         let mut acc = 0.0;
         let mut terms: Vec<f64> = Vec::new();
@@ -355,7 +392,7 @@ impl<'a> SerialGibbs<'a> {
             terms.clear();
             self.shard
                 .score_against_all(&self.model, test, r, n_total, &mut terms);
-            terms.push((self.alpha / n_total).ln() + self.model.empty_cluster_loglik());
+            terms.push((self.alpha / n_total).ln() + self.model.log_pred_empty(test, r));
             acc += logsumexp(&terms);
         }
         acc / test.rows() as f64
@@ -567,7 +604,7 @@ mod tests {
             g.check_invariants().unwrap();
         }
         // β moved off its init and stays on the grid
-        assert!(g.model.beta.iter().all(|&b| b >= 1e-2 && b <= 10.0));
+        assert!(g.model.as_bernoulli().beta.iter().all(|&b| b >= 1e-2 && b <= 10.0));
     }
 
     #[test]
@@ -601,7 +638,7 @@ mod tests {
         assert_eq!(r.alpha().to_bits(), g.alpha().to_bits());
         assert_eq!(r.assignments(), g.assignments());
         assert_eq!(r.num_clusters(), g.num_clusters());
-        for (a, b) in r.model.beta.iter().zip(&g.model.beta) {
+        for (a, b) in r.model.as_bernoulli().beta.iter().zip(&g.model.as_bernoulli().beta) {
             assert_eq!(a.to_bits(), b.to_bits(), "β must resume bit-exactly");
         }
         r.check_invariants().unwrap();

@@ -5,12 +5,11 @@
 //! crate universe) and unit-tested against high-precision reference
 //! values. Accuracies are ~1e-12 relative — far beyond what MCMC needs.
 
-/// Lanczos approximation (g = 7, n = 9) of `ln Γ(x)` for x > 0.
-///
-/// Reference: Numerical Recipes / Godfrey coefficients. Relative error
-/// < 1e-13 over the tested range; reflection handles 0 < x < 0.5.
-pub fn lgamma(x: f64) -> f64 {
-    assert!(x > 0.0, "lgamma requires x > 0, got {x}");
+/// The Lanczos series itself, valid for x ≥ 0.5 only. Both `lgamma`
+/// branches call this directly, so the reflection path never re-enters
+/// `lgamma` (no recursion, no re-checked assert).
+fn lanczos_core(x: f64) -> f64 {
+    debug_assert!(x >= 0.5);
     const G: f64 = 7.0;
     const COEF: [f64; 9] = [
         0.99999999999980993,
@@ -23,11 +22,6 @@ pub fn lgamma(x: f64) -> f64 {
         9.9843695780195716e-6,
         1.5056327351493116e-7,
     ];
-    if x < 0.5 {
-        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
-        let pi = std::f64::consts::PI;
-        return (pi / (pi * x).sin()).ln() - lgamma(1.0 - x);
-    }
     let x = x - 1.0;
     let mut a = COEF[0];
     let t = x + G + 0.5;
@@ -35,6 +29,22 @@ pub fn lgamma(x: f64) -> f64 {
         a += c / (x + i as f64);
     }
     0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Lanczos approximation (g = 7, n = 9) of `ln Γ(x)` for x > 0.
+///
+/// Reference: Numerical Recipes / Godfrey coefficients. Relative error
+/// < 1e-13 over the tested range; reflection handles 0 < x < 0.5
+/// (for x < 0.5 the reflected argument 1−x is ≥ 0.5, so the series is
+/// evaluated once — the reflection never recurses).
+pub fn lgamma(x: f64) -> f64 {
+    assert!(x > 0.0, "lgamma requires x > 0, got {x}");
+    if x < 0.5 {
+        // Reflection: Γ(x)Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - lanczos_core(1.0 - x);
+    }
+    lanczos_core(x)
 }
 
 /// `ln Γ(x+n) - ln Γ(x)` — the rising-factorial log, computed stably.
@@ -163,6 +173,62 @@ mod tests {
             let want = lgamma(x + n as f64) - lgamma(x);
             let got = lgamma_ratio(x, n);
             assert!((got - want).abs() < 1e-9, "ratio({x},{n})");
+        }
+    }
+
+    #[test]
+    fn lgamma_tiny_x_matches_asymptotic() {
+        // ln Γ(x) → −ln x − γx + O(x²) as x → 0⁺; the reflection branch
+        // must reproduce this without blowing up (the new likelihoods'
+        // log_marginal hits this region with small pseudo-counts)
+        const EULER_GAMMA: f64 = 0.5772156649015329;
+        for &x in &[1e-4, 1e-6, 1e-8, 1e-10] {
+            let want = -x.ln() - EULER_GAMMA * x;
+            let got = lgamma(x);
+            assert!(
+                (got - want).abs() < 1e-7 * want.abs(),
+                "lgamma({x}) = {got}, asymptotic {want}"
+            );
+        }
+        // and the recurrence lgamma(x+1) − lgamma(x) = ln x still holds
+        // at the bottom of the range
+        let x = 1e-8;
+        assert!((lgamma(x + 1.0) - lgamma(x) - x.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lgamma_half_is_half_log_pi() {
+        // x = 0.5 is the branch point between reflection and the direct
+        // series; Γ(1/2) = √π exactly
+        let want = 0.5 * std::f64::consts::PI.ln();
+        assert!((lgamma(0.5) - want).abs() < 1e-14);
+        // approaching from just below must agree with just above
+        let below = lgamma(0.5 - 1e-12);
+        let above = lgamma(0.5 + 1e-12);
+        assert!((below - above).abs() < 1e-9, "branch mismatch at 0.5");
+    }
+
+    #[test]
+    fn lgamma_ratio_boundary_cases() {
+        // n = 0: lnΓ(x) − lnΓ(x) = 0 identically, even for tiny x where
+        // lgamma itself is huge
+        assert_eq!(lgamma_ratio(3.7, 0), 0.0);
+        assert_eq!(lgamma_ratio(1e-9, 0), 0.0);
+        // n = 16 is the last product-path value, n = 17 the first
+        // lgamma-difference value; the two paths must agree across the
+        // crossover and satisfy the rising-factorial recurrence
+        for &x in &[1e-3, 0.5, 1.0, 7.3, 250.0] {
+            let r16 = lgamma_ratio(x, 16);
+            let r17 = lgamma_ratio(x, 17);
+            assert!(
+                (r17 - r16 - (x + 16.0).ln()).abs() < 1e-9 * r17.abs().max(1.0),
+                "crossover recurrence at x={x}"
+            );
+            let direct16 = lgamma(x + 16.0) - lgamma(x);
+            assert!(
+                (r16 - direct16).abs() < 1e-9 * direct16.abs().max(1.0),
+                "product path vs lgamma difference at x={x}"
+            );
         }
     }
 

@@ -5,8 +5,8 @@
 //! `rust/tests/` (`posterior_exactness.rs`, `mu_modes.rs`,
 //! `scorer_equivalence.rs`, `property_invariants.rs`).
 
-use crate::data::BinMat;
-use crate::model::{BetaBernoulli, ClusterStats};
+use crate::data::{BinMat, CatMat, DataRef, RealMat};
+use crate::model::{ClusterStats, Model};
 use crate::rng::Pcg64;
 use crate::special::{lgamma, logsumexp};
 use std::collections::HashMap;
@@ -29,6 +29,37 @@ pub fn enumeration_fixture() -> BinMat {
         0, 0, 1, 0, //
     ];
     BinMat::from_dense(ENUM_N, ENUM_D, &dense)
+}
+
+/// Real-valued companion fixture (6×2, mildly separated) for the
+/// Gaussian enumeration gate — same row count as
+/// [`enumeration_fixture`], so the same 203 partitions.
+pub fn enumeration_fixture_real() -> RealMat {
+    let dense = vec![
+        0.3, -0.2, //
+        0.5, 0.1, //
+        -1.2, 2.0, //
+        -0.9, 1.7, //
+        1.8, -1.5, //
+        2.1, -1.1, //
+    ];
+    RealMat::from_dense(ENUM_N, 2, dense)
+}
+
+/// Categorical companion fixture (6 rows, 3 dims with mixed
+/// cardinalities 3/2/4 — exercising the one-hot offsets) for the
+/// Dirichlet–multinomial enumeration gate.
+pub fn enumeration_fixture_cat() -> CatMat {
+    let cards = [3u32, 2, 4];
+    let codes = [
+        0, 0, 1, //
+        0, 1, 1, //
+        2, 1, 3, //
+        2, 0, 3, //
+        1, 0, 0, //
+        1, 1, 2, //
+    ];
+    CatMat::from_codes(ENUM_N, &cards, &codes)
 }
 
 /// Canonical restricted-growth string of an assignment vector (the
@@ -65,14 +96,16 @@ pub fn all_partitions(n: usize) -> Vec<Vec<u8>> {
     out
 }
 
-/// Exact unnormalized log posterior of one partition:
+/// Exact unnormalized log posterior of one partition under any
+/// [`Model`] likelihood:
 /// `J ln α + Σ_j ln Γ(n_j) + Σ_j log-marginal(cluster_j)`.
-pub fn partition_log_posterior(
-    data: &BinMat,
-    model: &BetaBernoulli,
+pub fn partition_log_posterior<'a>(
+    data: impl Into<DataRef<'a>>,
+    model: &Model,
     alpha: f64,
     part: &[u8],
 ) -> f64 {
+    let data = data.into();
     let j = (*part.iter().max().unwrap() + 1) as usize;
     let mut lp = j as f64 * alpha.ln();
     for cid in 0..j {
@@ -91,12 +124,13 @@ pub fn partition_log_posterior(
 
 /// The exact normalized DPM posterior over ALL partitions of the
 /// dataset's rows (only feasible for tiny data — the gates use the
-/// 6-row [`enumeration_fixture`], 203 partitions).
-pub fn enumerate_posterior(
-    data: &BinMat,
-    model: &BetaBernoulli,
+/// 6-row fixtures, 203 partitions each).
+pub fn enumerate_posterior<'a>(
+    data: impl Into<DataRef<'a>>,
+    model: &Model,
     alpha: f64,
 ) -> HashMap<Vec<u8>, f64> {
+    let data = data.into();
     let parts = all_partitions(data.rows());
     let lps: Vec<f64> = parts
         .iter()
@@ -156,11 +190,12 @@ pub fn check<T: std::fmt::Debug>(
 /// computed straight from uncached cluster stats. Shared by the
 /// scorer-equivalence and property suites so both gates assert the
 /// *same* predictive contract against the Scorer trait path.
-pub fn coordinator_predictive_oracle(
+pub fn coordinator_predictive_oracle<'a>(
     coord: &crate::coordinator::Coordinator<'_>,
-    test: &crate::data::BinMat,
+    test: impl Into<DataRef<'a>>,
 ) -> f64 {
     use crate::special::logsumexp;
+    let test = test.into();
     let n: usize = coord.states().iter().map(|s| s.num_rows()).sum();
     let n_total = n as f64 + coord.alpha();
     let clusters = coord.global_clusters();
@@ -170,7 +205,7 @@ pub fn coordinator_predictive_oracle(
             .iter()
             .map(|c| (c.n() as f64 / n_total).ln() + c.score_uncached(&coord.model, test, r))
             .collect();
-        terms.push((coord.alpha() / n_total).ln() + coord.model.empty_cluster_loglik());
+        terms.push((coord.alpha() / n_total).ln() + coord.model.log_pred_empty(test, r));
         acc += logsumexp(&terms);
     }
     acc / test.rows() as f64
@@ -251,11 +286,30 @@ mod tests {
     #[test]
     fn enumerated_posterior_normalizes() {
         let data = enumeration_fixture();
-        let model = BetaBernoulli::symmetric(ENUM_D, 0.6);
+        let model = Model::bernoulli(ENUM_D, 0.6);
         let post = enumerate_posterior(&data, &model, 1.3);
         assert_eq!(post.len(), 203);
         let total: f64 = post.values().sum();
         assert!((total - 1.0).abs() < 1e-9, "Σp = {total}");
         assert!(post.values().all(|&p| p > 0.0));
+    }
+
+    #[test]
+    fn enumerated_posterior_normalizes_for_all_likelihoods() {
+        use crate::model::ModelSpec;
+        let real = enumeration_fixture_real();
+        let cat = enumeration_fixture_cat();
+        let models = [
+            (DataRef::from(&real), ModelSpec::DEFAULT_GAUSSIAN),
+            (DataRef::from(&cat), ModelSpec::DEFAULT_CATEGORICAL),
+        ];
+        for (data, spec) in models {
+            let model = spec.build(data, 0.5).unwrap();
+            let post = enumerate_posterior(data, &model, 1.3);
+            assert_eq!(post.len(), 203, "{}", model.name());
+            let total: f64 = post.values().sum();
+            assert!((total - 1.0).abs() < 1e-9, "{}: Σp = {total}", model.name());
+            assert!(post.values().all(|&p| p > 0.0), "{}", model.name());
+        }
     }
 }

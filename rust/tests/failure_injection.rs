@@ -10,6 +10,7 @@ use clustercluster::data::io::{load_binmat, save_binmat};
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
+use clustercluster::model::ModelSpec;
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::PjrtScorer;
 use clustercluster::sampler::{KernelAssignment, KernelKind};
@@ -270,6 +271,117 @@ fn split_merge_kernel_tag_mismatch_on_resume_is_an_error() {
         ok.shard_kernels().to_vec(),
         vec![KernelKind::SplitMergeGibbs; 2]
     );
+    ok.step(&mut rng);
+    ok.check_invariants().unwrap();
+}
+
+#[test]
+fn model_tag_mismatch_on_resume_is_an_error() {
+    // the failure being injected: resuming a Bernoulli checkpoint under
+    // a Gaussian `--model` config. The CCCKPT3 model tag must survive
+    // the save/load roundtrip, and a mismatch must be loud from BOTH
+    // entry points — silently rebinding the saved assignments to a
+    // different likelihood would be a different chain on different math.
+    let ds = SyntheticConfig {
+        n: 120,
+        d: 8,
+        clusters: 2,
+        beta: 0.3,
+        seed: 52,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(53);
+    let mut coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
+    coord.step(&mut rng);
+    let d = tmpdir("model_tag");
+    let p = d.join("state.ccckpt");
+    coord.save_checkpoint(&p).unwrap();
+    let ckpt = Checkpoint::load(&p).unwrap();
+    assert_eq!(ckpt.model_tag, ModelSpec::Bernoulli.tag());
+
+    let gauss = CoordinatorConfig {
+        model: ModelSpec::DEFAULT_GAUSSIAN,
+        ..cfg.clone()
+    };
+    let e = Coordinator::resume(&ds.train, gauss, &ckpt, &mut rng).unwrap_err();
+    assert!(e.contains("model tag"), "{e}");
+
+    // the serial entry point shares the contract (its checkpoints are
+    // the 1-shard case of the same format)
+    use clustercluster::serial::{SerialConfig, SerialGibbs};
+    let scfg = SerialConfig::default();
+    let mut srng = Pcg64::seed_from(54);
+    let g = SerialGibbs::init_from_prior(&ds.train, scfg, &mut srng);
+    let sckpt = g.to_checkpoint();
+    let bad = SerialConfig {
+        model: ModelSpec::DEFAULT_CATEGORICAL,
+        ..scfg
+    };
+    let e = SerialGibbs::resume(&ds.train, bad, &sckpt, &mut srng).unwrap_err();
+    assert!(e.contains("model tag"), "{e}");
+
+    // the matching configs resume and keep running (positive controls)
+    let mut ok = Coordinator::resume(&ds.train, cfg, &ckpt, &mut rng).unwrap();
+    ok.step(&mut rng);
+    ok.check_invariants().unwrap();
+    let mut sok = SerialGibbs::resume(&ds.train, scfg, &sckpt, &mut srng).unwrap();
+    sok.sweep(&mut srng);
+    sok.check_invariants().unwrap();
+}
+
+#[test]
+fn legacy_v2_checkpoint_loads_as_bernoulli_and_resumes() {
+    // back-compat contract: a pre-model-tag CCCKPT2 file must load as
+    // model tag 0 (Beta–Bernoulli) with hyper = β and resume cleanly.
+    // Built by byte surgery on a real CCCKPT3 file: the v2 layout is the
+    // v3 layout minus the model-tag word after α, and that word is 0 for
+    // Bernoulli, so the trailing checksum needs no adjustment.
+    let ds = SyntheticConfig {
+        n: 140,
+        d: 8,
+        clusters: 2,
+        beta: 0.3,
+        seed: 56,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        update_beta: true,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(57);
+    let mut coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
+    for _ in 0..3 {
+        coord.step(&mut rng);
+    }
+    let d = tmpdir("v2_compat");
+    let p3 = d.join("v3.ccckpt");
+    coord.save_checkpoint(&p3).unwrap();
+    let v3 = std::fs::read(&p3).unwrap();
+    assert_eq!(&v3[..8], b"CCCKPT3\n");
+    assert_eq!(&v3[16..24], &[0u8; 8], "Bernoulli model tag must be 0");
+    let mut v2 = Vec::with_capacity(v3.len() - 8);
+    v2.extend_from_slice(b"CCCKPT2\n");
+    v2.extend_from_slice(&v3[8..16]); // α bits
+    v2.extend_from_slice(&v3[24..]); // β length onwards, checksum intact
+    let p2 = d.join("v2.ccckpt");
+    std::fs::write(&p2, &v2).unwrap();
+
+    let ckpt2 = Checkpoint::load(&p2).unwrap();
+    let ckpt3 = Checkpoint::load(&p3).unwrap();
+    assert_eq!(ckpt2, ckpt3, "v2 load must equal the v3 original");
+    assert_eq!(ckpt2.model_tag, 0);
+    assert_eq!(ckpt2.hyper.len(), 8, "v2 hyper vector is the β vector");
+
+    let mut ok = Coordinator::resume(&ds.train, cfg, &ckpt2, &mut rng).unwrap();
     ok.step(&mut rng);
     ok.check_invariants().unwrap();
 }

@@ -14,7 +14,7 @@
 
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig, MuMode};
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::BetaBernoulli;
+use clustercluster::model::Model;
 use clustercluster::rng::Pcg64;
 use clustercluster::sampler::{KernelAssignment, KernelKind};
 use clustercluster::testing::{
@@ -29,7 +29,7 @@ const BETA: f64 = 0.6;
 /// mode and kernel assignment against the enumerated posterior.
 fn coordinator_tv(mu_mode: MuMode, kernel_assignment: KernelAssignment, seed: u64) -> f64 {
     let data = enumeration_fixture();
-    let model = BetaBernoulli::symmetric(ENUM_D, BETA);
+    let model = Model::bernoulli(ENUM_D, BETA);
     let truth = enumerate_posterior(&data, &model, ALPHA);
 
     let cfg = CoordinatorConfig {

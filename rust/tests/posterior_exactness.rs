@@ -16,13 +16,17 @@
 //! restructuring directly, not only via bit-equivalence.
 
 use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
+use clustercluster::data::DataRef;
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::BetaBernoulli;
+use clustercluster::model::{Model, ModelSpec};
 use clustercluster::rng::Pcg64;
+use clustercluster::runtime::ScorerKind;
+use clustercluster::sampler::{KernelKind, ScoreMode};
 use clustercluster::serial::{SerialConfig, SerialGibbs};
 use clustercluster::testing::{
     canonical_partition as canonical, enumerate_posterior, enumeration_fixture as tiny_data,
-    partition_tv_distance as tv_distance, ENUM_D as D,
+    enumeration_fixture_cat, enumeration_fixture_real, partition_tv_distance as tv_distance,
+    ENUM_D as D,
 };
 use std::collections::HashMap;
 
@@ -34,7 +38,7 @@ const BETA: f64 = 0.6;
 /// shared with `rust/tests/mu_modes.rs`).
 fn exact_posterior(
     data: &clustercluster::data::BinMat,
-    model: &BetaBernoulli,
+    model: &Model,
 ) -> HashMap<Vec<u8>, f64> {
     let post = enumerate_posterior(data, model, ALPHA);
     assert_eq!(post.len(), 203); // Bell(6)
@@ -47,7 +51,7 @@ fn serial_tv(
     seed: u64,
 ) -> f64 {
     let data = tiny_data();
-    let model = BetaBernoulli::symmetric(D, BETA);
+    let model = Model::bernoulli(D, BETA);
     let truth = exact_posterior(&data, &model);
 
     let cfg = SerialConfig {
@@ -170,7 +174,7 @@ fn coordinator_tv_assignment_sched(
     overlap: bool,
 ) -> f64 {
     let data = tiny_data();
-    let model = BetaBernoulli::symmetric(D, BETA);
+    let model = Model::bernoulli(D, BETA);
     let truth = exact_posterior(&data, &model);
 
     let cfg = CoordinatorConfig {
@@ -304,7 +308,7 @@ fn mixed_kernels_k3_overlap_matches_enumerated_posterior() {
 
 fn coordinator_tv(workers: usize, seed: u64, rounds: u64) -> f64 {
     let data = tiny_data();
-    let model = BetaBernoulli::symmetric(D, BETA);
+    let model = Model::bernoulli(D, BETA);
     let truth = exact_posterior(&data, &model);
 
     let cfg = CoordinatorConfig {
@@ -350,7 +354,7 @@ fn no_shuffle_ablation_is_biased() {
     // without the shuffle step data can never merge across superclusters:
     // the chain is NOT a DPM sampler — the design ablation of DESIGN.md §10.
     let data = tiny_data();
-    let model = BetaBernoulli::symmetric(D, BETA);
+    let model = Model::bernoulli(D, BETA);
     let truth = exact_posterior(&data, &model);
     let cfg = CoordinatorConfig {
         workers: 3,
@@ -377,5 +381,198 @@ fn no_shuffle_ablation_is_biased() {
     assert!(
         tv > 0.10,
         "no-shuffle chain unexpectedly matched the posterior (TV {tv})"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Likelihood-generic gates: the SAME 203-partition machinery, run under
+// the collapsed diagonal-Gaussian (NIG) and Dirichlet–multinomial
+// component models — serial and K=3 coordinator, scalar and batched
+// scoring dispatches. This is the statistical certificate that the
+// ComponentModel extraction left every sampler layer exact for the new
+// likelihoods, not just for the Bernoulli path the older gates pin.
+// ---------------------------------------------------------------------
+
+fn serial_tv_model(
+    spec: ModelSpec,
+    data: DataRef<'_>,
+    kernel: KernelKind,
+    scoring: ScoreMode,
+    seed: u64,
+) -> f64 {
+    let model = spec.build(data, BETA).unwrap();
+    let truth = enumerate_posterior(data, &model, ALPHA);
+    assert_eq!(truth.len(), 203); // Bell(6)
+    let cfg = SerialConfig {
+        init_alpha: ALPHA,
+        init_beta: BETA,
+        update_alpha: false,
+        update_beta: false,
+        kernel,
+        scoring,
+        model: spec,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(seed);
+    let mut g = SerialGibbs::init_from_prior(data, cfg, &mut rng);
+    let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
+    let burn = 2_000;
+    let samples = 60_000u64;
+    for it in 0..(burn + samples) {
+        g.sweep(&mut rng);
+        if it >= burn {
+            *counts.entry(canonical(g.assignments())).or_default() += 1;
+        }
+    }
+    tv_distance(&truth, &counts, samples)
+}
+
+fn coordinator_tv_model(
+    spec: ModelSpec,
+    data: DataRef<'_>,
+    workers: usize,
+    scoring: ScoreMode,
+    seed: u64,
+) -> f64 {
+    let model = spec.build(data, BETA).unwrap();
+    let truth = enumerate_posterior(data, &model, ALPHA);
+    assert_eq!(truth.len(), 203);
+    let cfg = CoordinatorConfig {
+        workers,
+        local_sweeps: 1,
+        init_alpha: ALPHA,
+        init_beta: BETA,
+        update_alpha: false,
+        update_beta: false,
+        shuffle: true,
+        scoring,
+        comm: CommModel::free(),
+        parallelism: 1,
+        model: spec,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(seed);
+    let mut coord = Coordinator::new(data, cfg, &mut rng);
+    let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
+    let burn = 2_000;
+    let rounds = 60_000u64;
+    for it in 0..(burn + rounds) {
+        coord.step(&mut rng);
+        if it >= burn {
+            *counts.entry(canonical(&coord.assignments())).or_default() += 1;
+        }
+    }
+    coord.check_invariants().unwrap();
+    tv_distance(&truth, &counts, rounds)
+}
+
+#[test]
+fn gaussian_serial_matches_enumerated_posterior() {
+    let data = enumeration_fixture_real();
+    let tv = serial_tv_model(
+        ModelSpec::DEFAULT_GAUSSIAN,
+        (&data).into(),
+        KernelKind::CollapsedGibbs,
+        ScoreMode::Scalar,
+        61,
+    );
+    assert!(tv < 0.05, "gaussian serial TV distance {tv} too large");
+}
+
+#[test]
+fn gaussian_serial_batched_matches_enumerated_posterior() {
+    // the batched dispatch drives the two-plane real scoring path
+    // (Scorer::score_real_against_clusters) statistically
+    let data = enumeration_fixture_real();
+    let tv = serial_tv_model(
+        ModelSpec::DEFAULT_GAUSSIAN,
+        (&data).into(),
+        KernelKind::CollapsedGibbs,
+        ScoreMode::Batched(ScorerKind::Fallback),
+        62,
+    );
+    assert!(tv < 0.05, "gaussian batched TV distance {tv} too large");
+}
+
+#[test]
+fn categorical_serial_matches_enumerated_posterior() {
+    let data = enumeration_fixture_cat();
+    let tv = serial_tv_model(
+        ModelSpec::DEFAULT_CATEGORICAL,
+        (&data).into(),
+        KernelKind::CollapsedGibbs,
+        ScoreMode::Scalar,
+        63,
+    );
+    assert!(tv < 0.05, "categorical serial TV distance {tv} too large");
+}
+
+#[test]
+fn categorical_serial_batched_matches_enumerated_posterior() {
+    // the categorical model rides the one-hot bit-sparse packed path —
+    // the same score_ones_against_clusters kernel as Bernoulli
+    let data = enumeration_fixture_cat();
+    let tv = serial_tv_model(
+        ModelSpec::DEFAULT_CATEGORICAL,
+        (&data).into(),
+        KernelKind::CollapsedGibbs,
+        ScoreMode::Batched(ScorerKind::Fallback),
+        64,
+    );
+    assert!(tv < 0.05, "categorical batched TV distance {tv} too large");
+}
+
+#[test]
+fn gaussian_coordinator_k3_matches_enumerated_posterior() {
+    let data = enumeration_fixture_real();
+    let tv = coordinator_tv_model(
+        ModelSpec::DEFAULT_GAUSSIAN,
+        (&data).into(),
+        3,
+        ScoreMode::Scalar,
+        65,
+    );
+    assert!(tv < 0.05, "gaussian K=3 TV distance {tv} too large");
+}
+
+#[test]
+fn gaussian_coordinator_k3_batched_matches_enumerated_posterior() {
+    let data = enumeration_fixture_real();
+    let tv = coordinator_tv_model(
+        ModelSpec::DEFAULT_GAUSSIAN,
+        (&data).into(),
+        3,
+        ScoreMode::Batched(ScorerKind::Fallback),
+        66,
+    );
+    assert!(tv < 0.05, "gaussian K=3 batched TV distance {tv} too large");
+}
+
+#[test]
+fn categorical_coordinator_k3_matches_enumerated_posterior() {
+    let data = enumeration_fixture_cat();
+    let tv = coordinator_tv_model(
+        ModelSpec::DEFAULT_CATEGORICAL,
+        (&data).into(),
+        3,
+        ScoreMode::Scalar,
+        67,
+    );
+    assert!(tv < 0.05, "categorical K=3 TV distance {tv} too large");
+}
+
+#[test]
+fn categorical_coordinator_k3_batched_matches_enumerated_posterior() {
+    let data = enumeration_fixture_cat();
+    let tv = coordinator_tv_model(
+        ModelSpec::DEFAULT_CATEGORICAL,
+        (&data).into(),
+        3,
+        ScoreMode::Batched(ScorerKind::Fallback),
+        68,
+    );
+    assert!(
+        tv < 0.05,
+        "categorical K=3 batched TV distance {tv} too large"
     );
 }

@@ -7,7 +7,7 @@ use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::model::{ClusterStats, Model};
 use clustercluster::rng::{dirichlet, Pcg64};
 use clustercluster::runtime::{FallbackScorer, Scorer};
 use clustercluster::sampler::{ClusterSet, KernelKind, Shard};
@@ -139,7 +139,7 @@ fn prop_cached_score_equals_uncached() {
             (m, beta)
         },
         |(m, beta)| {
-            let model = BetaBernoulli::symmetric(m.dims(), *beta);
+            let model = Model::bernoulli(m.dims(), *beta);
             let mut c = ClusterStats::empty(m.dims());
             for r in 0..m.rows() - 1 {
                 c.add(m, r);
@@ -543,7 +543,7 @@ fn prop_split_merge_composite_sweeps_preserve_shard_invariants() {
                 seed,
             }
             .generate_with_test_fraction(0.0);
-            let mut model = clustercluster::model::BetaBernoulli::symmetric(12, 0.5);
+            let mut model = Model::bernoulli(12, 0.5);
             model.build_lut(ds.train.rows() + 1);
             let rows: Vec<usize> = (0..ds.train.rows()).collect();
             let mut sh = Shard::init_from_prior(&ds.train, rows, 1.2, Pcg64::seed_from(seed));
@@ -556,7 +556,7 @@ fn prop_split_merge_composite_sweeps_preserve_shard_invariants() {
             ];
             for step in 0..8 {
                 let kind = kinds[pick.next_below(kinds.len() as u64) as usize];
-                kind.kernel().sweep(&mut sh, &ds.train, &model);
+                kind.kernel().sweep(&mut sh, (&ds.train).into(), &model);
                 sh.check_invariants(&ds.train)
                     .map_err(|e| format!("step {step} ({kind:?}): {e}"))?;
                 if sh.num_rows() != ds.train.rows() {
@@ -564,7 +564,9 @@ fn prop_split_merge_composite_sweeps_preserve_shard_invariants() {
                 }
             }
             // deterministically exercise the move layer at least once
-            KernelKind::SplitMergeGibbs.kernel().sweep(&mut sh, &ds.train, &model);
+            KernelKind::SplitMergeGibbs
+                .kernel()
+                .sweep(&mut sh, (&ds.train).into(), &model);
             sh.check_invariants(&ds.train)
                 .map_err(|e| format!("final split-merge sweep: {e}"))?;
             let (proposals, _, _) = sh.split_merge_stats();
@@ -595,7 +597,7 @@ fn prop_shard_kernel_interleaving_preserves_invariants() {
                 seed,
             }
             .generate_with_test_fraction(0.0);
-            let mut model = clustercluster::model::BetaBernoulli::symmetric(12, 0.5);
+            let mut model = Model::bernoulli(12, 0.5);
             model.build_lut(ds.train.rows() + 1);
             let rows: Vec<usize> = (0..ds.train.rows()).collect();
             let mut sh = Shard::init_from_prior(&ds.train, rows, 1.2, Pcg64::seed_from(seed));
@@ -606,7 +608,7 @@ fn prop_shard_kernel_interleaving_preserves_invariants() {
                 } else {
                     KernelKind::WalkerSlice
                 };
-                kind.kernel().sweep(&mut sh, &ds.train, &model);
+                kind.kernel().sweep(&mut sh, (&ds.train).into(), &model);
                 sh.check_invariants(&ds.train)
                     .map_err(|e| format!("step {step} ({kind:?}): {e}"))?;
                 if sh.num_rows() != ds.train.rows() {

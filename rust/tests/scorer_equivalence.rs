@@ -31,7 +31,7 @@ use clustercluster::coordinator::{Coordinator, CoordinatorConfig};
 use clustercluster::data::synthetic::SyntheticConfig;
 use clustercluster::data::BinMat;
 use clustercluster::mapreduce::CommModel;
-use clustercluster::model::{BetaBernoulli, ClusterStats};
+use clustercluster::model::{ClusterStats, Model};
 use clustercluster::rng::Pcg64;
 use clustercluster::runtime::{FallbackScorer, Scorer, ScorerKind};
 use clustercluster::sampler::{KernelAssignment, KernelKind, ScoreMode};
@@ -94,7 +94,8 @@ fn assert_serial_bit_identical(kernel: KernelKind) {
             scalar.alpha(),
             batched.alpha()
         );
-        for (a, b) in scalar.model.beta.iter().zip(&batched.model.beta) {
+        let (sb, bb) = (scalar.model.as_bernoulli(), batched.model.as_bernoulli());
+        for (a, b) in sb.beta.iter().zip(&bb.beta) {
             assert_eq!(a.to_bits(), b.to_bits(), "β diverged at sweep {it} ({kernel:?})");
         }
     }
@@ -212,7 +213,8 @@ fn assert_incremental_matches_eager(kernel: KernelKind) {
             eager.alpha().to_bits(),
             "α diverged at sweep {it} ({kernel:?})"
         );
-        for (a, b) in incremental.model.beta.iter().zip(&eager.model.beta) {
+        let (ib, eb) = (incremental.model.as_bernoulli(), eager.model.as_bernoulli());
+        for (a, b) in ib.beta.iter().zip(&eb.beta) {
             assert_eq!(a.to_bits(), b.to_bits(), "β diverged at sweep {it} ({kernel:?})");
         }
     }
@@ -423,7 +425,7 @@ fn prop_batched_block_matches_cluster_cache_scoring() {
         |(m, j, beta, seed)| {
             let (j, beta) = (*j, *beta);
             let d = m.dims();
-            let model = BetaBernoulli::symmetric(d, beta);
+            let model = Model::bernoulli(d, beta);
             let mut rng = Pcg64::seed_from(*seed);
             let mut clusters: Vec<ClusterStats> =
                 (0..j).map(|_| ClusterStats::empty(d)).collect();
@@ -437,7 +439,7 @@ fn prop_batched_block_matches_cluster_cache_scoring() {
             let mut bias = vec![0.0f64; j];
             let mut diff = vec![0.0f64; dv * j];
             for (jj, c) in clusters.iter_mut().enumerate() {
-                let (b, dtab) = c.cached_table(&model);
+                let (b, _aux, dtab) = c.cached_table(&model);
                 bias[jj] = b;
                 for (dd, &v) in dtab.iter().enumerate() {
                     diff[dd * j + jj] = v;
