@@ -27,9 +27,13 @@
 //!
 //! Rounds run bulk-synchronously by default; `--overlap on`
 //! ([`CoordinatorConfig::overlap`]) switches to the barrier-free
-//! schedule — staged shuffle, post-shuffle global updates,
-//! work-stealing bonus sweeps, and `max(map, carry)` wall-clock
-//! modeling (DESIGN.md § Barrier-free rounds).
+//! schedule — a genuinely concurrent host pipeline: shard completions
+//! are consumed as they land (staging shuffle state and granting
+//! work-stealing bonus sweeps while slow shards still sweep), the
+//! shuffle and the α/β/μ reduce then run from the staged snapshot on
+//! the coordinator thread, and the round reports **measured** concurrent
+//! wall-clock alongside the `max(map, carry)` modeled figure
+//! (DESIGN.md § Barrier-free rounds).
 //!
 //! ```
 //! use clustercluster::coordinator::{Coordinator, CoordinatorConfig, MuMode};
@@ -58,7 +62,8 @@ pub mod checkpoint;
 
 use crate::data::DataRef;
 use crate::mapreduce::{
-    finish_round, finish_round_overlapped, CommModel, MapReduce, RoundStats,
+    finish_round, finish_round_overlapped, CommModel, DelayHook, MapReduce, OverlappedTiming,
+    RoundStats,
 };
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
@@ -199,15 +204,20 @@ pub struct ShardRoundStat {
     /// unmeasurable) — the per-shard observable behind the hot-path
     /// bench numbers
     pub rows_per_s: f64,
-    /// residual idle seconds this round: the gap between this shard's
-    /// map time (base + bonus sweeps) and the round's map critical path
-    /// — time the shard spent waiting even after any work stealing
+    /// residual idle seconds this round. Under `--overlap on` this is
+    /// **measured** wall-clock: the gap between the instant this shard's
+    /// final completion (base + any bonus grants) drained and the
+    /// instant the round's map window closed — real waiting on the real
+    /// timeline. Under bulk it is reconstructed from durations (map
+    /// critical path − this shard's map time), since a bulk round has no
+    /// per-completion timestamps.
     pub idle_s: f64,
-    /// what the shard's wait would have been with NO bonus sweeps: the
-    /// gap between its *base* map time and the critical path — the
+    /// what the shard's wait would have been with NO bonus sweeps — the
     /// bulk-synchronous barrier tax, recorded in both modes so
-    /// `--overlap on|off` traces are comparable (equal to `idle_s` with
-    /// overlap off)
+    /// `--overlap on|off` traces are comparable. Under `--overlap on`
+    /// it is **measured**: window close − the instant the shard's *base*
+    /// sweeps completed (so `barrier_wait_s − idle_s` is the wait the
+    /// bonus grants actually absorbed). Under bulk it equals `idle_s`.
     pub barrier_wait_s: f64,
     /// work-stealing bonus sweeps granted to this shard this round
     /// (always 0 with `--overlap off`)
@@ -349,6 +359,21 @@ pub fn plan_bonus_sweeps(row_counts: &[u64], max_bonus_sweeps: usize) -> Vec<usi
 /// applying them.
 type StagedMove = (crate::model::ClusterStats, Vec<usize>, usize);
 
+/// One shuffle decision of the most recent round, in canonical drain
+/// order (shard index, then cluster slot within the shard). Exposed via
+/// [`Coordinator::last_shuffle_moves`] so tests can assert the staged-
+/// move drain order is a function of the chain state alone — never of
+/// the completion order the concurrent scheduler happened to produce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShuffleMove {
+    /// supercluster the cluster was drained from
+    pub from: usize,
+    /// sampled destination supercluster (may equal `from`)
+    pub to: usize,
+    /// member rows the cluster carries
+    pub rows: usize,
+}
+
 /// The distributed sampler state: K supercluster shards + global hypers.
 pub struct Coordinator<'a> {
     data: DataRef<'a>,
@@ -378,6 +403,9 @@ pub struct Coordinator<'a> {
     /// bytes the most recent round's shuffle step moved (0 when the
     /// shuffle is disabled or K = 1)
     last_shuffle_bytes: u64,
+    /// the most recent round's shuffle decisions in canonical drain
+    /// order (empty when the shuffle is disabled or K = 1)
+    last_shuffle_moves: Vec<ShuffleMove>,
     /// adaptive-μ MH proposals attempted (Adaptive mode only)
     mu_proposals: u64,
     /// adaptive-μ MH proposals accepted (Adaptive mode only)
@@ -493,6 +521,7 @@ impl<'a> Coordinator<'a> {
             rounds: 0,
             last_shard_stats: Vec::new(),
             last_shuffle_bytes: 0,
+            last_shuffle_moves: Vec::new(),
             mu_proposals: 0,
             mu_accepts: 0,
             prev_carry_s: 0.0,
@@ -564,6 +593,7 @@ impl<'a> Coordinator<'a> {
         self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
             self.shuffle(&mut states, rng)
         } else {
+            self.last_shuffle_moves.clear();
             0
         };
         bytes += self.last_shuffle_bytes;
@@ -571,7 +601,7 @@ impl<'a> Coordinator<'a> {
 
         self.states = states;
         self.rounds += 1;
-        self.record_shard_stats(&map_durs, None, None, &rows_swept);
+        self.record_shard_stats(&map_durs, &rows_swept);
 
         let rs = finish_round(
             &self.cfg.comm,
@@ -585,29 +615,53 @@ impl<'a> Coordinator<'a> {
         rs
     }
 
-    /// The overlapped round (DESIGN.md § Barrier-free rounds). The
-    /// stage order is itself a valid composition of invariant kernels:
+    /// The overlapped round (DESIGN.md § Barrier-free rounds), executed
+    /// as a genuinely **concurrent host pipeline**. The stage order is
+    /// itself a valid composition of invariant kernels:
     ///
     /// 1. **plan** — bonus sweeps from pre-round resident row counts
     ///    ([`plan_bonus_sweeps`]; deterministic in a sweep-invariant
     ///    statistic, so granting them preserves exactness);
-    /// 2. **map** — each shard runs `local_sweeps + bonus_k` sweeps,
-    ///    completions draining through the pool's channel rather than a
-    ///    barrier-join;
-    /// 3. **shuffle** — `s_j` decisions sampled against the α, μ the
-    ///    sweeps ran under, staged into a swap buffer, then applied;
-    /// 4. **reduce** — α, β, μ from the POST-shuffle reduced statistics
-    ///    (the only ordering under which the global updates may overlap
-    ///    the next map — a μ update racing in-flight shuffle decisions
-    ///    is one of the forbidden interleavings).
+    /// 2. **map window** — shards run their base sweeps on the pool;
+    ///    completions stream back to the coordinator thread as they
+    ///    land. A shard still owed bonus sweeps is resubmitted as a
+    ///    fresh pool job per grant ([`Shard::run_sweeps`] is
+    ///    re-enterable), so grants execute while slow shards are still
+    ///    sweeping. On a shard's *final* completion, the coordinator
+    ///    stages its contribution in the gaps between drains — snapshot
+    ///    J_k, snapshot the per-dim β statistics, drain its clusters
+    ///    into a per-shard pending buffer — again overlapping the
+    ///    stragglers' sweeps;
+    /// 3. **shuffle** — once the window closes, the pending buffers are
+    ///    flattened in **shard-index order** (never completion order)
+    ///    and the `s_j` destinations are Gibbs-sampled from the master
+    ///    stream against the α, μ the sweeps ran under, then applied;
+    /// 4. **reduce** — α from the snapshot `Σ_k J_k`, β from the staged
+    ///    per-shard statistics folded in shard-index order (a fixed fp
+    ///    reduction order), μ from post-shuffle occupancies — the only
+    ///    ordering under which the global updates may overlap shard
+    ///    work, because they read nothing a still-running sweep could
+    ///    write (a μ update racing in-flight shuffle decisions is one of
+    ///    the forbidden interleavings).
+    ///
+    /// **Determinism.** The master RNG is consumed only on the
+    /// coordinator thread, after the window, in a canonical order
+    /// (shuffle draws → α → β → μ); shards consume only their private
+    /// streams. Staging mutates per-shard slots keyed by shard index.
+    /// The final chain state is therefore a pure function of the seed —
+    /// independent of thread scheduling, completion order, or injected
+    /// delays — which `tests/concurrent_rounds.rs` pins by permuting
+    /// completion orders. At K=1 nothing is drained or snapshotted out
+    /// of order, so the chain stays bit-identical to serial.
     ///
     /// On the modeled timeline, this round's shuffle transfer and
     /// global-update compute ride behind the NEXT round's map
     /// (`prev_carry_s`), so the modeled wall is
     /// `latency + stats_upload + max(map, carry_prev)` instead of the
-    /// serialized sum. The host still applies moves and updates hypers
-    /// in-line (they depend on nothing produced by the next map), which
-    /// is what keeps the chain a deterministic, replayable sequence.
+    /// serialized sum. On the **measured** timeline the returned
+    /// [`RoundStats`] reports the real concurrent wall
+    /// (`measured_overlapped_s`) next to the reconstructed serialized
+    /// cost (`measured_serialized_s`) — the real host overlap speedup.
     fn step_overlapped(&mut self, rng: &mut Pcg64) -> RoundStats {
         let round_t0 = Instant::now();
         let data = self.data;
@@ -616,81 +670,146 @@ impl<'a> Coordinator<'a> {
         let mu = &self.mu;
         let sweeps = self.cfg.local_sweeps;
         let kernels = &self.shard_kernels;
+        let k = self.cfg.workers;
 
         // ---- plan: work-stealing grants from pre-round row counts ----
         let rows_swept: Vec<u64> = self.states.iter().map(|s| s.num_rows() as u64).collect();
         let bonus_plan = plan_bonus_sweeps(&rows_swept, self.cfg.max_bonus_sweeps);
         let bonus = &bonus_plan;
 
-        // ---- map: base + bonus sweeps per shard ----
+        let do_shuffle = self.cfg.shuffle && k > 1;
+        let collect_beta = self.cfg.update_beta && matches!(self.model, Model::Bernoulli(_));
+        let beta_dims = if collect_beta { self.model.as_bernoulli().d } else { 0 };
+
+        // per-shard staging slots, filled as completions land (keyed by
+        // shard index, so fill order cannot leak into chain state)
+        let mut pending: Vec<Vec<(crate::model::ClusterStats, Vec<usize>)>> =
+            vec![Vec::new(); k];
+        let mut j_snap: Vec<u64> = vec![0; k];
+        let mut beta_snap: Vec<Vec<Vec<(u64, u32)>>> = vec![Vec::new(); k];
+        // measured per-shard completion timestamps (seconds since the
+        // window opened) — the real idle/barrier-wait observables
+        let mut base_done_at: Vec<f64> = vec![0.0; k];
+        let mut final_done_at: Vec<f64> = vec![0.0; k];
+        let mut stage_busy = Duration::ZERO;
+
+        // ---- map window: streamed completions + in-window staging ----
         let states = std::mem::take(&mut self.states);
         let map_t0 = Instant::now();
-        let (pairs, map_durs) = self.mr.map_collect(
+        let (mut states, map_durs) = self.mr.map_streaming(
             states,
             |kk, mut st: Shard| {
                 st.set_theta(alpha * mu[kk]);
-                let kernel = kernels[kk].kernel();
-                for _ in 0..sweeps {
-                    kernel.sweep(&mut st, data, model);
-                }
-                // lightly-loaded shards work instead of idling at the
-                // (now absent) barrier; bonus time is metered apart so
-                // the trace can show the barrier tax it absorbed
-                let b = bonus[kk];
-                let bonus_t0 = Instant::now();
-                for _ in 0..b {
-                    kernel.sweep(&mut st, data, model);
-                }
-                st.note_bonus_sweeps(b as u64);
-                (st, bonus_t0.elapsed())
+                st.run_sweeps(kernels[kk].kernel(), data, model, sweeps);
+                st
             },
-            |_rank, _kk| {},
+            |kk, mut st: Shard| {
+                // one bonus grant = one extra sweep, resubmitted as its
+                // own pool job so the grant can be issued mid-round and
+                // run while stragglers are still on their base sweeps
+                st.run_sweeps(kernels[kk].kernel(), data, model, 1);
+                st.note_bonus_sweeps(1);
+                st
+            },
+            |ev| {
+                let kk = ev.index;
+                if ev.followups_done == 0 {
+                    base_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                }
+                if ev.followups_done < bonus[kk] {
+                    return true; // grant another bonus sweep
+                }
+                // final completion for this shard: stage its round
+                // contribution NOW, on the coordinator thread, while
+                // other shards are still sweeping
+                final_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                let stage_t0 = Instant::now();
+                j_snap[kk] = ev.result.num_clusters() as u64;
+                if collect_beta {
+                    // β statistics must be snapshotted BEFORE the drain
+                    // empties the cluster set
+                    let mut dims: Vec<Vec<(u64, u32)>> = Vec::with_capacity(beta_dims);
+                    for d in 0..beta_dims {
+                        let mut out = Vec::new();
+                        ev.result.collect_dim_stats(d, &mut out);
+                        dims.push(out);
+                    }
+                    beta_snap[kk] = dims;
+                }
+                if do_shuffle {
+                    // drain into the pending buffer only when a shuffle
+                    // will actually run: drain + reinsert compacts
+                    // cluster-slot numbering, which at K=1 (or shuffle
+                    // off) would perturb the bit-pinned chain
+                    pending[kk] = ev.result.drain_clusters();
+                }
+                stage_busy += stage_t0.elapsed();
+                false
+            },
         );
-        self.timer.add("map", map_t0.elapsed());
-        let mut states = Vec::with_capacity(pairs.len());
-        let mut bonus_durs = Vec::with_capacity(pairs.len());
-        for (st, bd) in pairs {
-            states.push(st);
-            bonus_durs.push(bd);
-        }
+        let map_window = map_t0.elapsed();
+        // phase attribution stays disjoint: staging ran inside the
+        // window but is accounted to the shuffle phase below
+        self.timer.add("map", map_window.saturating_sub(stage_busy));
 
-        // ---- shuffle: decide into the swap buffer, then apply ----
+        // ---- shuffle: canonical-order destinations from the stage ----
         let shuffle_t0 = Instant::now();
-        self.last_shuffle_bytes = if self.cfg.shuffle && self.cfg.workers > 1 {
-            let (staged, b) = self.shuffle_decide(&mut states, rng);
+        self.last_shuffle_bytes = if do_shuffle {
+            let mut all: Vec<StagedMove> = Vec::new();
+            for (kk, moves) in pending.iter_mut().enumerate() {
+                for (stats, rows) in moves.drain(..) {
+                    all.push((stats, rows, kk));
+                }
+            }
+            let (staged, b) = self.sample_shuffle_destinations(all, rng);
             Self::apply_moves(&mut states, staged);
             b
         } else {
+            self.last_shuffle_moves.clear();
             0
         };
         let shuffle_dur = shuffle_t0.elapsed();
-        self.timer.add("shuffle", shuffle_dur);
+        self.timer.add("shuffle", shuffle_dur + stage_busy);
 
-        // ---- reduce: hypers from the post-shuffle reduced stats ----
+        // ---- reduce: hypers from the staged snapshot ----
         let reduce_t0 = Instant::now();
-        let stats_bytes = self.reduce_hypers(&mut states, rng);
+        let stats_bytes = self.reduce_hypers_overlapped(&mut states, &j_snap, &beta_snap, rng);
         let reduce_dur = reduce_t0.elapsed();
         self.timer.add("reduce", reduce_dur);
         let bytes = stats_bytes + self.last_shuffle_bytes;
 
         self.states = states;
         self.rounds += 1;
-        self.record_shard_stats(&map_durs, Some(&bonus_durs), Some(&bonus_plan), &rows_swept);
+        self.record_shard_stats_measured(
+            &map_durs,
+            &bonus_plan,
+            &rows_swept,
+            &base_done_at,
+            &final_done_at,
+        );
 
+        // the post-window host tail (the part a bulk schedule would
+        // also serialize after its barrier, on top of the staging work
+        // the window absorbed)
+        let tail = shuffle_dur + reduce_dur;
         let rs = finish_round_overlapped(
             &self.cfg.comm,
             map_durs,
-            reduce_dur + shuffle_dur,
+            stage_busy + tail,
             bytes,
             stats_bytes,
             self.prev_carry_s,
-            round_t0.elapsed(),
+            OverlappedTiming {
+                wall: round_t0.elapsed(),
+                window: map_window,
+            },
         );
         // the tail this round hides behind the NEXT round's map: its
-        // shuffle transfer plus its global-update compute
+        // shuffle transfer plus its post-window compute (staging is
+        // already inside the window, so it is not part of the carry)
         self.prev_carry_s = self.last_shuffle_bytes as f64
             / self.cfg.comm.bandwidth_bytes_per_s
-            + (reduce_dur + shuffle_dur).as_secs_f64();
+            + tail.as_secs_f64();
         self.modeled_time_s += rs.modeled_wall_s;
         self.measured_time_s += rs.measured_wall_s;
         rs
@@ -701,8 +820,10 @@ impl<'a> Coordinator<'a> {
     /// statistics, and μ per the configured [`MuMode`]. Returns the
     /// modeled bytes of the reduced-statistics upload + broadcasts.
     /// Bulk rounds call this before the shuffle (μ conditions on
-    /// pre-shuffle occupancies), overlapped rounds after it — each is a
-    /// valid Gibbs conditional on the state at call time.
+    /// pre-shuffle occupancies); overlapped rounds use
+    /// [`Self::reduce_hypers_overlapped`], which reads the staged
+    /// snapshot instead — each is a valid Gibbs conditional on the
+    /// state at call time.
     fn reduce_hypers(&mut self, states: &mut [Shard], rng: &mut Pcg64) -> u64 {
         let mut bytes: u64 = 0;
         // each worker ships J_k (8 bytes) and, if β updates are on, its
@@ -744,10 +865,71 @@ impl<'a> Coordinator<'a> {
             }
             bytes += 8 * d_total as u64; // broadcast β
         }
-        // μ granularity update (DESIGN.md §6). Skipped at K=1, where μ is
-        // degenerate at [1]: this also keeps the master stream consumption
-        // identical to the serial chain, preserving chain-exact K=1
-        // equivalence under every mode.
+        bytes += self.update_mu(states, rng);
+        bytes
+    }
+
+    /// Centralized hyper updates for an **overlapped** round, reading
+    /// the statistics STAGED at each shard's final completion instead of
+    /// the live states: α from Eq. 6 given the snapshot `Σ_k J_k`
+    /// (shuffle-invariant — moving clusters between shards cannot change
+    /// the total), β_d by griddy Gibbs from the per-shard snapshot
+    /// statistics folded in shard-index order (a fixed fp reduction
+    /// order, so the draw is a function of chain state, never of
+    /// completion order), and μ per [`MuMode`] from the live post-
+    /// shuffle occupancies (exactly the conditional the bulk-overlap
+    /// schedule used). Returns the modeled reduced-statistics bytes.
+    fn reduce_hypers_overlapped(
+        &mut self,
+        states: &mut [Shard],
+        j_snap: &[u64],
+        beta_snap: &[Vec<Vec<(u64, u32)>>],
+        rng: &mut Pcg64,
+    ) -> u64 {
+        let mut bytes: u64 = 0;
+        let total_j: u64 = j_snap.iter().sum();
+        bytes += 8 * states.len() as u64;
+        if self.cfg.update_alpha {
+            self.alpha = sample_alpha(
+                rng,
+                self.alpha,
+                self.data.rows() as u64,
+                total_j,
+                &self.cfg.alpha_prior,
+            );
+        }
+        if self.cfg.update_beta && matches!(self.model, Model::Bernoulli(_)) {
+            let d_total = self.model.as_bernoulli().d;
+            bytes += total_j * (8 + 4 * d_total as u64);
+            let mut stats: Vec<(u64, u32)> = Vec::new();
+            self.beta_scratch.clear();
+            self.beta_scratch.extend_from_slice(&self.model.as_bernoulli().beta);
+            for d in 0..d_total {
+                stats.clear();
+                for shard_stats in beta_snap {
+                    stats.extend_from_slice(&shard_stats[d]);
+                }
+                self.beta_scratch[d] = self.beta_updater.sample(rng, &stats);
+            }
+            let n_max = self.data.rows() + 1;
+            if self.model.as_bernoulli_mut().update_betas(&self.beta_scratch, n_max) {
+                for st in states.iter_mut() {
+                    st.invalidate_caches();
+                }
+            }
+            bytes += 8 * d_total as u64; // broadcast β
+        }
+        bytes += self.update_mu(states, rng);
+        bytes
+    }
+
+    /// μ granularity update (DESIGN.md §6), shared by both reduce
+    /// flavors. Skipped at K=1, where μ is degenerate at [1]: this also
+    /// keeps the master stream consumption identical to the serial
+    /// chain, preserving chain-exact K=1 equivalence under every mode.
+    /// Returns the modeled broadcast bytes.
+    fn update_mu(&mut self, states: &[Shard], rng: &mut Pcg64) -> u64 {
+        let mut bytes = 0u64;
         if self.cfg.workers > 1 {
             match self.cfg.mu_mode {
                 MuMode::Uniform => {}
@@ -780,20 +962,14 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Rebuild the per-shard observability series (μ_k, occupancy, map
-    /// time, throughput, idle/barrier-wait/bonus) for the round just
-    /// finished. `bonus_durs`/`bonus_plan` are `None` for bulk rounds
-    /// (no stealing: bonus columns are 0 and `barrier_wait_s ==
-    /// idle_s`).
-    fn record_shard_stats(
-        &mut self,
-        map_durs: &[Duration],
-        bonus_durs: Option<&[Duration]>,
-        bonus_plan: Option<&[usize]>,
-        rows_swept: &[u64],
-    ) {
+    /// time, throughput, idle/barrier-wait) for a **bulk** round: no
+    /// stealing ran, so bonus columns are 0 and `barrier_wait_s ==
+    /// idle_s` (both reconstructed from durations — a bulk round has no
+    /// per-completion timestamps).
+    fn record_shard_stats(&mut self, map_durs: &[Duration], rows_swept: &[u64]) {
         let local_sweeps = self.cfg.local_sweeps;
-        // the round's map critical path (incl. bonus work) — the wait
-        // baseline every shard is measured against
+        // the round's map critical path — the wait baseline every shard
+        // is measured against
         let crit = map_durs
             .iter()
             .map(Duration::as_secs_f64)
@@ -804,14 +980,54 @@ impl<'a> Coordinator<'a> {
             .enumerate()
             .map(|(kk, st)| {
                 let map_seconds = map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0);
-                let bonus_s = bonus_durs
-                    .and_then(|b| b.get(kk))
-                    .map(|d| d.as_secs_f64())
-                    .unwrap_or(0.0);
-                let bonus_sweeps =
-                    bonus_plan.and_then(|b| b.get(kk)).copied().unwrap_or(0) as u64;
                 // throughput from the PRE-shuffle row count the map step
                 // actually swept, not the post-shuffle occupancy
+                let swept = rows_swept.get(kk).copied().unwrap_or(0);
+                ShardRoundStat {
+                    shard: kk,
+                    mu: self.mu[kk],
+                    rows: st.num_rows() as u64,
+                    clusters: st.num_clusters() as u64,
+                    map_seconds,
+                    rows_per_s: if map_seconds > 0.0 {
+                        swept as f64 * local_sweeps as f64 / map_seconds
+                    } else {
+                        0.0
+                    },
+                    idle_s: (crit - map_seconds).max(0.0),
+                    barrier_wait_s: (crit - map_seconds).max(0.0),
+                    bonus_sweeps: 0,
+                    kernel: self.shard_kernels[kk],
+                }
+            })
+            .collect();
+    }
+
+    /// Rebuild the per-shard observability series for an **overlapped**
+    /// round from MEASURED completion timestamps: `idle_s` is the real
+    /// wall between a shard's final completion draining and the map
+    /// window closing; `barrier_wait_s` the real wall from its *base*
+    /// completion — so their difference is the wait the bonus grants
+    /// actually absorbed on the host timeline, not a reconstruction.
+    fn record_shard_stats_measured(
+        &mut self,
+        map_durs: &[Duration],
+        bonus_plan: &[usize],
+        rows_swept: &[u64],
+        base_done_at: &[f64],
+        final_done_at: &[f64],
+    ) {
+        let local_sweeps = self.cfg.local_sweeps;
+        // the window closes when the LAST completion drains — the
+        // measured analogue of the modeled critical path
+        let close = final_done_at.iter().copied().fold(0.0, f64::max);
+        self.last_shard_stats = self
+            .states
+            .iter()
+            .enumerate()
+            .map(|(kk, st)| {
+                let map_seconds = map_durs.get(kk).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+                let bonus_sweeps = bonus_plan.get(kk).copied().unwrap_or(0) as u64;
                 let swept = rows_swept.get(kk).copied().unwrap_or(0);
                 let sweeps_run = local_sweeps as u64 + bonus_sweeps;
                 ShardRoundStat {
@@ -825,8 +1041,11 @@ impl<'a> Coordinator<'a> {
                     } else {
                         0.0
                     },
-                    idle_s: (crit - map_seconds).max(0.0),
-                    barrier_wait_s: (crit - (map_seconds - bonus_s)).max(0.0),
+                    idle_s: (close - final_done_at.get(kk).copied().unwrap_or(close))
+                        .max(0.0),
+                    barrier_wait_s: (close
+                        - base_done_at.get(kk).copied().unwrap_or(close))
+                    .max(0.0),
                     bonus_sweeps,
                     kernel: self.shard_kernels[kk],
                 }
@@ -858,7 +1077,6 @@ impl<'a> Coordinator<'a> {
         states: &mut [Shard],
         rng: &mut Pcg64,
     ) -> (Vec<StagedMove>, u64) {
-        let k = states.len();
         // extract all clusters: (stats, member rows, current supercluster)
         let mut all: Vec<StagedMove> = Vec::new();
         for (kk, st) in states.iter_mut().enumerate() {
@@ -866,11 +1084,30 @@ impl<'a> Coordinator<'a> {
                 all.push((stats, rows, kk));
             }
         }
+        self.sample_shuffle_destinations(all, rng)
+    }
+
+    /// The sampling half of the shuffle decision, shared by the bulk
+    /// path ([`Self::shuffle_decide`], which drains live) and the
+    /// concurrent overlapped path (which drained per shard at each final
+    /// completion and flattens the pending buffers in shard-index
+    /// order). `all` must be in canonical drain order — shard index,
+    /// then slot within the shard — which both callers guarantee; the
+    /// master-stream draw sequence is then identical no matter how
+    /// completions interleaved. Records every decision into
+    /// [`Self::last_shuffle_moves`].
+    fn sample_shuffle_destinations(
+        &mut self,
+        all: Vec<StagedMove>,
+        rng: &mut Pcg64,
+    ) -> (Vec<StagedMove>, u64) {
+        let k = self.cfg.workers;
         // current per-supercluster cluster counts for the Eq.7 variant
         let mut j_counts: Vec<u64> = vec![0; k];
         for &(_, _, kk) in &all {
             j_counts[kk] += 1;
         }
+        self.last_shuffle_moves.clear();
         let mut staged: Vec<StagedMove> = Vec::with_capacity(all.len());
         let mut bytes = 0u64;
         for (stats, rows, kk_old) in all {
@@ -886,6 +1123,11 @@ impl<'a> Coordinator<'a> {
                 // indices and one set of component parameters")
                 bytes += 8 + 4 * self.model.stat_dims() as u64 + 8 * rows.len() as u64;
             }
+            self.last_shuffle_moves.push(ShuffleMove {
+                from: kk_old,
+                to: kk_new,
+                rows: rows.len(),
+            });
             staged.push((stats, rows, kk_new));
         }
         (staged, bytes)
@@ -948,6 +1190,25 @@ impl<'a> Coordinator<'a> {
     /// disabled, or at K = 1) — the `--shard-trace` shuffle-bytes line.
     pub fn last_shuffle_bytes(&self) -> u64 {
         self.last_shuffle_bytes
+    }
+
+    /// The most recent round's shuffle decisions, in canonical drain
+    /// order (empty before the first round, with the shuffle disabled,
+    /// or at K = 1). Because the drain order and the master-stream draw
+    /// sequence are fixed by chain state, this sequence is identical for
+    /// every host schedule — the observable `tests/concurrent_rounds.rs`
+    /// pins against completion-order permutations.
+    pub fn last_shuffle_moves(&self) -> &[ShuffleMove] {
+        &self.last_shuffle_moves
+    }
+
+    /// Install (or clear) a per-shard start-delay hook on the map pool —
+    /// the deterministic completion-order lever of the concurrency test
+    /// layer ([`DelayHook`] delays base map tasks only; sleeps are
+    /// excluded from measured durations and cannot perturb chain state).
+    /// A panicking hook doubles as an injected mid-map shard failure.
+    pub fn set_map_delay_hook(&mut self, hook: Option<DelayHook>) {
+        self.mr.set_delay_hook(hook);
     }
 
     /// The per-supercluster shard states.

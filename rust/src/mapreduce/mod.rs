@@ -15,14 +15,25 @@
 //! transfer and global updates behind the current map, so the modeled
 //! wall is `latency + stats_upload + max(map_crit, carry_prev)` instead
 //! of the sum. Completion delivery is a channel, not a barrier: the
-//! caller drains completions as tasks finish ([`MapReduce::map_collect`]),
-//! which is what lets a coordinator react to fast shards while slow ones
-//! are still sweeping.
+//! caller drains completions as tasks finish ([`MapReduce::map_collect`]
+//! and, with in-flight reaction + follow-up resubmission,
+//! [`MapReduce::map_streaming`]), which is what lets a coordinator stage
+//! shuffle state and grant bonus sweeps for fast shards while slow ones
+//! are still sweeping. A [`DelayHook`] can inject deterministic per-task
+//! start delays so tests can force any completion-order interleaving.
 
 use std::any::Any;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Test/diagnostics hook: given a task index, return an artificial delay
+/// the pool sleeps **before** starting that task's compute (excluded
+/// from the task's measured duration). This makes completion order a
+/// deterministic function of the hook, which is how the concurrency
+/// test layer exercises every interleaving; a panicking hook doubles as
+/// an injected shard failure.
+pub type DelayHook = Arc<dyn Fn(usize) -> Duration + Send + Sync>;
 
 /// Communication/overhead model for one map-reduce round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -88,9 +99,14 @@ impl CommModel {
 /// Timing/traffic record of one map-reduce round.
 #[derive(Debug, Clone, Default)]
 pub struct RoundStats {
-    /// measured compute duration of each map task
+    /// measured compute duration of each map task (base + any follow-up
+    /// grants, pooled per task)
     pub map_durations: Vec<Duration>,
-    /// measured reduce-step duration
+    /// measured host-side non-map duration attributed to the round's
+    /// reduce/global step. Under the overlapped schedule this is the
+    /// staging work absorbed into the map window **plus** the post-window
+    /// tail (shuffle decisions + hyper reduce), i.e. everything the bulk
+    /// schedule would serialize after the map barrier.
     pub reduce_duration: Duration,
     /// bytes the round moved (stats up + state down)
     pub bytes_transferred: u64,
@@ -110,6 +126,20 @@ pub struct RoundStats {
     pub modeled_overlapped_s: f64,
     /// actually measured wall-clock on this host (seconds)
     pub measured_wall_s: f64,
+    /// measured wall-clock of the round as actually executed on this
+    /// host under its own schedule. For an overlapped round this equals
+    /// [`Self::measured_wall_s`] (the concurrent pipeline is what ran);
+    /// for a bulk round it is also the measured wall (no concurrency was
+    /// attempted, none is claimed).
+    pub measured_overlapped_s: f64,
+    /// measured wall-clock this host *would* have paid had it serialized
+    /// the same round bulk-style: the map window plus every piece of
+    /// host work the concurrent schedule hid inside it (per-completion
+    /// staging) or ran after it (shuffle + reduce tail). The ratio
+    /// `measured_serialized_s / measured_overlapped_s` is the **real**
+    /// (not modeled) host overlap speedup. For a bulk round both
+    /// measured columns equal [`Self::measured_wall_s`].
+    pub measured_serialized_s: f64,
 }
 
 impl RoundStats {
@@ -179,6 +209,25 @@ impl Drop for WorkerPool {
     }
 }
 
+/// One completion event delivered to the [`MapReduce::map_streaming`]
+/// reaction callback, on the **caller** thread, as tasks (and follow-up
+/// grants) finish.
+pub struct StreamEvent<'a, R> {
+    /// 0-based completion order of this event among all reacted events
+    pub rank: usize,
+    /// input index of the task that finished
+    pub index: usize,
+    /// how many follow-up grants this task has already completed
+    /// (0 = this is the base task's completion)
+    pub followups_done: usize,
+    /// measured compute duration of just this unit of work (base task or
+    /// single follow-up; injected delays excluded)
+    pub duration: Duration,
+    /// the task's current result; mutable so the reaction can stage
+    /// state out of it before deciding whether to grant a follow-up
+    pub result: &'a mut R,
+}
+
 /// The map-reduce executor. `parallelism` caps the number of worker
 /// threads (tasks beyond it queue, exactly like mappers on a small
 /// cluster). Workers are spawned once here and reused by every
@@ -186,6 +235,7 @@ impl Drop for WorkerPool {
 pub struct MapReduce {
     parallelism: usize,
     pool: Option<WorkerPool>,
+    delay: Option<DelayHook>,
 }
 
 impl std::fmt::Debug for MapReduce {
@@ -193,6 +243,7 @@ impl std::fmt::Debug for MapReduce {
         f.debug_struct("MapReduce")
             .field("parallelism", &self.parallelism)
             .field("pooled", &self.pool.is_some())
+            .field("delayed", &self.delay.is_some())
             .finish()
     }
 }
@@ -204,7 +255,11 @@ impl MapReduce {
         // parallelism == 1 runs inline on the caller thread: no pool,
         // no thread overhead, cleanest per-task timing on one core
         let pool = (parallelism > 1).then(|| WorkerPool::new(parallelism));
-        MapReduce { parallelism, pool }
+        MapReduce {
+            parallelism,
+            pool,
+            delay: None,
+        }
     }
 
     /// Use all available cores.
@@ -218,6 +273,15 @@ impl MapReduce {
     /// The configured worker-thread cap.
     pub fn parallelism(&self) -> usize {
         self.parallelism
+    }
+
+    /// Install (or clear) a [`DelayHook`]. Applied to **base** tasks
+    /// only, before their compute starts, on whichever thread runs the
+    /// task; the sleep is excluded from measured durations. Tests use
+    /// this to pin completion order deterministically and to inject
+    /// mid-map failures (a panicking hook behaves like a crashed shard).
+    pub fn set_delay_hook(&mut self, hook: Option<DelayHook>) {
+        self.delay = hook;
     }
 
     /// Run `f` over `tasks`, returning results (input order) and each
@@ -236,19 +300,16 @@ impl MapReduce {
     /// Like [`Self::map`], but the caller observes completions as they
     /// happen: `on_done(rank, index)` runs on the **caller** thread when
     /// the `rank`-th task to finish (0-based completion order) turns out
-    /// to be input `index`. This is the submit/poll surface the
-    /// barrier-free coordinator builds on — instead of blocking on a
-    /// latch, the caller drains a completion channel and can react to
-    /// fast shards while slow ones are still sweeping. Results are still
-    /// returned in **input order**: every completion message carries its
-    /// task index, so out-of-order execution cannot scramble the output
-    /// vector or the per-task duration vector.
+    /// to be input `index`. Results are still returned in **input
+    /// order**: every completion message carries its task index, so
+    /// out-of-order execution cannot scramble the output vector or the
+    /// per-task duration vector.
     ///
     /// If a task panics, the first payload is re-raised on the caller
-    /// thread — but only after all `n` completions (success or panic)
-    /// have been drained, so a panicking task can never wedge the pool
-    /// or leave a borrow live. `on_done` is not invoked for the
-    /// panicking task(s).
+    /// thread — but only after all completions (success or panic) have
+    /// been drained, so a panicking task can never wedge the pool or
+    /// leave a borrow live. `on_done` is not invoked for the panicking
+    /// task(s).
     pub fn map_collect<T, R, F, C>(
         &self,
         tasks: Vec<T>,
@@ -261,6 +322,51 @@ impl MapReduce {
         F: Fn(usize, T) -> R + Sync,
         C: FnMut(usize, usize),
     {
+        self.map_streaming(
+            tasks,
+            f,
+            |_, r| r,
+            |ev| {
+                on_done(ev.rank, ev.index);
+                false
+            },
+        )
+    }
+
+    /// The full streaming surface the barrier-free coordinator builds
+    /// on. Each task `i` runs `f(i, task)` on the pool; when a unit of
+    /// work completes, `react` is invoked on the **caller** thread with
+    /// a [`StreamEvent`] holding mutable access to the task's current
+    /// result — the reaction can stage state out of it (e.g. drain
+    /// clusters for the shuffle) and then decide: return `true` to
+    /// resubmit the task through `follow(i, result)` as a fresh pool job
+    /// (a mid-round bonus-sweep grant), or `false` to retire it. Follow-
+    /// up completions re-enter `react` with `followups_done`
+    /// incremented, so a task can be granted repeatedly.
+    ///
+    /// Returned durations pool each task's base + follow-up compute.
+    /// Results come back in input order regardless of completion order.
+    ///
+    /// Panic semantics match [`Self::map_collect`]: the first payload is
+    /// re-raised on the caller thread only after every outstanding unit
+    /// (base or follow-up) has been drained; once a panic is seen,
+    /// `react` is not invoked again (so no further grants are issued)
+    /// and the remaining completions are simply accounted for. An
+    /// installed [`DelayHook`] delays base tasks only.
+    pub fn map_streaming<T, R, F, G, C>(
+        &self,
+        tasks: Vec<T>,
+        f: F,
+        follow: G,
+        mut react: C,
+    ) -> (Vec<R>, Vec<Duration>)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+        G: Fn(usize, R) -> R + Sync,
+        C: FnMut(StreamEvent<'_, R>) -> bool,
+    {
         let n = tasks.len();
         if n == 0 {
             return (Vec::new(), Vec::new());
@@ -268,40 +374,77 @@ impl MapReduce {
         let pool = match &self.pool {
             Some(pool) if n > 1 => pool,
             _ => {
+                // inline: completion order == input order, reactions and
+                // follow-ups interleave synchronously on this thread
                 let mut out = Vec::with_capacity(n);
                 let mut durs = Vec::with_capacity(n);
+                let mut rank = 0usize;
                 for (i, t) in tasks.into_iter().enumerate() {
+                    if let Some(hook) = &self.delay {
+                        std::thread::sleep(hook(i));
+                    }
                     let t0 = Instant::now();
-                    out.push(f(i, t));
-                    durs.push(t0.elapsed());
-                    on_done(i, i);
+                    let mut r = f(i, t);
+                    let mut unit = t0.elapsed();
+                    let mut total = unit;
+                    let mut followups_done = 0usize;
+                    loop {
+                        let resubmit = react(StreamEvent {
+                            rank,
+                            index: i,
+                            followups_done,
+                            duration: unit,
+                            result: &mut r,
+                        });
+                        rank += 1;
+                        if !resubmit {
+                            break;
+                        }
+                        let t1 = Instant::now();
+                        r = follow(i, r);
+                        unit = t1.elapsed();
+                        total += unit;
+                        followups_done += 1;
+                    }
+                    out.push(r);
+                    durs.push(total);
                 }
                 return (out, durs);
             }
         };
 
         // Hand each task to the pool as a type-erased job. The jobs
-        // borrow this stack frame (`inputs`, `f`), so their lifetime is
-        // transmuted up to 'static.
+        // borrow this stack frame (`inputs`, `f`, `follow`, the delay
+        // hook), so their lifetime is transmuted up to 'static.
         //
         // SAFETY: every borrow the jobs capture outlives the jobs
         // themselves because this function blocks on the completion
-        // drain below until ALL n jobs have sent their message
+        // drain below until ALL outstanding units (base jobs plus every
+        // follow-up this loop itself submitted) have sent their message
         // (panicking jobs are caught and still send one), and the pool
-        // can only execute a job once. Nothing below the drain loop can
-        // observe a live job. There is deliberately NO public handle
-        // type that would let a caller forget a pending job — the drain
-        // is unconditional.
+        // can only execute a job once. The `outstanding` counter is
+        // incremented before each follow-up submission on this thread,
+        // so the drain condition accounts for every job that can ever
+        // exist. Nothing below the drain loop can observe a live job.
+        // There is deliberately NO public handle type that would let a
+        // caller forget a pending job — the drain is unconditional.
         let inputs: Vec<Mutex<Option<T>>> =
             tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        // (index, followups_done, result-or-panic) per completed unit
         let (done_tx, done_rx) =
-            channel::<(usize, Result<(R, Duration), Box<dyn Any + Send>>)>();
+            channel::<(usize, usize, Result<(R, Duration), Box<dyn Any + Send>>)>();
+        // `Sender<Job>` is not Sync, so jobs must not capture `&self`;
+        // borrow just the hook (an Option<&Arc<..>> is Send + Sync)
+        let delay = self.delay.as_ref();
         for i in 0..n {
             let inputs = &inputs;
             let f = &f;
             let done_tx = done_tx.clone();
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if let Some(hook) = delay {
+                        std::thread::sleep(hook(i));
+                    }
                     let t = inputs[i].lock().unwrap().take().expect("task taken once");
                     let t0 = Instant::now();
                     let r = f(i, t);
@@ -309,26 +452,59 @@ impl MapReduce {
                 }));
                 // only fails if the receiver is gone, which the
                 // unconditional drain below rules out
-                let _ = done_tx.send((i, ran));
+                let _ = done_tx.send((i, 0, ran));
             });
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
             };
             pool.submit(job);
         }
-        drop(done_tx);
-        // drain exactly n completions — the poll loop. Every job sends
-        // one message whether it returned or panicked, so a panicking
-        // task cannot deadlock the round; the first payload is re-raised
-        // once everything is accounted for (as std::thread::scope would).
-        let mut slots: Vec<Option<(R, Duration)>> = (0..n).map(|_| None).collect();
+        // keep `done_tx` alive: follow-up jobs clone their sender from
+        // the drain loop below, and dropping the original only after the
+        // drain keeps the channel trivially open throughout
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut totals: Vec<Duration> = vec![Duration::ZERO; n];
+        let mut outstanding = n;
+        let mut rank = 0usize;
         let mut panic_payload: Option<Box<dyn Any + Send>> = None;
-        for rank in 0..n {
-            let (i, ran) = done_rx.recv().expect("every job sends a completion");
+        while outstanding > 0 {
+            let (i, followups_done, ran) =
+                done_rx.recv().expect("every job sends a completion");
+            outstanding -= 1;
             match ran {
-                Ok(rd) => {
-                    slots[i] = Some(rd);
-                    on_done(rank, i);
+                Ok((mut r, d)) => {
+                    totals[i] += d;
+                    let mut resubmit = false;
+                    if panic_payload.is_none() {
+                        resubmit = react(StreamEvent {
+                            rank,
+                            index: i,
+                            followups_done,
+                            duration: d,
+                            result: &mut r,
+                        });
+                        rank += 1;
+                    }
+                    if resubmit {
+                        let follow = &follow;
+                        let done_tx = done_tx.clone();
+                        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                            let ran =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                    let t0 = Instant::now();
+                                    let r = follow(i, r);
+                                    (r, t0.elapsed())
+                                }));
+                            let _ = done_tx.send((i, followups_done + 1, ran));
+                        });
+                        let job: Job = unsafe {
+                            std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                        };
+                        outstanding += 1;
+                        pool.submit(job);
+                    } else {
+                        slots[i] = Some(r);
+                    }
                 }
                 Err(p) => {
                     if panic_payload.is_none() {
@@ -337,25 +513,37 @@ impl MapReduce {
                 }
             }
         }
+        drop(done_tx);
         if let Some(p) = panic_payload {
             std::panic::resume_unwind(p);
         }
 
         let mut out = Vec::with_capacity(n);
-        let mut durs = Vec::with_capacity(n);
         for s in slots {
-            let (r, d) = s.expect("task not executed");
-            out.push(r);
-            durs.push(d);
+            out.push(s.expect("task not executed"));
         }
-        (out, durs)
+        (out, totals)
     }
+}
+
+/// Real host timings of one overlapped round, fed to
+/// [`finish_round_overlapped`] alongside the modeled inputs.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlappedTiming {
+    /// measured wall-clock of the whole round as executed (the
+    /// concurrent host pipeline)
+    pub wall: Duration,
+    /// measured wall-clock of the map window alone: base-task submission
+    /// through the last completion drained, staging included (it ran
+    /// inside the window, on the coordinator thread, between drains)
+    pub window: Duration,
 }
 
 /// Assemble a [`RoundStats`] from measured pieces + the comm model,
 /// under the **bulk-synchronous** schedule (`max_k(map_k) + reduce +
-/// comm`). Both modeled fields are set to the bulk figure: a bulk round
-/// tracked no carry, so no overlap is claimed for it.
+/// comm`). Both modeled fields are set to the bulk figure, and both
+/// measured schedule columns to the measured wall: a bulk round tracked
+/// no carry and ran no concurrency, so no overlap is claimed for it.
 pub fn finish_round(
     comm: &CommModel,
     map_durations: Vec<Duration>,
@@ -373,6 +561,7 @@ pub fn finish_round(
     let bulk = crit
         + reduce_duration.as_secs_f64()
         + comm.round_time(workers, bytes_transferred);
+    let wall = measured_wall.as_secs_f64();
     RoundStats {
         map_durations,
         reduce_duration,
@@ -380,7 +569,9 @@ pub fn finish_round(
         modeled_wall_s: bulk,
         modeled_bulk_s: bulk,
         modeled_overlapped_s: bulk,
-        measured_wall_s: measured_wall.as_secs_f64(),
+        measured_wall_s: wall,
+        measured_overlapped_s: wall,
+        measured_serialized_s: wall,
     }
 }
 
@@ -390,7 +581,10 @@ pub fn finish_round(
 /// transfer time plus its global-update compute), which this round pays
 /// only to the extent it exceeds the map critical path. The bulk figure
 /// is computed from the same measurements so `--overlap on` runs can
-/// report both schedules side by side.
+/// report both schedules side by side. `timing` carries the real host
+/// timings: `measured_overlapped_s` is the round's true wall, and
+/// `measured_serialized_s` reconstructs what serializing the same work
+/// bulk-style would have cost (map window + reduce tail).
 pub fn finish_round_overlapped(
     comm: &CommModel,
     map_durations: Vec<Duration>,
@@ -398,7 +592,7 @@ pub fn finish_round_overlapped(
     bytes_transferred: u64,
     stats_bytes: u64,
     carry_s: f64,
-    measured_wall: Duration,
+    timing: OverlappedTiming,
 ) -> RoundStats {
     let workers = map_durations.len();
     let crit = map_durations
@@ -418,7 +612,9 @@ pub fn finish_round_overlapped(
         modeled_wall_s: overlapped,
         modeled_bulk_s: bulk,
         modeled_overlapped_s: overlapped,
-        measured_wall_s: measured_wall.as_secs_f64(),
+        measured_wall_s: timing.wall.as_secs_f64(),
+        measured_overlapped_s: timing.wall.as_secs_f64(),
+        measured_serialized_s: (timing.window + reduce_duration).as_secs_f64(),
     }
 }
 
@@ -526,9 +722,11 @@ mod tests {
         assert_eq!(rs.map_total(), Duration::from_millis(35));
         assert!((rs.modeled_wall_s - 0.022).abs() < 1e-9);
         // a bulk round claims no overlap: both schedule fields pin to
-        // the serialized figure
+        // the serialized figure, and both measured columns to the wall
         assert_eq!(rs.modeled_bulk_s, rs.modeled_wall_s);
         assert_eq!(rs.modeled_overlapped_s, rs.modeled_wall_s);
+        assert_eq!(rs.measured_overlapped_s, rs.measured_wall_s);
+        assert_eq!(rs.measured_serialized_s, rs.measured_wall_s);
     }
 
     #[test]
@@ -564,11 +762,19 @@ mod tests {
             4096,
             64,
             0.050,
-            Duration::from_millis(40),
+            OverlappedTiming {
+                wall: Duration::from_millis(40),
+                window: Duration::from_millis(25),
+            },
         );
         assert!((rs.modeled_bulk_s - 0.022).abs() < 1e-9);
         assert!((rs.modeled_overlapped_s - 0.050).abs() < 1e-9);
         assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
+        // measured columns: overlapped == real wall; serialized
+        // reconstructs window + reduce tail (25ms + 2ms)
+        assert!((rs.measured_overlapped_s - 0.040).abs() < 1e-9);
+        assert_eq!(rs.measured_overlapped_s, rs.measured_wall_s);
+        assert!((rs.measured_serialized_s - 0.027).abs() < 1e-9);
         // with the carry hidden under the map, the overlapped schedule
         // must beat bulk whenever carry < map_crit + reduce + comm
         let rs2 = finish_round_overlapped(
@@ -578,7 +784,10 @@ mod tests {
             4096,
             64,
             0.010,
-            Duration::from_millis(40),
+            OverlappedTiming {
+                wall: Duration::from_millis(40),
+                window: Duration::from_millis(25),
+            },
         );
         assert!(rs2.modeled_overlapped_s < rs2.modeled_bulk_s);
     }
@@ -600,6 +809,105 @@ mod tests {
         let mut idxs: Vec<usize> = seen.iter().map(|&(_, i)| i).collect();
         idxs.sort_unstable();
         assert_eq!(idxs, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_streaming_accumulates_followups() {
+        // every task is granted exactly two follow-ups; the result and
+        // the pooled duration must account for base + both grants, on
+        // both the inline and the pooled path
+        for parallelism in [1usize, 4] {
+            let mr = MapReduce::new(parallelism);
+            let tasks: Vec<u64> = (0..12).collect();
+            let mut events = 0usize;
+            let (out, durs) = mr.map_streaming(
+                tasks,
+                |_, x| x * 10,
+                |_, r| r + 1,
+                |ev| {
+                    events += 1;
+                    ev.followups_done < 2
+                },
+            );
+            assert_eq!(out, (0..12).map(|x| x * 10 + 2).collect::<Vec<_>>());
+            assert_eq!(durs.len(), 12);
+            // 12 base + 24 follow-up completions, each reacted once
+            assert_eq!(events, 36);
+        }
+    }
+
+    #[test]
+    fn map_streaming_event_fields_are_consistent() {
+        let mr = MapReduce::new(3);
+        let tasks: Vec<u64> = (0..9).collect();
+        let mut seen: Vec<(usize, usize, usize)> = Vec::new();
+        let (_, _) = mr.map_streaming(
+            tasks,
+            |i, x| x + i as u64,
+            |_, r| r,
+            |ev| {
+                seen.push((ev.rank, ev.index, ev.followups_done));
+                ev.followups_done == 0 && ev.index % 3 == 0
+            },
+        );
+        // ranks are a strict 0..len sequence
+        assert_eq!(
+            seen.iter().map(|&(r, _, _)| r).collect::<Vec<_>>(),
+            (0..seen.len()).collect::<Vec<_>>()
+        );
+        // indexes 0,3,6 got exactly one follow-up event each
+        for i in [0usize, 3, 6] {
+            assert_eq!(
+                seen.iter().filter(|&&(_, x, fu)| x == i && fu == 1).count(),
+                1
+            );
+        }
+        assert_eq!(seen.len(), 12);
+    }
+
+    #[test]
+    fn delay_hook_pins_completion_order() {
+        // with 4 workers and a long injected delay on task 0, every
+        // other base task must complete (and react) before task 0 does —
+        // the determinism lever the interleaving harness relies on
+        let mut mr = MapReduce::new(4);
+        mr.set_delay_hook(Some(Arc::new(|i| {
+            Duration::from_millis(if i == 0 { 120 } else { 0 })
+        })));
+        let tasks: Vec<u64> = (0..4).collect();
+        let mut order: Vec<usize> = Vec::new();
+        let (out, _) = mr.map_streaming(
+            tasks,
+            |_, x| x,
+            |_, r| r,
+            |ev| {
+                order.push(ev.index);
+                false
+            },
+        );
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(order.len(), 4);
+        assert_eq!(*order.last().unwrap(), 0, "delayed task finishes last");
+    }
+
+    #[test]
+    #[should_panic(expected = "streaming boom")]
+    fn map_streaming_panic_drains_then_propagates() {
+        let mr = MapReduce::new(3);
+        let tasks: Vec<u64> = (0..6).collect();
+        let _ = mr.map_streaming(
+            tasks,
+            |_, x| {
+                if x == 4 {
+                    panic!("streaming boom");
+                }
+                x
+            },
+            |_, r| r,
+            // grant one follow-up to everything that completes before
+            // the panic lands; the drain must still terminate
+            |ev| ev.followups_done == 0,
+        );
     }
 
     #[test]

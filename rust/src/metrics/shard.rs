@@ -1,6 +1,8 @@
 //! Per-supercluster trace recording: one row per (round, shard) with
 //! the series that make the non-uniform μ modes observable — μ_k, data
-//! occupancy, cluster count, and measured map-step seconds. This is the
+//! occupancy, cluster count, measured map-step seconds, and (under
+//! `--overlap on`) measured idle / barrier-wait wall-clock against the
+//! real concurrent map window. This is the
 //! sink behind `repro run --shard-trace out.csv`; the rows come from
 //! [`crate::coordinator::Coordinator::shard_stats`].
 
@@ -26,11 +28,14 @@ pub struct ShardTraceRow {
     /// (rows × sweeps run (base + bonus) / map seconds; 0 when
     /// unmeasurable)
     pub rows_per_s: f64,
-    /// residual idle seconds against the round's map critical path
-    /// (after any work-stealing bonus sweeps)
+    /// residual idle seconds this round. Under `--overlap on` this is
+    /// **measured** wall-clock (final completion drained → map window
+    /// closed, on the real concurrent host timeline); with overlap off
+    /// it is reconstructed from durations (critical path − map seconds)
     pub idle_s: f64,
     /// the wait the shard would have had with no bonus sweeps — the
-    /// bulk-synchronous barrier tax (equals `idle_s` with overlap off)
+    /// bulk-synchronous barrier tax. Measured (base completion → window
+    /// close) under `--overlap on`; equals `idle_s` with overlap off
     pub barrier_wait_s: f64,
     /// work-stealing bonus sweeps granted this round (0 with
     /// `--overlap off`)

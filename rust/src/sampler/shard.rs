@@ -203,6 +203,27 @@ impl Shard {
         self.theta = theta;
     }
 
+    /// Run `n` consecutive kernel sweeps over this shard's data. This is
+    /// the re-enterable sweep entry the concurrent coordinator uses: a
+    /// shard's base sweeps and any mid-round bonus grants are separate
+    /// `run_sweeps` calls (possibly on different pool threads), and
+    /// because every sweep consumes only the shard's **private** RNG
+    /// stream, the resulting shard state is a pure function of how many
+    /// sweeps ran — independent of which thread ran them or how the
+    /// calls interleaved with other shards' work.
+    pub fn run_sweeps<'a>(
+        &mut self,
+        kernel: &dyn super::kernel::TransitionKernel,
+        data: impl Into<DataRef<'a>>,
+        model: &Model,
+        n: usize,
+    ) {
+        let data = data.into();
+        for _ in 0..n {
+            kernel.sweep(self, data, model);
+        }
+    }
+
     /// Select how kernel sweeps score candidate clusters (scalar
     /// reference vs batched Scorer path). Consumes no randomness, so it
     /// never perturbs the chain's RNG streams.

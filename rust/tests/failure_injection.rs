@@ -498,3 +498,201 @@ fn out_of_order_completion_keeps_result_and_duration_indexing() {
     idxs.sort_unstable();
     assert_eq!(idxs, (0..n).collect::<Vec<_>>());
 }
+
+// ---------------------------------------------------------------------
+// Concurrent-scheduler failure paths: a shard panicking mid-map under
+// the streaming round must surface its payload without deadlocking the
+// drain or leaking staged state into the next round, and a
+// pathologically slow shard must not starve the others' bonus grants.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_round_panic_surfaces_and_pool_stays_clean() {
+    use clustercluster::mapreduce::MapReduce;
+    use std::sync::Arc;
+    use std::time::Duration;
+    let mut mr = MapReduce::new(3);
+    // delay the doomed task so every healthy shard finishes its base
+    // sweep AND its follow-up grant before the panic lands — the staged
+    // set is then deterministic
+    mr.set_delay_hook(Some(Arc::new(|i| {
+        Duration::from_millis(if i == 2 { 120 } else { 0 })
+    })));
+    let mut staged: Vec<usize> = Vec::new();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = mr.map_streaming(
+            (0..4u64).collect(),
+            |i, x| {
+                if i == 2 {
+                    panic!("shard exploded mid-map");
+                }
+                x * 10
+            },
+            |_, r| r + 1,
+            |ev| {
+                if ev.followups_done == 0 {
+                    true // grant one follow-up sweep
+                } else {
+                    staged.push(ev.index); // stage on final completion
+                    false
+                }
+            },
+        );
+    }));
+    let payload = caught.expect_err("mid-map panic must reach the caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .map(str::to_string)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("shard exploded mid-map"), "payload lost: {msg:?}");
+    // the panicking shard must never have staged anything…
+    assert!(!staged.contains(&2), "panicking shard leaked staged state");
+    // …and the healthy shards all finished their grant and staged once
+    staged.sort_unstable();
+    assert_eq!(staged, vec![0, 1, 3]);
+    // the SAME pool runs a clean streaming round afterwards: the panic
+    // consumed one job, not a worker thread or the completion channel
+    mr.set_delay_hook(None);
+    let mut events = 0usize;
+    let (out, _) = mr.map_streaming(
+        (0..4u64).collect(),
+        |_, x| x * 10 + 1,
+        |_, r| r,
+        |_| {
+            events += 1;
+            false
+        },
+    );
+    assert_eq!(out, vec![1, 11, 21, 31]);
+    assert_eq!(events, 4);
+}
+
+#[test]
+fn coordinator_round_panic_does_not_leak_staged_moves() {
+    use clustercluster::testing::enumeration_fixture;
+    use std::sync::Arc;
+    use std::time::Duration;
+    let data = enumeration_fixture();
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        comm: CommModel::free(),
+        parallelism: 3,
+        overlap: true,
+        max_bonus_sweeps: 2,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(95);
+    let mut coord = Coordinator::new(&data, cfg, &mut rng);
+    // a clean round first, so there is prior staged-move state a leaky
+    // failure path could corrupt
+    coord.step(&mut rng);
+    coord.check_invariants().unwrap();
+    let moves_before = coord.last_shuffle_moves().to_vec();
+    assert!(!moves_before.is_empty(), "fixture round must shuffle clusters");
+
+    // shard 1 crashes mid-map (a panicking delay hook is an injected
+    // shard failure: it unwinds inside the worker's task envelope)
+    coord.set_map_delay_hook(Some(Arc::new(|i| {
+        if i == 1 {
+            panic!("shard 1 crashed mid-map");
+        }
+        Duration::ZERO
+    })));
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        coord.step(&mut rng);
+    }));
+    let payload = caught.expect_err("shard crash must surface, not deadlock");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .map(str::to_string)
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_default();
+    assert!(msg.contains("shard 1 crashed mid-map"), "payload lost: {msg:?}");
+    // the aborted round staged nothing: the previous round's decisions
+    // are untouched (no half-round moves leaked into coordinator state)
+    assert_eq!(coord.last_shuffle_moves(), &moves_before[..]);
+    // the poisoned-coordinator contract: the shards were consumed by the
+    // aborted round — the coordinator reports empty states rather than
+    // pretending a half-swept round is a valid chain state
+    assert!(coord.states().is_empty());
+}
+
+#[test]
+fn slow_shard_does_not_starve_followup_grants() {
+    use clustercluster::mapreduce::MapReduce;
+    use std::sync::Arc;
+    use std::time::Duration;
+    // task 0 is pathologically slow; every other task must receive AND
+    // complete its follow-up grant while 0 is still running — grants are
+    // issued per completion, never gated on the round's stragglers
+    let mut mr = MapReduce::new(4);
+    mr.set_delay_hook(Some(Arc::new(|i| {
+        Duration::from_millis(if i == 0 { 150 } else { 0 })
+    })));
+    let mut events: Vec<(usize, usize)> = Vec::new();
+    let _ = mr.map_streaming(
+        (0..4usize).collect(),
+        |_, x| x,
+        |_, r| r,
+        |ev| {
+            events.push((ev.index, ev.followups_done));
+            ev.followups_done == 0 && ev.index != 0
+        },
+    );
+    let pos = |target: (usize, usize)| {
+        events
+            .iter()
+            .position(|&e| e == target)
+            .unwrap_or_else(|| panic!("event {target:?} missing from {events:?}"))
+    };
+    for i in 1..4 {
+        assert!(
+            pos((i, 1)) < pos((0, 0)),
+            "shard {i}'s grant waited for the slow shard: {events:?}"
+        );
+    }
+}
+
+#[test]
+fn slow_shard_leaves_chain_state_and_grants_unchanged() {
+    use clustercluster::testing::enumeration_fixture;
+    use std::sync::Arc;
+    use std::time::Duration;
+    // a 2ms-per-round injected straggler must change NOTHING about the
+    // chain: same assignments, same α, same bonus grants — the delays
+    // only reorder completions, and chain state is completion-order-free
+    let data = enumeration_fixture();
+    let cfg = |parallelism: usize| CoordinatorConfig {
+        workers: 3,
+        comm: CommModel::free(),
+        parallelism,
+        overlap: true,
+        max_bonus_sweeps: 2,
+        ..Default::default()
+    };
+    let run = |parallelism: usize, delayed: bool| {
+        let mut rng = Pcg64::seed_from(96);
+        let mut coord = Coordinator::new(&data, cfg(parallelism), &mut rng);
+        if delayed {
+            coord.set_map_delay_hook(Some(Arc::new(|i| {
+                Duration::from_millis(if i == 0 { 2 } else { 0 })
+            })));
+        }
+        for _ in 0..120 {
+            coord.step(&mut rng);
+            coord.check_invariants().unwrap();
+        }
+        let granted: u64 = coord.states().iter().map(|s| s.bonus_sweeps()).sum();
+        (coord.assignments(), coord.alpha().to_bits(), granted)
+    };
+    let reference = run(1, false);
+    assert!(
+        reference.2 > 0,
+        "fixture must exercise the bonus-grant path for the test to bite"
+    );
+    let injected = run(3, true);
+    assert_eq!(reference, injected, "slow shard perturbed the chain");
+}

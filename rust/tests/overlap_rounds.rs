@@ -57,6 +57,12 @@ fn overlapped_rounds_keep_state_integrity_and_grant_bonus_sweeps() {
         // the overlapped schedule is the one reported as the round wall
         assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
         assert!(rs.modeled_bulk_s.is_finite() && rs.modeled_bulk_s >= 0.0);
+        // the measured columns are REAL host timings: the concurrent
+        // round's wall, and the reconstructed serialized cost (window +
+        // staging + post-window tail), both strictly positive
+        assert!((rs.measured_overlapped_s - rs.measured_wall_s).abs() < 1e-12);
+        assert!(rs.measured_overlapped_s > 0.0);
+        assert!(rs.measured_serialized_s > 0.0);
         coord.check_invariants().unwrap();
     }
     let granted: u64 = coord.states().iter().map(|s| s.bonus_sweeps()).sum();
@@ -85,9 +91,12 @@ fn bulk_rounds_report_zero_bonus_and_equal_waits() {
     for _ in 0..20 {
         let rs = coord.step(&mut rng);
         // a bulk round claims no overlap: both modeled fields pin to
-        // the serialized figure
+        // the serialized figure, and both measured schedule columns to
+        // the measured wall
         assert_eq!(rs.modeled_wall_s, rs.modeled_bulk_s);
         assert_eq!(rs.modeled_wall_s, rs.modeled_overlapped_s);
+        assert_eq!(rs.measured_overlapped_s, rs.measured_wall_s);
+        assert_eq!(rs.measured_serialized_s, rs.measured_wall_s);
     }
     for s in coord.shard_stats() {
         assert_eq!(s.bonus_sweeps, 0);

@@ -163,7 +163,7 @@ fn coordinator_tv_assignment(
     rounds: u64,
     kernel_assignment: clustercluster::sampler::KernelAssignment,
 ) -> f64 {
-    coordinator_tv_assignment_sched(workers, seed, rounds, kernel_assignment, false)
+    coordinator_tv_assignment_sched(workers, seed, rounds, kernel_assignment, false, 1)
 }
 
 fn coordinator_tv_assignment_sched(
@@ -172,6 +172,7 @@ fn coordinator_tv_assignment_sched(
     rounds: u64,
     kernel_assignment: clustercluster::sampler::KernelAssignment,
     overlap: bool,
+    parallelism: usize,
 ) -> f64 {
     let data = tiny_data();
     let model = Model::bernoulli(D, BETA);
@@ -187,7 +188,7 @@ fn coordinator_tv_assignment_sched(
         shuffle: true,
         kernel_assignment,
         comm: CommModel::free(),
-        parallelism: 1,
+        parallelism,
         overlap,
         // the 6-row fixture shards unevenly most rounds, so the
         // overlapped schedule's work-stealing grants fire constantly —
@@ -284,8 +285,26 @@ fn coordinator_k3_overlap_matches_enumerated_posterior() {
         60_000,
         clustercluster::sampler::KernelAssignment::default(),
         true,
+        1,
     );
     assert!(tv < 0.05, "K=3 overlapped TV distance {tv} too large");
+}
+
+#[test]
+fn coordinator_k3_overlap_concurrent_matches_enumerated_posterior() {
+    // the same barrier-free gate, but on REAL pool threads (parallelism
+    // 3): completions stream back in whatever order the host produces,
+    // staging interleaves with live sweeps, and bonus grants launch
+    // mid-window — the 203-partition posterior must be untouched
+    let tv = coordinator_tv_assignment_sched(
+        3,
+        46,
+        60_000,
+        clustercluster::sampler::KernelAssignment::default(),
+        true,
+        3,
+    );
+    assert!(tv < 0.05, "K=3 concurrent overlapped TV distance {tv} too large");
 }
 
 #[test]
@@ -299,10 +318,30 @@ fn mixed_kernels_k3_overlap_matches_enumerated_posterior() {
         60_000,
         clustercluster::sampler::KernelAssignment::parse("gibbs,split_merge:walker").unwrap(),
         true,
+        1,
     );
     assert!(
         tv < 0.05,
         "mixed-kernel K=3 overlapped TV distance {tv} too large"
+    );
+}
+
+#[test]
+fn mixed_kernels_k3_overlap_concurrent_matches_enumerated_posterior() {
+    // concurrent scheduler × heterogeneous kernels: a mid-window bonus
+    // grant resubmits the shard with its OWN kernel as a fresh pool job
+    // racing the other shards' base sweeps — still exact
+    let tv = coordinator_tv_assignment_sched(
+        3,
+        47,
+        60_000,
+        clustercluster::sampler::KernelAssignment::parse("gibbs,split_merge:walker").unwrap(),
+        true,
+        3,
+    );
+    assert!(
+        tv < 0.05,
+        "mixed-kernel K=3 concurrent overlapped TV distance {tv} too large"
     );
 }
 
@@ -434,6 +473,18 @@ fn coordinator_tv_model(
     scoring: ScoreMode,
     seed: u64,
 ) -> f64 {
+    coordinator_tv_model_sched(spec, data, workers, scoring, seed, false, 1)
+}
+
+fn coordinator_tv_model_sched(
+    spec: ModelSpec,
+    data: DataRef<'_>,
+    workers: usize,
+    scoring: ScoreMode,
+    seed: u64,
+    overlap: bool,
+    parallelism: usize,
+) -> f64 {
     let model = spec.build(data, BETA).unwrap();
     let truth = enumerate_posterior(data, &model, ALPHA);
     assert_eq!(truth.len(), 203);
@@ -447,7 +498,9 @@ fn coordinator_tv_model(
         shuffle: true,
         scoring,
         comm: CommModel::free(),
-        parallelism: 1,
+        parallelism,
+        overlap,
+        max_bonus_sweeps: 2,
         model: spec,
         ..Default::default()
     };
@@ -574,5 +627,47 @@ fn categorical_coordinator_k3_batched_matches_enumerated_posterior() {
     assert!(
         tv < 0.05,
         "categorical K=3 batched TV distance {tv} too large"
+    );
+}
+
+#[test]
+fn gaussian_coordinator_k3_overlap_concurrent_matches_enumerated_posterior() {
+    // the concurrent barrier-free scheduler under the collapsed
+    // diagonal-Gaussian likelihood: β staging is a structural no-op
+    // here (non-Bernoulli), so this gates the J-snapshot α path and the
+    // canonical-order drain on a likelihood with real-valued stats
+    let data = enumeration_fixture_real();
+    let tv = coordinator_tv_model_sched(
+        ModelSpec::DEFAULT_GAUSSIAN,
+        (&data).into(),
+        3,
+        ScoreMode::Scalar,
+        69,
+        true,
+        3,
+    );
+    assert!(
+        tv < 0.05,
+        "gaussian K=3 concurrent overlapped TV distance {tv} too large"
+    );
+}
+
+#[test]
+fn categorical_coordinator_k3_overlap_concurrent_matches_enumerated_posterior() {
+    // same gate under the Dirichlet–multinomial likelihood (one-hot
+    // packed path), closing the likelihood × scheduler matrix
+    let data = enumeration_fixture_cat();
+    let tv = coordinator_tv_model_sched(
+        ModelSpec::DEFAULT_CATEGORICAL,
+        (&data).into(),
+        3,
+        ScoreMode::Scalar,
+        70,
+        true,
+        3,
+    );
+    assert!(
+        tv < 0.05,
+        "categorical K=3 concurrent overlapped TV distance {tv} too large"
     );
 }
