@@ -32,7 +32,12 @@ impl Args {
             if let Some((k, v)) = key.split_once('=') {
                 flags.insert(k.to_string(), v.to_string());
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                flags.insert(key, it.next().unwrap());
+                // guarded by the peek above, but stay panic-free even if
+                // the iterator misbehaves between peek and next
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("--{key} expects a value"))?;
+                flags.insert(key, v);
             } else {
                 presence.push(key);
             }
@@ -59,9 +64,26 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key` for the typed accessors, distinguishing the
+    /// three shapes a flag can take on the command line: given with a
+    /// value (`Ok(Some(v))`), absent (`Ok(None)`), or given **bare**
+    /// (`Err`). The last case is the historical silent-miss bug: a
+    /// trailing `repro run --out` used to park `out` in the presence
+    /// list, and `get_str("out", default)` then quietly fell back to
+    /// the default instead of erroring.
+    fn value_of(&self, key: &str) -> Result<Option<&str>, String> {
+        if let Some(v) = self.flags.get(key) {
+            return Ok(Some(v.as_str()));
+        }
+        if self.presence.iter().any(|f| f == key) {
+            return Err(format!("--{key} expects a value"));
+        }
+        Ok(None)
+    }
+
     /// `--key` as usize, or `default` when absent.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
-        match self.flags.get(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
         }
@@ -69,7 +91,7 @@ impl Args {
 
     /// `--key` as u64, or `default` when absent.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
-        match self.flags.get(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got {v:?}")),
         }
@@ -77,18 +99,26 @@ impl Args {
 
     /// `--key` as f64, or `default` when absent.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
-        match self.flags.get(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got {v:?}")),
         }
     }
 
-    /// `--key` as owned string, or `default` when absent.
-    pub fn get_str(&self, key: &str, default: &str) -> String {
-        self.flags
-            .get(key)
-            .cloned()
-            .unwrap_or_else(|| default.to_string())
+    /// `--key` as owned string, or `default` when absent. A bare
+    /// `--key` (no value) is an error, never a silent default.
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String, String> {
+        Ok(self
+            .value_of(key)?
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| default.to_string()))
+    }
+
+    /// `--key` as owned string with no default — for path-valued flags
+    /// like `--checkpoint-dir` whose absence disables the feature.
+    /// Absent ⇒ `Ok(None)`; bare ⇒ `Err`.
+    pub fn get_opt_str(&self, key: &str) -> Result<Option<String>, String> {
+        Ok(self.value_of(key)?.map(|v| v.to_string()))
     }
 
     /// `--key on|off` as bool, or `default` when absent — the shape of
@@ -96,7 +126,7 @@ impl Args {
     /// spellable explicitly (a bare presence flag can't be turned back
     /// off in a wrapper script).
     pub fn get_on_off(&self, key: &str, default: bool) -> Result<bool, String> {
-        match self.flags.get(key) {
+        match self.value_of(key)? {
             None => Ok(default),
             Some(v) => match v.to_ascii_lowercase().as_str() {
                 "on" => Ok(true),
@@ -129,7 +159,27 @@ mod tests {
     fn defaults_apply() {
         let a = parse(&["serial"]);
         assert_eq!(a.get_f64("alpha", 1.5).unwrap(), 1.5);
-        assert_eq!(a.get_str("out", "trace.csv"), "trace.csv");
+        assert_eq!(a.get_str("out", "trace.csv").unwrap(), "trace.csv");
+        assert_eq!(a.get_opt_str("checkpoint-dir").unwrap(), None);
+    }
+
+    #[test]
+    fn bare_value_flags_error_instead_of_silently_defaulting() {
+        // a trailing `--out` (user forgot the value) must NOT quietly
+        // fall back to the default
+        let a = parse(&["run", "--workers", "4", "--out"]);
+        assert_eq!(a.get_str("out", "trace.csv"), Err("--out expects a value".into()));
+        assert_eq!(a.get_opt_str("out"), Err("--out expects a value".into()));
+        // same for every typed accessor
+        let b = parse(&["run", "--rounds"]);
+        assert!(b.get_u64("rounds", 1).unwrap_err().contains("--rounds expects a value"));
+        assert!(b.get_usize("rounds", 1).unwrap_err().contains("expects a value"));
+        let c = parse(&["run", "--alpha"]);
+        assert!(c.get_f64("alpha", 1.0).unwrap_err().contains("--alpha expects a value"));
+        let d = parse(&["run", "--overlap"]);
+        assert!(d.get_on_off("overlap", false).unwrap_err().contains("expects a value"));
+        // genuine presence flags are unaffected
+        assert!(parse(&["run", "--no-shuffle"]).has("no-shuffle"));
     }
 
     #[test]

@@ -29,7 +29,7 @@ use crate::data::DataRef;
 use crate::rng::Pcg64;
 use crate::sampler::{KernelKind, Shard};
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"CCCKPT3\n";
 const MAGIC_V2: &[u8; 8] = b"CCCKPT2\n";
@@ -61,6 +61,14 @@ fn kernel_to_tag(k: KernelKind) -> u64 {
         KernelKind::SplitMergeGibbs => 2,
         KernelKind::SplitMergeWalker => 3,
     }
+}
+
+/// `path` with `suffix` appended to its file name
+/// (`runs/state.ccckpt` + `".prev"` → `runs/state.ccckpt.prev`).
+pub(crate) fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(suffix);
+    PathBuf::from(os)
 }
 
 fn kernel_from_tag(tag: u64) -> Result<KernelKind, String> {
@@ -129,38 +137,72 @@ impl Checkpoint {
     }
 
     /// Persist to `path` in the checksummed `CCCKPT3` binary format.
+    ///
+    /// The write is crash-safe: bytes land in `<path>.tmp` first, the
+    /// temp file is fsynced, any existing `path` is renamed to
+    /// `<path>.prev`, and the temp file is renamed over `path`. A crash
+    /// at any point leaves an intact prior generation at `path` or
+    /// `<path>.prev` — a torn file can never be the only copy.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        let mut f = std::fs::File::create(path)?;
+        let tmp = sibling(path, ".tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            self.write_to(&mut f)?;
+            f.sync_all()?;
+        }
+        if path.exists() {
+            std::fs::rename(path, sibling(path, ".prev"))?;
+        }
+        std::fs::rename(&tmp, path)?;
+        // best-effort directory fsync so the renames themselves are
+        // durable (not supported everywhere; failure is not an error)
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d,
+            _ => Path::new("."),
+        };
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    /// The sibling path [`Checkpoint::save`] keeps the prior generation
+    /// at (and [`Checkpoint::load_with_fallback`] retries from).
+    pub fn prev_path(path: &Path) -> PathBuf {
+        sibling(path, ".prev")
+    }
+
+    fn write_to(&self, f: &mut std::fs::File) -> std::io::Result<()> {
         let mut sum: u64 = 0;
         let mut w64 = |f: &mut std::fs::File, x: u64, sum: &mut u64| -> std::io::Result<()> {
             *sum = sum.wrapping_add(x);
             f.write_all(&x.to_le_bytes())
         };
         f.write_all(MAGIC)?;
-        w64(&mut f, self.alpha.to_bits(), &mut sum)?;
-        w64(&mut f, self.model_tag, &mut sum)?;
-        w64(&mut f, self.hyper.len() as u64, &mut sum)?;
+        w64(f, self.alpha.to_bits(), &mut sum)?;
+        w64(f, self.model_tag, &mut sum)?;
+        w64(f, self.hyper.len() as u64, &mut sum)?;
         for &b in &self.hyper {
-            w64(&mut f, b.to_bits(), &mut sum)?;
+            w64(f, b.to_bits(), &mut sum)?;
         }
-        w64(&mut f, self.rounds, &mut sum)?;
-        w64(&mut f, self.modeled_time_s.to_bits(), &mut sum)?;
-        w64(&mut f, self.measured_time_s.to_bits(), &mut sum)?;
+        w64(f, self.rounds, &mut sum)?;
+        w64(f, self.modeled_time_s.to_bits(), &mut sum)?;
+        w64(f, self.measured_time_s.to_bits(), &mut sum)?;
         let (mode_tag, mode_target) = mu_mode_to_tag(self.mu_mode);
-        w64(&mut f, mode_tag, &mut sum)?;
-        w64(&mut f, mode_target.to_bits(), &mut sum)?;
-        w64(&mut f, self.shards.len() as u64, &mut sum)?;
+        w64(f, mode_tag, &mut sum)?;
+        w64(f, mode_target.to_bits(), &mut sum)?;
+        w64(f, self.shards.len() as u64, &mut sum)?;
         debug_assert_eq!(self.mu.len(), self.shards.len());
         debug_assert_eq!(self.kernels.len(), self.shards.len());
         for (kk, (rows, assign)) in self.shards.iter().enumerate() {
-            w64(&mut f, self.mu[kk].to_bits(), &mut sum)?;
-            w64(&mut f, kernel_to_tag(self.kernels[kk]), &mut sum)?;
-            w64(&mut f, rows.len() as u64, &mut sum)?;
+            w64(f, self.mu[kk].to_bits(), &mut sum)?;
+            w64(f, kernel_to_tag(self.kernels[kk]), &mut sum)?;
+            w64(f, rows.len() as u64, &mut sum)?;
             for &r in rows {
-                w64(&mut f, r, &mut sum)?;
+                w64(f, r, &mut sum)?;
             }
             for &a in assign {
-                w64(&mut f, a as u64, &mut sum)?;
+                w64(f, a as u64, &mut sum)?;
             }
         }
         f.write_all(&sum.to_le_bytes())?;
@@ -175,6 +217,19 @@ impl Checkpoint {
     pub fn load(path: &Path) -> std::io::Result<Checkpoint> {
         let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m);
         let mut f = std::fs::File::open(path)?;
+        // A corrupt length word must never drive a huge allocation (an
+        // OOM abort is not a catchable parse error): no count in a valid
+        // file can exceed the number of u64 words the file itself holds.
+        let max_words = f.metadata()?.len() / 8;
+        let bounded = |n: u64, what: &str| -> std::io::Result<usize> {
+            if n > max_words {
+                Err(err(&format!(
+                    "checkpoint {what} count {n} exceeds the file's own size"
+                )))
+            } else {
+                Ok(n as usize)
+            }
+        };
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
         if &magic == MAGIC_V1 {
@@ -200,7 +255,7 @@ impl Checkpoint {
         // file has no tag (implicitly Beta–Bernoulli) and its next field
         // is the β length
         let model_tag = if v2 { 0 } else { r64(&mut f, &mut sum)? };
-        let nhyper = r64(&mut f, &mut sum)? as usize;
+        let nhyper = bounded(r64(&mut f, &mut sum)?, "hyperparameter")?;
         let mut hyper = Vec::with_capacity(nhyper);
         for _ in 0..nhyper {
             hyper.push(f64::from_bits(r64(&mut f, &mut sum)?));
@@ -212,14 +267,14 @@ impl Checkpoint {
         let mode_target = f64::from_bits(r64(&mut f, &mut sum)?);
         let mu_mode = mu_mode_from_tag(mode_tag, mode_target)
             .map_err(|e| err(&e))?;
-        let nshards = r64(&mut f, &mut sum)? as usize;
+        let nshards = bounded(r64(&mut f, &mut sum)?, "shard")?;
         let mut mu = Vec::with_capacity(nshards);
         let mut kernels = Vec::with_capacity(nshards);
         let mut shards = Vec::with_capacity(nshards);
         for _ in 0..nshards {
             mu.push(f64::from_bits(r64(&mut f, &mut sum)?));
             kernels.push(kernel_from_tag(r64(&mut f, &mut sum)?).map_err(|e| err(&e))?);
-            let n = r64(&mut f, &mut sum)? as usize;
+            let n = bounded(r64(&mut f, &mut sum)?, "row")?;
             let mut rows = Vec::with_capacity(n);
             for _ in 0..n {
                 rows.push(r64(&mut f, &mut sum)?);
@@ -247,6 +302,119 @@ impl Checkpoint {
             kernels,
             shards,
         })
+    }
+
+    /// Load `path`, falling back to the `<path>.prev` generation the
+    /// atomic writer keeps when the newest file is torn, corrupt, or
+    /// missing. The boolean is `true` when the fallback was taken (a
+    /// warning is logged); the error is the *primary* file's when both
+    /// generations are unreadable.
+    pub fn load_with_fallback(path: &Path) -> std::io::Result<(Checkpoint, bool)> {
+        match Checkpoint::load(path) {
+            Ok(c) => Ok((c, false)),
+            Err(e) => {
+                let prev = sibling(path, ".prev");
+                match Checkpoint::load(&prev) {
+                    Ok(c) => {
+                        eprintln!(
+                            "warning: checkpoint {} unreadable ({e}); \
+                             resuming from previous generation {}",
+                            path.display(),
+                            prev.display()
+                        );
+                        Ok((c, true))
+                    }
+                    Err(_) => Err(e),
+                }
+            }
+        }
+    }
+}
+
+/// A bounded ring of checkpoint generations in one directory (the
+/// `--checkpoint-dir` mode): every save writes `gen-<rounds>.ccckpt`
+/// atomically and prunes the oldest generations beyond `keep`;
+/// [`CheckpointDir::load_latest_valid`] scans newest → oldest, skipping
+/// torn or corrupt files with a logged warning, so a crash during a
+/// save costs at most the generation being written.
+#[derive(Debug, Clone)]
+pub struct CheckpointDir {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointDir {
+    /// Open (creating if needed) a generation directory keeping at most
+    /// `keep` generations (clamped to ≥ 1).
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> std::io::Result<CheckpointDir> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(CheckpointDir {
+            dir,
+            keep: keep.max(1),
+        })
+    }
+
+    /// The file a given generation number lives at.
+    pub fn generation_path(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("gen-{generation:012}.ccckpt"))
+    }
+
+    /// All `(generation, path)` pairs present, oldest first. The atomic
+    /// writer's `.tmp` / `.prev` artifacts are not generations.
+    pub fn generations(&self) -> std::io::Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            let Some(num) = name
+                .strip_prefix("gen-")
+                .and_then(|r| r.strip_suffix(".ccckpt"))
+            else {
+                continue;
+            };
+            if let Ok(g) = num.parse::<u64>() {
+                out.push((g, path));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Atomically save `ckpt` as `generation`, then prune beyond `keep`.
+    pub fn save(&self, ckpt: &Checkpoint, generation: u64) -> std::io::Result<PathBuf> {
+        let path = self.generation_path(generation);
+        ckpt.save(&path)?;
+        let gens = self.generations()?;
+        if gens.len() > self.keep {
+            for (_, old) in &gens[..gens.len() - self.keep] {
+                let _ = std::fs::remove_file(old);
+                let _ = std::fs::remove_file(sibling(old, ".prev"));
+            }
+        }
+        Ok(path)
+    }
+
+    /// The newest generation that parses and checksums clean, or `None`
+    /// when the directory holds no loadable checkpoint. Corrupt newer
+    /// generations are skipped with a logged warning — the torn result
+    /// of a crash mid-save must not block resume from the generation
+    /// before it.
+    pub fn load_latest_valid(&self) -> std::io::Result<Option<(u64, Checkpoint)>> {
+        let mut gens = self.generations()?;
+        gens.reverse();
+        for (g, path) in gens {
+            match Checkpoint::load(&path) {
+                Ok(c) => return Ok(Some((g, c))),
+                Err(e) => eprintln!(
+                    "warning: skipping corrupt checkpoint generation {} ({e})",
+                    path.display()
+                ),
+            }
+        }
+        Ok(None)
     }
 }
 
@@ -453,6 +621,97 @@ mod tests {
         bytes[mid] ^= 0x5a;
         std::fs::write(&path, &bytes).unwrap();
         assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn atomic_save_keeps_previous_generation() {
+        let ds = SyntheticConfig {
+            n: 120,
+            d: 8,
+            clusters: 2,
+            beta: 0.25,
+            seed: 21,
+        }
+        .generate_with_test_fraction(0.0);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(22);
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let path = ckpt_dir().join("atomic.ccckpt");
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(Checkpoint::prev_path(&path));
+
+        coord.step(&mut rng);
+        let first = Checkpoint::capture(&coord);
+        first.save(&path).unwrap();
+        coord.step(&mut rng);
+        let second = Checkpoint::capture(&coord);
+        second.save(&path).unwrap();
+
+        // no temp artifact survives a completed save, and the prior
+        // generation is intact at <path>.prev
+        assert!(!sibling(&path, ".tmp").exists());
+        assert_eq!(Checkpoint::load(&path).unwrap(), second);
+        assert_eq!(Checkpoint::load(&Checkpoint::prev_path(&path)).unwrap(), first);
+
+        // a torn newest file falls back to the previous generation
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 3]).unwrap();
+        let (recovered, fell_back) = Checkpoint::load_with_fallback(&path).unwrap();
+        assert!(fell_back);
+        assert_eq!(recovered, first);
+    }
+
+    #[test]
+    fn checkpoint_dir_ring_prunes_and_falls_back() {
+        let ds = SyntheticConfig {
+            n: 100,
+            d: 8,
+            clusters: 2,
+            beta: 0.3,
+            seed: 23,
+        }
+        .generate_with_test_fraction(0.0);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            comm: CommModel::free(),
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(24);
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        let dir = ckpt_dir().join("ring");
+        let _ = std::fs::remove_dir_all(&dir);
+        let ring = CheckpointDir::new(&dir, 2).unwrap();
+
+        let mut captures = Vec::new();
+        for g in 1..=4u64 {
+            coord.step(&mut rng);
+            let c = Checkpoint::capture(&coord);
+            ring.save(&c, g).unwrap();
+            captures.push(c);
+        }
+        // keep=2: only the two newest generations remain
+        let gens = ring.generations().unwrap();
+        assert_eq!(gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(), vec![3, 4]);
+
+        // a torn newest generation is skipped with a warning and the
+        // one before it is resumed from
+        let newest = ring.generation_path(4);
+        let bytes = std::fs::read(&newest).unwrap();
+        std::fs::write(&newest, &bytes[..bytes.len() / 2]).unwrap();
+        let (g, c) = ring.load_latest_valid().unwrap().unwrap();
+        assert_eq!(g, 3);
+        assert_eq!(c, captures[2]);
+
+        // every generation torn → no valid checkpoint, not an error
+        let older = ring.generation_path(3);
+        std::fs::write(&older, b"CCCKPT3\ngarbage").unwrap();
+        let _ = std::fs::remove_file(sibling(&older, ".prev"));
+        let _ = std::fs::remove_file(sibling(&newest, ".prev"));
+        assert!(ring.load_latest_valid().unwrap().is_none());
     }
 
     #[test]

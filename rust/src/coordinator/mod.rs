@@ -62,8 +62,8 @@ pub mod checkpoint;
 
 use crate::data::DataRef;
 use crate::mapreduce::{
-    finish_round, finish_round_overlapped, CommModel, DelayHook, MapReduce, OverlappedTiming,
-    RoundStats,
+    finish_round, finish_round_overlapped, CommModel, DelayHook, FaultHook, MapReduce,
+    OverlappedTiming, RoundStats, SupervisedDirective, SupervisedOutcome,
 };
 use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
@@ -71,14 +71,14 @@ use crate::model::{Model, ModelSpec};
 use crate::rng::Pcg64;
 use crate::special::logsumexp;
 use crate::runtime::Scorer;
-use crate::sampler::{KernelKind, ScoreMode, Shard};
+use crate::sampler::{KernelKind, ScoreMode, Shard, ShardSnapshot};
 use crate::supercluster::{
     adaptive_mu_step, sample_mu_given_occupancy, sample_shuffle, ShuffleKernel,
 };
 use crate::util::timer::PhaseTimer;
 use std::time::{Duration, Instant};
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointDir};
 pub use crate::sampler::KernelAssignment;
 // Back-compat names: the per-worker state is a plain sampler Shard, and
 // the kernel selector is the sampler-level KernelKind.
@@ -222,8 +222,148 @@ pub struct ShardRoundStat {
     /// work-stealing bonus sweeps granted to this shard this round
     /// (always 0 with `--overlap off`)
     pub bonus_sweeps: u64,
+    /// supervised retries this shard consumed this round (always 0
+    /// with `--supervise off`)
+    pub retries: u32,
+    /// watchdog timeouts that fired on this shard's attempts this round
+    pub watchdog_fires: u32,
+    /// whether this shard ran this round degraded (quarantined: sweep
+    /// skipped, assignments frozen, stats still reduced)
+    pub quarantined: bool,
     /// the transition kernel this shard runs
     pub kernel: KernelKind,
+}
+
+/// Fault-tolerance policy for supervised coordinator rounds
+/// (`--supervise on`; DESIGN.md §12). Disabled by default: rounds then
+/// run the legacy paths bit-exactly, where a shard panic aborts the
+/// round after the drain.
+///
+/// With `enabled`, a shard attempt that panics, hits an injected I/O
+/// error, or trips the map-window watchdog is **rebuilt from its
+/// pre-round [`ShardSnapshot`] and retried** with bounded exponential
+/// backoff (`backoff_base · 2^(r−1)`, capped at `backoff_cap`). A
+/// retried attempt replays the identical sweep from the identical
+/// state and private RNG stream, so a transient fault leaves the chain
+/// **bit-identical** to a fault-free run. After `max_retries` the shard
+/// is **quarantined**: for `cooldown_rounds` subsequent rounds it runs
+/// degraded — rows keep their assignments, the sweep is skipped (zero
+/// sweeps = composing fewer posterior-invariant kernels, so the chain
+/// stays exact), its statistics still fold into the α/β reduces, and
+/// its clusters still participate in the shuffle (frozen rows can
+/// migrate to healthy shards, preserving ergodicity) — then it is
+/// automatically reintegrated.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuperviseConfig {
+    /// master switch; `false` ⇒ bit-exact legacy behavior
+    pub enabled: bool,
+    /// failed attempts retried per shard per round before quarantine
+    pub max_retries: u32,
+    /// backoff before retry r: `backoff_base · 2^(r−1)`, capped below
+    pub backoff_base: Duration,
+    /// ceiling on the exponential backoff
+    pub backoff_cap: Duration,
+    /// watchdog deadline on the map window (`--round-timeout`): when no
+    /// completion lands within it, every unfinished shard's attempt is
+    /// treated as stalled and takes the same recovery path as a panic.
+    /// `None` disables the watchdog. Inline execution
+    /// (`parallelism == 1`) cannot be preempted, so the watchdog only
+    /// fires on pooled rounds.
+    pub round_timeout: Option<Duration>,
+    /// degraded rounds a quarantined shard sits out before reintegration
+    pub cooldown_rounds: u64,
+}
+
+impl Default for SuperviseConfig {
+    fn default() -> Self {
+        SuperviseConfig {
+            enabled: false,
+            max_retries: 2,
+            backoff_base: Duration::from_millis(25),
+            backoff_cap: Duration::from_secs(1),
+            round_timeout: None,
+            cooldown_rounds: 3,
+        }
+    }
+}
+
+/// Recovery verdict of [`RoundSupervisor::on_failure`].
+enum RecoveryAction {
+    /// rebuild from the pre-round snapshot, replay the full base
+    /// sweeps after this backoff
+    Retry(Duration),
+    /// retries exhausted: quarantine the shard and run one zero-sweep
+    /// attempt so its (unswept) state still stages into the round
+    Degrade,
+    /// even the zero-sweep attempt failed: give up on the map task —
+    /// the post-window fixup restores the snapshot on the coordinator
+    Abandon,
+}
+
+/// Per-round supervision bookkeeping shared by the bulk and overlapped
+/// supervised map windows: retry budgets, watchdog counts, and the
+/// three quarantine stages (entered-quarantined, newly degraded,
+/// abandoned).
+struct RoundSupervisor {
+    cfg: SuperviseConfig,
+    /// shard was already quarantined when the round started (runs a
+    /// zero-sweep attempt; failures are not retried)
+    quarantined_entry: Vec<bool>,
+    retries: Vec<u32>,
+    watchdog_fires: Vec<u32>,
+    /// exhausted its retries THIS round (zero-sweep attempt issued)
+    degraded: Vec<bool>,
+    abandoned: Vec<bool>,
+}
+
+impl RoundSupervisor {
+    fn new(cfg: SuperviseConfig, quarantined_entry: Vec<bool>) -> Self {
+        let k = quarantined_entry.len();
+        RoundSupervisor {
+            cfg,
+            quarantined_entry,
+            retries: vec![0; k],
+            watchdog_fires: vec![0; k],
+            degraded: vec![false; k],
+            abandoned: vec![false; k],
+        }
+    }
+
+    /// Decide what to do about a failed/stalled attempt of shard `kk`.
+    fn on_failure(&mut self, kk: usize, timed_out: bool) -> RecoveryAction {
+        if timed_out {
+            self.watchdog_fires[kk] += 1;
+        }
+        if self.quarantined_entry[kk] || self.degraded[kk] {
+            // the zero-sweep attempt failed too: nothing left to retry
+            self.abandoned[kk] = true;
+            return RecoveryAction::Abandon;
+        }
+        if self.retries[kk] < self.cfg.max_retries {
+            self.retries[kk] += 1;
+            let shift = (self.retries[kk] - 1).min(20);
+            let backoff = self
+                .cfg
+                .backoff_base
+                .saturating_mul(1u32 << shift)
+                .min(self.cfg.backoff_cap);
+            RecoveryAction::Retry(backoff)
+        } else {
+            self.degraded[kk] = true;
+            RecoveryAction::Degrade
+        }
+    }
+
+    /// Whether shard `kk` may still receive work-stealing bonus grants
+    /// this round (quarantined/degraded shards never sweep).
+    fn bonus_allowed(&self, kk: usize) -> bool {
+        !self.quarantined_entry[kk] && !self.degraded[kk]
+    }
+
+    /// Whether shard `kk` ran this round degraded in any form.
+    fn quarantined_this_round(&self, kk: usize) -> bool {
+        self.quarantined_entry[kk] || self.degraded[kk] || self.abandoned[kk]
+    }
 }
 
 /// Coordinator configuration.
@@ -299,6 +439,10 @@ pub struct CoordinatorConfig {
     /// component likelihood (`--model`); must match the data kind
     /// handed to [`Coordinator::new`] (see [`ModelSpec::build`])
     pub model: ModelSpec,
+    /// fault-tolerance policy for supervised rounds (`--supervise`,
+    /// `--round-timeout`, `--max-retries`, …; DESIGN.md §12). Off by
+    /// default ⇒ the legacy abort-on-panic paths run bit-exactly
+    pub supervise: SuperviseConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -322,6 +466,7 @@ impl Default for CoordinatorConfig {
             overlap: false,
             max_bonus_sweeps: 2,
             model: ModelSpec::Bernoulli,
+            supervise: SuperviseConfig::default(),
         }
     }
 }
@@ -415,6 +560,18 @@ pub struct Coordinator<'a> {
     /// pays only to the extent it exceeds the map critical path
     /// (`--overlap on` modeling; always 0 in bulk mode)
     prev_carry_s: f64,
+    /// per-shard quarantine horizon: `Some(r)` means the shard runs
+    /// degraded (zero sweeps) in every round whose index is `< r`, then
+    /// reintegrates automatically (supervised rounds only)
+    quarantined_until: Vec<Option<u64>>,
+    /// most recent round's per-shard supervision counters (empty unless
+    /// the round ran supervised)
+    sup_retries: Vec<u32>,
+    sup_watchdog: Vec<u32>,
+    sup_quarantined: Vec<bool>,
+    /// lifetime quarantine entries (first one is logged, the rest are
+    /// counted silently — the `note_stick_overflow` pattern)
+    quarantine_events: u64,
     // persistent reduce/eval scratch (reused every round — the reduce
     // step and trace-time evaluation allocate nothing at steady state)
     beta_scratch: Vec<f64>,
@@ -525,6 +682,11 @@ impl<'a> Coordinator<'a> {
             mu_proposals: 0,
             mu_accepts: 0,
             prev_carry_s: 0.0,
+            quarantined_until: vec![None; k],
+            sup_retries: Vec::new(),
+            sup_watchdog: Vec::new(),
+            sup_quarantined: Vec::new(),
+            quarantine_events: 0,
             beta_scratch: Vec::new(),
             pl_w1: Vec::new(),
             pl_w0: Vec::new(),
@@ -552,12 +714,79 @@ impl<'a> Coordinator<'a> {
         }
     }
 
+    /// Round-entry supervision bookkeeping, run at the top of BOTH step
+    /// paths (cheap no-op work with `--supervise off`): stamp this
+    /// round's index into the fault-injection layer, reset the
+    /// per-round counters, reintegrate shards whose quarantine
+    /// cool-down expired, and return the per-shard entered-quarantined
+    /// flags for this round.
+    fn begin_round_supervision(&mut self) -> Vec<bool> {
+        self.mr.set_fault_round(self.rounds);
+        self.sup_retries.clear();
+        self.sup_watchdog.clear();
+        self.sup_quarantined.clear();
+        let round = self.rounds;
+        self.quarantined_until
+            .iter_mut()
+            .map(|q| match *q {
+                Some(until) if round < until => true,
+                Some(_) => {
+                    // cool-down expired: automatic reintegration
+                    *q = None;
+                    false
+                }
+                None => false,
+            })
+            .collect()
+    }
+
+    /// Stamp the most recent supervised window's aggregate counters
+    /// into a round's [`RoundStats`] (all three stay 0 with
+    /// `--supervise off`, where the per-round vectors are empty).
+    fn stamp_supervision_counters(&self, rs: &mut RoundStats) {
+        rs.retries = self.sup_retries.iter().map(|&r| r as u64).sum();
+        rs.watchdog_fires = self.sup_watchdog.iter().map(|&w| w as u64).sum();
+        rs.quarantined_shards = self.sup_quarantined.iter().filter(|&&q| q).count() as u64;
+    }
+
+    /// Fold a supervised map window's verdicts back into the
+    /// coordinator: publish the per-round counters (read by
+    /// [`Self::shard_stats`] / the round's [`RoundStats`]), and arm or
+    /// extend the quarantine horizon of every shard that exhausted its
+    /// retries (or failed even its degraded zero-sweep attempt) this
+    /// round. Only the first quarantine event ever is logged; the rest
+    /// are counted silently ([`Self::quarantine_events`] — the
+    /// stick-overflow pattern, because the fault-matrix tests drive
+    /// tens of thousands of degraded rounds).
+    fn finish_round_supervision(&mut self, sup: &RoundSupervisor) {
+        let k = sup.retries.len();
+        self.sup_retries = sup.retries.clone();
+        self.sup_watchdog = sup.watchdog_fires.clone();
+        self.sup_quarantined = (0..k).map(|kk| sup.quarantined_this_round(kk)).collect();
+        for kk in 0..k {
+            if sup.degraded[kk] || sup.abandoned[kk] {
+                let until = self.rounds + 1 + self.cfg.supervise.cooldown_rounds;
+                let q = &mut self.quarantined_until[kk];
+                *q = Some(q.map_or(until, |u| u.max(until)));
+                if self.quarantine_events == 0 {
+                    eprintln!(
+                        "supervise: shard {kk} quarantined at round {} \
+                         (cool-down {} rounds; further events counted silently)",
+                        self.rounds, self.cfg.supervise.cooldown_rounds
+                    );
+                }
+                self.quarantine_events += 1;
+            }
+        }
+    }
+
     /// The bulk-synchronous round: every stage waits for the previous
     /// one. Kept sample-for-sample equivalent to the pre-overlap
     /// coordinator (same RNG consumption, same cluster-insertion order),
     /// so K=1 serial bit-equivalence and the seeded suites pin it.
     fn step_bulk(&mut self, rng: &mut Pcg64) -> RoundStats {
         let round_t0 = Instant::now();
+        let quarantined_entry = self.begin_round_supervision();
         let data = self.data;
         let model = &self.model;
         let alpha = self.alpha;
@@ -568,14 +797,78 @@ impl<'a> Coordinator<'a> {
         // ---- map: local kernel sweeps, one task per supercluster ----
         let states = std::mem::take(&mut self.states);
         let map_t0 = Instant::now();
-        let (mut states, map_durs) = self.mr.map(states, |kk, mut st: Shard| {
-            st.set_theta(alpha * mu[kk]);
-            let kernel = kernels[kk].kernel();
-            for _ in 0..sweeps {
-                kernel.sweep(&mut st, data, model);
-            }
-            st
-        });
+        let (mut states, map_durs) = if self.cfg.supervise.enabled {
+            // supervised window: every shard is snapshotted before the
+            // round so a failed attempt can be rebuilt and replayed
+            // bit-exactly (the snapshot restores the identical private
+            // RNG stream — see ShardSnapshot). A quarantined shard runs
+            // a zero-sweep attempt: its rows keep their assignments,
+            // but its J_k / β statistics and clusters still flow into
+            // the reduce and shuffle below exactly like a healthy
+            // shard's, so the round stays a composition of
+            // posterior-invariant kernels.
+            let scoring = self.cfg.scoring;
+            let snaps: Vec<ShardSnapshot> = states.iter().map(|s| s.snapshot()).collect();
+            let mut sup =
+                RoundSupervisor::new(self.cfg.supervise, quarantined_entry.clone());
+            let restore = |kk: usize, sw: usize| {
+                let mut st = snaps[kk].restore();
+                st.set_score_mode(scoring);
+                (st, sw)
+            };
+            let tasks: Vec<(Shard, usize)> = states
+                .into_iter()
+                .enumerate()
+                .map(|(kk, st)| {
+                    let sw = if quarantined_entry[kk] { 0 } else { sweeps };
+                    (st, sw)
+                })
+                .collect();
+            let (slots, durs) = self.mr.map_supervised(
+                tasks,
+                |kk, (mut st, sw): (Shard, usize)| {
+                    st.set_theta(alpha * mu[kk]);
+                    st.run_sweeps(kernels[kk].kernel(), data, model, sw);
+                    st
+                },
+                |_, st| st, // bulk rounds grant no follow-ups
+                self.cfg.supervise.round_timeout,
+                |ev| match ev.outcome {
+                    SupervisedOutcome::Done(_) => SupervisedDirective::Retire,
+                    _ => {
+                        let timed_out = matches!(ev.outcome, SupervisedOutcome::TimedOut);
+                        match sup.on_failure(ev.index, timed_out) {
+                            RecoveryAction::Retry(b) => {
+                                SupervisedDirective::Respawn(restore(ev.index, sweeps), b)
+                            }
+                            RecoveryAction::Degrade => {
+                                SupervisedDirective::Respawn(restore(ev.index, 0), Duration::ZERO)
+                            }
+                            RecoveryAction::Abandon => SupervisedDirective::Abandon,
+                        }
+                    }
+                },
+            );
+            // abandoned slots: the shard's attempt (even the degraded
+            // zero-sweep one) never completed — restore the pre-round
+            // snapshot so the round proceeds with its unswept state
+            let states: Vec<Shard> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(kk, slot)| slot.unwrap_or_else(|| restore(kk, 0).0))
+                .collect();
+            self.finish_round_supervision(&sup);
+            (states, durs)
+        } else {
+            self.mr.map(states, |kk, mut st: Shard| {
+                st.set_theta(alpha * mu[kk]);
+                let kernel = kernels[kk].kernel();
+                for _ in 0..sweeps {
+                    kernel.sweep(&mut st, data, model);
+                }
+                st
+            })
+        };
         self.timer.add("map", map_t0.elapsed());
         // row counts as swept (BEFORE the shuffle moves clusters): the
         // per-shard throughput metric must divide by what the map step
@@ -603,13 +896,14 @@ impl<'a> Coordinator<'a> {
         self.rounds += 1;
         self.record_shard_stats(&map_durs, &rows_swept);
 
-        let rs = finish_round(
+        let mut rs = finish_round(
             &self.cfg.comm,
             map_durs,
             reduce_dur + shuffle_t0.elapsed(),
             bytes,
             round_t0.elapsed(),
         );
+        self.stamp_supervision_counters(&mut rs);
         self.modeled_time_s += rs.modeled_wall_s;
         self.measured_time_s += rs.measured_wall_s;
         rs
@@ -664,6 +958,7 @@ impl<'a> Coordinator<'a> {
     /// cost (`measured_serialized_s`) — the real host overlap speedup.
     fn step_overlapped(&mut self, rng: &mut Pcg64) -> RoundStats {
         let round_t0 = Instant::now();
+        let quarantined_entry = self.begin_round_supervision();
         let data = self.data;
         let model = &self.model;
         let alpha = self.alpha;
@@ -696,57 +991,173 @@ impl<'a> Coordinator<'a> {
         // ---- map window: streamed completions + in-window staging ----
         let states = std::mem::take(&mut self.states);
         let map_t0 = Instant::now();
-        let (mut states, map_durs) = self.mr.map_streaming(
-            states,
-            |kk, mut st: Shard| {
-                st.set_theta(alpha * mu[kk]);
-                st.run_sweeps(kernels[kk].kernel(), data, model, sweeps);
-                st
-            },
-            |kk, mut st: Shard| {
-                // one bonus grant = one extra sweep, resubmitted as its
-                // own pool job so the grant can be issued mid-round and
-                // run while stragglers are still on their base sweeps
-                st.run_sweeps(kernels[kk].kernel(), data, model, 1);
-                st.note_bonus_sweeps(1);
-                st
-            },
-            |ev| {
-                let kk = ev.index;
-                if ev.followups_done == 0 {
-                    base_done_at[kk] = map_t0.elapsed().as_secs_f64();
-                }
-                if ev.followups_done < bonus[kk] {
-                    return true; // grant another bonus sweep
-                }
-                // final completion for this shard: stage its round
-                // contribution NOW, on the coordinator thread, while
-                // other shards are still sweeping
-                final_done_at[kk] = map_t0.elapsed().as_secs_f64();
-                let stage_t0 = Instant::now();
-                j_snap[kk] = ev.result.num_clusters() as u64;
-                if collect_beta {
-                    // β statistics must be snapshotted BEFORE the drain
-                    // empties the cluster set
-                    let mut dims: Vec<Vec<(u64, u32)>> = Vec::with_capacity(beta_dims);
-                    for d in 0..beta_dims {
-                        let mut out = Vec::new();
-                        ev.result.collect_dim_stats(d, &mut out);
-                        dims.push(out);
+        let (mut states, map_durs) = if self.cfg.supervise.enabled {
+            // supervised window: same staged-completion protocol, but a
+            // failed/stalled attempt is rebuilt from its pre-round
+            // snapshot and retried (replaying the identical private RNG
+            // stream, so transient faults leave the chain bit-exact).
+            // Quarantined shards run a zero-sweep attempt; their final
+            // completion stages normally, so the shuffle and reduce
+            // below see every shard regardless of health.
+            let scoring = self.cfg.scoring;
+            let snaps: Vec<ShardSnapshot> = states.iter().map(|s| s.snapshot()).collect();
+            let mut sup =
+                RoundSupervisor::new(self.cfg.supervise, quarantined_entry.clone());
+            let restore = |kk: usize, sw: usize| {
+                let mut st = snaps[kk].restore();
+                st.set_score_mode(scoring);
+                (st, sw)
+            };
+            let tasks: Vec<(Shard, usize)> = states
+                .into_iter()
+                .enumerate()
+                .map(|(kk, st)| {
+                    let sw = if quarantined_entry[kk] { 0 } else { sweeps };
+                    (st, sw)
+                })
+                .collect();
+            let (slots, durs) = self.mr.map_supervised(
+                tasks,
+                |kk, (mut st, sw): (Shard, usize)| {
+                    st.set_theta(alpha * mu[kk]);
+                    st.run_sweeps(kernels[kk].kernel(), data, model, sw);
+                    st
+                },
+                |kk, mut st: Shard| {
+                    st.run_sweeps(kernels[kk].kernel(), data, model, 1);
+                    st.note_bonus_sweeps(1);
+                    st
+                },
+                self.cfg.supervise.round_timeout,
+                |ev| {
+                    let kk = ev.index;
+                    let timed_out = matches!(ev.outcome, SupervisedOutcome::TimedOut);
+                    match ev.outcome {
+                        SupervisedOutcome::Done(st) => {
+                            if ev.followups_done == 0 {
+                                base_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                            }
+                            if sup.bonus_allowed(kk) && ev.followups_done < bonus[kk] {
+                                return SupervisedDirective::Follow;
+                            }
+                            // final completion: stage exactly as the
+                            // unsupervised window does
+                            final_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                            let stage_t0 = Instant::now();
+                            j_snap[kk] = st.num_clusters() as u64;
+                            if collect_beta {
+                                let mut dims: Vec<Vec<(u64, u32)>> =
+                                    Vec::with_capacity(beta_dims);
+                                for d in 0..beta_dims {
+                                    let mut out = Vec::new();
+                                    st.collect_dim_stats(d, &mut out);
+                                    dims.push(out);
+                                }
+                                beta_snap[kk] = dims;
+                            }
+                            if do_shuffle {
+                                pending[kk] = st.drain_clusters();
+                            }
+                            stage_busy += stage_t0.elapsed();
+                            SupervisedDirective::Retire
+                        }
+                        _ => match sup.on_failure(kk, timed_out) {
+                            RecoveryAction::Retry(b) => {
+                                SupervisedDirective::Respawn(restore(kk, sweeps), b)
+                            }
+                            RecoveryAction::Degrade => {
+                                SupervisedDirective::Respawn(restore(kk, 0), Duration::ZERO)
+                            }
+                            RecoveryAction::Abandon => SupervisedDirective::Abandon,
+                        },
                     }
-                    beta_snap[kk] = dims;
-                }
-                if do_shuffle {
-                    // drain into the pending buffer only when a shuffle
-                    // will actually run: drain + reinsert compacts
-                    // cluster-slot numbering, which at K=1 (or shuffle
-                    // off) would perturb the bit-pinned chain
-                    pending[kk] = ev.result.drain_clusters();
-                }
-                stage_busy += stage_t0.elapsed();
-                false
-            },
-        );
+                },
+            );
+            // abandoned slots never reached their final completion:
+            // restore the pre-round snapshot on the coordinator thread
+            // and replicate the staging that completion would have done
+            let window_s = map_t0.elapsed().as_secs_f64();
+            let states: Vec<Shard> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(kk, slot)| {
+                    slot.unwrap_or_else(|| {
+                        let mut st = restore(kk, 0).0;
+                        base_done_at[kk] = window_s;
+                        final_done_at[kk] = window_s;
+                        j_snap[kk] = st.num_clusters() as u64;
+                        if collect_beta {
+                            let mut dims: Vec<Vec<(u64, u32)>> =
+                                Vec::with_capacity(beta_dims);
+                            for d in 0..beta_dims {
+                                let mut out = Vec::new();
+                                st.collect_dim_stats(d, &mut out);
+                                dims.push(out);
+                            }
+                            beta_snap[kk] = dims;
+                        }
+                        if do_shuffle {
+                            pending[kk] = st.drain_clusters();
+                        }
+                        st
+                    })
+                })
+                .collect();
+            self.finish_round_supervision(&sup);
+            (states, durs)
+        } else {
+            self.mr.map_streaming(
+                states,
+                |kk, mut st: Shard| {
+                    st.set_theta(alpha * mu[kk]);
+                    st.run_sweeps(kernels[kk].kernel(), data, model, sweeps);
+                    st
+                },
+                |kk, mut st: Shard| {
+                    // one bonus grant = one extra sweep, resubmitted as its
+                    // own pool job so the grant can be issued mid-round and
+                    // run while stragglers are still on their base sweeps
+                    st.run_sweeps(kernels[kk].kernel(), data, model, 1);
+                    st.note_bonus_sweeps(1);
+                    st
+                },
+                |ev| {
+                    let kk = ev.index;
+                    if ev.followups_done == 0 {
+                        base_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                    }
+                    if ev.followups_done < bonus[kk] {
+                        return true; // grant another bonus sweep
+                    }
+                    // final completion for this shard: stage its round
+                    // contribution NOW, on the coordinator thread, while
+                    // other shards are still sweeping
+                    final_done_at[kk] = map_t0.elapsed().as_secs_f64();
+                    let stage_t0 = Instant::now();
+                    j_snap[kk] = ev.result.num_clusters() as u64;
+                    if collect_beta {
+                        // β statistics must be snapshotted BEFORE the drain
+                        // empties the cluster set
+                        let mut dims: Vec<Vec<(u64, u32)>> = Vec::with_capacity(beta_dims);
+                        for d in 0..beta_dims {
+                            let mut out = Vec::new();
+                            ev.result.collect_dim_stats(d, &mut out);
+                            dims.push(out);
+                        }
+                        beta_snap[kk] = dims;
+                    }
+                    if do_shuffle {
+                        // drain into the pending buffer only when a shuffle
+                        // will actually run: drain + reinsert compacts
+                        // cluster-slot numbering, which at K=1 (or shuffle
+                        // off) would perturb the bit-pinned chain
+                        pending[kk] = ev.result.drain_clusters();
+                    }
+                    stage_busy += stage_t0.elapsed();
+                    false
+                },
+            )
+        };
         let map_window = map_t0.elapsed();
         // phase attribution stays disjoint: staging ran inside the
         // window but is accounted to the shuffle phase below
@@ -792,7 +1203,7 @@ impl<'a> Coordinator<'a> {
         // also serialize after its barrier, on top of the staging work
         // the window absorbed)
         let tail = shuffle_dur + reduce_dur;
-        let rs = finish_round_overlapped(
+        let mut rs = finish_round_overlapped(
             &self.cfg.comm,
             map_durs,
             stage_busy + tail,
@@ -804,6 +1215,7 @@ impl<'a> Coordinator<'a> {
                 window: map_window,
             },
         );
+        self.stamp_supervision_counters(&mut rs);
         // the tail this round hides behind the NEXT round's map: its
         // shuffle transfer plus its post-window compute (staging is
         // already inside the window, so it is not part of the carry)
@@ -997,6 +1409,9 @@ impl<'a> Coordinator<'a> {
                     idle_s: (crit - map_seconds).max(0.0),
                     barrier_wait_s: (crit - map_seconds).max(0.0),
                     bonus_sweeps: 0,
+                    retries: self.sup_retries.get(kk).copied().unwrap_or(0),
+                    watchdog_fires: self.sup_watchdog.get(kk).copied().unwrap_or(0),
+                    quarantined: self.sup_quarantined.get(kk).copied().unwrap_or(false),
                     kernel: self.shard_kernels[kk],
                 }
             })
@@ -1047,6 +1462,9 @@ impl<'a> Coordinator<'a> {
                         - base_done_at.get(kk).copied().unwrap_or(close))
                     .max(0.0),
                     bonus_sweeps,
+                    retries: self.sup_retries.get(kk).copied().unwrap_or(0),
+                    watchdog_fires: self.sup_watchdog.get(kk).copied().unwrap_or(0),
+                    quarantined: self.sup_quarantined.get(kk).copied().unwrap_or(false),
                     kernel: self.shard_kernels[kk],
                 }
             })
@@ -1209,6 +1627,32 @@ impl<'a> Coordinator<'a> {
     /// A panicking hook doubles as an injected mid-map shard failure.
     pub fn set_map_delay_hook(&mut self, hook: Option<DelayHook>) {
         self.mr.set_delay_hook(hook);
+    }
+
+    /// Install (or clear) a deterministic fault-injection hook on the
+    /// map pool ([`crate::mapreduce::FaultHook`]): consulted once per
+    /// base attempt with the (round, shard, attempt) site, it can
+    /// delay, stall, panic, or fail the attempt. Under `--supervise on`
+    /// the injected failures drive the retry/quarantine machinery; with
+    /// supervision off a `Panic`/`Io` action aborts the round exactly
+    /// like an organic shard panic (the legacy contract
+    /// `tests/failure_injection.rs` pins).
+    pub fn set_map_fault_hook(&mut self, hook: Option<FaultHook>) {
+        self.mr.set_fault_hook(hook);
+    }
+
+    /// Per-shard quarantine flags of the most recent round (empty
+    /// before the first supervised round): `true` while a shard is
+    /// sitting out sweeps in degraded mode.
+    pub fn quarantined_shards(&self) -> &[bool] {
+        &self.sup_quarantined
+    }
+
+    /// Lifetime count of quarantine entries (shards that exhausted
+    /// their retries, including re-arms of an already-quarantined
+    /// shard whose degraded attempt failed again).
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events
     }
 
     /// The per-supercluster shard states.

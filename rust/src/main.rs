@@ -9,7 +9,8 @@
 
 use clustercluster::cli::Args;
 use clustercluster::coordinator::{
-    Checkpoint, Coordinator, CoordinatorConfig, KernelAssignment, MuMode,
+    Checkpoint, CheckpointDir, Coordinator, CoordinatorConfig, KernelAssignment, MuMode,
+    SuperviseConfig,
 };
 use clustercluster::data::io::save_binmat;
 use clustercluster::data::synthetic::{
@@ -27,6 +28,7 @@ use clustercluster::sampler::{KernelKind, ScoreMode};
 use clustercluster::serial::{SerialConfig, SerialGibbs};
 use clustercluster::supercluster::ShuffleKernel;
 use std::path::Path;
+use std::time::Duration;
 
 const HELP: &str = "\
 repro — ClusterCluster: parallel MCMC for Dirichlet process mixtures
@@ -50,6 +52,11 @@ COMMANDS
                [--bandwidth 1e8] [--trace out.csv] [--shard-trace shards.csv]
                [--threads 1] [--checkpoint state.ccckpt]
                [--overlap on|off] [--max-bonus-sweeps 2]
+               [--supervise on|off] [--round-timeout 30]
+               [--max-retries 2] [--retry-backoff 0.025]
+               [--retry-backoff-cap 1.0] [--quarantine-cooldown 3]
+               [--checkpoint-dir ckpts/] [--checkpoint-every 10]
+               [--checkpoint-keep 3]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
 
@@ -107,21 +114,45 @@ barrier_wait_s is what that wait would have been with no bonus sweeps
 (the two columns are equal with --overlap off); bonus_sweeps counts
 the round's work-stealing grant (always 0 with --overlap off).
 
+--supervise on makes coordinator rounds fault-tolerant (DESIGN.md
+section 12): a shard whose map attempt panics, hits an I/O error, or
+stalls past --round-timeout seconds is rebuilt from its pre-round
+snapshot and retried with bounded exponential backoff (--retry-backoff
+doubling per retry up to --retry-backoff-cap); a retried attempt
+replays the identical sweep, so transient faults leave the chain
+bit-identical to a fault-free run. After --max-retries the shard is
+quarantined for --quarantine-cooldown rounds: its rows keep their
+assignments, sweeps are skipped, but its statistics still fold into
+the alpha/beta reduces and its clusters still shuffle — then it is
+reintegrated automatically. Per-shard retries/watchdog_fires/
+quarantined columns appear in --shard-trace. Off (the default) keeps
+the legacy behavior bit-exactly: any shard failure aborts the round.
+
 The serial chain checkpoints to the same CCCKPT3 format as the
 coordinator: --checkpoint saves the latent state after the last sweep,
 --resume continues a saved chain (run with the SAME
 --n/--d/--seed/--model so the dataset and likelihood match; mismatches
-are rejected, and older CCCKPT2 files load as Beta-Bernoulli).
+are rejected, and older CCCKPT2 files load as Beta-Bernoulli). If the
+primary file is torn, --resume falls back to the .prev generation the
+atomic writer keeps. Checkpoint writes are crash-safe everywhere:
+temp file + fsync + rename, prior generation kept as .prev.
+
+--checkpoint-dir keeps a bounded ring of coordinator checkpoint
+generations (gen-<round>.ccckpt, at most --checkpoint-keep files,
+saved every --checkpoint-every rounds and at exit). When the directory
+already holds a loadable generation, the run AUTO-RESUMES from the
+newest valid one — torn files from a crash mid-save are skipped with a
+warning — so re-launching the same command continues the chain.
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
 /// points. Comma-separated lists cycle kernels over the shards.
 fn kernel_arg(args: &Args) -> Result<KernelAssignment, String> {
-    match args.get("local-kernel") {
+    match args.get_opt_str("local-kernel")? {
         Some(_) if args.has("walker") => {
             Err("pass either --local-kernel or the legacy --walker, not both".into())
         }
-        Some(s) => KernelAssignment::parse(s),
+        Some(s) => KernelAssignment::parse(&s),
         None if args.has("walker") => Ok(KernelAssignment::AllSame(KernelKind::WalkerSlice)),
         None => Ok(KernelAssignment::default()),
     }
@@ -143,7 +174,7 @@ fn serial_kernel_arg(args: &Args) -> Result<KernelKind, String> {
 /// `--scorer pjrt` is validated up front so the run fails before any
 /// sampling when the backend is unavailable.
 fn scorer_arg(args: &Args) -> Result<ScorerKind, String> {
-    let kind = ScorerKind::parse(&args.get_str("scorer", "auto"))?;
+    let kind = ScorerKind::parse(&args.get_str("scorer", "auto")?)?;
     kind.try_build().map_err(|e| format!("--scorer {}: {e}", kind.name()))?;
     Ok(kind)
 }
@@ -151,7 +182,7 @@ fn scorer_arg(args: &Args) -> Result<ScorerKind, String> {
 /// Shared `--model` parsing for both samplers: which collapsed
 /// component likelihood the chain runs (see DESIGN.md § ComponentModel).
 fn model_arg(args: &Args) -> Result<ModelSpec, String> {
-    ModelSpec::parse(&args.get_str("model", "bernoulli"))
+    ModelSpec::parse(&args.get_str("model", "bernoulli")?)
 }
 
 /// Model-matched synthetic data for both samplers. The Bernoulli path
@@ -276,7 +307,7 @@ fn synth_cfg(args: &Args) -> Result<SyntheticConfig, String> {
 
 fn cmd_gen_data(args: &Args) -> Result<(), String> {
     let cfg = synth_cfg(args)?;
-    let out = args.get_str("out", "data.ccbin");
+    let out = args.get_str("out", "data.ccbin")?;
     let ds = cfg.generate();
     save_binmat(Path::new(&out), &ds.train, Some(&ds.train_z)).map_err(|e| e.to_string())?;
     println!(
@@ -304,8 +335,11 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
         model: spec,
         ..Default::default()
     };
-    let mut g = if let Some(path) = args.get("resume") {
-        let ckpt = Checkpoint::load(Path::new(path)).map_err(|e| e.to_string())?;
+    let mut g = if let Some(path) = args.get_opt_str("resume")? {
+        // a torn primary file falls back to the .prev generation the
+        // atomic writer keeps (with a logged warning)
+        let (ckpt, _from_prev) =
+            Checkpoint::load_with_fallback(Path::new(&path)).map_err(|e| e.to_string())?;
         let g = SerialGibbs::resume(data.train(), scfg, &ckpt, &mut rng)?;
         println!("resumed {path} at sweep {}", g.sweeps_done);
         g
@@ -349,15 +383,40 @@ fn cmd_serial(args: &Args) -> Result<(), String> {
             );
         }
     }
-    if let Some(path) = args.get("checkpoint") {
-        g.save_checkpoint(Path::new(path)).map_err(|e| e.to_string())?;
+    if let Some(path) = args.get_opt_str("checkpoint")? {
+        g.save_checkpoint(Path::new(&path)).map_err(|e| e.to_string())?;
         println!("checkpoint -> {path} (sweep {})", g.sweeps_done);
     }
-    if let Some(path) = args.get("trace") {
-        trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+    if let Some(path) = args.get_opt_str("trace")? {
+        trace.write_csv(Path::new(&path)).map_err(|e| e.to_string())?;
         println!("trace -> {path}");
     }
     Ok(())
+}
+
+/// Shared `--supervise` family parsing (`run` and `tiny-images`):
+/// the fault-tolerance policy of supervised coordinator rounds.
+fn supervise_arg(args: &Args) -> Result<SuperviseConfig, String> {
+    let defaults = SuperviseConfig::default();
+    let timeout = args.get_f64("round-timeout", 0.0)?;
+    if timeout < 0.0 || !timeout.is_finite() {
+        return Err(format!("--round-timeout expects seconds >= 0, got {timeout}"));
+    }
+    let backoff = args.get_f64("retry-backoff", defaults.backoff_base.as_secs_f64())?;
+    let backoff_cap =
+        args.get_f64("retry-backoff-cap", defaults.backoff_cap.as_secs_f64())?;
+    if backoff < 0.0 || backoff_cap < 0.0 || !backoff.is_finite() || !backoff_cap.is_finite()
+    {
+        return Err("--retry-backoff/--retry-backoff-cap expect seconds >= 0".into());
+    }
+    Ok(SuperviseConfig {
+        enabled: args.get_on_off("supervise", false)?,
+        max_retries: args.get_u64("max-retries", defaults.max_retries as u64)? as u32,
+        backoff_base: Duration::from_secs_f64(backoff),
+        backoff_cap: Duration::from_secs_f64(backoff_cap),
+        round_timeout: (timeout > 0.0).then(|| Duration::from_secs_f64(timeout)),
+        cooldown_rounds: args.get_u64("quarantine-cooldown", defaults.cooldown_rounds)?,
+    })
 }
 
 fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
@@ -371,7 +430,7 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
         } else {
             ShuffleKernel::Exact
         },
-        mu_mode: MuMode::parse(&args.get_str("mu-mode", "uniform"))?,
+        mu_mode: MuMode::parse(&args.get_str("mu-mode", "uniform")?)?,
         kernel_assignment: kernel_arg(args)?,
         scoring: ScoreMode::Batched(scorer_arg(args)?),
         comm: CommModel {
@@ -383,6 +442,7 @@ fn coordinator_cfg(args: &Args) -> Result<CoordinatorConfig, String> {
         overlap: args.get_on_off("overlap", false)?,
         max_bonus_sweeps: args.get_usize("max-bonus-sweeps", 2)?,
         model: model_arg(args)?,
+        supervise: supervise_arg(args)?,
         ..Default::default()
     })
 }
@@ -405,7 +465,31 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let h = data.entropy_target();
     let n_train = data.train().rows();
     let mut rng = Pcg64::seed_from(args.get_u64("seed", 0)? ^ 0xfacade);
-    let mut coord = Coordinator::new(data.train(), ccfg, &mut rng);
+    // --checkpoint-dir: bounded generation ring + auto-resume from the
+    // newest loadable generation (torn files are skipped with a warning)
+    let ckpt_dir = match args.get_opt_str("checkpoint-dir")? {
+        Some(d) => Some(
+            CheckpointDir::new(&d, args.get_usize("checkpoint-keep", 3)?)
+                .map_err(|e| format!("--checkpoint-dir {d}: {e}"))?,
+        ),
+        None => None,
+    };
+    let ckpt_every = args.get_u64("checkpoint-every", 10)?;
+    let resumed = match ckpt_dir.as_ref() {
+        Some(dir) => dir.load_latest_valid().map_err(|e| e.to_string())?,
+        None => None,
+    };
+    let mut coord = match resumed {
+        Some((generation, ckpt)) => {
+            let c = Coordinator::resume(data.train(), ccfg, &ckpt, &mut rng)?;
+            println!(
+                "auto-resumed checkpoint generation {generation} (round {})",
+                c.rounds
+            );
+            c
+        }
+        None => Coordinator::new(data.train(), ccfg, &mut rng),
+    };
     // trace-time predictive evaluation runs through the same backend
     // selection as the sweep path
     let mut scorer = scorer_arg(args)?.try_build()?;
@@ -420,7 +504,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     );
     let mut trace = McmcTrace::new(&format!("run_k{workers}"));
     let mut shard_trace = args
-        .get("shard-trace")
+        .get_opt_str("shard-trace")?
         .map(|_| ShardTrace::new(&format!("run_k{workers}")));
     for it in 0..rounds {
         let rs = coord.step(&mut rng);
@@ -447,6 +531,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                     idle_s: s.idle_s,
                     barrier_wait_s: s.barrier_wait_s,
                     bonus_sweeps: s.bonus_sweeps,
+                    retries: s.retries as u64,
+                    watchdog_fires: s.watchdog_fires as u64,
+                    quarantined: s.quarantined as u64,
                 });
             }
             // per-round throughput + shuffle traffic, so bench numbers
@@ -468,23 +555,35 @@ fn cmd_run(args: &Args) -> Result<(), String> {
                 h.map(|h| format!(" (target ≈ {:.4})", -h)).unwrap_or_default()
             );
         }
+        if let Some(dir) = ckpt_dir.as_ref() {
+            if ckpt_every > 0 && coord.rounds % ckpt_every == 0 {
+                dir.save(&Checkpoint::capture(&coord), coord.rounds)
+                    .map_err(|e| e.to_string())?;
+            }
+        }
     }
     if let Some(rate) = coord.mu_acceptance_rate() {
         println!("adaptive μ retarget acceptance: {:.1}%", 100.0 * rate);
     }
     println!("\nphase profile:\n{}", coord.timer.render());
-    if let Some(path) = args.get("checkpoint") {
+    if let Some(dir) = ckpt_dir.as_ref() {
+        let path = dir
+            .save(&Checkpoint::capture(&coord), coord.rounds)
+            .map_err(|e| e.to_string())?;
+        println!("checkpoint generation {} -> {}", coord.rounds, path.display());
+    }
+    if let Some(path) = args.get_opt_str("checkpoint")? {
         coord
-            .save_checkpoint(Path::new(path))
+            .save_checkpoint(Path::new(&path))
             .map_err(|e| e.to_string())?;
         println!("checkpoint -> {path}");
     }
-    if let Some(path) = args.get("trace") {
-        trace.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+    if let Some(path) = args.get_opt_str("trace")? {
+        trace.write_csv(Path::new(&path)).map_err(|e| e.to_string())?;
         println!("trace -> {path}");
     }
-    if let (Some(st), Some(path)) = (shard_trace.as_ref(), args.get("shard-trace")) {
-        st.write_csv(Path::new(path)).map_err(|e| e.to_string())?;
+    if let (Some(st), Some(path)) = (shard_trace.as_ref(), args.get_opt_str("shard-trace")?) {
+        st.write_csv(Path::new(&path)).map_err(|e| e.to_string())?;
         println!("shard trace -> {path}");
     }
     Ok(())

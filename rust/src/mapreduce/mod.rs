@@ -20,10 +20,16 @@
 //! [`MapReduce::map_streaming`]), which is what lets a coordinator stage
 //! shuffle state and grant bonus sweeps for fast shards while slow ones
 //! are still sweeping. A [`DelayHook`] can inject deterministic per-task
-//! start delays so tests can force any completion-order interleaving.
+//! start delays so tests can force any completion-order interleaving;
+//! its generalization, the [`FaultHook`], additionally injects panics,
+//! stalls, and I/O errors at chosen (round, shard, attempt) sites, and
+//! [`MapReduce::map_supervised`] turns those failures into supervisor
+//! events (retry / watchdog-timeout / quarantine decisions) instead of
+//! round aborts — the recovery surface supervised coordinator rounds
+//! run on (DESIGN.md §12).
 
 use std::any::Any;
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -32,8 +38,73 @@ use std::time::{Duration, Instant};
 /// from the task's measured duration). This makes completion order a
 /// deterministic function of the hook, which is how the concurrency
 /// test layer exercises every interleaving; a panicking hook doubles as
-/// an injected shard failure.
+/// an injected shard failure. Kept as the back-compat surface over the
+/// generalized [`FaultHook`] ([`MapReduce::set_delay_hook`] adapts it).
 pub type DelayHook = Arc<dyn Fn(usize) -> Duration + Send + Sync>;
+
+/// Where a fault is (or is not) injected: one attempt of one map task in
+/// one round. `attempt` is the retry generation under supervision
+/// (0 = first try), so a hook can fail the first attempt and let the
+/// retry through, or fail every attempt to force quarantine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSite {
+    /// the coordinator round ([`MapReduce::set_fault_round`])
+    pub round: u64,
+    /// input index of the map task (= shard index)
+    pub task: usize,
+    /// retry generation of the attempt (0 on unsupervised paths)
+    pub attempt: u32,
+}
+
+/// What a [`FaultHook`] injects before one attempt's compute starts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultAction {
+    /// run normally
+    None,
+    /// sleep before compute (excluded from the measured duration) — the
+    /// legacy [`DelayHook`] completion-order lever
+    Delay(Duration),
+    /// sleep like a wedged worker: identical mechanics to `Delay`, named
+    /// separately because its purpose is tripping a supervised watchdog
+    Stall(Duration),
+    /// panic in place of the compute (a crashed worker)
+    Panic(String),
+    /// fail with an I/O-style error without running the compute (a
+    /// worker that lost its data / connection)
+    Io(String),
+}
+
+/// Deterministic per-(round, task, attempt) fault injection — the
+/// generalization of [`DelayHook`] the fault-tolerance harness drives
+/// (`rust/tests/fault_tolerance.rs`). On the unsupervised map paths a
+/// `Panic`/`Io` action aborts the round exactly like an organic shard
+/// panic; under [`MapReduce::map_supervised`] it is caught and reported
+/// to the supervisor instead.
+pub type FaultHook = Arc<dyn Fn(FaultSite) -> FaultAction + Send + Sync>;
+
+/// Best-effort human-readable panic payload.
+fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+/// Apply an injected fault on an **unsupervised** map path: delays and
+/// stalls sleep; panics and I/O errors abort the task, which the legacy
+/// paths drain and then propagate (the pinned poisoned-coordinator
+/// contract of `rust/tests/failure_injection.rs`).
+fn apply_fault_unsupervised(action: FaultAction) {
+    match action {
+        FaultAction::None => {}
+        FaultAction::Delay(d) | FaultAction::Stall(d) => std::thread::sleep(d),
+        FaultAction::Panic(msg) => panic!("injected fault: {msg}"),
+        FaultAction::Io(msg) => panic!("injected I/O error: {msg}"),
+    }
+}
 
 /// Communication/overhead model for one map-reduce round.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -140,6 +211,15 @@ pub struct RoundStats {
     /// (not modeled) host overlap speedup. For a bulk round both
     /// measured columns equal [`Self::measured_wall_s`].
     pub measured_serialized_s: f64,
+    /// shard-sweep retries the round's supervisor performed (0 unless
+    /// supervision is on and faults occurred); set by the coordinator
+    /// after assembly
+    pub retries: u64,
+    /// watchdog deadline expirations during the round's map window
+    pub watchdog_fires: u64,
+    /// shards that ran this round degraded (quarantined: assignments
+    /// frozen, sweep skipped, stats still folded into the reduces)
+    pub quarantined_shards: u64,
 }
 
 impl RoundStats {
@@ -228,6 +308,57 @@ pub struct StreamEvent<'a, R> {
     pub result: &'a mut R,
 }
 
+/// What happened to the live attempt a [`SupervisedEvent`] reports.
+pub enum SupervisedOutcome<'a, R> {
+    /// the attempt (or one of its follow-up grants) completed; the
+    /// supervisor can stage state out of the mutable result
+    Done(&'a mut R),
+    /// the attempt panicked — organically or via an injected
+    /// [`FaultAction::Panic`] — or hit an injected [`FaultAction::Io`];
+    /// the payload is the panic/error message
+    Failed(String),
+    /// the watchdog deadline passed with this task's live attempt still
+    /// outstanding (a stalled worker)
+    TimedOut,
+}
+
+/// One event delivered to the [`MapReduce::map_supervised`] supervisor
+/// callback, on the **caller** thread.
+pub struct SupervisedEvent<'a, R> {
+    /// input index of the task
+    pub index: usize,
+    /// retry generation of the live attempt (0 = first try)
+    pub attempt: u32,
+    /// follow-up grants this attempt has already completed
+    /// (meaningful for [`SupervisedOutcome::Done`] only)
+    pub followups_done: usize,
+    /// measured compute duration of just the completed unit
+    /// ([`Duration::ZERO`] for `Failed`/`TimedOut`)
+    pub duration: Duration,
+    /// what happened
+    pub outcome: SupervisedOutcome<'a, R>,
+}
+
+/// The supervisor's verdict on a [`SupervisedEvent`].
+///
+/// Validity per outcome: after `Done`, all four make sense (`Retire`
+/// keeps the result). After `Failed`/`TimedOut` only `Respawn` and
+/// `Abandon` are meaningful; `Retire`/`Follow` there settle the task
+/// with no result, same as `Abandon` (there is no result to keep).
+pub enum SupervisedDirective<T> {
+    /// settle the task, keeping the result (Done only)
+    Retire,
+    /// grant one follow-up unit through the `follow` closure (Done only)
+    Follow,
+    /// start a fresh attempt from this input after sleeping the backoff
+    /// on the worker thread (excluded from measured durations). Any
+    /// still-outstanding older attempt for the index is superseded: its
+    /// eventual completion is drained and discarded, never reported.
+    Respawn(T, Duration),
+    /// settle the task with **no** result (`results[index] = None`)
+    Abandon,
+}
+
 /// The map-reduce executor. `parallelism` caps the number of worker
 /// threads (tasks beyond it queue, exactly like mappers on a small
 /// cluster). Workers are spawned once here and reused by every
@@ -235,7 +366,9 @@ pub struct StreamEvent<'a, R> {
 pub struct MapReduce {
     parallelism: usize,
     pool: Option<WorkerPool>,
-    delay: Option<DelayHook>,
+    fault: Option<FaultHook>,
+    /// round tag stamped into every [`FaultSite`] this executor consults
+    fault_round: u64,
 }
 
 impl std::fmt::Debug for MapReduce {
@@ -243,7 +376,7 @@ impl std::fmt::Debug for MapReduce {
         f.debug_struct("MapReduce")
             .field("parallelism", &self.parallelism)
             .field("pooled", &self.pool.is_some())
-            .field("delayed", &self.delay.is_some())
+            .field("faulted", &self.fault.is_some())
             .finish()
     }
 }
@@ -258,7 +391,8 @@ impl MapReduce {
         MapReduce {
             parallelism,
             pool,
-            delay: None,
+            fault: None,
+            fault_round: 0,
         }
     }
 
@@ -280,8 +414,36 @@ impl MapReduce {
     /// task; the sleep is excluded from measured durations. Tests use
     /// this to pin completion order deterministically and to inject
     /// mid-map failures (a panicking hook behaves like a crashed shard).
+    ///
+    /// Back-compat adapter over [`Self::set_fault_hook`]: the delay is
+    /// applied on first attempts (`attempt == 0`); supervised retries of
+    /// a task run undelayed.
     pub fn set_delay_hook(&mut self, hook: Option<DelayHook>) {
-        self.delay = hook;
+        self.fault = hook.map(|h| -> FaultHook {
+            Arc::new(move |site: FaultSite| {
+                if site.attempt == 0 {
+                    FaultAction::Delay(h(site.task))
+                } else {
+                    FaultAction::None
+                }
+            })
+        });
+    }
+
+    /// Install (or clear) a [`FaultHook`]. Consulted once per **base**
+    /// attempt (follow-up grants never consult it, matching the
+    /// [`DelayHook`] contract), before the attempt's compute starts, on
+    /// whichever thread runs it. Replaces any hook installed by
+    /// [`Self::set_delay_hook`] and vice versa.
+    pub fn set_fault_hook(&mut self, hook: Option<FaultHook>) {
+        self.fault = hook;
+    }
+
+    /// Set the round tag stamped into [`FaultSite::round`] for
+    /// subsequent map calls (the coordinator calls this at the top of
+    /// every round so hooks can target "round 3, shard 1").
+    pub fn set_fault_round(&mut self, round: u64) {
+        self.fault_round = round;
     }
 
     /// Run `f` over `tasks`, returning results (input order) and each
@@ -380,8 +542,12 @@ impl MapReduce {
                 let mut durs = Vec::with_capacity(n);
                 let mut rank = 0usize;
                 for (i, t) in tasks.into_iter().enumerate() {
-                    if let Some(hook) = &self.delay {
-                        std::thread::sleep(hook(i));
+                    if let Some(hook) = &self.fault {
+                        apply_fault_unsupervised(hook(FaultSite {
+                            round: self.fault_round,
+                            task: i,
+                            attempt: 0,
+                        }));
                     }
                     let t0 = Instant::now();
                     let mut r = f(i, t);
@@ -435,15 +601,20 @@ impl MapReduce {
             channel::<(usize, usize, Result<(R, Duration), Box<dyn Any + Send>>)>();
         // `Sender<Job>` is not Sync, so jobs must not capture `&self`;
         // borrow just the hook (an Option<&Arc<..>> is Send + Sync)
-        let delay = self.delay.as_ref();
+        let fault = self.fault.as_ref();
+        let fault_round = self.fault_round;
         for i in 0..n {
             let inputs = &inputs;
             let f = &f;
             let done_tx = done_tx.clone();
             let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
                 let ran = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    if let Some(hook) = delay {
-                        std::thread::sleep(hook(i));
+                    if let Some(hook) = fault {
+                        apply_fault_unsupervised(hook(FaultSite {
+                            round: fault_round,
+                            task: i,
+                            attempt: 0,
+                        }));
                     }
                     let t = inputs[i].lock().unwrap().take().expect("task taken once");
                     let t0 = Instant::now();
@@ -524,6 +695,352 @@ impl MapReduce {
         }
         (out, totals)
     }
+
+    /// The fault-tolerant map surface supervised coordinator rounds run
+    /// on. Like [`Self::map_streaming`], but failures are **events, not
+    /// aborts**: a panicking or injected-I/O-failing attempt is caught
+    /// and reported to `react` as [`SupervisedOutcome::Failed`]; if
+    /// `timeout` is set and no completion arrives within it, every
+    /// unsettled task gets a [`SupervisedOutcome::TimedOut`] event (and
+    /// the deadline re-arms). The supervisor answers each event with a
+    /// [`SupervisedDirective`] — retry from a fresh input
+    /// (`Respawn`), grant a bonus unit (`Follow`), keep the result
+    /// (`Retire`), or give up on the task (`Abandon`).
+    ///
+    /// Returns per-task results in input order (`None` for abandoned
+    /// tasks) and pooled compute durations of each task's **surviving**
+    /// lineage (superseded attempts contribute nothing).
+    ///
+    /// Supersession: a `Respawn` makes any still-outstanding older
+    /// attempt for that index *stale* — the runner drains its eventual
+    /// completion and discards it without reporting. Each attempt owns
+    /// its input by value, so a stale attempt can never consume the
+    /// respawned attempt's input. The [`FaultHook`] is consulted once
+    /// per base attempt with the true `attempt` number; follow-up grants
+    /// never consult it.
+    ///
+    /// Caveats (documented, asserted nowhere): on the inline path
+    /// (`parallelism == 1`) the watchdog cannot preempt a running
+    /// closure, so `TimedOut` never fires there; on the pooled path a
+    /// *genuinely* unbounded stall wedges the final drain — the watchdog
+    /// bounds how long the round *waits* for a straggler, not the
+    /// straggler's own lifetime (that needs process isolation, which the
+    /// planned socket transport provides).
+    pub fn map_supervised<T, R, F, G, C>(
+        &self,
+        tasks: Vec<T>,
+        f: F,
+        follow: G,
+        timeout: Option<Duration>,
+        mut react: C,
+    ) -> (Vec<Option<R>>, Vec<Duration>)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, T) -> R + Sync,
+        G: Fn(usize, R) -> R + Sync,
+        C: FnMut(SupervisedEvent<'_, R>) -> SupervisedDirective<T>,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        let fault = self.fault.as_ref();
+        let fault_round = self.fault_round;
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut durs: Vec<Duration> = vec![Duration::ZERO; n];
+
+        // One base attempt: backoff sleep, fault consult, compute — all
+        // caught. Err carries the failure message.
+        let run_base = |i: usize, t: T, attempt: u32, backoff: Duration| {
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
+            }
+            let action = fault
+                .map(|h| {
+                    h(FaultSite {
+                        round: fault_round,
+                        task: i,
+                        attempt,
+                    })
+                })
+                .unwrap_or(FaultAction::None);
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                match action {
+                    FaultAction::None => {}
+                    FaultAction::Delay(d) | FaultAction::Stall(d) => std::thread::sleep(d),
+                    FaultAction::Panic(msg) => panic!("injected fault: {msg}"),
+                    FaultAction::Io(msg) => return Err(format!("injected I/O error: {msg}")),
+                }
+                let t0 = Instant::now();
+                Ok((f(i, t), t0.elapsed()))
+            }));
+            match caught {
+                Ok(r) => r,
+                Err(p) => Err(panic_message(&*p)),
+            }
+        };
+
+        let pool = match &self.pool {
+            Some(pool) if n > 1 => pool,
+            _ => {
+                // Inline path: attempts run synchronously; no watchdog
+                // (nothing concurrent exists to time out).
+                for (i, t) in tasks.into_iter().enumerate() {
+                    let mut task = t;
+                    let mut attempt: u32 = 0;
+                    let mut backoff = Duration::ZERO;
+                    'attempts: loop {
+                        let (mut r, d) = match run_base(i, task, attempt, backoff) {
+                            Ok(ok) => ok,
+                            Err(msg) => {
+                                match react(SupervisedEvent {
+                                    index: i,
+                                    attempt,
+                                    followups_done: 0,
+                                    duration: Duration::ZERO,
+                                    outcome: SupervisedOutcome::Failed(msg),
+                                }) {
+                                    SupervisedDirective::Respawn(t2, b) => {
+                                        task = t2;
+                                        attempt += 1;
+                                        backoff = b;
+                                        continue 'attempts;
+                                    }
+                                    _ => break 'attempts, // settle, no result
+                                }
+                            }
+                        };
+                        durs[i] += d;
+                        let mut followups = 0usize;
+                        let mut unit = d;
+                        loop {
+                            let directive = react(SupervisedEvent {
+                                index: i,
+                                attempt,
+                                followups_done: followups,
+                                duration: unit,
+                                outcome: SupervisedOutcome::Done(&mut r),
+                            });
+                            match directive {
+                                SupervisedDirective::Retire => {
+                                    results[i] = Some(r);
+                                    break 'attempts;
+                                }
+                                SupervisedDirective::Abandon => break 'attempts,
+                                SupervisedDirective::Respawn(t2, b) => {
+                                    task = t2;
+                                    attempt += 1;
+                                    backoff = b;
+                                    continue 'attempts;
+                                }
+                                SupervisedDirective::Follow => {
+                                    let caught = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            let t1 = Instant::now();
+                                            let r2 = follow(i, r);
+                                            (r2, t1.elapsed())
+                                        }),
+                                    );
+                                    match caught {
+                                        Ok((r2, d2)) => {
+                                            r = r2;
+                                            unit = d2;
+                                            durs[i] += d2;
+                                            followups += 1;
+                                        }
+                                        Err(p) => {
+                                            // a crashed follow-up fails
+                                            // the whole attempt
+                                            match react(SupervisedEvent {
+                                                index: i,
+                                                attempt,
+                                                followups_done: followups,
+                                                duration: Duration::ZERO,
+                                                outcome: SupervisedOutcome::Failed(
+                                                    panic_message(&*p),
+                                                ),
+                                            }) {
+                                                SupervisedDirective::Respawn(t2, b) => {
+                                                    task = t2;
+                                                    attempt += 1;
+                                                    backoff = b;
+                                                    continue 'attempts;
+                                                }
+                                                _ => break 'attempts,
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                return (results, durs);
+            }
+        };
+
+        // Pooled path. Lifetime erasure is sound for the same reason as
+        // map_streaming: the drain below is unconditional — it runs
+        // until every job ever submitted (base attempts, respawns,
+        // follow-ups, including STALE ones) has sent its completion, so
+        // no borrow the jobs capture can outlive this frame. Each
+        // attempt owns its input `T` by value inside its job closure
+        // (no shared input slots), which is what makes supersession
+        // race-free: a stale attempt holds a `T` nothing else will ever
+        // touch, and its completion is discarded by the generation
+        // check below.
+        let (done_tx, done_rx) =
+            channel::<(usize, u32, usize, Result<(R, Duration), String>)>();
+        let spawn_attempt = |t: T, i: usize, attempt: u32, backoff: Duration| -> Job {
+            let run_base = &run_base;
+            let done_tx = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let ran = run_base(i, t, attempt, backoff);
+                // only fails if the receiver is gone, which the
+                // unconditional drain rules out
+                let _ = done_tx.send((i, attempt, 0, ran));
+            });
+            unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) }
+        };
+        let spawn_follow = |r: R, i: usize, attempt: u32, followups_done: usize| -> Job {
+            let follow = &follow;
+            let done_tx = done_tx.clone();
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let t0 = Instant::now();
+                    let r2 = follow(i, r);
+                    (r2, t0.elapsed())
+                }));
+                let ran = match caught {
+                    Ok(ok) => Ok(ok),
+                    Err(p) => Err(panic_message(&*p)),
+                };
+                let _ = done_tx.send((i, attempt, followups_done + 1, ran));
+            });
+            unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) }
+        };
+
+        // live_attempt[i]: the only generation whose completions count;
+        // anything older is stale. settled[i]: verdict reached (result
+        // kept or task abandoned) — live_attempt is bumped on settle so
+        // stragglers of the final attempt are stale by construction.
+        let mut live_attempt: Vec<u32> = vec![0; n];
+        let mut settled: Vec<bool> = vec![false; n];
+        let mut outstanding = 0usize;
+        for (i, t) in tasks.into_iter().enumerate() {
+            outstanding += 1;
+            pool.submit(spawn_attempt(t, i, 0, Duration::ZERO));
+        }
+
+        let mut deadline = timeout.map(|t| Instant::now() + t);
+        while outstanding > 0 {
+            // the watchdog is armed only while a verdict is pending;
+            // once every task is settled the remaining receives are
+            // stale stragglers and a plain blocking recv drains them
+            let unsettled = settled.iter().any(|&s| !s);
+            let msg = match deadline.filter(|_| unsettled) {
+                None => Some(done_rx.recv().expect("every job sends a completion")),
+                Some(d) => {
+                    let wait = d.saturating_duration_since(Instant::now());
+                    match done_rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            unreachable!("sender held on this frame")
+                        }
+                    }
+                }
+            };
+            let (i, attempt, followups_done, ran) = match msg {
+                None => {
+                    // watchdog fired: every unsettled task's live
+                    // attempt is reported timed out, in index order
+                    for i in 0..n {
+                        if settled[i] {
+                            continue;
+                        }
+                        match react(SupervisedEvent {
+                            index: i,
+                            attempt: live_attempt[i],
+                            followups_done: 0,
+                            duration: Duration::ZERO,
+                            outcome: SupervisedOutcome::TimedOut,
+                        }) {
+                            SupervisedDirective::Respawn(t2, b) => {
+                                live_attempt[i] += 1;
+                                outstanding += 1;
+                                pool.submit(spawn_attempt(t2, i, live_attempt[i], b));
+                            }
+                            _ => {
+                                settled[i] = true;
+                                live_attempt[i] += 1; // stale the straggler
+                            }
+                        }
+                    }
+                    deadline = timeout.map(|t| Instant::now() + t);
+                    continue;
+                }
+                Some(m) => m,
+            };
+            outstanding -= 1;
+            if settled[i] || attempt != live_attempt[i] {
+                continue; // stale completion of a superseded attempt
+            }
+            match ran {
+                Ok((mut r, d)) => {
+                    durs[i] += d;
+                    match react(SupervisedEvent {
+                        index: i,
+                        attempt,
+                        followups_done,
+                        duration: d,
+                        outcome: SupervisedOutcome::Done(&mut r),
+                    }) {
+                        SupervisedDirective::Retire => {
+                            results[i] = Some(r);
+                            settled[i] = true;
+                            live_attempt[i] += 1;
+                        }
+                        SupervisedDirective::Abandon => {
+                            settled[i] = true;
+                            live_attempt[i] += 1;
+                        }
+                        SupervisedDirective::Follow => {
+                            outstanding += 1;
+                            pool.submit(spawn_follow(r, i, attempt, followups_done));
+                        }
+                        SupervisedDirective::Respawn(t2, b) => {
+                            live_attempt[i] += 1;
+                            outstanding += 1;
+                            pool.submit(spawn_attempt(t2, i, live_attempt[i], b));
+                        }
+                    }
+                }
+                Err(msg) => {
+                    match react(SupervisedEvent {
+                        index: i,
+                        attempt,
+                        followups_done,
+                        duration: Duration::ZERO,
+                        outcome: SupervisedOutcome::Failed(msg),
+                    }) {
+                        SupervisedDirective::Respawn(t2, b) => {
+                            live_attempt[i] += 1;
+                            outstanding += 1;
+                            pool.submit(spawn_attempt(t2, i, live_attempt[i], b));
+                        }
+                        _ => {
+                            settled[i] = true;
+                            live_attempt[i] += 1;
+                        }
+                    }
+                }
+            }
+        }
+        drop(done_tx);
+        (results, durs)
+    }
 }
 
 /// Real host timings of one overlapped round, fed to
@@ -572,6 +1089,9 @@ pub fn finish_round(
         measured_wall_s: wall,
         measured_overlapped_s: wall,
         measured_serialized_s: wall,
+        retries: 0,
+        watchdog_fires: 0,
+        quarantined_shards: 0,
     }
 }
 
@@ -615,6 +1135,9 @@ pub fn finish_round_overlapped(
         measured_wall_s: timing.wall.as_secs_f64(),
         measured_overlapped_s: timing.wall.as_secs_f64(),
         measured_serialized_s: (timing.window + reduce_duration).as_secs_f64(),
+        retries: 0,
+        watchdog_fires: 0,
+        quarantined_shards: 0,
     }
 }
 
@@ -908,6 +1431,218 @@ mod tests {
             // the panic lands; the drain must still terminate
             |ev| ev.followups_done == 0,
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: shard 2 crashed")]
+    fn fault_hook_panic_aborts_unsupervised_map() {
+        // without supervision an injected Panic behaves exactly like an
+        // organic shard panic: drained, then re-raised on the caller
+        let mut mr = MapReduce::new(3);
+        mr.set_fault_hook(Some(Arc::new(|site: FaultSite| {
+            if site.task == 2 {
+                FaultAction::Panic("shard 2 crashed".to_string())
+            } else {
+                FaultAction::None
+            }
+        })));
+        let tasks: Vec<u64> = (0..6).collect();
+        let _ = mr.map(tasks, |_, x| x);
+    }
+
+    #[test]
+    fn fault_site_carries_the_round_tag() {
+        let mut mr = MapReduce::new(1);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        mr.set_fault_hook(Some(Arc::new(move |site: FaultSite| {
+            sink.lock().unwrap().push(site);
+            FaultAction::None
+        })));
+        mr.set_fault_round(7);
+        let (out, _) = mr.map(vec![1u64, 2], |_, x| x);
+        assert_eq!(out, vec![1, 2]);
+        let sites = seen.lock().unwrap();
+        assert_eq!(
+            *sites,
+            vec![
+                FaultSite { round: 7, task: 0, attempt: 0 },
+                FaultSite { round: 7, task: 1, attempt: 0 },
+            ]
+        );
+    }
+
+    #[test]
+    fn map_supervised_retry_recovers_the_fault_free_result() {
+        // task 1's first attempt panics, its second is let through: the
+        // supervisor respawns with the original input and the final
+        // results must be exactly what a fault-free run produces
+        for parallelism in [1usize, 4] {
+            let mut mr = MapReduce::new(parallelism);
+            mr.set_fault_hook(Some(Arc::new(|site: FaultSite| {
+                if site.task == 1 && site.attempt == 0 {
+                    FaultAction::Panic("first attempt dies".to_string())
+                } else {
+                    FaultAction::None
+                }
+            })));
+            let tasks: Vec<u64> = (0..5).collect();
+            let mut failures = 0usize;
+            let (out, durs) = mr.map_supervised(
+                tasks,
+                |_, x| x * 2,
+                |_, r| r,
+                None,
+                |ev| match ev.outcome {
+                    SupervisedOutcome::Done(_) => SupervisedDirective::Retire,
+                    SupervisedOutcome::Failed(ref msg) => {
+                        assert!(msg.contains("first attempt dies"), "got: {msg}");
+                        failures += 1;
+                        // respawn from the original input
+                        SupervisedDirective::Respawn(ev.index as u64, Duration::ZERO)
+                    }
+                    SupervisedOutcome::TimedOut => unreachable!("no timeout set"),
+                },
+            );
+            assert_eq!(failures, 1);
+            assert_eq!(
+                out,
+                (0..5).map(|x| Some(x * 2)).collect::<Vec<_>>(),
+                "parallelism {parallelism}"
+            );
+            assert_eq!(durs.len(), 5);
+        }
+    }
+
+    #[test]
+    fn map_supervised_abandon_after_exhausted_retries() {
+        // task 3 fails every attempt with an injected I/O error; after
+        // two retries the supervisor abandons it — its slot is None,
+        // everything else completes normally
+        for parallelism in [1usize, 4] {
+            let mut mr = MapReduce::new(parallelism);
+            mr.set_fault_hook(Some(Arc::new(|site: FaultSite| {
+                if site.task == 3 {
+                    FaultAction::Io("lost connection".to_string())
+                } else {
+                    FaultAction::None
+                }
+            })));
+            let tasks: Vec<u64> = (0..6).collect();
+            let (out, _) = mr.map_supervised(
+                tasks,
+                |_, x| x + 100,
+                |_, r| r,
+                None,
+                |ev| match ev.outcome {
+                    SupervisedOutcome::Done(_) => SupervisedDirective::Retire,
+                    SupervisedOutcome::Failed(ref msg) => {
+                        assert!(msg.contains("injected I/O error"), "got: {msg}");
+                        if ev.attempt < 2 {
+                            SupervisedDirective::Respawn(ev.index as u64, Duration::ZERO)
+                        } else {
+                            SupervisedDirective::Abandon
+                        }
+                    }
+                    SupervisedOutcome::TimedOut => unreachable!("no timeout set"),
+                },
+            );
+            for (i, slot) in out.iter().enumerate() {
+                if i == 3 {
+                    assert!(slot.is_none(), "parallelism {parallelism}");
+                } else {
+                    assert_eq!(*slot, Some(i as u64 + 100), "parallelism {parallelism}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_supervised_followups_still_accumulate() {
+        // the bonus-sweep surface survives supervision: grant two
+        // follow-ups per task, then retire
+        for parallelism in [1usize, 4] {
+            let mr = MapReduce::new(parallelism);
+            let tasks: Vec<u64> = (0..8).collect();
+            let (out, durs) = mr.map_supervised(
+                tasks,
+                |_, x| x * 10,
+                |_, r| r + 1,
+                None,
+                |ev| match ev.outcome {
+                    SupervisedOutcome::Done(_) => {
+                        if ev.followups_done < 2 {
+                            SupervisedDirective::Follow
+                        } else {
+                            SupervisedDirective::Retire
+                        }
+                    }
+                    _ => SupervisedDirective::Abandon,
+                },
+            );
+            assert_eq!(
+                out,
+                (0..8).map(|x| Some(x * 10 + 2)).collect::<Vec<_>>(),
+                "parallelism {parallelism}"
+            );
+            assert_eq!(durs.len(), 8);
+        }
+    }
+
+    #[test]
+    fn map_supervised_watchdog_supersedes_a_stalled_attempt() {
+        // task 0's first attempt stalls far past the watchdog deadline;
+        // the timeout event respawns it and the respawned attempt's
+        // result wins. The stalled attempt eventually completes too —
+        // its stale completion must be discarded, not double-reported.
+        let mut mr = MapReduce::new(4);
+        mr.set_fault_hook(Some(Arc::new(|site: FaultSite| {
+            if site.task == 0 && site.attempt == 0 {
+                FaultAction::Stall(Duration::from_millis(400))
+            } else {
+                FaultAction::None
+            }
+        })));
+        let tasks: Vec<u64> = (0..4).collect();
+        let mut timeouts = 0usize;
+        let mut done_events_task0 = 0usize;
+        let (out, _) = mr.map_supervised(
+            tasks,
+            |_, x| x + 7,
+            |_, r| r,
+            Some(Duration::from_millis(60)),
+            |ev| match ev.outcome {
+                SupervisedOutcome::Done(_) => {
+                    if ev.index == 0 {
+                        done_events_task0 += 1;
+                    }
+                    SupervisedDirective::Retire
+                }
+                SupervisedOutcome::TimedOut => {
+                    // on a quiet machine only the stalled task 0 gets
+                    // here, but a loaded CI box may time out others too;
+                    // respawning them is always safe
+                    timeouts += 1;
+                    SupervisedDirective::Respawn(ev.index as u64, Duration::ZERO)
+                }
+                SupervisedOutcome::Failed(ref msg) => panic!("unexpected failure: {msg}"),
+            },
+        );
+        assert!(timeouts >= 1, "the watchdog must have fired");
+        assert_eq!(done_events_task0, 1, "stale completion must be discarded");
+        assert_eq!(out, vec![Some(7), Some(8), Some(9), Some(10)]);
+    }
+
+    #[test]
+    fn supervised_round_stats_counters_default_to_zero() {
+        let rs = finish_round(
+            &CommModel::free(),
+            vec![Duration::from_millis(1)],
+            Duration::ZERO,
+            0,
+            Duration::from_millis(1),
+        );
+        assert_eq!((rs.retries, rs.watchdog_fires, rs.quarantined_shards), (0, 0, 0));
     }
 
     #[test]

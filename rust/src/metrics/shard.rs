@@ -40,6 +40,13 @@ pub struct ShardTraceRow {
     /// work-stealing bonus sweeps granted this round (0 with
     /// `--overlap off`)
     pub bonus_sweeps: u64,
+    /// supervised retries consumed this round (0 with `--supervise off`)
+    pub retries: u64,
+    /// watchdog timeouts fired on this shard's attempts this round
+    pub watchdog_fires: u64,
+    /// 1 when the shard ran this round quarantined/degraded (sweep
+    /// skipped, assignments frozen), else 0
+    pub quarantined: u64,
 }
 
 /// A full per-shard run trace (K rows appended per round).
@@ -101,6 +108,9 @@ impl ShardTrace {
                 "idle_s",
                 "barrier_wait_s",
                 "bonus_sweeps",
+                "retries",
+                "watchdog_fires",
+                "quarantined",
             ],
         )?;
         for r in &self.rows {
@@ -115,6 +125,9 @@ impl ShardTrace {
                 r.idle_s,
                 r.barrier_wait_s,
                 r.bonus_sweeps as f64,
+                r.retries as f64,
+                r.watchdog_fires as f64,
+                r.quarantined as f64,
             ])?;
         }
         Ok(())
@@ -137,6 +150,9 @@ mod tests {
             idle_s: 0.002,
             barrier_wait_s: 0.003,
             bonus_sweeps: 1,
+            retries: 0,
+            watchdog_fires: 0,
+            quarantined: 0,
         }
     }
 
@@ -169,6 +185,9 @@ mod tests {
         assert!(text.contains("idle_s"));
         assert!(text.contains("barrier_wait_s"));
         assert!(text.contains("bonus_sweeps"));
+        assert!(text.contains("retries"));
+        assert!(text.contains("watchdog_fires"));
+        assert!(text.contains("quarantined"));
         assert!(text.contains("0.75"));
     }
 }

@@ -65,4 +65,4 @@ pub use kernel::{
     SPLIT_MERGE_GIBBS, SPLIT_MERGE_WALKER,
 };
 pub use score::ScoreMode;
-pub use shard::Shard;
+pub use shard::{Shard, ShardSnapshot};

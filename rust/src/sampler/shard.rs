@@ -62,7 +62,79 @@ pub struct Shard {
     pub(crate) bonus_sweeps: u64,
 }
 
+/// A bit-exact restore point of one shard's chain state, captured by
+/// [`Shard::snapshot`] before a supervised round's sweeps so a crashed
+/// or stalled attempt can be retried from exactly where it started.
+///
+/// What is captured: everything the transition kernels read or write —
+/// resident rows, assignments, the slotted [`ClusterSet`] **cloned
+/// as-is** (slot layout, free list, and graveyard included: a
+/// rebuild-from-assignments would reorder slot allocation and change
+/// downstream draws), the private RNG stream, θ, and the observability
+/// counters. What is *not*: the scoring dispatch (consumes no
+/// randomness; the restoring owner re-applies its score mode) and the
+/// Walker/split–merge scratch buffers (rebuilt from scratch at the top
+/// of every sweep, so fresh `Default` ones are bit-equivalent).
+#[derive(Clone)]
+pub struct ShardSnapshot {
+    rows: Vec<usize>,
+    assign: Vec<u32>,
+    clusters: ClusterSet,
+    rng: Pcg64,
+    theta: f64,
+    table_rows: usize,
+    /// (proposals, split_accepts, merge_accepts)
+    sm_counters: (u64, u64, u64),
+    stick_overflows: u64,
+    bonus_sweeps: u64,
+}
+
+impl ShardSnapshot {
+    /// Rebuild a live shard in exactly the captured chain state. The
+    /// scoring dispatch comes back in its initial mode — callers that
+    /// run a non-default [`ScoreMode`] must re-apply it via
+    /// [`Shard::set_score_mode`] (which consumes no randomness).
+    pub fn restore(&self) -> Shard {
+        let mut sh = Shard {
+            rows: self.rows.clone(),
+            assign: self.assign.clone(),
+            clusters: self.clusters.clone(),
+            rng: self.rng.clone(),
+            theta: self.theta,
+            scoring: ScoreMode::initial_dispatch(self.table_rows),
+            table_rows: self.table_rows,
+            scratch_ids: Vec::new(),
+            scratch_logw: Vec::new(),
+            scratch_ones: Vec::new(),
+            walker: WalkerScratch::default(),
+            sm: SplitMergeScratch::default(),
+            stick_overflows: self.stick_overflows,
+            bonus_sweeps: self.bonus_sweeps,
+        };
+        sh.sm.proposals = self.sm_counters.0;
+        sh.sm.split_accepts = self.sm_counters.1;
+        sh.sm.merge_accepts = self.sm_counters.2;
+        sh
+    }
+}
+
 impl Shard {
+    /// Capture a [`ShardSnapshot`] of the current chain state (see its
+    /// docs for exactly what is and isn't carried).
+    pub fn snapshot(&self) -> ShardSnapshot {
+        ShardSnapshot {
+            rows: self.rows.clone(),
+            assign: self.assign.clone(),
+            clusters: self.clusters.clone(),
+            rng: self.rng.clone(),
+            theta: self.theta,
+            table_rows: self.table_rows,
+            sm_counters: (self.sm.proposals, self.sm.split_accepts, self.sm.merge_accepts),
+            stick_overflows: self.stick_overflows,
+            bonus_sweeps: self.bonus_sweeps,
+        }
+    }
+
     /// Initialize by a sequential draw from the local CRP(θ) prior — the
     /// paper's §5 initialization ("initialize the clustering via a draw
     /// from the prior using the local Chinese restaurant process"). The
@@ -775,6 +847,44 @@ mod tests {
         st.check_invariants(&ds.train).unwrap();
         let (_, c) = st.active_clusters().next().unwrap();
         assert_eq!(c.n() as usize, ds.train.rows());
+    }
+
+    #[test]
+    fn snapshot_restore_replays_sweeps_bit_exactly() {
+        // the retry-from-snapshot guarantee: snapshot, sweep the live
+        // shard, then restore and sweep the SAME number of times — both
+        // lineages must land in the identical chain state (assignments
+        // and subsequent RNG draws alike)
+        let (ds, mut st, model) = make_shard(7);
+        st.set_theta(0.9);
+        let snap = st.snapshot();
+        for _ in 0..3 {
+            CollapsedGibbs.sweep(&mut st, (&ds.train).into(), &model);
+        }
+        let mut replay = snap.restore();
+        for _ in 0..3 {
+            CollapsedGibbs.sweep(&mut replay, (&ds.train).into(), &model);
+        }
+        let mut za = vec![0u32; ds.train.rows()];
+        let mut zb = vec![0u32; ds.train.rows()];
+        st.export_assignments(&mut za, 0);
+        replay.export_assignments(&mut zb, 0);
+        assert_eq!(za, zb);
+        // the private streams stay aligned past the replay
+        assert_eq!(st.rng.next_u64(), replay.rng.next_u64());
+        replay.check_invariants(&ds.train).unwrap();
+    }
+
+    #[test]
+    fn snapshot_restore_is_identity_without_sweeps() {
+        let (ds, st, _model) = make_shard(8);
+        let restored = st.snapshot().restore();
+        assert_eq!(restored.rows, st.rows);
+        assert_eq!(restored.assign, st.assign);
+        assert_eq!(restored.theta(), st.theta());
+        assert_eq!(restored.num_clusters(), st.num_clusters());
+        assert_eq!(restored.bonus_sweeps(), st.bonus_sweeps());
+        restored.check_invariants(&ds.train).unwrap();
     }
 
     #[test]

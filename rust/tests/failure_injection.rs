@@ -421,6 +421,73 @@ fn truncated_v2_checkpoint_is_rejected() {
     assert!(Checkpoint::load(&p).is_err());
 }
 
+/// A small but fully populated CCCKPT3 file (non-trivial α, β vector,
+/// μ, kernel tags, and two shards of assignments) for corruption fuzz.
+fn small_valid_checkpoint(dir_name: &str) -> (PathBuf, Vec<u8>) {
+    let ds = SyntheticConfig {
+        n: 24,
+        d: 4,
+        clusters: 2,
+        beta: 0.3,
+        seed: 58,
+    }
+    .generate_with_test_fraction(0.0);
+    let mut rng = Pcg64::seed_from(59);
+    let mut coord = Coordinator::new(&ds.train, adaptive_cfg(2), &mut rng);
+    coord.step(&mut rng);
+    let d = tmpdir(dir_name);
+    let p = d.join("state.ccckpt");
+    coord.save_checkpoint(&p).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    assert_eq!(&bytes[..8], b"CCCKPT3\n");
+    Checkpoint::load(&p).expect("the uncorrupted file must load");
+    (p, bytes)
+}
+
+#[test]
+fn every_checkpoint_truncation_is_an_error_never_a_panic() {
+    // a crash can tear a write at ANY byte boundary; whatever prefix
+    // survives, `load` must return Err — it must not panic (a panicking
+    // loader would poison auto-resume's newest→oldest generation scan)
+    // and must not "succeed" on a partial state
+    let (p, bytes) = small_valid_checkpoint("trunc_fuzz");
+    for len in 0..bytes.len() {
+        std::fs::write(&p, &bytes[..len]).unwrap();
+        let res = std::panic::catch_unwind(|| Checkpoint::load(&p));
+        let loaded = res.unwrap_or_else(|_| panic!("load PANICKED on {len}-byte prefix"));
+        assert!(
+            loaded.is_err(),
+            "{len}-byte prefix of a {}-byte checkpoint loaded successfully",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn every_single_bit_flip_in_a_checkpoint_is_an_error_never_a_panic() {
+    // one flipped bit anywhere — magic, a length word (which must not
+    // drive an unbounded allocation), a payload word, or the checksum
+    // trailer itself — must surface as Err from `load`. A flip in a
+    // payload word changes the wrapping sum; a flip in the trailer
+    // breaks it against the unchanged sum; a flip in the magic fails
+    // the version check. Nothing may panic.
+    let (p, bytes) = small_valid_checkpoint("bitflip_fuzz");
+    for pos in 0..bytes.len() {
+        for bit in 0..8u8 {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 1 << bit;
+            std::fs::write(&p, &corrupt).unwrap();
+            let res = std::panic::catch_unwind(|| Checkpoint::load(&p));
+            let loaded = res
+                .unwrap_or_else(|_| panic!("load PANICKED with bit {bit} of byte {pos} flipped"));
+            assert!(
+                loaded.is_err(),
+                "checkpoint with bit {bit} of byte {pos} flipped loaded successfully"
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Worker-pool failure paths (the submit/poll completion channel): a
 // panicking map task must propagate to the caller without wedging the

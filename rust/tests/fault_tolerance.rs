@@ -1,0 +1,494 @@
+//! The fault-tolerance gate for supervised coordinator rounds
+//! (`--supervise on`; DESIGN.md §12), built on the deterministic
+//! fault-injection layer ([`FaultHook`]) the same way
+//! `concurrent_rounds.rs` builds on [`DelayHook`].
+//!
+//! Four gates:
+//!
+//! 1. **bit-exact recovery** — an injected panic or I/O fault at every
+//!    tested (round, shard) position (the full matrix under
+//!    `CC_FAULT_SWEEP=all`, a structured subset by default), across
+//!    bulk/overlapped × inline/pooled schedules, leaves the final chain
+//!    state bit-identical to the fault-free run at the same seed; a
+//!    supervised fault-free run is itself bit-identical to
+//!    `--supervise off`.
+//! 2. **watchdog** — a stalled attempt trips `round_timeout`, is
+//!    rebuilt from its pre-round snapshot, and the replay is bit-exact
+//!    (so a *spurious* watchdog fire on a loaded CI box is harmless by
+//!    the same argument — the assertions below never depend on timing).
+//! 3. **quarantine exactness** — a shard whose attempts fail
+//!    permanently is degraded every round (sweeps skipped, statistics
+//!    still reduced, clusters still shuffled), and the chain still
+//!    passes the 203-partition posterior-enumeration gate (TV < 0.05).
+//! 4. **durability** — a torn generation in a `--checkpoint-dir` ring
+//!    is skipped by auto-resume, which recovers the newest valid
+//!    generation and continues the chain.
+
+use clustercluster::coordinator::{
+    Checkpoint, CheckpointDir, Coordinator, CoordinatorConfig, MuMode, ShuffleMove,
+    SuperviseConfig,
+};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::mapreduce::{CommModel, FaultAction, FaultHook, FaultSite};
+use clustercluster::model::Model;
+use clustercluster::rng::Pcg64;
+use clustercluster::testing::{
+    canonical_partition as canonical, enumerate_posterior, enumeration_fixture,
+    partition_tv_distance as tv_distance, ENUM_D as D,
+};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+const ROUNDS: u64 = 6;
+const WORKERS: usize = 4;
+
+/// A hook that injects `action` on the base attempt at one
+/// (round, shard) position and is silent everywhere else.
+fn fault_once(round: u64, shard: usize, action: FaultAction) -> FaultHook {
+    Arc::new(move |site: FaultSite| {
+        if site.round == round && site.task == shard && site.attempt == 0 {
+            action.clone()
+        } else {
+            FaultAction::None
+        }
+    })
+}
+
+/// A hook that fails the first `attempts` attempts at one
+/// (round, shard) position — exercises consecutive retries.
+fn fault_attempts(round: u64, shard: usize, attempts: u32, action: FaultAction) -> FaultHook {
+    Arc::new(move |site: FaultSite| {
+        if site.round == round && site.task == shard && site.attempt < attempts {
+            action.clone()
+        } else {
+            FaultAction::None
+        }
+    })
+}
+
+/// The (round, shard) fault positions the default CI run exercises:
+/// first/last round, every shard somewhere, early and late rounds.
+/// `CC_FAULT_SWEEP=all` expands to the full ROUNDS × WORKERS matrix
+/// (the release/exhaustive gate, mirroring `CC_PERM_SWEEP`).
+fn exercised_positions() -> Vec<(u64, usize)> {
+    if std::env::var("CC_FAULT_SWEEP").map(|v| v == "all").unwrap_or(false) {
+        return (0..ROUNDS)
+            .flat_map(|r| (0..WORKERS).map(move |s| (r, s)))
+            .collect();
+    }
+    vec![(0, 0), (0, 3), (2, 1), (3, 2), (5, 0), (5, 3)]
+}
+
+/// Everything recovery-exactness must hold over: the partition, the α
+/// and μ bit patterns, and the final round's shuffle-decision sequence.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    partition: Vec<u8>,
+    alpha_bits: u64,
+    mu_bits: Vec<u64>,
+    moves: Vec<ShuffleMove>,
+}
+
+/// Chain fingerprint plus the supervision observables accumulated over
+/// the run (the counters are NOT part of recovery-equality — a faulted
+/// run legitimately reports retries the clean run does not).
+struct RunOut {
+    fp: Fingerprint,
+    retries: u64,
+    watchdog_fires: u64,
+    quarantine_events: u64,
+}
+
+fn supervised() -> SuperviseConfig {
+    SuperviseConfig {
+        enabled: true,
+        max_retries: 2,
+        // near-zero backoff keeps the fault matrix fast; the backoff
+        // sleeps on the pool side and cannot touch chain state
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        round_timeout: None,
+        cooldown_rounds: 2,
+    }
+}
+
+/// One fixed-seed K=4 run with every global update live (α, griddy β,
+/// size-proportional μ) under the given schedule, supervision policy,
+/// and fault hook — the same fixture `concurrent_rounds.rs` pins.
+fn run_k4(
+    parallelism: usize,
+    overlap: bool,
+    supervise: SuperviseConfig,
+    hook: Option<FaultHook>,
+) -> RunOut {
+    let ds = SyntheticConfig {
+        n: 96,
+        d: 8,
+        clusters: 3,
+        beta: 0.2,
+        seed: 7,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: WORKERS,
+        update_alpha: true,
+        update_beta: true,
+        mu_mode: MuMode::SizeProportional,
+        comm: CommModel::free(),
+        parallelism,
+        overlap,
+        max_bonus_sweeps: 2,
+        supervise,
+        ..Default::default()
+    };
+    let mut rng = Pcg64::seed_from(4242);
+    let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+    coord.set_map_fault_hook(hook);
+    let (mut retries, mut watchdog_fires) = (0u64, 0u64);
+    for _ in 0..ROUNDS {
+        let rs = coord.step(&mut rng);
+        retries += rs.retries;
+        watchdog_fires += rs.watchdog_fires;
+        coord.check_invariants().unwrap();
+    }
+    RunOut {
+        fp: Fingerprint {
+            partition: canonical(&coord.assignments()),
+            alpha_bits: coord.alpha().to_bits(),
+            mu_bits: coord.mu().iter().map(|m| m.to_bits()).collect(),
+            moves: coord.last_shuffle_moves().to_vec(),
+        },
+        retries,
+        watchdog_fires,
+        quarantine_events: coord.quarantine_events(),
+    }
+}
+
+#[test]
+fn supervised_rounds_without_faults_match_legacy_bit_exactly() {
+    // `--supervise on` with no faults must not perturb the chain:
+    // snapshots are taken but never restored, the master stream is
+    // untouched inside the window, and no extra randomness is consumed
+    for &(parallelism, overlap) in &[(1usize, false), (4, false), (1, true), (4, true)] {
+        let legacy = run_k4(parallelism, overlap, SuperviseConfig::default(), None);
+        let sup = run_k4(parallelism, overlap, supervised(), None);
+        assert_eq!(
+            legacy.fp,
+            sup.fp,
+            "supervise on (no faults) diverged from legacy at parallelism \
+             {parallelism} overlap {overlap}"
+        );
+        assert_eq!(sup.retries, 0);
+        assert_eq!(sup.watchdog_fires, 0);
+        assert_eq!(sup.quarantine_events, 0);
+    }
+}
+
+#[test]
+fn injected_faults_recover_bit_exactly_at_every_position() {
+    // gate 1: a panic or I/O fault at any (round, shard) position is
+    // retried from the pre-round snapshot, and because the rebuilt
+    // shard replays the identical private RNG stream, the final chain
+    // state is bit-identical to the fault-free run
+    for &(parallelism, overlap) in &[(1usize, false), (4, false), (1, true), (4, true)] {
+        let reference = run_k4(parallelism, overlap, supervised(), None);
+        for (round, shard) in exercised_positions() {
+            for action in [
+                FaultAction::Panic(format!("injected r{round} s{shard}")),
+                FaultAction::Io(format!("injected r{round} s{shard}")),
+            ] {
+                let label = format!(
+                    "{action:?} at (round {round}, shard {shard}), parallelism \
+                     {parallelism}, overlap {overlap}"
+                );
+                let faulted = run_k4(
+                    parallelism,
+                    overlap,
+                    supervised(),
+                    Some(fault_once(round, shard, action)),
+                );
+                assert_eq!(reference.fp, faulted.fp, "{label} perturbed the chain");
+                assert_eq!(faulted.retries, 1, "{label}: expected exactly one retry");
+                assert_eq!(faulted.quarantine_events, 0, "{label}: must not quarantine");
+            }
+        }
+    }
+}
+
+#[test]
+fn consecutive_failures_within_the_retry_budget_recover_bit_exactly() {
+    // both the first attempt AND its first retry fail; the second retry
+    // (attempt 2, within max_retries = 2) succeeds and replays clean
+    let reference = run_k4(4, true, supervised(), None);
+    let faulted = run_k4(
+        4,
+        true,
+        supervised(),
+        Some(fault_attempts(2, 1, 2, FaultAction::Panic("double".into()))),
+    );
+    assert_eq!(reference.fp, faulted.fp, "double failure perturbed the chain");
+    assert_eq!(faulted.retries, 2);
+    assert_eq!(faulted.quarantine_events, 0);
+}
+
+#[test]
+fn watchdog_rescues_a_stalled_attempt_bit_exactly() {
+    // gate 2: shard 1's base attempt at round 1 stalls far past the
+    // round timeout; the watchdog declares it dead, the respawned
+    // attempt replays from the snapshot, and the stale completion is
+    // discarded — bit-exact recovery, same as a panic. (If a slow CI
+    // box trips the watchdog on OTHER shards too, those replays are
+    // bit-exact by the same argument, so the equality still holds.)
+    let sup = SuperviseConfig {
+        round_timeout: Some(Duration::from_millis(150)),
+        backoff_base: Duration::ZERO,
+        backoff_cap: Duration::ZERO,
+        ..supervised()
+    };
+    let reference = run_k4(4, false, supervised(), None);
+    let stalled = run_k4(
+        4,
+        false,
+        sup,
+        Some(fault_once(1, 1, FaultAction::Stall(Duration::from_millis(900)))),
+    );
+    assert_eq!(reference.fp, stalled.fp, "stall recovery perturbed the chain");
+    assert!(stalled.watchdog_fires >= 1, "the injected stall never tripped the watchdog");
+}
+
+#[test]
+fn exhausted_retries_quarantine_then_reintegrate() {
+    // a shard whose attempts all fail during one round burns its
+    // retries, degrades (zero-sweep attempt — here that fails too, so
+    // the post-window fixup restores the snapshot), sits out the
+    // cool-down quarantined, then reintegrates automatically
+    let ds = SyntheticConfig {
+        n: 96,
+        d: 8,
+        clusters: 3,
+        beta: 0.2,
+        seed: 7,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: WORKERS,
+        update_alpha: true,
+        comm: CommModel::free(),
+        parallelism: 4,
+        supervise: SuperviseConfig {
+            backoff_base: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            cooldown_rounds: 2,
+            ..supervised()
+        },
+        ..Default::default()
+    };
+    // every attempt of shard 2 during round 1 fails, whatever the retry
+    let hook: FaultHook = Arc::new(|site: FaultSite| {
+        if site.round == 1 && site.task == 2 {
+            FaultAction::Io("permanent this round".into())
+        } else {
+            FaultAction::None
+        }
+    });
+    let mut rng = Pcg64::seed_from(909);
+    let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+    coord.set_map_fault_hook(Some(hook));
+
+    let r0 = coord.step(&mut rng);
+    assert_eq!(r0.quarantined_shards, 0);
+
+    // round 1: retries exhausted → quarantined this round
+    let r1 = coord.step(&mut rng);
+    assert_eq!(r1.retries, 2, "round 1 should burn the full retry budget");
+    assert_eq!(r1.quarantined_shards, 1);
+    assert!(coord.quarantined_shards()[2]);
+    assert_eq!(coord.quarantine_events(), 1);
+    let st = &coord.shard_stats()[2];
+    assert_eq!(st.retries, 2);
+    assert!(st.quarantined);
+    coord.check_invariants().unwrap();
+
+    // rounds 2 and 3: cool-down — the shard enters quarantined (sweeps
+    // skipped, no faults fire, its zero-sweep attempt completes clean)
+    for round in 2..4u64 {
+        let rs = coord.step(&mut rng);
+        assert_eq!(rs.quarantined_shards, 1, "round {round} should still be in cool-down");
+        assert!(coord.quarantined_shards()[2]);
+        assert_eq!(rs.retries, 0);
+        coord.check_invariants().unwrap();
+    }
+
+    // round 4: reintegrated — full health
+    let r4 = coord.step(&mut rng);
+    assert_eq!(r4.quarantined_shards, 0, "cool-down should have expired");
+    assert!(!coord.quarantined_shards()[2]);
+    assert_eq!(coord.quarantine_events(), 1, "no further quarantine entries");
+    coord.check_invariants().unwrap();
+}
+
+#[test]
+fn permanently_failing_shard_still_samples_the_exact_posterior() {
+    // gate 3: shard 2's map attempt hits a permanent injected I/O fault
+    // EVERY round (max_retries = 0 → immediate degrade; the degraded
+    // attempt fails too → snapshot restore). Its rows keep their
+    // assignments each round, but its statistics still fold into the α
+    // reduce and its clusters still shuffle — so every row still mixes
+    // through the healthy shards and the chain samples the exact
+    // 203-partition posterior.
+    let data = enumeration_fixture();
+    const ALPHA: f64 = 1.3;
+    const BETA: f64 = 0.6;
+    let model = Model::bernoulli(D, BETA);
+    let truth = enumerate_posterior(&data, &model, ALPHA);
+    assert_eq!(truth.len(), 203); // Bell(6)
+
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        local_sweeps: 1,
+        init_alpha: ALPHA,
+        init_beta: BETA,
+        update_alpha: false,
+        update_beta: false,
+        shuffle: true,
+        comm: CommModel::free(),
+        parallelism: 1,
+        supervise: SuperviseConfig {
+            enabled: true,
+            max_retries: 0,
+            backoff_base: Duration::ZERO,
+            backoff_cap: Duration::ZERO,
+            round_timeout: None,
+            cooldown_rounds: 3,
+        },
+        ..Default::default()
+    };
+    let hook: FaultHook = Arc::new(|site: FaultSite| {
+        if site.task == 2 {
+            FaultAction::Io("permanent".into())
+        } else {
+            FaultAction::None
+        }
+    });
+    let mut rng = Pcg64::seed_from(77);
+    let mut coord = Coordinator::new(&data, cfg, &mut rng);
+    coord.set_map_fault_hook(Some(hook));
+    let mut counts: HashMap<Vec<u8>, u64> = HashMap::new();
+    let burn = 2_000;
+    let rounds = 60_000u64;
+    for it in 0..(burn + rounds) {
+        coord.step(&mut rng);
+        if it >= burn {
+            *counts.entry(canonical(&coord.assignments())).or_default() += 1;
+        }
+    }
+    coord.check_invariants().unwrap();
+    assert!(coord.quarantine_events() > 0, "the permanent fault never triggered quarantine");
+    assert!(coord.quarantined_shards()[2], "shard 2 should still be quarantined at the end");
+    let tv = tv_distance(&truth, &counts, rounds);
+    assert!(tv < 0.05, "permanent-quarantine TV distance {tv} too large");
+}
+
+#[test]
+fn supervise_off_keeps_the_legacy_abort_contract() {
+    // with supervision off an injected fault aborts the round exactly
+    // like an organic shard panic: the step panics and the coordinator
+    // is left visibly poisoned (the PR 8 contract failure_injection.rs
+    // pins for organic panics)
+    let ds = SyntheticConfig {
+        n: 64,
+        d: 8,
+        clusters: 2,
+        beta: 0.2,
+        seed: 3,
+    }
+    .generate_with_test_fraction(0.0);
+    for action in [
+        FaultAction::Panic("legacy".into()),
+        FaultAction::Io("legacy".into()),
+    ] {
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            comm: CommModel::free(),
+            parallelism: 4,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::seed_from(5);
+        let mut coord = Coordinator::new(&ds.train, cfg, &mut rng);
+        coord.set_map_fault_hook(Some(fault_once(0, 2, action.clone())));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            coord.step(&mut rng);
+        }));
+        assert!(res.is_err(), "{action:?} with supervise off should abort");
+        assert!(coord.states().is_empty(), "aborted coordinator must be visibly poisoned");
+    }
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("cc_fault_tolerance").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn torn_generation_is_skipped_and_auto_resume_recovers() {
+    // gate 4: run a chain saving a generation ring, tear the newest
+    // generation mid-file (a crash mid-save), and verify auto-resume
+    // skips it, loads the newest VALID generation, and continues
+    let ds = SyntheticConfig {
+        n: 60,
+        d: 6,
+        clusters: 2,
+        beta: 0.2,
+        seed: 9,
+    }
+    .generate_with_test_fraction(0.0);
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        update_alpha: true,
+        comm: CommModel::free(),
+        parallelism: 1,
+        ..Default::default()
+    };
+    let dir = tmpdir("ring");
+    let ring = CheckpointDir::new(&dir, 3).unwrap();
+    let mut rng = Pcg64::seed_from(31);
+    let mut coord = Coordinator::new(&ds.train, cfg.clone(), &mut rng);
+    for _ in 0..5 {
+        coord.step(&mut rng);
+        ring.save(&Checkpoint::capture(&coord), coord.rounds).unwrap();
+    }
+    // the ring is bounded: 5 generations saved, only `keep` remain
+    let gens = ring.generations().unwrap();
+    assert_eq!(
+        gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(),
+        vec![3, 4, 5],
+        "ring should keep exactly the newest 3 generations"
+    );
+
+    // torn write: truncate the newest generation mid-file
+    let (newest, newest_path) = gens.last().unwrap().clone();
+    let bytes = std::fs::read(&newest_path).unwrap();
+    std::fs::write(&newest_path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let (got, ckpt) = ring
+        .load_latest_valid()
+        .unwrap()
+        .expect("a valid generation must survive the torn write");
+    assert_eq!(got, newest - 1, "auto-resume should fall back one generation");
+
+    let mut rng2 = Pcg64::seed_from(32);
+    let mut resumed = Coordinator::resume(&ds.train, cfg, &ckpt, &mut rng2).unwrap();
+    assert_eq!(resumed.rounds, got);
+    resumed.check_invariants().unwrap();
+    // the resumed chain keeps running (and keeps saving) cleanly
+    for _ in 0..3 {
+        resumed.step(&mut rng2);
+        ring.save(&Checkpoint::capture(&resumed), resumed.rounds).unwrap();
+        resumed.check_invariants().unwrap();
+    }
+    assert_eq!(resumed.rounds, got + 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
