@@ -71,7 +71,7 @@ use crate::model::{Model, ModelSpec};
 use crate::rng::Pcg64;
 use crate::special::logsumexp;
 use crate::runtime::Scorer;
-use crate::sampler::{KernelKind, ScoreMode, Shard, ShardSnapshot};
+use crate::sampler::{KernelKind, ScoreMode, Shard, ShardSnapshot, TableSet, TableSetBuilder};
 use crate::supercluster::{
     adaptive_mu_step, sample_mu_given_occupancy, sample_shuffle, ShuffleKernel,
 };
@@ -1564,6 +1564,23 @@ impl<'a> Coordinator<'a> {
     /// Total live clusters across all superclusters.
     pub fn num_clusters(&self) -> usize {
         self.states.iter().map(|s| s.num_clusters()).sum()
+    }
+
+    /// Export every live cluster's predictive table as an immutable
+    /// [`TableSet`] — the round-boundary snapshot hook of the serving
+    /// layer ([`crate::serve`]). Columns land in canonical order
+    /// (shards in shard order, clusters within a shard in slot order),
+    /// copied from the same per-cluster caches the sweep kernels score
+    /// through, so the export is bit-identical across host schedules
+    /// and consumes no RNG: calling this between rounds is invisible
+    /// to the chain's draw sequence.
+    pub fn export_table_set(&mut self) -> TableSet {
+        let mut b = TableSetBuilder::new(self.model.table_rows());
+        let model = &self.model;
+        for st in self.states.iter_mut() {
+            st.export_table_columns(model, &mut b);
+        }
+        b.finish()
     }
 
     /// Current concentration α.

@@ -20,7 +20,8 @@
 //! * **Layer 3 (this crate)** — [`sampler`]: the unified sampler core
 //!   (`ClusterSet` + `Shard` + the pluggable `TransitionKernel`s);
 //!   [`coordinator`]: the map-reduce-shaped parallel sampler;
-//!   [`serial`]: the single-shard baseline; [`mapreduce`]: the
+//!   [`serial`]: the single-shard baseline; [`serve`]: the long-running
+//!   query service over published round snapshots; [`mapreduce`]: the
 //!   in-process map-reduce runtime (persistent worker pool) with a
 //!   communication cost model; plus every substrate ([`rng`],
 //!   [`special`], [`data`], [`linalg`], [`metrics`], [`bench`],
@@ -88,6 +89,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod serial;
+pub mod serve;
 pub mod special;
 pub mod supercluster;
 pub mod testing;

@@ -4,6 +4,7 @@
 //! * `gen-data`    — generate a synthetic balanced Bernoulli-mixture dataset
 //! * `serial`      — run the serial collapsed-Gibbs baseline (Neal Alg. 3)
 //! * `run`         — run the parallel supercluster sampler (the paper)
+//! * `serve`       — long-running query service over published round snapshots
 //! * `tiny-images` — build the Tiny-Images-substitute corpus and run VQ
 //! * `help`        — this text
 
@@ -26,8 +27,9 @@ use clustercluster::rng::Pcg64;
 use clustercluster::runtime::ScorerKind;
 use clustercluster::sampler::{KernelKind, ScoreMode};
 use clustercluster::serial::{SerialConfig, SerialGibbs};
+use clustercluster::serve::{self, ServeConfig};
 use clustercluster::supercluster::ShuffleKernel;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 const HELP: &str = "\
@@ -57,6 +59,12 @@ COMMANDS
                [--retry-backoff-cap 1.0] [--quarantine-cooldown 3]
                [--checkpoint-dir ckpts/] [--checkpoint-every 10]
                [--checkpoint-keep 3]
+  serve        --n 5000 --d 64 --clusters 32 --workers 8
+               --addr 127.0.0.1:7878 [--rounds 0]
+               [--serve-trace serve.jsonl] [--trace-every 10]
+               [--checkpoint-dir ckpts/] [--checkpoint-every 10]
+               [--checkpoint-keep 3] [+ the run sampler flags;
+               bernoulli model only]
   tiny-images  --n 5000 --features 128 --workers 8 --rounds 30
   help
 
@@ -143,6 +151,21 @@ saved every --checkpoint-every rounds and at exit). When the directory
 already holds a loadable generation, the run AUTO-RESUMES from the
 newest valid one — torn files from a crash mid-save are skipped with a
 warning — so re-launching the same command continues the chain.
+
+serve keeps the chain alive as a long-running service (DESIGN.md
+section 13): the sampler refines in a background thread and publishes
+an immutable snapshot of the cluster predictive tables at every round
+boundary, while client connections answer score / assign / density /
+stats queries over a length-prefixed binary protocol on --addr (TCP
+host:port, or \"unix:/path\" for a Unix socket) — every answer comes
+from some exact posterior sample, never torn mid-sweep, and carries
+the round it was sampled at. INSERT/DELETE frames queue row edits that
+fold in at the next round boundary. --rounds bounds refinement (0 =
+refine until shutdown; serving continues after the budget either way),
+--serve-trace appends JSONL latency records (count/p50/p99 per query
+kind, queries/sec) every --trace-every rounds and at exit, and the
+--checkpoint-dir ring works exactly as in run: periodic + final
+generation saves, auto-resume on restart. Stop with a SHUTDOWN frame.
 ";
 
 /// Shared `--local-kernel` / legacy `--walker` parsing for both entry
@@ -278,6 +301,7 @@ fn main() {
         "gen-data" => cmd_gen_data(&args),
         "serial" => cmd_serial(&args),
         "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
         "tiny-images" => cmd_tiny_images(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
@@ -587,6 +611,40 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         println!("shard trace -> {path}");
     }
     Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let spec = model_arg(args)?;
+    if !matches!(spec, ModelSpec::Bernoulli) {
+        return Err(format!(
+            "serve requires --model bernoulli (wire rows are binary), got {}",
+            spec.name()
+        ));
+    }
+    let cfg = synth_cfg(args)?;
+    let ccfg = coordinator_cfg(args)?;
+    let workers = ccfg.workers;
+    let ds = cfg.generate();
+    let scfg = ServeConfig {
+        addr: args.get_str("addr", "127.0.0.1:7878")?,
+        rounds: args.get_u64("rounds", 0)?,
+        checkpoint_dir: args.get_opt_str("checkpoint-dir")?.map(PathBuf::from),
+        checkpoint_every: args.get_u64("checkpoint-every", 10)?,
+        checkpoint_keep: args.get_usize("checkpoint-keep", 3)?,
+        trace_path: args.get_opt_str("serve-trace")?.map(PathBuf::from),
+        trace_every: args.get_u64("trace-every", 0)?,
+        seed: args.get_u64("seed", 0)? ^ 0x5e12e,
+    };
+    let rounds = scfg.rounds;
+    let handle = serve::spawn(ds.train, ccfg, scfg)?;
+    println!(
+        "serving on {} (N={} D={}, K={workers} workers, rounds={}; send a SHUTDOWN frame to stop)",
+        handle.addr(),
+        cfg.n,
+        cfg.d,
+        if rounds == 0 { "unbounded".to_string() } else { rounds.to_string() },
+    );
+    handle.serve_forever()
 }
 
 fn cmd_tiny_images(args: &Args) -> Result<(), String> {

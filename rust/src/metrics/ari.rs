@@ -71,4 +71,58 @@ mod tests {
         assert_eq!(adjusted_rand_index(&[], &[]), 1.0);
         assert_eq!(adjusted_rand_index(&[1], &[7]), 1.0);
     }
+
+    // ---- pinned against hand-computed contingency tables ----
+
+    #[test]
+    fn pinned_straddling_split() {
+        // a = 000|111, b = 00|11|22. Contingency table:
+        //        b=0 b=1 b=2 | rows
+        //   a=0:  2   1   0  |  3
+        //   a=1:  0   1   2  |  3
+        //   cols: 2   2   2  |  n=6
+        // sum_ij = C(2,2)+C(2,2) = 2;  sum_a = 2*C(3,2) = 6;
+        // sum_b = 3*C(2,2) = 3;  total = C(6,2) = 15
+        // expected = 6*3/15 = 1.2;  max = (6+3)/2 = 4.5
+        // ARI = (2 - 1.2) / (4.5 - 1.2) = 0.8/3.3 = 8/33
+        let a = [0u32, 0, 0, 1, 1, 1];
+        let b = [0u32, 0, 1, 1, 2, 2];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((ari - 8.0 / 33.0).abs() < 1e-12, "got {ari}, want 8/33");
+    }
+
+    #[test]
+    fn pinned_crossed_pairs_are_negative() {
+        // a = 00|11, b = 0101: every table cell is 1, so sum_ij = 0.
+        // sum_a = sum_b = 2, total = C(4,2) = 6, expected = 2*2/6 = 2/3,
+        // max = 2.  ARI = (0 - 2/3)/(2 - 2/3) = -1/2 — below-chance
+        // agreement is negative by construction of the adjustment.
+        let a = [0u32, 0, 1, 1];
+        let b = [0u32, 1, 0, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((ari + 0.5).abs() < 1e-12, "got {ari}, want -1/2");
+    }
+
+    #[test]
+    fn pinned_singletons_vs_lump_is_zero() {
+        // a all-singletons (sum_a = 0), b one lump: sum_ij = 0 and
+        // expected = 0, so ARI = 0/((0 + C(4,2))/2) = 0 exactly — the
+        // two degenerate partitions carry no shared information.
+        let a = [0u32, 1, 2, 3];
+        let b = [5u32, 5, 5, 5];
+        assert_eq!(adjusted_rand_index(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn symmetric_in_its_arguments() {
+        let mut rng = Pcg64::seed_from(77);
+        for _ in 0..20 {
+            let n = 64;
+            let a: Vec<u32> = (0..n).map(|_| rng.next_below(5) as u32).collect();
+            let b: Vec<u32> = (0..n).map(|_| rng.next_below(7) as u32).collect();
+            let ab = adjusted_rand_index(&a, &b);
+            let ba = adjusted_rand_index(&b, &a);
+            assert!((ab - ba).abs() < 1e-12, "asymmetric: {ab} vs {ba}");
+        }
+    }
 }

@@ -1,0 +1,163 @@
+//! Log-bucketed latency histogram for the serving layer's
+//! `--serve-trace` output (p50/p99 per query kind, DESIGN.md §13).
+//!
+//! Latencies are recorded in microseconds into power-of-two buckets
+//! (bucket `i` covers `[2^(i-1), 2^i)` µs, bucket 0 covers `< 1` µs),
+//! so `record` is O(1), the whole histogram is a fixed 64-slot array
+//! (no allocation on the serve hot path), and quantiles are answered
+//! as the covering bucket's upper bound — a ≤ 2× overestimate, which
+//! is the right bias for a latency SLO line.
+
+use std::time::Duration;
+
+/// Fixed-size log₂-bucketed microsecond histogram.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// An empty histogram.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: [0u64; 64],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+
+    /// Record one observed latency.
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let idx = if us == 0 {
+            0
+        } else {
+            64 - us.leading_zeros() as usize
+        };
+        self.buckets[idx.min(63)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Number of recorded observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in microseconds (0.0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Largest recorded latency in microseconds.
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) in microseconds: the upper
+    /// bound of the bucket holding the ⌈q·count⌉-th observation,
+    /// clamped to the observed maximum. Returns 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let upper = if idx == 0 { 1u64 } else { 1u64 << idx };
+                return (upper.min(self.max_us.max(1))) as f64;
+            }
+        }
+        self.max_us as f64
+    }
+
+    /// Merge another histogram into this one (per-connection books are
+    /// folded into the server-wide book at trace-emission time).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.max_us(), 0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bound_the_data() {
+        let mut h = LatencyHistogram::new();
+        for us in [1u64, 2, 3, 5, 9, 17, 33, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 10);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+        // bucket upper bounds overestimate by at most 2x, and are
+        // clamped to the observed max
+        assert!(p99 <= h.max_us() as f64);
+        assert!(p50 >= 5.0 && p50 <= 18.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn single_value_quantile_hits_its_bucket() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(700));
+        // 700µs lands in (512, 1024]; upper bound clamped to max 700
+        assert_eq!(h.quantile(0.5), 700.0);
+        assert_eq!(h.quantile(1.0), 700.0);
+        assert_eq!(h.max_us(), 700);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(2000));
+        b.record(Duration::from_micros(30));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_us(), 2000);
+        assert!(a.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn zero_duration_is_recorded() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::from_micros(0));
+        assert_eq!(h.count(), 1);
+        // empty-bucket upper bound is 1µs but clamped to max(1)
+        assert_eq!(h.quantile(1.0), 1.0);
+    }
+}

@@ -1,15 +1,19 @@
 //! Evaluation metrics: effective sample size (Fig. 2a), adjusted Rand
 //! index for latent-structure recovery, MCMC trace recording with
-//! CSV/JSON emission for the figure benches, and the per-supercluster
+//! CSV/JSON emission for the figure benches, the per-supercluster
 //! trace (μ_k, occupancy, map time) that makes the non-uniform
-//! [`crate::coordinator::MuMode`]s observable.
+//! [`crate::coordinator::MuMode`]s observable, and the log-bucketed
+//! latency histogram behind the serving layer's `--serve-trace`
+//! p50/p99 output.
 
 pub mod ari;
 pub mod ess;
+pub mod latency;
 pub mod shard;
 pub mod trace;
 
 pub use ari::adjusted_rand_index;
 pub use ess::effective_sample_size;
+pub use latency::LatencyHistogram;
 pub use shard::{ShardTrace, ShardTraceRow};
 pub use trace::{McmcTrace, TraceRow};

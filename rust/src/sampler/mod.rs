@@ -64,5 +64,5 @@ pub use kernel::{
     CollapsedGibbs, KernelAssignment, KernelKind, SplitMerge, TransitionKernel, WalkerSlice,
     SPLIT_MERGE_GIBBS, SPLIT_MERGE_WALKER,
 };
-pub use score::ScoreMode;
+pub use score::{ScoreMode, TableSet, TableSetBuilder};
 pub use shard::{Shard, ShardSnapshot};

@@ -273,6 +273,150 @@ impl PackedTables {
     }
 }
 
+/// An immutable, densely packed export of every live cluster's
+/// predictive table — the read-only scoring surface of the serving
+/// layer ([`crate::serve`]).
+///
+/// Unlike the sweep-side [`PackedTables`] (slot-indexed, with dead
+/// columns and growth slack), a `TableSet` has exactly one column per
+/// **live** cluster, in deterministic export order: shards in shard
+/// order, clusters within a shard in slot order — the same canonical
+/// order every host schedule produces, so a `TableSet` exported at a
+/// given round is bit-identical across runs.
+///
+/// Columns are copied (in f64, no re-derivation) from the very
+/// `ClusterStats` caches the sweep kernels score through, so
+/// [`TableSet::score_rows`] via the default
+/// [`Scorer::score_rows_against_clusters`] is **bit-identical** to the
+/// in-sweep batched path over the same clusters — the exactness anchor
+/// the snapshot-consistency gate (`rust/tests/serve_consistency.rs`)
+/// pins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableSet {
+    /// table rows per column ([`crate::model::ComponentModel::table_rows`])
+    d: usize,
+    /// live cluster count (columns)
+    j: usize,
+    /// `bias[s]`: per-column scalar term (length `j`)
+    bias: Vec<f64>,
+    /// `diff[dd * j + s]`: per-(table-row, column) term, row-major
+    /// (length `d * j` — no stride slack, unlike [`PackedTables`])
+    diff: Vec<f64>,
+    /// `logn[s]` = ln n_s, the CRP prior factor (length `j`)
+    logn: Vec<f64>,
+    /// `counts[s]` = n_s, the integer occupancy (length `j`)
+    counts: Vec<u64>,
+}
+
+impl TableSet {
+    /// Table rows per column (`D` for Bernoulli).
+    pub fn table_rows(&self) -> usize {
+        self.d
+    }
+
+    /// Number of live clusters (columns).
+    pub fn num_clusters(&self) -> usize {
+        self.j
+    }
+
+    /// Per-column bias terms (length [`Self::num_clusters`]).
+    pub fn bias(&self) -> &[f64] {
+        &self.bias
+    }
+
+    /// Row-major `[table_rows, J]` diff block (`diff[dd * J + s]`).
+    pub fn diff(&self) -> &[f64] {
+        &self.diff
+    }
+
+    /// Per-column `ln n_s` (length [`Self::num_clusters`]).
+    pub fn logn(&self) -> &[f64] {
+        &self.logn
+    }
+
+    /// Per-column integer occupancy `n_s` (length [`Self::num_clusters`]).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total rows across all live clusters (Σ n_s).
+    pub fn total_rows(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Score `rows` of `data` against every column through `scorer` —
+    /// one contiguous block of [`Self::num_clusters`] log-likelihoods
+    /// per row appended to `out` (cleared first). This *is* the offline
+    /// [`Scorer::score_rows_against_clusters`] reference call; the
+    /// serving layer answers queries with exactly these bits.
+    pub fn score_rows(
+        &self,
+        scorer: &mut dyn Scorer,
+        data: &crate::data::BinMat,
+        rows: &[usize],
+        out: &mut Vec<f64>,
+    ) {
+        scorer.score_rows_against_clusters(
+            data, rows, &self.bias, &self.diff, self.d, self.j, out,
+        );
+    }
+}
+
+/// Builder for [`TableSet`]: columns are pushed one live cluster at a
+/// time (column-major, the order the cluster cache hands them out) and
+/// transposed into the row-major scorer layout by [`Self::finish`].
+#[derive(Debug)]
+pub struct TableSetBuilder {
+    d: usize,
+    bias: Vec<f64>,
+    logn: Vec<f64>,
+    counts: Vec<u64>,
+    /// staged columns, column-major: `cols[s * d + dd]`
+    cols: Vec<f64>,
+}
+
+impl TableSetBuilder {
+    /// Start a builder for tables with `d` rows per column.
+    pub fn new(d: usize) -> TableSetBuilder {
+        TableSetBuilder {
+            d,
+            bias: Vec::new(),
+            logn: Vec::new(),
+            counts: Vec::new(),
+            cols: Vec::new(),
+        }
+    }
+
+    /// Append one live cluster's column (its cached `bias`, `ln n`,
+    /// integer occupancy, and length-`d` diff column).
+    pub fn push_column(&mut self, bias: f64, logn: f64, n: u64, col: &[f64]) {
+        assert_eq!(col.len(), self.d, "column length must equal table rows");
+        self.bias.push(bias);
+        self.logn.push(logn);
+        self.counts.push(n);
+        self.cols.extend_from_slice(col);
+    }
+
+    /// Transpose the staged columns into the row-major scorer layout.
+    pub fn finish(self) -> TableSet {
+        let j = self.bias.len();
+        let mut diff = vec![0.0f64; self.d * j];
+        for s in 0..j {
+            for dd in 0..self.d {
+                diff[dd * j + s] = self.cols[s * self.d + dd];
+            }
+        }
+        TableSet {
+            d: self.d,
+            j,
+            bias: self.bias,
+            diff,
+            logn: self.logn,
+            counts: self.counts,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::cluster_set::ClusterSet;
@@ -508,5 +652,50 @@ mod tests {
         t.ensure_stride(12);
         assert!(t.queued[9] && t.queued[2]);
         assert_eq!(t.stale.len(), 2);
+    }
+
+    /// The builder's column-major → row-major transpose, and bit-equality
+    /// of [`TableSet::score_rows`] against a hand-rolled bias + Σ diff
+    /// evaluation in the same addition order.
+    #[test]
+    fn table_set_builder_transposes_and_scores_bitwise() {
+        let (d, j) = (5usize, 3usize);
+        let mut b = TableSetBuilder::new(d);
+        let mut rng = Pcg64::seed_from(77);
+        let mut cols: Vec<Vec<f64>> = Vec::new();
+        for s in 0..j {
+            let col: Vec<f64> = (0..d).map(|_| rng.next_f64() - 0.5).collect();
+            b.push_column(-(s as f64) - 1.0, (s as f64 + 1.0).ln(), s as u64 + 1, &col);
+            cols.push(col);
+        }
+        let t = b.finish();
+        assert_eq!(t.num_clusters(), j);
+        assert_eq!(t.table_rows(), d);
+        assert_eq!(t.total_rows(), 1 + 2 + 3);
+        for s in 0..j {
+            for dd in 0..d {
+                assert_eq!(t.diff()[dd * j + s].to_bits(), cols[s][dd].to_bits());
+            }
+        }
+        let data = rand_data(4, d, 78);
+        let mut scorer = crate::runtime::FallbackScorer::new();
+        let rows: Vec<usize> = (0..4).collect();
+        let mut got = Vec::new();
+        t.score_rows(&mut scorer, &data, &rows, &mut got);
+        assert_eq!(got.len(), 4 * j);
+        // reference: same addition order as the default scorer path
+        // (bias first, then diff terms for ascending set bits)
+        for (ri, &r) in rows.iter().enumerate() {
+            let mut want = vec![0.0f64; j];
+            want.copy_from_slice(t.bias());
+            data.for_each_one(r, |dd| {
+                for s in 0..j {
+                    want[s] += t.diff()[dd * j + s];
+                }
+            });
+            for s in 0..j {
+                assert_eq!(got[ri * j + s].to_bits(), want[s].to_bits(), "row {r} col {s}");
+            }
+        }
     }
 }

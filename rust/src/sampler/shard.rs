@@ -613,6 +613,27 @@ impl Shard {
         self.clusters.iter()
     }
 
+    /// Append this shard's live clusters as serving-table columns to a
+    /// [`TableSetBuilder`](super::score::TableSetBuilder), in slot
+    /// order — the round-boundary snapshot-export hook of the serving
+    /// layer ([`crate::serve`]). `&mut self` only because the
+    /// per-cluster predictive caches are (re)built on demand
+    /// ([`ClusterStats::cached_table`]); no RNG is consumed and no
+    /// chain state changes, so exporting is invisible to the sampler's
+    /// draw sequence.
+    pub(crate) fn export_table_columns(
+        &mut self,
+        model: &Model,
+        out: &mut super::score::TableSetBuilder,
+    ) {
+        for (_slot, c) in self.clusters.iter_mut() {
+            let ln_n = c.log_n();
+            let n = c.n();
+            let (bias, _aux, dtab) = c.cached_table(model);
+            out.push_column(bias, ln_n, n, dtab);
+        }
+    }
+
     /// Local cluster-slot assignment per resident row (aligned with
     /// [`Self::rows`]; for the serial whole-dataset shard this IS the
     /// global assignment vector).

@@ -20,7 +20,7 @@ use crate::model::alpha::{sample_alpha, GammaPrior};
 use crate::model::hyper::{BetaGridConfig, BetaUpdater};
 use crate::model::{Model, ModelSpec};
 use crate::rng::Pcg64;
-use crate::sampler::{KernelKind, ScoreMode, Shard};
+use crate::sampler::{KernelKind, ScoreMode, Shard, TableSet, TableSetBuilder};
 use crate::special::{lgamma, logsumexp};
 use crate::util::timer::PhaseTimer;
 use std::path::Path;
@@ -378,6 +378,17 @@ impl<'a> SerialGibbs<'a> {
     /// Active clusters (slot, stats).
     pub fn active_clusters(&self) -> impl Iterator<Item = (usize, &crate::model::ClusterStats)> {
         self.shard.active_clusters()
+    }
+
+    /// Export every live cluster's predictive table as an immutable
+    /// [`TableSet`] (slot order) — the serial-chain twin of
+    /// [`crate::coordinator::Coordinator::export_table_set`], for
+    /// sweep-boundary snapshot publication. Consumes no RNG and
+    /// changes no chain state.
+    pub fn export_table_set(&mut self) -> TableSet {
+        let mut b = TableSetBuilder::new(self.model.table_rows());
+        self.shard.export_table_columns(&self.model, &mut b);
+        b.finish()
     }
 
     /// Test-set predictive log-likelihood per datum:

@@ -1,0 +1,989 @@
+//! `repro serve` — clustering as a long-running service (DESIGN.md §13).
+//!
+//! A serve process holds the current chain state and answers
+//! assign / score / density / stats queries over the length-prefixed
+//! binary protocol in [`protocol`], on a TCP or Unix socket, while the
+//! MCMC coordinator keeps refining in a background **driver thread**.
+//!
+//! ## Snapshot publication contract
+//!
+//! Reads never touch live sampler state. At every round boundary the
+//! driver exports an immutable [`ServingSnapshot`] — the packed
+//! [`TableSet`] of every live cluster plus α and the model's
+//! empty-cluster predictive — and publishes it with an `Arc` swap.
+//! Connection threads clone the `Arc` (one short mutex hold, no data
+//! copy) and score against it with a private
+//! [`FallbackScorer`], so:
+//!
+//! * every query is answered from **some exact posterior sample** —
+//!   a state the chain actually visited at a round boundary — never
+//!   from torn mid-sweep state;
+//! * reads never block the chain and the chain never blocks reads
+//!   (the sampler holds no lock a reader waits on, and vice versa);
+//! * the response carries the snapshot's round, so a client (or the
+//!   consistency gate `rust/tests/serve_consistency.rs`) can pin the
+//!   exact posterior sample that answered.
+//!
+//! ## Online insert / delete
+//!
+//! Row inserts and deletes are queued ([`Request::Insert`] /
+//! [`Request::Delete`]) and applied at the **next round boundary**:
+//! the driver captures a [`Checkpoint`], applies the queued edits to
+//! the owned data matrix and the checkpointed assignments (an insert
+//! joins shard 0 as a fresh singleton cluster; a delete removes the
+//! row and shifts higher row ids down), and resumes. The sufficient-
+//! stat work is O(nnz) per edited row, but rebuilding shard state from
+//! the checkpoint is O(N) — honest scope: this is an edit path for
+//! trickle updates, not a bulk-load path. When no edits are queued the
+//! rebuild never runs, so a read-only serve process consumes exactly
+//! the canonical master-RNG draw sequence of an offline chain — the
+//! property the consistency gate pins bit-for-bit.
+//!
+//! ## Durability
+//!
+//! Rides the PR 9 checkpoint ring unchanged: with `--checkpoint-dir`,
+//! the driver saves a [`CheckpointDir`] generation every
+//! `--checkpoint-every` rounds plus one final generation on shutdown,
+//! and on startup auto-resumes from the latest valid generation
+//! (torn generations are skipped by [`CheckpointDir::load_latest_valid`]).
+//! Kill the process and restart it with the same flags: it resumes the
+//! chain and serves again.
+//!
+//! ## Observability
+//!
+//! `--serve-trace FILE` appends JSONL records (via [`crate::util::json`])
+//! with per-query-kind count / p50 / p99 latency columns
+//! ([`LatencyHistogram`]), overall queries/sec, and rounds refined.
+
+pub mod protocol;
+
+use std::fs::OpenOptions;
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Checkpoint, CheckpointDir, Coordinator, CoordinatorConfig};
+use crate::data::BinMat;
+use crate::mapreduce::{DelayHook, FaultHook};
+use crate::metrics::LatencyHistogram;
+use crate::model::ModelSpec;
+use crate::rng::Pcg64;
+use crate::runtime::FallbackScorer;
+use crate::sampler::TableSet;
+use crate::special::logsumexp;
+use crate::util::json::Json;
+
+use protocol::{
+    decode_request, encode_response, validate_frame_len, write_frame, AssignBody, DensityBody,
+    Request, Response, RowBits, ScoreBody, StatsBody, OP_DELETE, OP_INSERT,
+};
+
+/// Configuration of one serve process (the `repro serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// listen address: `host:port` for TCP (port 0 = ephemeral), or
+    /// `unix:/path/to.sock` for a Unix domain socket
+    pub addr: String,
+    /// total refinement rounds before the driver idles (0 = refine
+    /// until shutdown); resumed rounds count toward the budget
+    pub rounds: u64,
+    /// checkpoint generation-ring directory (`None` = no durability)
+    pub checkpoint_dir: Option<PathBuf>,
+    /// save a generation every this many rounds (0 = final save only)
+    pub checkpoint_every: u64,
+    /// generations retained in the ring
+    pub checkpoint_keep: usize,
+    /// JSONL latency-trace file (`None` = no trace)
+    pub trace_path: Option<PathBuf>,
+    /// emit a trace record every this many rounds (0 = shutdown only)
+    pub trace_every: u64,
+    /// master RNG seed for the background chain
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            rounds: 0,
+            checkpoint_dir: None,
+            checkpoint_every: 10,
+            checkpoint_keep: 3,
+            trace_path: None,
+            trace_every: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// One immutable published posterior sample — everything a read needs,
+/// behind one `Arc`: queries against it are bit-reproducible for as
+/// long as the client holds the `Arc`, regardless of how far the
+/// background chain has moved on.
+#[derive(Debug)]
+pub struct ServingSnapshot {
+    /// coordinator round this snapshot was exported at
+    pub round: u64,
+    /// concentration α at that round
+    pub alpha: f64,
+    /// rows in the served dataset at that round
+    pub n_rows: u64,
+    /// binary dimensions of the served dataset
+    pub dims: u32,
+    /// the model's empty-cluster predictive log-likelihood (−D·ln 2
+    /// for the symmetric Beta–Bernoulli)
+    pub log_pred_empty: f64,
+    /// packed predictive tables of every live cluster, canonical order
+    pub tables: TableSet,
+}
+
+/// A queued online edit, applied at the next round boundary.
+enum PendingOp {
+    /// row content as `BinMat` row words
+    Insert(Vec<u64>),
+    /// row index to remove (interpreted at application time, after
+    /// earlier queued ops have shifted indices)
+    Delete(u64),
+}
+
+// per-query-kind latency slots
+const K_PING: usize = 0;
+const K_STATS: usize = 1;
+const K_SCORE: usize = 2;
+const K_ASSIGN: usize = 3;
+const K_DENSITY: usize = 4;
+const K_INSERT: usize = 5;
+const K_DELETE: usize = 6;
+const KIND_NAMES: [&str; 7] = ["ping", "stats", "score", "assign", "density", "insert", "delete"];
+
+/// Server-wide latency book (one histogram per query kind).
+struct LatBook {
+    started: Instant,
+    hist: [LatencyHistogram; 7],
+}
+
+/// State shared between the driver, acceptor, and connection threads.
+struct Shared {
+    /// the published snapshot (`None` only before the first publish,
+    /// which happens before the acceptor starts)
+    snap: Mutex<Option<Arc<ServingSnapshot>>>,
+    /// cooperative shutdown flag, polled by every thread
+    stop: AtomicBool,
+    /// rounds the background chain has completed (mirror of the
+    /// published snapshot's round, readable without the mutex)
+    rounds: AtomicU64,
+    /// the driver exhausted its round budget and is idling
+    refine_done: AtomicBool,
+    /// queued online edits
+    pending: Mutex<Vec<PendingOp>>,
+    /// total queries answered
+    queries: AtomicU64,
+    /// latency histograms per query kind
+    lat: Mutex<LatBook>,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            snap: Mutex::new(None),
+            stop: AtomicBool::new(false),
+            rounds: AtomicU64::new(0),
+            refine_done: AtomicBool::new(false),
+            pending: Mutex::new(Vec::new()),
+            queries: AtomicU64::new(0),
+            lat: Mutex::new(LatBook {
+                started: Instant::now(),
+                hist: std::array::from_fn(|_| LatencyHistogram::new()),
+            }),
+        }
+    }
+}
+
+/// Handle to a running serve process: address, cooperative stop, join.
+pub struct ServeHandle {
+    addr: String,
+    shared: Arc<Shared>,
+    driver: thread::JoinHandle<Result<(), String>>,
+    acceptor: thread::JoinHandle<()>,
+}
+
+impl ServeHandle {
+    /// The resolved listen address (`host:port` with the real port for
+    /// TCP — useful with port 0 — or the `unix:`-prefixed socket path).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// The currently published snapshot.
+    pub fn snapshot(&self) -> Option<Arc<ServingSnapshot>> {
+        self.shared.snap.lock().unwrap().clone()
+    }
+
+    /// Rounds the background chain has completed.
+    pub fn rounds_refined(&self) -> u64 {
+        self.shared.rounds.load(Ordering::SeqCst)
+    }
+
+    /// Whether the driver has exhausted its round budget and is idling.
+    pub fn refinement_done(&self) -> bool {
+        self.shared.refine_done.load(Ordering::SeqCst)
+    }
+
+    /// Request cooperative shutdown (idempotent): the driver saves a
+    /// final checkpoint generation and every thread exits.
+    pub fn stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until shutdown is requested by someone else — a client's
+    /// `SHUTDOWN` frame or another thread calling through [`Self::stop`]
+    /// — then join. This is the `repro serve` foreground loop.
+    pub fn serve_forever(self) -> Result<(), String> {
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(50));
+        }
+        self.join()
+    }
+
+    /// Stop (if not already stopping) and wait for every thread. The
+    /// driver's terminal result is returned; a driver panic becomes an
+    /// `Err`.
+    pub fn join(self) -> Result<(), String> {
+        self.stop();
+        let r = match self.driver.join() {
+            Ok(r) => r,
+            Err(p) => Err(format!("serve driver panicked: {}", panic_text(&*p))),
+        };
+        let _ = self.acceptor.join();
+        r
+    }
+}
+
+fn panic_text(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic".to_string()
+    }
+}
+
+/// Start a serve process over an owned dataset. Binds the listener,
+/// starts the background driver (which publishes the first snapshot —
+/// resuming from the checkpoint ring when one is valid — before this
+/// function returns), then starts accepting connections.
+///
+/// Restricted to the Bernoulli model: the wire protocol carries binary
+/// rows. Returns `Err` on bind failure, on a non-Bernoulli config, or
+/// when checkpoint resume fails.
+pub fn spawn(data: BinMat, ccfg: CoordinatorConfig, scfg: ServeConfig) -> Result<ServeHandle, String> {
+    spawn_with_hooks(data, ccfg, scfg, None, None)
+}
+
+/// [`spawn`] with injected map-layer hooks — the consistency gate's
+/// lever for stalling / crashing background rounds
+/// ([`DelayHook`] / [`FaultHook`], installed on the coordinator exactly
+/// as in the fault-tolerance suite) while the serving side keeps
+/// answering from published snapshots.
+pub fn spawn_with_hooks(
+    data: BinMat,
+    ccfg: CoordinatorConfig,
+    scfg: ServeConfig,
+    delay: Option<DelayHook>,
+    fault: Option<FaultHook>,
+) -> Result<ServeHandle, String> {
+    if !matches!(ccfg.model, ModelSpec::Bernoulli) {
+        return Err(format!(
+            "repro serve requires the Bernoulli model (wire rows are binary); got {}",
+            ccfg.model.name()
+        ));
+    }
+    if data.rows() == 0 {
+        return Err("cannot serve an empty dataset".to_string());
+    }
+    let (listener, addr) =
+        Listener::bind(&scfg.addr).map_err(|e| format!("bind {}: {e}", scfg.addr))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("set_nonblocking: {e}"))?;
+    let shared = Arc::new(Shared::new());
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+    let driver = {
+        let shared = Arc::clone(&shared);
+        let scfg = scfg.clone();
+        thread::Builder::new()
+            .name("serve-driver".to_string())
+            .spawn(move || driver_loop(data, ccfg, scfg, delay, fault, &shared, ready_tx))
+            .map_err(|e| format!("spawn driver: {e}"))?
+    };
+    match ready_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            let _ = driver.join();
+            return Err(e);
+        }
+        Err(_) => {
+            // driver died before signaling readiness
+            return Err(match driver.join() {
+                Ok(Err(e)) => e,
+                Ok(Ok(())) => "serve driver exited before publishing a snapshot".to_string(),
+                Err(p) => format!("serve driver panicked: {}", panic_text(&*p)),
+            });
+        }
+    }
+    let acceptor = {
+        let shared = Arc::clone(&shared);
+        thread::Builder::new()
+            .name("serve-acceptor".to_string())
+            .spawn(move || acceptor_loop(listener, &shared))
+            .map_err(|e| format!("spawn acceptor: {e}"))?
+    };
+    Ok(ServeHandle {
+        addr,
+        shared,
+        driver,
+        acceptor,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// background driver
+
+fn driver_loop(
+    mut data: BinMat,
+    ccfg: CoordinatorConfig,
+    scfg: ServeConfig,
+    delay: Option<DelayHook>,
+    fault: Option<FaultHook>,
+    shared: &Shared,
+    ready_tx: mpsc::Sender<Result<(), String>>,
+) -> Result<(), String> {
+    let mut ready = Some(ready_tx);
+    // an error before readiness must surface from spawn(); after
+    // readiness the serving side keeps answering from the last
+    // published snapshot and the error surfaces from join()
+    macro_rules! fail {
+        ($e:expr) => {{
+            let e: String = $e;
+            if let Some(tx) = ready.take() {
+                let _ = tx.send(Err(e.clone()));
+            }
+            return Err(e);
+        }};
+    }
+    let ring = match &scfg.checkpoint_dir {
+        Some(d) => match CheckpointDir::new(d, scfg.checkpoint_keep) {
+            Ok(r) => Some(r),
+            Err(e) => fail!(format!("checkpoint dir {}: {e}", d.display())),
+        },
+        None => None,
+    };
+    let mut resume_from: Option<Checkpoint> = match &ring {
+        Some(r) => match r.load_latest_valid() {
+            Ok(found) => found.map(|(_, c)| c),
+            Err(e) => fail!(format!("scanning checkpoint ring: {e}")),
+        },
+        None => None,
+    };
+    let mut rng = Pcg64::seed_from(scfg.seed);
+    'outer: loop {
+        let mut coord = match resume_from.take() {
+            Some(ck) => match Coordinator::resume(&data, ccfg.clone(), &ck, &mut rng) {
+                Ok(c) => c,
+                Err(e) => fail!(format!("checkpoint resume: {e}")),
+            },
+            None => Coordinator::new(&data, ccfg.clone(), &mut rng),
+        };
+        coord.set_map_delay_hook(delay.clone());
+        coord.set_map_fault_hook(fault.clone());
+        publish(shared, &mut coord, data.rows());
+        if let Some(tx) = ready.take() {
+            let _ = tx.send(Ok(()));
+        }
+        loop {
+            if shared.stop.load(Ordering::SeqCst) {
+                if let Some(r) = &ring {
+                    if let Err(e) = r.save(&Checkpoint::capture(&coord), coord.rounds) {
+                        eprintln!("warning: final checkpoint save failed: {e}");
+                    }
+                }
+                emit_trace(&scfg, shared, coord.rounds);
+                return Ok(());
+            }
+            let ops: Vec<PendingOp> = std::mem::take(&mut *shared.pending.lock().unwrap());
+            if !ops.is_empty() {
+                let mut ck = Checkpoint::capture(&coord);
+                drop(coord);
+                apply_pending(&mut data, &mut ck, ops);
+                resume_from = Some(ck);
+                continue 'outer;
+            }
+            if scfg.rounds > 0 && coord.rounds >= scfg.rounds {
+                shared.refine_done.store(true, Ordering::SeqCst);
+                thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            coord.step(&mut rng);
+            publish(shared, &mut coord, data.rows());
+            if let Some(r) = &ring {
+                if scfg.checkpoint_every > 0 && coord.rounds % scfg.checkpoint_every == 0 {
+                    if let Err(e) = r.save(&Checkpoint::capture(&coord), coord.rounds) {
+                        eprintln!("warning: periodic checkpoint save failed: {e}");
+                    }
+                }
+            }
+            if scfg.trace_every > 0 && coord.rounds % scfg.trace_every == 0 {
+                emit_trace(&scfg, shared, coord.rounds);
+            }
+        }
+    }
+}
+
+/// Round-boundary snapshot publication: export the packed tables (no
+/// RNG consumed, no chain state changed) and swap the `Arc`.
+fn publish(shared: &Shared, coord: &mut Coordinator<'_>, n_rows: usize) {
+    let tables = coord.export_table_set();
+    let bern = coord.model.as_bernoulli();
+    let snap = ServingSnapshot {
+        round: coord.rounds,
+        alpha: coord.alpha,
+        n_rows: n_rows as u64,
+        dims: bern.d as u32,
+        log_pred_empty: bern.empty_cluster_loglik(),
+        tables,
+    };
+    *shared.snap.lock().unwrap() = Some(Arc::new(snap));
+    shared.rounds.store(coord.rounds, Ordering::SeqCst);
+}
+
+/// Apply queued edits to the owned data matrix and the checkpointed
+/// assignments. Inserts append to the matrix and join shard 0 as a
+/// fresh singleton cluster; deletes remove the row everywhere and
+/// shift higher row ids down. Stale deletes (index out of range at
+/// application time) are dropped with a warning.
+fn apply_pending(data: &mut BinMat, ck: &mut Checkpoint, ops: Vec<PendingOp>) {
+    let d = data.dims();
+    let wpr = d.div_ceil(64);
+    let mut n = data.rows();
+    let mut words: Vec<u64> = data.words().to_vec();
+    for op in ops {
+        match op {
+            PendingOp::Insert(row_words) => {
+                debug_assert_eq!(row_words.len(), wpr);
+                words.extend_from_slice(&row_words);
+                let sh = &mut ck.shards[0];
+                // fresh singleton: one past the shard's highest slot
+                let next_slot = sh.1.iter().map(|&a| a + 1).max().unwrap_or(0);
+                sh.0.push(n as u64);
+                sh.1.push(next_slot);
+                n += 1;
+            }
+            PendingOp::Delete(r) => {
+                let r = r as usize;
+                if r >= n {
+                    eprintln!("warning: dropping stale delete of row {r} (have {n} rows)");
+                    continue;
+                }
+                words.drain(r * wpr..(r + 1) * wpr);
+                n -= 1;
+                for (rows, assign) in ck.shards.iter_mut() {
+                    let mut i = 0;
+                    while i < rows.len() {
+                        if rows[i] == r as u64 {
+                            rows.remove(i);
+                            assign.remove(i);
+                        } else {
+                            if rows[i] > r as u64 {
+                                rows[i] -= 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    *data = BinMat::from_words(n, d, words);
+}
+
+/// Append one JSONL trace record: rounds refined, overall queries/sec,
+/// and per-kind count / p50 / p99 latency columns.
+fn emit_trace(scfg: &ServeConfig, shared: &Shared, rounds: u64) {
+    let Some(path) = &scfg.trace_path else {
+        return;
+    };
+    let mut j = Json::obj();
+    {
+        let book = shared.lat.lock().unwrap();
+        let elapsed = book.started.elapsed().as_secs_f64().max(1e-9);
+        let total: u64 = book.hist.iter().map(|h| h.count()).sum();
+        j.set("rounds_refined", Json::num(rounds as f64));
+        j.set("elapsed_s", Json::num(elapsed));
+        j.set("queries", Json::num(total as f64));
+        j.set("qps", Json::num(total as f64 / elapsed));
+        for (name, h) in KIND_NAMES.iter().zip(book.hist.iter()) {
+            j.set(&format!("{name}_count"), Json::num(h.count() as f64));
+            j.set(&format!("{name}_p50_us"), Json::num(h.quantile(0.50)));
+            j.set(&format!("{name}_p99_us"), Json::num(h.quantile(0.99)));
+        }
+    }
+    let line = j.to_string();
+    match OpenOptions::new().create(true).append(true).open(path) {
+        Ok(mut f) => {
+            if let Err(e) = writeln!(f, "{line}") {
+                eprintln!("warning: serve-trace write failed: {e}");
+            }
+        }
+        Err(e) => eprintln!("warning: serve-trace open failed: {e}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sockets
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Listener {
+    /// Bind `host:port` (TCP) or `unix:/path` and return the handle
+    /// plus the resolved display address.
+    fn bind(addr: &str) -> std::io::Result<(Listener, String)> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                return Ok((Listener::Unix(l), format!("unix:{path}")));
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix sockets are not supported on this platform",
+                ));
+            }
+        }
+        let l = TcpListener::bind(addr)?;
+        let resolved = l.local_addr()?.to_string();
+        Ok((Listener::Tcp(l), resolved))
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> std::io::Result<Stream> {
+        match self {
+            Listener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                let _ = s.set_nodelay(true);
+                Ok(Stream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Listener::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}
+
+impl Stream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl std::io::Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl std::io::Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// acceptor + connections
+
+fn acceptor_loop(listener: Listener, shared: &Arc<Shared>) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                let shared = Arc::clone(shared);
+                if let Ok(h) = thread::Builder::new()
+                    .name("serve-conn".to_string())
+                    .spawn(move || conn_loop(stream, &shared))
+                {
+                    conns.push(h);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Outcome of one server-side frame read.
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// clean EOF, peer reset, or cooperative stop
+    Closed,
+    /// length-prefix violation or mid-frame EOF: respond + disconnect
+    FramingError(String),
+}
+
+enum ReadStatus {
+    Done,
+    Closed,
+    Error(String),
+}
+
+/// Fill `buf` from the stream, polling the stop flag across read
+/// timeouts. `at_boundary` distinguishes a clean EOF (no bytes of this
+/// frame read yet) from a truncated frame.
+fn read_full(stream: &mut Stream, buf: &mut [u8], shared: &Shared, at_boundary: bool) -> ReadStatus {
+    use std::io::Read as _;
+    let mut got = 0usize;
+    while got < buf.len() {
+        if shared.stop.load(Ordering::SeqCst) {
+            return ReadStatus::Closed;
+        }
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if at_boundary && got == 0 {
+                    ReadStatus::Closed
+                } else {
+                    ReadStatus::Error("unexpected end of stream mid-frame".to_string())
+                };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                continue;
+            }
+            Err(_) => return ReadStatus::Closed,
+        }
+    }
+    ReadStatus::Done
+}
+
+fn read_frame_server(stream: &mut Stream, shared: &Shared) -> FrameRead {
+    let mut hdr = [0u8; 4];
+    match read_full(stream, &mut hdr, shared, true) {
+        ReadStatus::Done => {}
+        ReadStatus::Closed => return FrameRead::Closed,
+        ReadStatus::Error(e) => return FrameRead::FramingError(e),
+    }
+    let len = u32::from_le_bytes(hdr);
+    // the pre-allocation gate: a hostile prefix cannot OOM the server
+    if let Err(e) = validate_frame_len(len) {
+        return FrameRead::FramingError(e.0);
+    }
+    let mut payload = vec![0u8; len as usize];
+    match read_full(stream, &mut payload, shared, false) {
+        ReadStatus::Done => FrameRead::Frame(payload),
+        ReadStatus::Closed => FrameRead::Closed,
+        ReadStatus::Error(e) => FrameRead::FramingError(e),
+    }
+}
+
+fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut scorer = FallbackScorer::new();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let payload = match read_frame_server(&mut stream, shared) {
+            FrameRead::Frame(p) => p,
+            FrameRead::Closed => return,
+            FrameRead::FramingError(e) => {
+                let resp = encode_response(&Response::Error(format!("framing error: {e}")));
+                let _ = write_frame(&mut stream, &resp);
+                return;
+            }
+        };
+        let t0 = Instant::now();
+        let (resp, kind) = match decode_request(&payload) {
+            Ok(req) => handle_request(req, shared, &mut scorer),
+            Err(e) => (Response::Error(format!("protocol error: {e}")), None),
+        };
+        if let Some(k) = kind {
+            shared.lat.lock().unwrap().hist[k].record(t0.elapsed());
+            shared.queries.fetch_add(1, Ordering::SeqCst);
+        }
+        let shutting = matches!(resp, Response::ShuttingDown);
+        if write_frame(&mut stream, &encode_response(&resp)).is_err() {
+            return;
+        }
+        if shutting {
+            return;
+        }
+    }
+}
+
+fn current(shared: &Shared) -> Option<Arc<ServingSnapshot>> {
+    shared.snap.lock().unwrap().clone()
+}
+
+/// Score one wire row against the current snapshot's tables — the
+/// exact offline reference call
+/// ([`TableSet::score_rows`] through the pure-Rust [`FallbackScorer`]).
+fn score_row(
+    shared: &Shared,
+    row: &RowBits,
+    scorer: &mut FallbackScorer,
+) -> Result<(Arc<ServingSnapshot>, Vec<f64>), String> {
+    let Some(s) = current(shared) else {
+        return Err("no snapshot published yet".to_string());
+    };
+    if row.d != s.dims {
+        return Err(format!(
+            "row has {} dims, served dataset has {}",
+            row.d, s.dims
+        ));
+    }
+    let m = row.to_binmat();
+    let mut out = Vec::new();
+    s.tables.score_rows(scorer, &m, &[0], &mut out);
+    Ok((s, out))
+}
+
+fn handle_request(
+    req: Request,
+    shared: &Shared,
+    scorer: &mut FallbackScorer,
+) -> (Response, Option<usize>) {
+    match req {
+        Request::Ping => (Response::Pong, Some(K_PING)),
+        Request::Stats => {
+            let resp = match current(shared) {
+                Some(s) => Response::Stats(StatsBody {
+                    round: s.round,
+                    rows: s.n_rows,
+                    dims: s.dims,
+                    clusters: s.tables.num_clusters() as u32,
+                    alpha: s.alpha,
+                    queries: shared.queries.load(Ordering::SeqCst),
+                }),
+                None => Response::Error("no snapshot published yet".to_string()),
+            };
+            (resp, Some(K_STATS))
+        }
+        Request::Score(row) => {
+            let resp = match score_row(shared, &row, scorer) {
+                Ok((s, scores)) => Response::Score(ScoreBody {
+                    round: s.round,
+                    log_pred_empty: s.log_pred_empty,
+                    scores,
+                }),
+                Err(e) => Response::Error(e),
+            };
+            (resp, Some(K_SCORE))
+        }
+        Request::Assign(row) => {
+            let resp = match score_row(shared, &row, scorer) {
+                Ok((s, scores)) => {
+                    // deterministic MAP: start from the new-cluster
+                    // weight; an existing cluster must strictly exceed
+                    // the incumbent, so ties resolve to the earliest
+                    // candidate in snapshot order
+                    let mut cluster = -1i64;
+                    let mut w = s.alpha.ln() + s.log_pred_empty;
+                    for (i, &sc) in scores.iter().enumerate() {
+                        let wi = s.tables.logn()[i] + sc;
+                        if wi > w {
+                            w = wi;
+                            cluster = i as i64;
+                        }
+                    }
+                    Response::Assign(AssignBody {
+                        round: s.round,
+                        cluster,
+                        log_weight: w,
+                    })
+                }
+                Err(e) => Response::Error(e),
+            };
+            (resp, Some(K_ASSIGN))
+        }
+        Request::Density(row) => {
+            let resp = match score_row(shared, &row, scorer) {
+                Ok((s, scores)) => {
+                    let mut terms: Vec<f64> = scores
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &sc)| s.tables.logn()[i] + sc)
+                        .collect();
+                    terms.push(s.alpha.ln() + s.log_pred_empty);
+                    let log_density = logsumexp(&terms) - (s.n_rows as f64 + s.alpha).ln();
+                    Response::Density(DensityBody {
+                        round: s.round,
+                        log_density,
+                    })
+                }
+                Err(e) => Response::Error(e),
+            };
+            (resp, Some(K_DENSITY))
+        }
+        Request::Insert(row) => {
+            let resp = match current(shared) {
+                Some(s) if row.d == s.dims => {
+                    let mut q = shared.pending.lock().unwrap();
+                    let queued_inserts = q
+                        .iter()
+                        .filter(|op| matches!(op, PendingOp::Insert(_)))
+                        .count() as u64;
+                    let provisional = s.n_rows + queued_inserts;
+                    q.push(PendingOp::Insert(row.to_words()));
+                    Response::Queued {
+                        op: OP_INSERT,
+                        row: provisional,
+                    }
+                }
+                Some(s) => Response::Error(format!(
+                    "row has {} dims, served dataset has {}",
+                    row.d, s.dims
+                )),
+                None => Response::Error("no snapshot published yet".to_string()),
+            };
+            (resp, Some(K_INSERT))
+        }
+        Request::Delete(r) => {
+            shared.pending.lock().unwrap().push(PendingOp::Delete(r));
+            (Response::Queued { op: OP_DELETE, row: r }, Some(K_DELETE))
+        }
+        Request::Shutdown => {
+            shared.stop.store(true, Ordering::SeqCst);
+            (Response::ShuttingDown, None)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client
+
+/// Minimal blocking client for the serve protocol — the loopback test
+/// harness and the `repro serve --ping` probe. One request in flight
+/// at a time.
+pub struct Client {
+    stream: Stream,
+}
+
+impl Client {
+    /// Connect to `host:port` (TCP) or `unix:/path`.
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                Stream::Unix(UnixStream::connect(path)?)
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = path;
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Unsupported,
+                    "unix sockets are not supported on this platform",
+                ));
+            }
+        } else {
+            let s = TcpStream::connect(addr)?;
+            let _ = s.set_nodelay(true);
+            Stream::Tcp(s)
+        };
+        Ok(Client { stream })
+    }
+
+    /// Cap how long [`Self::request`] / [`Self::read_response`] wait
+    /// for a response (tests use this so a server bug cannot hang them).
+    pub fn set_timeout(&mut self, d: Option<Duration>) -> std::io::Result<()> {
+        self.stream.set_read_timeout(d)
+    }
+
+    /// Send one request and wait for its response.
+    pub fn request(&mut self, req: &Request) -> std::io::Result<Response> {
+        write_frame(&mut self.stream, &protocol::encode_request(req))?;
+        self.read_response()
+    }
+
+    /// Send raw bytes as-is — the fuzz suite's malformed-frame lever.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        use std::io::Write as _;
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Half-close the write side (TCP only) so the server sees EOF
+    /// while responses can still be read.
+    pub fn finish_writes(&mut self) -> std::io::Result<()> {
+        match &self.stream {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Write),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Write),
+        }
+    }
+
+    /// Read one response frame.
+    pub fn read_response(&mut self) -> std::io::Result<Response> {
+        let payload = protocol::read_frame(&mut self.stream)?;
+        protocol::decode_response(&payload)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.0))
+    }
+}

@@ -1,0 +1,686 @@
+//! Length-prefixed binary wire protocol for [`repro serve`](crate::serve).
+//!
+//! A **frame** is a little-endian `u32` payload length followed by
+//! exactly that many payload bytes. The payload is one opcode byte plus
+//! an opcode-specific body. Responses use the same framing with
+//! response tags in the `0x80+` range so a stream captured mid-flight
+//! is self-describing.
+//!
+//! The codec is deliberately split from the socket layer: every decode
+//! path here is a pure, bounds-checked, `Result`-returning function
+//! over a byte slice, so the fuzz suite (`rust/tests/serve_protocol.rs`)
+//! can hammer truncations, bit flips, and random garbage without a
+//! socket in the loop — and the connection loop in [`crate::serve`]
+//! reaches the exact same functions, so loopback coverage and pure
+//! coverage certify the same code.
+//!
+//! Hardening contract (mirrors the checkpoint loader's hostile-length
+//! discipline in [`crate::coordinator::checkpoint`]):
+//!
+//! * a length prefix larger than [`MAX_FRAME`] is rejected **before**
+//!   any allocation — a hostile header cannot OOM the server;
+//! * every multi-byte read is bounds-checked against the slice;
+//! * trailing bytes after a complete body are an error (no smuggling);
+//! * row bitmaps must zero their padding bits, so each (d, row) value
+//!   has exactly one wire encoding.
+
+use std::fmt;
+use std::io::{self, Read, Write};
+
+use crate::data::BinMat;
+
+/// Hard cap on a frame's payload length in bytes (1 MiB). Checked
+/// against the raw length prefix before any buffer is allocated.
+pub const MAX_FRAME: u32 = 1 << 20;
+
+/// Request opcode: liveness probe, empty body.
+pub const OP_PING: u8 = 0x01;
+/// Request opcode: snapshot + counter summary, empty body.
+pub const OP_STATS: u8 = 0x02;
+/// Request opcode: per-cluster log-likelihood block of one row.
+pub const OP_SCORE: u8 = 0x03;
+/// Request opcode: MAP cluster assignment of one row.
+pub const OP_ASSIGN: u8 = 0x04;
+/// Request opcode: predictive log-density of one row.
+pub const OP_DENSITY: u8 = 0x05;
+/// Request opcode: queue a row insert for the next round boundary.
+pub const OP_INSERT: u8 = 0x06;
+/// Request opcode: queue a row delete for the next round boundary.
+pub const OP_DELETE: u8 = 0x07;
+/// Request opcode: stop refining, checkpoint, and shut the server down.
+pub const OP_SHUTDOWN: u8 = 0x0F;
+
+/// Response tag: reply to [`OP_PING`].
+pub const RESP_PONG: u8 = 0x81;
+/// Response tag: reply to [`OP_STATS`].
+pub const RESP_STATS: u8 = 0x82;
+/// Response tag: reply to [`OP_SCORE`].
+pub const RESP_SCORE: u8 = 0x83;
+/// Response tag: reply to [`OP_ASSIGN`].
+pub const RESP_ASSIGN: u8 = 0x84;
+/// Response tag: reply to [`OP_DENSITY`].
+pub const RESP_DENSITY: u8 = 0x85;
+/// Response tag: insert/delete acknowledged and queued.
+pub const RESP_QUEUED: u8 = 0x86;
+/// Response tag: reply to [`OP_SHUTDOWN`].
+pub const RESP_SHUTDOWN: u8 = 0x8F;
+/// Response tag: protocol or query error (UTF-8 message body).
+pub const RESP_ERROR: u8 = 0xEE;
+
+/// A malformed frame or payload. Carries a human-readable reason; the
+/// connection loop forwards it to the client as a [`Response::Error`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T, ProtoError> {
+    Err(ProtoError(msg.into()))
+}
+
+/// One binary data row on the wire: `d` dimensions as an LSB-first
+/// bitmap of `ceil(d/8)` bytes. Padding bits above `d` in the last
+/// byte MUST be zero (enforced on decode), so every row has exactly
+/// one encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowBits {
+    /// number of binary dimensions (must match the served dataset)
+    pub d: u32,
+    /// `ceil(d/8)` bitmap bytes, bit `i` of byte `i/8` = dimension `i`
+    pub bytes: Vec<u8>,
+}
+
+impl RowBits {
+    /// Build from an explicit list of set dimensions (`ones` may be in
+    /// any order; out-of-range indices panic — this is the trusted,
+    /// sender-side constructor).
+    pub fn from_ones(d: u32, ones: &[u32]) -> RowBits {
+        let mut bytes = vec![0u8; (d as usize).div_ceil(8)];
+        for &i in ones {
+            assert!(i < d, "dimension {i} out of range for d={d}");
+            bytes[(i / 8) as usize] |= 1 << (i % 8);
+        }
+        RowBits { d, bytes }
+    }
+
+    /// Encode row `r` of a [`BinMat`] (the loopback test path: the same
+    /// rows the offline reference scores go over the wire bit-for-bit).
+    pub fn from_binmat(m: &BinMat, r: usize) -> RowBits {
+        let d = m.dims() as u32;
+        let mut bytes = vec![0u8; m.dims().div_ceil(8)];
+        m.for_each_one(r, |i| bytes[i / 8] |= 1 << (i % 8));
+        RowBits { d, bytes }
+    }
+
+    /// Unpack into the `u64` row-word layout of [`BinMat`]
+    /// (`ceil(d/64)` little-endian words, LSB-first within each word).
+    pub fn to_words(&self) -> Vec<u64> {
+        let d = self.d as usize;
+        let mut words = vec![0u64; d.div_ceil(64)];
+        for (bi, &b) in self.bytes.iter().enumerate() {
+            words[bi / 8] |= (b as u64) << ((bi % 8) * 8);
+        }
+        words
+    }
+
+    /// Wrap into a 1-row [`BinMat`] for the read-only scoring path.
+    pub fn to_binmat(&self) -> BinMat {
+        BinMat::from_words(1, self.d as usize, self.to_words())
+    }
+}
+
+/// One decoded client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// liveness probe
+    Ping,
+    /// snapshot + counter summary
+    Stats,
+    /// per-cluster log-likelihood block of one row
+    Score(RowBits),
+    /// MAP cluster assignment of one row
+    Assign(RowBits),
+    /// predictive log-density of one row
+    Density(RowBits),
+    /// queue a row insert for the next round boundary
+    Insert(RowBits),
+    /// queue a delete of the given row index for the next round boundary
+    Delete(u64),
+    /// stop refining, save a final checkpoint, and shut down
+    Shutdown,
+}
+
+/// Stats summary body ([`RESP_STATS`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsBody {
+    /// coordinator round of the published snapshot
+    pub round: u64,
+    /// rows in the served dataset at that snapshot
+    pub rows: u64,
+    /// binary dimensions of the served dataset
+    pub dims: u32,
+    /// live clusters in the snapshot
+    pub clusters: u32,
+    /// concentration α at the snapshot
+    pub alpha: f64,
+    /// queries answered by this server process so far
+    pub queries: u64,
+}
+
+/// Score body ([`RESP_SCORE`]): the raw per-cluster log-likelihood
+/// block, bit-identical to offline
+/// [`Scorer::score_rows_against_clusters`](crate::runtime::Scorer::score_rows_against_clusters)
+/// over the snapshot's exported [`TableSet`](crate::sampler::TableSet).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScoreBody {
+    /// coordinator round of the snapshot that answered
+    pub round: u64,
+    /// empty-cluster predictive log-likelihood for this model
+    pub log_pred_empty: f64,
+    /// one log-likelihood per live cluster, snapshot slot order
+    pub scores: Vec<f64>,
+}
+
+/// Assign body ([`RESP_ASSIGN`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssignBody {
+    /// coordinator round of the snapshot that answered
+    pub round: u64,
+    /// MAP cluster index in the snapshot's slot order, `-1` = new cluster
+    pub cluster: i64,
+    /// the winning unnormalized log posterior weight
+    pub log_weight: f64,
+}
+
+/// Density body ([`RESP_DENSITY`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DensityBody {
+    /// coordinator round of the snapshot that answered
+    pub round: u64,
+    /// predictive log-density of the queried row
+    pub log_density: f64,
+}
+
+/// One decoded server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// reply to [`Request::Ping`]
+    Pong,
+    /// reply to [`Request::Stats`]
+    Stats(StatsBody),
+    /// reply to [`Request::Score`]
+    Score(ScoreBody),
+    /// reply to [`Request::Assign`]
+    Assign(AssignBody),
+    /// reply to [`Request::Density`]
+    Density(DensityBody),
+    /// insert/delete queued: echoes the opcode and the row index
+    /// (provisional for inserts — applied at the next round boundary)
+    Queued {
+        /// the request opcode being acknowledged
+        op: u8,
+        /// affected row index (provisional for inserts)
+        row: u64,
+    },
+    /// reply to [`Request::Shutdown`]
+    ShuttingDown,
+    /// protocol or query error (the connection stays up for in-frame
+    /// decode errors; framing errors disconnect)
+    Error(String),
+}
+
+// ---------------------------------------------------------------------------
+// cursor primitives
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() - self.i < n {
+            return err(format!(
+                "truncated payload: need {n} more bytes, have {}",
+                self.b.len() - self.i
+            ));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn done(&self) -> Result<(), ProtoError> {
+        if self.i != self.b.len() {
+            return err(format!(
+                "{} trailing bytes after complete body",
+                self.b.len() - self.i
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn decode_row(cur: &mut Cur<'_>) -> Result<RowBits, ProtoError> {
+    let d = cur.u32()?;
+    if d == 0 {
+        return err("row with zero dimensions");
+    }
+    let nbytes = (d as usize).div_ceil(8);
+    let bytes = cur.take(nbytes)?.to_vec();
+    // reject nonzero padding bits so each row has exactly one encoding
+    let pad = (nbytes * 8 - d as usize) as u32;
+    if pad > 0 {
+        let last = bytes[nbytes - 1];
+        if last >> (8 - pad) != 0 {
+            return err("nonzero padding bits in row bitmap");
+        }
+    }
+    Ok(RowBits { d, bytes })
+}
+
+fn encode_row(out: &mut Vec<u8>, row: &RowBits) {
+    debug_assert_eq!(row.bytes.len(), (row.d as usize).div_ceil(8));
+    put_u32(out, row.d);
+    out.extend_from_slice(&row.bytes);
+}
+
+// ---------------------------------------------------------------------------
+// request codec
+
+/// Decode one request payload (the bytes after the length prefix).
+/// Never panics on any input; all failures are [`ProtoError`]s.
+pub fn decode_request(payload: &[u8]) -> Result<Request, ProtoError> {
+    let mut cur = Cur::new(payload);
+    let op = match cur.u8() {
+        Ok(op) => op,
+        Err(_) => return err("empty payload"),
+    };
+    let req = match op {
+        OP_PING => Request::Ping,
+        OP_STATS => Request::Stats,
+        OP_SCORE => Request::Score(decode_row(&mut cur)?),
+        OP_ASSIGN => Request::Assign(decode_row(&mut cur)?),
+        OP_DENSITY => Request::Density(decode_row(&mut cur)?),
+        OP_INSERT => Request::Insert(decode_row(&mut cur)?),
+        OP_DELETE => Request::Delete(cur.u64()?),
+        OP_SHUTDOWN => Request::Shutdown,
+        other => return err(format!("unknown opcode 0x{other:02x}")),
+    };
+    cur.done()?;
+    Ok(req)
+}
+
+/// Encode one request into a frame payload (no length prefix).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut out = Vec::new();
+    match req {
+        Request::Ping => out.push(OP_PING),
+        Request::Stats => out.push(OP_STATS),
+        Request::Score(row) => {
+            out.push(OP_SCORE);
+            encode_row(&mut out, row);
+        }
+        Request::Assign(row) => {
+            out.push(OP_ASSIGN);
+            encode_row(&mut out, row);
+        }
+        Request::Density(row) => {
+            out.push(OP_DENSITY);
+            encode_row(&mut out, row);
+        }
+        Request::Insert(row) => {
+            out.push(OP_INSERT);
+            encode_row(&mut out, row);
+        }
+        Request::Delete(r) => {
+            out.push(OP_DELETE);
+            put_u64(&mut out, *r);
+        }
+        Request::Shutdown => out.push(OP_SHUTDOWN),
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// response codec
+
+/// Decode one response payload. Never panics on any input.
+pub fn decode_response(payload: &[u8]) -> Result<Response, ProtoError> {
+    let mut cur = Cur::new(payload);
+    let tag = match cur.u8() {
+        Ok(t) => t,
+        Err(_) => return err("empty response payload"),
+    };
+    let resp = match tag {
+        RESP_PONG => Response::Pong,
+        RESP_STATS => Response::Stats(StatsBody {
+            round: cur.u64()?,
+            rows: cur.u64()?,
+            dims: cur.u32()?,
+            clusters: cur.u32()?,
+            alpha: cur.f64()?,
+            queries: cur.u64()?,
+        }),
+        RESP_SCORE => {
+            let round = cur.u64()?;
+            let log_pred_empty = cur.f64()?;
+            let j = cur.u32()? as usize;
+            // j is implicitly bounded: each score costs 8 payload bytes,
+            // and the payload already passed the MAX_FRAME gate
+            let mut scores = Vec::with_capacity(j.min(MAX_FRAME as usize / 8));
+            for _ in 0..j {
+                scores.push(cur.f64()?);
+            }
+            Response::Score(ScoreBody {
+                round,
+                log_pred_empty,
+                scores,
+            })
+        }
+        RESP_ASSIGN => Response::Assign(AssignBody {
+            round: cur.u64()?,
+            cluster: cur.u64()? as i64,
+            log_weight: cur.f64()?,
+        }),
+        RESP_DENSITY => Response::Density(DensityBody {
+            round: cur.u64()?,
+            log_density: cur.f64()?,
+        }),
+        RESP_QUEUED => Response::Queued {
+            op: cur.u8()?,
+            row: cur.u64()?,
+        },
+        RESP_SHUTDOWN => Response::ShuttingDown,
+        RESP_ERROR => {
+            let n = cur.u32()? as usize;
+            let bytes = cur.take(n)?.to_vec();
+            match String::from_utf8(bytes) {
+                Ok(s) => Response::Error(s),
+                Err(_) => return err("error message is not UTF-8"),
+            }
+        }
+        other => return err(format!("unknown response tag 0x{other:02x}")),
+    };
+    cur.done()?;
+    Ok(resp)
+}
+
+/// Encode one response into a frame payload (no length prefix).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Response::Pong => out.push(RESP_PONG),
+        Response::Stats(s) => {
+            out.push(RESP_STATS);
+            put_u64(&mut out, s.round);
+            put_u64(&mut out, s.rows);
+            put_u32(&mut out, s.dims);
+            put_u32(&mut out, s.clusters);
+            put_f64(&mut out, s.alpha);
+            put_u64(&mut out, s.queries);
+        }
+        Response::Score(s) => {
+            out.push(RESP_SCORE);
+            put_u64(&mut out, s.round);
+            put_f64(&mut out, s.log_pred_empty);
+            put_u32(&mut out, s.scores.len() as u32);
+            for &v in &s.scores {
+                put_f64(&mut out, v);
+            }
+        }
+        Response::Assign(a) => {
+            out.push(RESP_ASSIGN);
+            put_u64(&mut out, a.round);
+            put_u64(&mut out, a.cluster as u64);
+            put_f64(&mut out, a.log_weight);
+        }
+        Response::Density(d) => {
+            out.push(RESP_DENSITY);
+            put_u64(&mut out, d.round);
+            put_f64(&mut out, d.log_density);
+        }
+        Response::Queued { op, row } => {
+            out.push(RESP_QUEUED);
+            out.push(*op);
+            put_u64(&mut out, *row);
+        }
+        Response::ShuttingDown => out.push(RESP_SHUTDOWN),
+        Response::Error(msg) => {
+            out.push(RESP_ERROR);
+            let bytes = msg.as_bytes();
+            // clamp so an error response always fits a frame
+            let n = bytes.len().min(MAX_FRAME as usize - 16);
+            put_u32(&mut out, n as u32);
+            out.extend_from_slice(&bytes[..n]);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// frame IO
+
+/// Write one frame (length prefix + payload). Panics if the payload
+/// exceeds [`MAX_FRAME`] — oversized frames are a sender-side bug, not
+/// a wire condition.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    assert!(
+        payload.len() <= MAX_FRAME as usize,
+        "frame payload exceeds MAX_FRAME"
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame payload. A length prefix of zero or above
+/// [`MAX_FRAME`] yields `InvalidData` **before any allocation**.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr);
+    validate_frame_len(len).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.0))?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// The pre-allocation length-prefix gate shared by [`read_frame`] and
+/// the server's incremental reader: zero-length and oversized prefixes
+/// are both rejected.
+pub fn validate_frame_len(len: u32) -> Result<(), ProtoError> {
+    if len == 0 {
+        return err("zero-length frame");
+    }
+    if len > MAX_FRAME {
+        return err(format!(
+            "frame length {len} exceeds MAX_FRAME ({MAX_FRAME})"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_requests() -> Vec<Request> {
+        let row = RowBits::from_ones(13, &[0, 5, 12]);
+        vec![
+            Request::Ping,
+            Request::Stats,
+            Request::Score(row.clone()),
+            Request::Assign(row.clone()),
+            Request::Density(row.clone()),
+            Request::Insert(row),
+            Request::Delete(42),
+            Request::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        for req in all_requests() {
+            let bytes = encode_request(&req);
+            assert_eq!(decode_request(&bytes).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let resps = vec![
+            Response::Pong,
+            Response::Stats(StatsBody {
+                round: 7,
+                rows: 120,
+                dims: 8,
+                clusters: 3,
+                alpha: 1.25,
+                queries: 99,
+            }),
+            Response::Score(ScoreBody {
+                round: 3,
+                log_pred_empty: -5.5,
+                scores: vec![-1.0, -2.5, f64::NEG_INFINITY],
+            }),
+            Response::Assign(AssignBody {
+                round: 3,
+                cluster: -1,
+                log_weight: -4.0,
+            }),
+            Response::Density(DensityBody {
+                round: 1,
+                log_density: -10.25,
+            }),
+            Response::Queued {
+                op: OP_INSERT,
+                row: 120,
+            },
+            Response::ShuttingDown,
+            Response::Error("nope".to_string()),
+        ];
+        for resp in resps {
+            let bytes = encode_response(&resp);
+            assert_eq!(decode_response(&bytes).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn row_bits_roundtrip_through_binmat() {
+        let mut m = BinMat::zeros(3, 70);
+        m.set(1, 0, true);
+        m.set(1, 63, true);
+        m.set(1, 64, true);
+        m.set(1, 69, true);
+        let row = RowBits::from_binmat(&m, 1);
+        let back = row.to_binmat();
+        for c in 0..70 {
+            assert_eq!(back.get(0, c), m.get(1, c), "dim {c}");
+        }
+        // and through the explicit-ones constructor
+        let row2 = RowBits::from_ones(70, &[0, 63, 64, 69]);
+        assert_eq!(row, row2);
+    }
+
+    #[test]
+    fn nonzero_padding_rejected() {
+        // d=13 → 2 bytes, top 3 bits of byte 1 are padding
+        let mut payload = vec![OP_SCORE];
+        payload.extend_from_slice(&13u32.to_le_bytes());
+        payload.extend_from_slice(&[0xFF, 0xFF]);
+        assert!(decode_request(&payload).is_err());
+        // same bitmap with padding cleared decodes fine
+        let mut ok = vec![OP_SCORE];
+        ok.extend_from_slice(&13u32.to_le_bytes());
+        ok.extend_from_slice(&[0xFF, 0x1F]);
+        assert!(decode_request(&ok).is_ok());
+    }
+
+    #[test]
+    fn zero_dim_row_rejected() {
+        let mut payload = vec![OP_ASSIGN];
+        payload.extend_from_slice(&0u32.to_le_bytes());
+        assert!(decode_request(&payload).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = encode_request(&Request::Ping);
+        bytes.push(0);
+        assert!(decode_request(&bytes).is_err());
+        let mut resp = encode_response(&Response::Pong);
+        resp.push(7);
+        assert!(decode_response(&resp).is_err());
+    }
+
+    #[test]
+    fn frame_len_gate() {
+        assert!(validate_frame_len(0).is_err());
+        assert!(validate_frame_len(1).is_ok());
+        assert!(validate_frame_len(MAX_FRAME).is_ok());
+        assert!(validate_frame_len(MAX_FRAME + 1).is_err());
+        assert!(validate_frame_len(u32::MAX).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let payload = encode_request(&Request::Delete(9));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut rd = io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut rd).unwrap(), payload);
+    }
+
+    #[test]
+    fn hostile_length_prefix_rejected_without_allocation() {
+        // u32::MAX length prefix followed by nothing: must fail fast
+        // with InvalidData from the pre-allocation gate, not OOM or
+        // UnexpectedEof from attempting the body read
+        let mut rd = io::Cursor::new(u32::MAX.to_le_bytes().to_vec());
+        let e = read_frame(&mut rd).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+    }
+}

@@ -369,4 +369,90 @@ mod tests {
         assert!(parse("[1, 2").is_err());
         assert!(parse("12 34").is_err());
     }
+
+    // ---- randomized round-trip properties (seeded, deterministic) ----
+
+    use crate::rng::Pcg64;
+
+    /// Random string over a pool that stresses every escaping path:
+    /// quotes, backslashes, named escapes, raw control characters
+    /// (emitted as `\u00xx`), multi-byte UTF-8, and astral-plane chars.
+    fn random_string(rng: &mut Pcg64) -> String {
+        const POOL: &[char] = &[
+            'a', 'z', '0', ' ', '"', '\\', '\n', '\t', '\r', '\u{0}', '\u{1}', '\u{0b}',
+            '\u{1f}', 'é', 'ß', '日', '本', '\u{2028}', '😀', '𝕏',
+        ];
+        let len = (rng.next_u64() % 24) as usize;
+        (0..len)
+            .map(|_| POOL[(rng.next_u64() as usize) % POOL.len()])
+            .collect()
+    }
+
+    /// Random JSON value with bounded depth; numbers are always finite
+    /// (non-finite emission is pinned by `nonfinite_numbers_become_null`).
+    fn random_value(rng: &mut Pcg64, depth: usize) -> Json {
+        let kinds = if depth == 0 { 4 } else { 6 };
+        match rng.next_u64() % kinds {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_u64() % 2 == 0),
+            2 => {
+                // spread across magnitudes, including negatives, zero,
+                // and integer-valued floats (emitted without a dot)
+                let mag = [0.0, 1.0, 3.5, 1e-12, 1e12, 6.02e23][(rng.next_u64() % 6) as usize];
+                let sign = if rng.next_u64() % 2 == 0 { 1.0 } else { -1.0 };
+                Json::Num(sign * mag * rng.next_f64())
+            }
+            3 => Json::Str(random_string(rng)),
+            4 => {
+                let n = (rng.next_u64() % 4) as usize;
+                Json::Arr((0..n).map(|_| random_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = (rng.next_u64() % 4) as usize;
+                let mut m = BTreeMap::new();
+                for _ in 0..n {
+                    m.insert(random_string(rng), random_value(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    #[test]
+    fn property_strings_roundtrip_through_escaping() {
+        let mut rng = Pcg64::seed_from(0x15);
+        for _ in 0..500 {
+            let s = random_string(&mut rng);
+            let emitted = Json::str(&s).to_string();
+            let back = parse(&emitted)
+                .unwrap_or_else(|e| panic!("emitted string failed to parse: {emitted:?}: {e}"));
+            assert_eq!(back.as_str(), Some(s.as_str()), "through {emitted:?}");
+        }
+    }
+
+    #[test]
+    fn property_values_roundtrip_and_emit_deterministically() {
+        let mut rng = Pcg64::seed_from(0x16);
+        for _ in 0..300 {
+            let v = random_value(&mut rng, 3);
+            let emitted = v.to_string();
+            let back =
+                parse(&emitted).unwrap_or_else(|e| panic!("failed on {emitted:?}: {e}"));
+            assert_eq!(back, v, "round-trip through {emitted:?}");
+            // object keys are sorted, so emission is a pure function of
+            // the value: re-emitting the parse is byte-identical
+            assert_eq!(back.to_string(), emitted);
+        }
+    }
+
+    #[test]
+    fn escaped_and_literal_backslash_sequences_stay_distinct() {
+        // "a\nb" (newline) vs "a\\nb" (backslash + n) must survive the
+        // round trip as different strings
+        let newline = Json::str("a\nb").to_string();
+        let backslash_n = Json::str("a\\nb").to_string();
+        assert_ne!(newline, backslash_n);
+        assert_eq!(parse(&newline).unwrap().as_str(), Some("a\nb"));
+        assert_eq!(parse(&backslash_n).unwrap().as_str(), Some("a\\nb"));
+    }
 }

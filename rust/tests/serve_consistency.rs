@@ -1,0 +1,478 @@
+//! Snapshot-consistency gate for the serving layer (`rust/src/serve/`).
+//!
+//! The serving contract under test: every response is computed from a
+//! snapshot published at a **round boundary** of the background chain —
+//! an exact posterior sample — and is **bit-equal** to offline scoring
+//! against that round's exported tables. The offline reference is an
+//! independent chain run with the same seed and config in this test
+//! process: because snapshot export consumes no randomness, a read-only
+//! serve driver consumes exactly the offline chain's master-RNG draw
+//! sequence, so round r's published tables are bit-identical to the
+//! offline replica's round-r export.
+//!
+//! The hammer runs while the background chain refines under an injected
+//! per-task `DelayHook` stall **plus** a `FaultHook` panic handled by
+//! PR 9's supervised-recovery ladder — responses must stay bit-exact
+//! (supervised recovery is bit-transparent) and serving must never
+//! drop.
+//!
+//! Also gated here, per the acceptance list:
+//! * kill + restart auto-resumes from the `CheckpointDir` ring and
+//!   serves again;
+//! * `--serve-trace` emits parseable JSONL with p50/p99 and queries/sec
+//!   columns;
+//! * online INSERT/DELETE fold in at a round boundary and show up in
+//!   STATS.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use clustercluster::coordinator::{Coordinator, CoordinatorConfig, SuperviseConfig};
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::data::BinMat;
+use clustercluster::mapreduce::{DelayHook, FaultAction, FaultHook, FaultSite};
+use clustercluster::rng::Pcg64;
+use clustercluster::runtime::FallbackScorer;
+use clustercluster::sampler::TableSet;
+use clustercluster::serve::protocol::{Request, Response, RowBits};
+use clustercluster::serve::{spawn, spawn_with_hooks, Client, ServeConfig};
+use clustercluster::special::logsumexp;
+use clustercluster::util::json;
+
+const WAIT_CAP: Duration = Duration::from_secs(120);
+
+fn make_data(seed: u64) -> BinMat {
+    SyntheticConfig {
+        n: 60,
+        d: 16,
+        clusters: 4,
+        beta: 0.2,
+        seed,
+    }
+    .generate()
+    .train
+}
+
+fn base_cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        workers: 3,
+        ..Default::default()
+    }
+}
+
+fn supervised() -> SuperviseConfig {
+    SuperviseConfig {
+        enabled: true,
+        max_retries: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(4),
+        ..Default::default()
+    }
+}
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join("cc_serve")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).expect("create temp dir");
+    d
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < WAIT_CAP, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// One offline round-boundary export: what the server's published
+/// snapshot for that round must be bit-identical to.
+struct OfflineSnap {
+    alpha: f64,
+    log_pred_empty: f64,
+    tables: TableSet,
+}
+
+/// Replay the serve driver's exact chain offline (same seed, same
+/// config, no faults) and export the tables at every round boundary.
+fn offline_replica(
+    data: &BinMat,
+    ccfg: &CoordinatorConfig,
+    seed: u64,
+    rounds: u64,
+) -> HashMap<u64, OfflineSnap> {
+    let mut rng = Pcg64::seed_from(seed);
+    let mut coord = Coordinator::new(data, ccfg.clone(), &mut rng);
+    let log_pred_empty = coord.model.as_bernoulli().empty_cluster_loglik();
+    let mut snaps = HashMap::new();
+    snaps.insert(
+        coord.rounds,
+        OfflineSnap {
+            alpha: coord.alpha,
+            log_pred_empty,
+            tables: coord.export_table_set(),
+        },
+    );
+    for _ in 0..rounds {
+        coord.step(&mut rng);
+        snaps.insert(
+            coord.rounds,
+            OfflineSnap {
+                alpha: coord.alpha,
+                log_pred_empty,
+                tables: coord.export_table_set(),
+            },
+        );
+    }
+    snaps
+}
+
+/// Offline scores of one wire row against one round's tables, through
+/// the identical code path the server uses (`TableSet::score_rows` via
+/// the pure-Rust scorer).
+fn offline_scores(snap: &OfflineSnap, row: &RowBits) -> Vec<f64> {
+    let m = row.to_binmat();
+    let mut scorer = FallbackScorer::new();
+    let mut out = Vec::new();
+    snap.tables.score_rows(&mut scorer, &m, &[0], &mut out);
+    out
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// the hammer
+
+#[test]
+fn concurrent_reads_are_bit_equal_to_offline_round_snapshots() {
+    const SEED: u64 = 0xC0;
+    const ROUNDS: u64 = 6;
+    let data = make_data(7);
+    let ccfg = CoordinatorConfig {
+        supervise: supervised(),
+        ..base_cfg()
+    };
+
+    // injected adversity: every map task stalls 20ms (so the hammer
+    // provably overlaps in-flight sweeps), and round 2 / task 0 panics
+    // on its first attempt (PR 9 supervised recovery must be
+    // bit-transparent and must not drop serving)
+    let delay: DelayHook = Arc::new(|_task| Duration::from_millis(20));
+    let fault: FaultHook = Arc::new(|site: FaultSite| {
+        if site.round == 2 && site.task == 0 && site.attempt == 0 {
+            FaultAction::Panic("injected serve fault".to_string())
+        } else {
+            FaultAction::None
+        }
+    });
+
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        rounds: ROUNDS,
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn_with_hooks(data.clone(), ccfg.clone(), scfg, Some(delay), Some(fault))
+        .expect("spawn server");
+    let addr = server.addr().to_string();
+
+    // hammer score/assign/density over every data row while the chain
+    // refines, recording (request row, response) pairs for post-hoc
+    // bit-exact verification
+    let mut c = Client::connect(&addr).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut observed: Vec<(RowBits, Response)> = Vec::new();
+    let mut pass = 0usize;
+    loop {
+        let done_before_pass = server.refinement_done();
+        for r in 0..data.rows() {
+            let row = RowBits::from_binmat(&data, r);
+            let req = match (pass + r) % 3 {
+                0 => Request::Score(row.clone()),
+                1 => Request::Assign(row.clone()),
+                _ => Request::Density(row.clone()),
+            };
+            let resp = c.request(&req).expect("query");
+            observed.push((row, resp));
+        }
+        pass += 1;
+        // one full pass after the budget is exhausted pins the final
+        // round's snapshot too
+        if done_before_pass {
+            break;
+        }
+    }
+    server.join().expect("clean shutdown");
+
+    // offline replica of the identical chain
+    let snaps = offline_replica(&data, &ccfg, SEED, ROUNDS);
+
+    let mut rounds_seen = std::collections::BTreeSet::new();
+    for (row, resp) in &observed {
+        match resp {
+            Response::Score(b) => {
+                let snap = snaps.get(&b.round).unwrap_or_else(|| {
+                    panic!("response claims unpublished round {}", b.round)
+                });
+                rounds_seen.insert(b.round);
+                assert_eq!(
+                    b.log_pred_empty.to_bits(),
+                    snap.log_pred_empty.to_bits(),
+                    "log_pred_empty mismatch at round {}",
+                    b.round
+                );
+                assert_eq!(
+                    bits(&b.scores),
+                    bits(&offline_scores(snap, row)),
+                    "score block not bit-equal at round {}",
+                    b.round
+                );
+            }
+            Response::Assign(b) => {
+                let snap = snaps.get(&b.round).unwrap_or_else(|| {
+                    panic!("response claims unpublished round {}", b.round)
+                });
+                rounds_seen.insert(b.round);
+                // replicate the server's deterministic MAP fold exactly
+                let scores = offline_scores(snap, row);
+                let logn = snap.tables.logn();
+                let mut cluster = -1i64;
+                let mut w = snap.alpha.ln() + snap.log_pred_empty;
+                for (i, &sc) in scores.iter().enumerate() {
+                    let wi = logn[i] + sc;
+                    if wi > w {
+                        w = wi;
+                        cluster = i as i64;
+                    }
+                }
+                assert_eq!(b.cluster, cluster, "MAP cluster mismatch at round {}", b.round);
+                assert_eq!(
+                    b.log_weight.to_bits(),
+                    w.to_bits(),
+                    "MAP weight not bit-equal at round {}",
+                    b.round
+                );
+            }
+            Response::Density(b) => {
+                let snap = snaps.get(&b.round).unwrap_or_else(|| {
+                    panic!("response claims unpublished round {}", b.round)
+                });
+                rounds_seen.insert(b.round);
+                let scores = offline_scores(snap, row);
+                let logn = snap.tables.logn();
+                let mut terms: Vec<f64> = scores
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &sc)| logn[i] + sc)
+                    .collect();
+                terms.push(snap.alpha.ln() + snap.log_pred_empty);
+                let want = logsumexp(&terms) - (data.rows() as f64 + snap.alpha).ln();
+                assert_eq!(
+                    b.log_density.to_bits(),
+                    want.to_bits(),
+                    "density not bit-equal at round {}",
+                    b.round
+                );
+            }
+            other => panic!("unexpected response in hammer: {other:?}"),
+        }
+    }
+    // the chain refined under the hammer: snapshots from more than one
+    // round boundary must have answered (the 20ms/task stall guarantees
+    // queries land both early and late)
+    assert!(
+        rounds_seen.len() >= 2,
+        "expected responses from >= 2 distinct round snapshots, got {rounds_seen:?}"
+    );
+    assert!(
+        rounds_seen.contains(&ROUNDS),
+        "final-round snapshot never answered: {rounds_seen:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// durability: restart from the checkpoint ring
+
+#[test]
+fn restart_auto_resumes_from_checkpoint_ring_and_serves_again() {
+    const SEED: u64 = 0xD1;
+    const ROUNDS: u64 = 4;
+    let dir = temp_dir("restart");
+    let data = make_data(9);
+    let mk_scfg = || ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        rounds: ROUNDS,
+        checkpoint_dir: Some(dir.clone()),
+        checkpoint_every: 2,
+        checkpoint_keep: 3,
+        seed: SEED,
+        ..Default::default()
+    };
+
+    // first life: refine to the budget, stop (final generation saved)
+    let a = spawn(data.clone(), base_cfg(), mk_scfg()).expect("spawn first server");
+    wait_until("first server to finish refining", || a.refinement_done());
+    a.join().expect("first server clean shutdown");
+    let gens: Vec<_> = std::fs::read_dir(&dir)
+        .expect("read ring dir")
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".ccckpt"))
+        .collect();
+    assert!(
+        !gens.is_empty(),
+        "checkpoint ring is empty after a checkpointed serve run"
+    );
+
+    // second life: must auto-resume at the saved round (a fresh chain
+    // would publish round 0 first) and serve queries again
+    let b = spawn(data.clone(), base_cfg(), mk_scfg()).expect("respawn server");
+    let snap = b.snapshot().expect("published snapshot after resume");
+    assert_eq!(
+        snap.round, ROUNDS,
+        "server did not resume from the checkpoint ring"
+    );
+    let mut c = Client::connect(b.addr()).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    match c.request(&Request::Stats).expect("stats") {
+        Response::Stats(s) => {
+            assert_eq!(s.round, ROUNDS);
+            assert_eq!(s.rows, data.rows() as u64);
+        }
+        other => panic!("expected Stats, got {other:?}"),
+    }
+    let row = RowBits::from_binmat(&data, 0);
+    match c.request(&Request::Score(row)).expect("score after resume") {
+        Response::Score(s) => assert_eq!(s.round, ROUNDS),
+        other => panic!("expected Score, got {other:?}"),
+    }
+    match c.request(&Request::Shutdown).expect("shutdown") {
+        Response::ShuttingDown => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    b.join().expect("second server clean shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// observability: the --serve-trace JSONL
+
+#[test]
+fn serve_trace_emits_parseable_latency_columns() {
+    const SEED: u64 = 0xE2;
+    let dir = temp_dir("trace");
+    let trace = dir.join("serve.jsonl");
+    let data = make_data(3);
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        rounds: 3,
+        trace_path: Some(trace.clone()),
+        trace_every: 1,
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(data.clone(), base_cfg(), scfg).expect("spawn server");
+    let mut c = Client::connect(server.addr()).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+    for r in 0..data.rows().min(20) {
+        let row = RowBits::from_binmat(&data, r);
+        c.request(&Request::Score(row)).expect("score");
+        c.request(&Request::Ping).expect("ping");
+    }
+    wait_until("refinement to finish", || server.refinement_done());
+    drop(c);
+    server.join().expect("clean shutdown");
+
+    let text = std::fs::read_to_string(&trace).expect("read trace file");
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(
+        !lines.is_empty(),
+        "trace file has no records despite trace_every=1"
+    );
+    for line in &lines {
+        let j = json::parse(line).unwrap_or_else(|e| panic!("bad trace JSON {line:?}: {e}"));
+        for key in [
+            "rounds_refined",
+            "elapsed_s",
+            "queries",
+            "qps",
+            "ping_count",
+            "ping_p50_us",
+            "ping_p99_us",
+            "score_count",
+            "score_p50_us",
+            "score_p99_us",
+            "assign_p50_us",
+            "density_p99_us",
+        ] {
+            assert!(
+                j.get(key).and_then(|v| v.as_f64()).is_some(),
+                "trace record missing numeric column {key}: {line}"
+            );
+        }
+    }
+    // the final (shutdown) record saw the full refinement and our load
+    let last = json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(last.get("rounds_refined").unwrap().as_f64().unwrap(), 3.0);
+    assert!(last.get("score_count").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(last.get("ping_count").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(last.get("qps").unwrap().as_f64().unwrap() > 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// online row edits fold in at round boundaries
+
+#[test]
+fn insert_and_delete_fold_in_at_round_boundaries() {
+    const SEED: u64 = 0xF3;
+    let data = make_data(5);
+    let n0 = data.rows() as u64;
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        rounds: 0, // keep refining so edits always reach a boundary
+        seed: SEED,
+        ..Default::default()
+    };
+    let server = spawn(data.clone(), base_cfg(), scfg).expect("spawn server");
+    let mut c = Client::connect(server.addr()).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(30))).unwrap();
+
+    let stats = |c: &mut Client| match c.request(&Request::Stats).expect("stats") {
+        Response::Stats(s) => s,
+        other => panic!("expected Stats, got {other:?}"),
+    };
+
+    // queue an insert; provisional id = current row count
+    let new_row = RowBits::from_ones(data.dims() as u32, &[1, 3, 8]);
+    match c.request(&Request::Insert(new_row)).expect("insert") {
+        Response::Queued { row, .. } => assert_eq!(row, n0),
+        other => panic!("expected Queued, got {other:?}"),
+    }
+    wait_until("insert to fold in", || stats(&mut c).rows == n0 + 1);
+
+    // the inserted row scores like any other
+    let snap_dims = stats(&mut c).dims;
+    let probe = RowBits::from_ones(snap_dims, &[1, 3, 8]);
+    match c.request(&Request::Score(probe)).expect("score after insert") {
+        Response::Score(s) => assert!(!s.scores.is_empty()),
+        other => panic!("expected Score, got {other:?}"),
+    }
+
+    // delete it again
+    match c.request(&Request::Delete(n0)).expect("delete") {
+        Response::Queued { row, .. } => assert_eq!(row, n0),
+        other => panic!("expected Queued, got {other:?}"),
+    }
+    wait_until("delete to fold in", || stats(&mut c).rows == n0);
+
+    match c.request(&Request::Shutdown).expect("shutdown") {
+        Response::ShuttingDown => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    server.join().expect("clean shutdown");
+}

@@ -1,0 +1,358 @@
+//! Protocol-fuzz gate for the serving layer (`rust/src/serve/`).
+//!
+//! Two layers of the same guarantee:
+//!
+//! 1. **Pure codec fuzz** — `decode_request` / `decode_response` are
+//!    hammered with every truncated prefix, every single-bit flip, and
+//!    seeded random garbage derived from every valid frame. Each call
+//!    runs under `catch_unwind`: the codec must return `Ok` or a
+//!    `ProtoError`, never panic. This is exhaustive because the codec
+//!    is a pure function over a byte slice.
+//! 2. **Loopback fuzz** — the same malformed bytes go to a live server
+//!    over TCP. Every case must end in a clean error response and/or a
+//!    disconnect, never a hang (client reads run under a timeout and a
+//!    timeout fails the test) and never a dead server (the suite
+//!    re-pings after every hostile batch).
+//!
+//! The hostile length-prefix case pins the no-OOM contract: a header
+//! claiming `u32::MAX` bytes is rejected *before* any allocation.
+
+use std::io::ErrorKind;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use clustercluster::coordinator::CoordinatorConfig;
+use clustercluster::data::synthetic::SyntheticConfig;
+use clustercluster::rng::Pcg64;
+use clustercluster::serve::protocol::{
+    decode_request, decode_response, encode_request, encode_response, validate_frame_len,
+    AssignBody, DensityBody, Request, Response, RowBits, ScoreBody, StatsBody, MAX_FRAME,
+    OP_INSERT,
+};
+use clustercluster::serve::{spawn, Client, ServeConfig, ServeHandle};
+
+// ---------------------------------------------------------------------------
+// corpus
+
+fn request_corpus() -> Vec<Request> {
+    let narrow = RowBits::from_ones(5, &[0, 4]);
+    let wide = RowBits::from_ones(70, &[0, 31, 63, 64, 69]);
+    vec![
+        Request::Ping,
+        Request::Stats,
+        Request::Score(narrow.clone()),
+        Request::Score(wide.clone()),
+        Request::Assign(narrow.clone()),
+        Request::Density(wide),
+        Request::Insert(narrow),
+        Request::Delete(0),
+        Request::Delete(u64::MAX),
+        Request::Shutdown,
+    ]
+}
+
+fn response_corpus() -> Vec<Response> {
+    vec![
+        Response::Pong,
+        Response::Stats(StatsBody {
+            round: 3,
+            rows: 100,
+            dims: 16,
+            clusters: 7,
+            alpha: 0.8,
+            queries: 12,
+        }),
+        Response::Score(ScoreBody {
+            round: 2,
+            log_pred_empty: -11.09,
+            scores: vec![-3.0, -7.5, f64::NEG_INFINITY, 0.0],
+        }),
+        Response::Assign(AssignBody {
+            round: 2,
+            cluster: -1,
+            log_weight: -9.25,
+        }),
+        Response::Density(DensityBody {
+            round: 9,
+            log_density: -12.5,
+        }),
+        Response::Queued {
+            op: OP_INSERT,
+            row: 100,
+        },
+        Response::ShuttingDown,
+        Response::Error("boom".to_string()),
+    ]
+}
+
+/// Decode must be total: `Ok` or `Err`, never a panic, on any bytes.
+fn assert_decodes_totally(bytes: &[u8], what: &str) {
+    let b = bytes.to_vec();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _ = decode_request(&b);
+    }));
+    assert!(r.is_ok(), "decode_request panicked on {what}: {bytes:02x?}");
+    let b = bytes.to_vec();
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        let _ = decode_response(&b);
+    }));
+    assert!(r.is_ok(), "decode_response panicked on {what}: {bytes:02x?}");
+}
+
+// ---------------------------------------------------------------------------
+// pure codec fuzz
+
+#[test]
+fn every_truncated_prefix_decodes_cleanly() {
+    for req in request_corpus() {
+        let full = encode_request(&req);
+        // the full payload must decode back exactly
+        assert_eq!(decode_request(&full).unwrap(), req);
+        for cut in 0..full.len() {
+            let prefix = &full[..cut];
+            assert_decodes_totally(prefix, "truncated prefix");
+            // a strict prefix of a valid frame is never a valid frame
+            // of the same request (no self-delimiting ambiguity)
+            if let Ok(got) = decode_request(prefix) {
+                assert_ne!(got, req, "prefix of length {cut} decoded as the full request");
+            }
+        }
+    }
+    for resp in response_corpus() {
+        let full = encode_response(&resp);
+        assert_eq!(decode_response(&full).unwrap(), resp);
+        for cut in 0..full.len() {
+            assert_decodes_totally(&full[..cut], "truncated response prefix");
+        }
+    }
+}
+
+#[test]
+fn every_single_bit_flip_decodes_cleanly() {
+    for req in request_corpus() {
+        let full = encode_request(&req);
+        for byte in 0..full.len() {
+            for bit in 0..8 {
+                let mut flipped = full.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_decodes_totally(&flipped, "bit flip");
+            }
+        }
+    }
+    for resp in response_corpus() {
+        let full = encode_response(&resp);
+        for byte in 0..full.len() {
+            for bit in 0..8 {
+                let mut flipped = full.clone();
+                flipped[byte] ^= 1 << bit;
+                assert_decodes_totally(&flipped, "response bit flip");
+            }
+        }
+    }
+}
+
+#[test]
+fn random_garbage_decodes_cleanly() {
+    let mut rng = Pcg64::seed_from(0xF022);
+    for _ in 0..2_000 {
+        let len = (rng.next_u64() % 64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        assert_decodes_totally(&bytes, "random garbage");
+    }
+    // garbage grafted onto valid opcodes: plausible-looking headers
+    // with hostile bodies
+    for req in request_corpus() {
+        let full = encode_request(&req);
+        for _ in 0..200 {
+            let keep = (rng.next_u64() as usize) % (full.len() + 1);
+            let extra = (rng.next_u64() % 16) as usize;
+            let mut bytes = full[..keep].to_vec();
+            bytes.extend((0..extra).map(|_| (rng.next_u64() & 0xFF) as u8));
+            assert_decodes_totally(&bytes, "grafted garbage");
+        }
+    }
+}
+
+#[test]
+fn length_prefix_gate_bounds_allocation() {
+    assert!(validate_frame_len(0).is_err());
+    assert!(validate_frame_len(1).is_ok());
+    assert!(validate_frame_len(MAX_FRAME).is_ok());
+    for hostile in [MAX_FRAME + 1, 1 << 24, 1 << 31, u32::MAX] {
+        assert!(
+            validate_frame_len(hostile).is_err(),
+            "hostile length {hostile} passed the gate"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// loopback fuzz against a live server
+
+fn tiny_server() -> ServeHandle {
+    let ds = SyntheticConfig {
+        n: 48,
+        d: 16,
+        clusters: 4,
+        beta: 0.2,
+        seed: 11,
+    }
+    .generate();
+    let ccfg = CoordinatorConfig {
+        workers: 2,
+        ..Default::default()
+    };
+    let scfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        rounds: 1, // publish one refined snapshot, then idle: the fuzz
+        // batches below measure protocol behavior, not sampling
+        seed: 11,
+        ..Default::default()
+    };
+    spawn(ds.train, ccfg, scfg).expect("spawn tiny server")
+}
+
+fn ping_ok(addr: &str) {
+    let mut c = Client::connect(addr).expect("connect for ping");
+    c.set_timeout(Some(Duration::from_secs(5))).unwrap();
+    match c.request(&Request::Ping) {
+        Ok(Response::Pong) => {}
+        other => panic!("server unhealthy after hostile batch: {other:?}"),
+    }
+}
+
+/// Send raw bytes on a fresh connection, half-close, and drain the
+/// server's responses until it disconnects. A read timeout = a hang =
+/// test failure; everything else (zero or more well-formed frames, then
+/// EOF) is a clean outcome.
+fn hostile_exchange(addr: &str, bytes: &[u8]) -> Vec<Response> {
+    let mut c = Client::connect(addr).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    c.send_raw(bytes).expect("send raw");
+    c.finish_writes().expect("half-close");
+    let mut responses = Vec::new();
+    loop {
+        match c.read_response() {
+            Ok(r) => responses.push(r),
+            Err(e) => {
+                assert!(
+                    e.kind() != ErrorKind::WouldBlock && e.kind() != ErrorKind::TimedOut,
+                    "server hung on hostile bytes {bytes:02x?}"
+                );
+                return responses;
+            }
+        }
+    }
+}
+
+fn frame_of(payload: &[u8]) -> Vec<u8> {
+    let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn loopback_truncated_frames_never_kill_the_server() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    for req in request_corpus() {
+        if matches!(req, Request::Shutdown) {
+            continue; // exercised separately — it stops the server
+        }
+        let frame = frame_of(&encode_request(&req));
+        // every strict prefix of the framed bytes, including the empty
+        // send and cuts inside the length header
+        for cut in 0..frame.len() {
+            let _ = hostile_exchange(&addr, &frame[..cut]);
+        }
+        ping_ok(&addr);
+    }
+    server.join().expect("clean shutdown");
+}
+
+#[test]
+fn loopback_bit_flips_never_kill_the_server() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    for req in request_corpus() {
+        if matches!(req, Request::Shutdown) {
+            continue;
+        }
+        let frame = frame_of(&encode_request(&req));
+        for byte in 0..frame.len() {
+            for bit in 0..8 {
+                let mut flipped = frame.clone();
+                flipped[byte] ^= 1 << bit;
+                let _ = hostile_exchange(&addr, &flipped);
+            }
+        }
+        ping_ok(&addr);
+    }
+    server.join().expect("clean shutdown");
+}
+
+#[test]
+fn loopback_random_garbage_never_kills_the_server() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    let mut rng = Pcg64::seed_from(0xBADBAD);
+    for _ in 0..64 {
+        let len = (rng.next_u64() % 48) as usize;
+        let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+        let _ = hostile_exchange(&addr, &bytes);
+    }
+    ping_ok(&addr);
+    server.join().expect("clean shutdown");
+}
+
+#[test]
+fn loopback_hostile_length_prefix_is_rejected_without_oom() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    for hostile in [0u32, MAX_FRAME + 1, 1 << 30, u32::MAX] {
+        let got = hostile_exchange(&addr, &hostile.to_le_bytes());
+        // the pre-allocation gate must answer with a framing error
+        // (then disconnect) — not silently wait for 4 GiB of body
+        assert!(
+            got.iter()
+                .any(|r| matches!(r, Response::Error(m) if m.contains("frame"))),
+            "length {hostile}: expected a framing-error response, got {got:?}"
+        );
+        ping_ok(&addr);
+    }
+    server.join().expect("clean shutdown");
+}
+
+#[test]
+fn loopback_in_frame_decode_error_keeps_the_connection() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    // well-framed payload with an unknown opcode: decode-level error,
+    // the connection must survive and answer a PING afterwards
+    c.send_raw(&frame_of(&[0x7Fu8])).unwrap();
+    match c.read_response().expect("error response") {
+        Response::Error(m) => assert!(m.contains("opcode"), "unexpected error: {m}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    match c.request(&Request::Ping).expect("ping on same connection") {
+        Response::Pong => {}
+        other => panic!("expected Pong, got {other:?}"),
+    }
+    drop(c);
+    server.join().expect("clean shutdown");
+}
+
+#[test]
+fn shutdown_frame_stops_the_server() {
+    let server = tiny_server();
+    let addr = server.addr().to_string();
+    let mut c = Client::connect(&addr).expect("connect");
+    c.set_timeout(Some(Duration::from_secs(10))).unwrap();
+    match c.request(&Request::Shutdown).expect("shutdown response") {
+        Response::ShuttingDown => {}
+        other => panic!("expected ShuttingDown, got {other:?}"),
+    }
+    server.join().expect("driver exits cleanly after SHUTDOWN");
+}

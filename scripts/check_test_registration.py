@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Integration-test registration guard.
+
+Cargo.toml sets `autotests = false` (the offline crate universe pins
+every target path explicitly), which has a footgun: a new file under
+rust/tests/ that never gets a matching [[test]] entry silently stops
+being compiled or run — the suite "passes" because it does not exist.
+
+This gate diffs the files on disk against the declared [[test]] targets
+and fails on any mismatch in either direction:
+
+  * a rust/tests/*.rs file with no [[test]] entry  -> unregistered
+    (it would silently never run);
+  * a [[test]] entry whose path does not exist     -> dangling
+    (the build would error, but catch it here with a clear message);
+  * two [[test]] entries sharing a name or path    -> duplicate.
+
+No tomllib dependency: the manifest subset this repo uses is parsed
+with a line scanner so the script runs on any Python 3.
+
+Usage:
+  python3 scripts/check_test_registration.py [--manifest Cargo.toml] \
+      [--tests-dir rust/tests]
+"""
+
+import argparse
+import os
+import re
+import sys
+
+
+def declared_tests(manifest_path):
+    """Yield (name, path, line_number) for every [[test]] block."""
+    tests = []
+    current = None  # dict while inside a [[test]] block
+    with open(manifest_path) as f:
+        for lineno, raw in enumerate(f, 1):
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            if line.startswith("["):
+                if current is not None:
+                    tests.append(current)
+                    current = None
+                if line == "[[test]]":
+                    current = {"name": None, "path": None, "line": lineno}
+                continue
+            if current is not None:
+                m = re.match(r'(name|path)\s*=\s*"([^"]*)"', line)
+                if m:
+                    current[m.group(1)] = m.group(2)
+    if current is not None:
+        tests.append(current)
+    return tests
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--manifest", default="Cargo.toml")
+    ap.add_argument("--tests-dir", default="rust/tests")
+    args = ap.parse_args()
+
+    declared = declared_tests(args.manifest)
+    problems = []
+
+    for t in declared:
+        if not t["name"] or not t["path"]:
+            problems.append(
+                "[[test]] at %s:%d is missing a name or path"
+                % (args.manifest, t["line"])
+            )
+
+    seen_names, seen_paths = {}, {}
+    for t in declared:
+        if t["name"] in seen_names:
+            problems.append(
+                "duplicate [[test]] name %r (lines %d and %d)"
+                % (t["name"], seen_names[t["name"]], t["line"])
+            )
+        else:
+            seen_names[t["name"]] = t["line"]
+        if t["path"] in seen_paths:
+            problems.append(
+                "duplicate [[test]] path %r (lines %d and %d)"
+                % (t["path"], seen_paths[t["path"]], t["line"])
+            )
+        else:
+            seen_paths[t["path"]] = t["line"]
+
+    on_disk = sorted(
+        os.path.join(args.tests_dir, f)
+        for f in os.listdir(args.tests_dir)
+        if f.endswith(".rs")
+    )
+    declared_paths = {t["path"] for t in declared if t["path"]}
+
+    for path in on_disk:
+        if path not in declared_paths:
+            problems.append(
+                "%s has no [[test]] entry in %s — with autotests = false "
+                "it would silently never compile or run" % (path, args.manifest)
+            )
+    for t in declared:
+        if t["path"] and not os.path.exists(t["path"]):
+            problems.append(
+                "[[test]] %r (line %d) points at missing file %s"
+                % (t["name"], t["line"], t["path"])
+            )
+
+    if problems:
+        print("test registration check FAILED:")
+        for p in problems:
+            print("  - " + p)
+        return 1
+    print(
+        "test registration ok: %d files under %s, %d [[test]] targets, "
+        "all matched." % (len(on_disk), args.tests_dir, len(declared))
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
